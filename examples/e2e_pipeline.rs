@@ -1,0 +1,144 @@
+//! END-TO-END VALIDATION (DESIGN.md §6): the full system on a real
+//! workload, proving all layers compose —
+//!
+//!   pretrain (in-graph AdamW through PJRT)
+//!     → GPTQ quantization (Rust Hessians from captured activations)
+//!       → LoTA-QAF recovery fine-tuning (t-SignSGD, loss curve logged)
+//!         → **lossless merge** (bit-exact grid check)
+//!           → task-specific fine-tuning (arith)
+//!             → batched serving of the merged low-bit model
+//!
+//! Defaults run the `small` (~3.2M param) config in a few minutes on one
+//! CPU core; set LOTA_MODEL=medium (~14M) or raise step counts for a
+//! longer run. The run log for EXPERIMENTS.md §E2E came from this binary.
+//!
+//! Run with: `cargo run --release --example e2e_pipeline`
+
+use std::path::Path;
+
+use lota_qaf::config::{ExperimentConfig, Method};
+use lota_qaf::coordinator::experiments::{max_new_for, ExperimentContext};
+use lota_qaf::coordinator::{
+    exact_match_eval, finetune, merge_into_store, token_accuracy, TrainOptions,
+};
+use lota_qaf::data::tasks;
+use lota_qaf::model;
+use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::tensor::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn fmt_curve(losses: &[f32]) -> String {
+    // compact loss curve: every ~10th point
+    let stride = (losses.len() / 12).max(1);
+    losses
+        .iter()
+        .step_by(stride)
+        .map(|l| format!("{l:.2}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn main() -> anyhow::Result<()> {
+    let model_name = env_str("LOTA_MODEL", "small");
+    let pretrain_steps = env_usize("LOTA_PRETRAIN_STEPS", 300);
+    let recovery_steps = env_usize("LOTA_RECOVERY_STEPS", 120);
+    let task_steps = env_usize("LOTA_TASK_STEPS", 150);
+    let bits = env_usize("LOTA_BITS", 4) as u32;
+    let eval_n = env_usize("LOTA_EVAL_N", 32);
+
+    println!("=== LoTA-QAF end-to-end pipeline: {model_name} at {bits}-bit ===\n");
+
+    // -- stage 1+2: pretrain + GPTQ-calibrate (cached in checkpoints/) --
+    let t0 = std::time::Instant::now();
+    let ctx = ExperimentContext::build(Path::new("artifacts"), &model_name, pretrain_steps, 3)?;
+    println!(
+        "[1] base model: {} params, pretrained {pretrain_steps} steps ({:.0}s)",
+        ctx.cfg.n_params(),
+        t0.elapsed().as_secs_f64()
+    );
+    let fp_mmlu = ctx.mmlu_fp(eval_n)?;
+    println!("    16-bit MMLU-like avg: {:.2}%", fp_mmlu.average);
+
+    let quant = ctx.quantized(bits)?;
+    let q_mmlu = ctx.mmlu_merged(&quant, eval_n)?;
+    println!("[2] GPTQ {bits}-bit MMLU-like avg: {:.2}%", q_mmlu.average);
+
+    // -- stage 3: recovery fine-tuning with LoTA-QAF --
+    let mut store = quant.clone();
+    let mut rng = Rng::new(77);
+    model::init_adapters(&ctx.cfg, Method::LotaQaf, &mut rng, &mut store);
+    let exp = ExperimentConfig {
+        model: model_name.clone(),
+        method: Method::LotaQaf,
+        n_bits: bits,
+        steps: recovery_steps,
+        task: "recovery".into(),
+        ..Default::default()
+    };
+    let report = finetune(&ctx.rt, &ctx.cfg, &exp, &mut store, &TrainOptions::default())?;
+    println!(
+        "[3] recovery fine-tune {recovery_steps} t-SignSGD steps ({:.0}s)\n    loss curve: {}",
+        report.wall_secs,
+        fmt_curve(&report.losses)
+    );
+
+    // -- stage 4: lossless merge + verification --
+    let merge_err = merge_into_store(&ctx.cfg, &exp, &mut store)?;
+    assert_eq!(merge_err, 0.0);
+    let rec_mmlu = ctx.mmlu_merged(&store, eval_n)?;
+    println!(
+        "[4] lossless merge (requant error {merge_err:.1}); recovered MMLU-like avg: {:.2}% \
+         (was {:.2}% quantized, {:.2}% fp)",
+        rec_mmlu.average, q_mmlu.average, fp_mmlu.average
+    );
+
+    // -- stage 5: task-specific fine-tuning on arith --
+    let mut task_store = quant;
+    model::init_adapters(&ctx.cfg, Method::LotaQaf, &mut rng, &mut task_store);
+    let exp_task = ExperimentConfig {
+        task: "arith".into(),
+        steps: task_steps,
+        lr: 5e-4,
+        ..exp.clone()
+    };
+    let report = finetune(&ctx.rt, &ctx.cfg, &exp_task, &mut task_store, &TrainOptions::default())?;
+    merge_into_store(&ctx.cfg, &exp_task, &mut task_store)?;
+    let gen = tasks::task_by_name("arith")?;
+    let test = gen.test_set(eval_n);
+    let exe = ctx.rt.load(&format!("fwd_merged_{model_name}"))?;
+    let em = exact_match_eval(
+        &ctx.rt, &exe, &task_store, &ctx.cfg, &test, max_new_for("arith"), None,
+    )?;
+    let ta = token_accuracy(&ctx.rt, &exe, &task_store, &ctx.cfg, &test, None)?;
+    println!(
+        "[5] task fine-tune (arith, {task_steps} steps, {:.0}s): exact match {em:.2}%, \
+         token acc {ta:.2}%",
+        report.wall_secs
+    );
+
+    // -- stage 6: serve the merged model --
+    let mut prng = Rng::new(55);
+    let prompts: Vec<String> = (0..16)
+        .map(|_| gen.sample(&mut prng, tasks::Split::Test).prompt)
+        .collect();
+    let rep = serve_batch(&ctx.rt, &ctx.cfg, &task_store, ServePath::Merged, &prompts, 6)?;
+    println!(
+        "[6] served {} merged-path requests: {:.1} tok/s, p50 {:.3}s, p95 {:.3}s",
+        rep.requests, rep.tokens_per_sec, rep.latency.p50, rep.latency.p95
+    );
+
+    let stats = ctx.rt.stats();
+    println!(
+        "\nruntime: {} artifact compilations ({:.1}s), {} executions ({:.1}s)",
+        stats.compilations, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    println!("=== e2e pipeline complete ===");
+    Ok(())
+}

@@ -1,0 +1,283 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts + a JSON manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text through ``HloModuleProto::from_text_file`` and never touches Python.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (``artifacts/manifest.json``) records, for every artifact, the
+exact ordered input names/shapes and output names/shapes, so the Rust
+marshaller is driven by data rather than by a parallel hand-maintained
+convention. A content hash of ``python/compile`` makes re-runs no-ops when
+nothing changed.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import BITS, CONFIGS, SERVE_BUCKETS, STEP_BATCH
+from .kernels.quant_matmul import quant_matmul
+from .kernels.ternary import ternary_apply_fwd_pallas
+from .kernels.tsign import tsign_update
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = []
+
+    def lower(self, name, fn, inputs, outputs, meta):
+        """Lower ``fn(*inputs)`` and record manifest entry.
+
+        inputs: list of (name, shape); outputs: list of (name, shape).
+        """
+        specs = [_spec(s) for _, s in inputs]
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s)} for n, s in inputs],
+            "outputs": [{"name": n, "shape": list(s)} for n, s in outputs],
+        }
+        entry.update(meta)
+        self.manifest.append(entry)
+        print(f"  lowered {name}: {len(inputs)} in / {len(outputs)} out, "
+              f"{len(text) // 1024} KiB")
+
+    def save_manifest(self, extra):
+        data = {"artifacts": self.manifest}
+        data.update(extra)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(data, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+
+
+def batch_shapes(b, t):
+    return [("tokens", (b, t)), ("targets", (b, t)), ("mask", (b, t))]
+
+
+def lower_kernels(bld: Builder):
+    """Standalone Pallas-kernel artifacts: prove the L1 kernels lower into
+    HLO the Rust PJRT client can execute (validated in rust/tests)."""
+    din, dout, g, r = 64, 128, 4, 8
+    gs = din // g
+    m = 16
+
+    bld.lower(
+        "kernel_qmm", lambda x, w, s, z: (quant_matmul(x, w, s, z),),
+        [("x", (m, din)), ("w_int", (din, dout)), ("scales", (g, dout)),
+         ("zeros", (g, dout))],
+        [("y", (m, dout))],
+        {"kind": "kernel"},
+    )
+    bld.lower(
+        "kernel_ternary",
+        lambda a, b, w, s, z, om: ternary_apply_fwd_pallas(
+            a, b, w, s, z, om.reshape(()), r, 4),
+        [("a_t", (din, r)), ("b_t", (r, dout)), ("w_int", (din, dout)),
+         ("scales", (g, dout)), ("zeros", (g, dout)), ("omega", (1,))],
+        [("w_int_new", (din, dout)), ("zeros_new", (g, dout))],
+        {"kind": "kernel"},
+    )
+    bld.lower(
+        "kernel_tsign",
+        lambda a, grad, kf: (tsign_update(a, grad, kf.reshape(())),),
+        [("a_t", (din, r)), ("grad", (din, r)), ("keep_frac", (1,))],
+        [("a_new", (din, r))],
+        {"kind": "kernel"},
+    )
+
+
+def lower_config(bld: Builder, cfg_name: str, use_pallas: bool):
+    cfg = CONFIGS[cfg_name]
+    b = STEP_BATCH[cfg_name]
+    t = cfg.seq_len
+
+    froz = model.frozen_shapes(cfg, "lota")  # same frozen set for all QAF
+    fnames = model.sorted_names(froz)
+    fp_shapes = model.frozen_shapes(cfg, "fp")
+    fpnames = model.sorted_names(fp_shapes)
+
+    # --- pretraining step (full precision, AdamW) ---
+    fn, names, outs = model.make_pretrain_fn(cfg)
+    ins = ([(n, fp_shapes[n]) for n in names]
+           + [(f"m_{n}", fp_shapes[n]) for n in names]
+           + [(f"v_{n}", fp_shapes[n]) for n in names]
+           + batch_shapes(b, t) + [("lr", (1,)), ("step", (1,))])
+    outshapes = ([("loss", (1,))] + [(n, fp_shapes[n]) for n in names]
+                 + [(f"m_{n}", fp_shapes[n]) for n in names]
+                 + [(f"v_{n}", fp_shapes[n]) for n in names])
+    bld.lower(f"pretrain_step_{cfg_name}", fn, ins, outshapes,
+              {"kind": "pretrain_step", "cfg": cfg_name, "batch": b})
+
+    # --- activation capture for GPTQ calibration ---
+    afn, anames_, aouts = model.make_acts_fn(cfg)
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    bld.lower(
+        f"acts_fp_{cfg_name}", afn,
+        [(n, fp_shapes[n]) for n in anames_] + [("tokens", (b, t))],
+        [("xn1", (L, b, t, d)), ("attn_o", (L, b, t, d)),
+         ("xn2", (L, b, t, d)), ("h_mid", (L, b, t, ff))],
+        {"kind": "acts", "cfg": cfg_name, "batch": b},
+    )
+
+    # --- fp forward (16-bit baseline rows of Table 1) ---
+    fwd, names, _ = model.make_fwd_fn(cfg, "fp", 4)
+    bld.lower(
+        f"fwd_fp_{cfg_name}", fwd,
+        [(n, fp_shapes[n]) for n in names] + [("tokens", (b, t))],
+        [("logits", (b, t, cfg.vocab))],
+        {"kind": "fwd", "cfg": cfg_name, "method": "fp", "batch": b},
+    )
+
+    # --- QAF training steps ---
+    for bits in BITS:
+        fn, fn_f, fn_a, extra, outs = model.make_step_fn(cfg, "lota", bits,
+                                                         use_pallas)
+        adap = model.adapter_shapes(cfg, "lota")
+        ins = ([(n, froz[n]) for n in fn_f] + [(n, adap[n]) for n in fn_a]
+               + batch_shapes(b, t) + [("omega", (1,)), ("keep_frac", (1,))])
+        outshapes = [("loss", (1,))] + [(n, adap[n]) for n in fn_a]
+        bld.lower(f"step_lota_{cfg_name}_w{bits}", fn, ins, outshapes,
+                  {"kind": "step", "cfg": cfg_name, "method": "lota",
+                   "n_bits": bits, "batch": b})
+
+    for method in ("lora", "qalora"):
+        fn, fn_f, fn_a, extra, outs = model.make_step_fn(cfg, method, 4)
+        adap = model.adapter_shapes(cfg, method)
+        ins = ([(n, froz[n]) for n in fn_f] + [(n, adap[n]) for n in fn_a]
+               + [(f"m_{n}", adap[n]) for n in fn_a]
+               + [(f"v_{n}", adap[n]) for n in fn_a]
+               + batch_shapes(b, t) + [("lr", (1,)), ("step", (1,))])
+        outshapes = ([("loss", (1,))] + [(n, adap[n]) for n in fn_a]
+                     + [(f"m_{n}", adap[n]) for n in fn_a]
+                     + [(f"v_{n}", adap[n]) for n in fn_a])
+        bld.lower(f"step_{method}_{cfg_name}", fn, ins, outshapes,
+                  {"kind": "step", "cfg": cfg_name, "method": method,
+                   "batch": b})
+
+    # --- evaluation / serving forwards ---
+    def lower_fwd(method, batch, suffix, n_bits=4):
+        fwd, names, needs_omega = model.make_fwd_fn(cfg, method, n_bits,
+                                                    use_pallas and method == "lota")
+        adap = model.adapter_shapes(cfg, method)
+        allsh = {**froz, **adap}
+        ins = [(n, allsh[n]) for n in names]
+        if needs_omega:
+            ins += [("omega", (1,))]
+        ins += [("tokens", (batch, t))]
+        bld.lower(
+            f"fwd_{method}_{cfg_name}{suffix}", fwd, ins,
+            [("logits", (batch, t, cfg.vocab))],
+            {"kind": "fwd", "cfg": cfg_name, "method": method,
+             "batch": batch, "n_bits": n_bits},
+        )
+
+    for bits in BITS:
+        lower_fwd("lota", b, f"_w{bits}", bits)
+    for method in ("lora", "qalora", "merged"):
+        lower_fwd(method, b, "")
+
+    # serving buckets: merged (low-bit path) vs lora (quant + 16-bit path)
+    for bucket in SERVE_BUCKETS[cfg_name]:
+        if bucket == b:
+            continue  # already lowered above for merged/lora
+        lower_fwd("merged", bucket, f"_b{bucket}")
+        lower_fwd("lora", bucket, f"_b{bucket}")
+
+
+# ---------------------------------------------------------------------------
+# Staleness
+
+
+def input_hash() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(f.encode())
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small",
+                    help="comma-separated model configs to lower")
+    ap.add_argument("--pallas", action="store_true", default=True,
+                    help="use the Pallas kernels inside the lota graphs")
+    ap.add_argument("--no-pallas", dest="pallas", action="store_false")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    hash_path = os.path.join(args.out, ".input_hash")
+    manifest_path = os.path.join(args.out, "manifest.json")
+    cur = input_hash() + f"|cfgs={args.configs}|pallas={args.pallas}"
+    if not args.force and os.path.exists(hash_path) and os.path.exists(manifest_path):
+        with open(hash_path) as f:
+            if f.read().strip() == cur:
+                print("artifacts up to date (input hash match); skipping")
+                return
+
+    bld = Builder(args.out)
+    print("lowering kernel artifacts ...")
+    lower_kernels(bld)
+    for cfg_name in args.configs.split(","):
+        cfg_name = cfg_name.strip()
+        if not cfg_name:
+            continue
+        print(f"lowering {cfg_name} graphs ...")
+        lower_config(bld, cfg_name, args.pallas)
+
+    from . import golden
+    golden.generate(os.path.join(args.out, "golden"))
+
+    bld.save_manifest({
+        "configs": {n: vars(c) for n, c in CONFIGS.items()},
+        "step_batch": STEP_BATCH,
+        "serve_buckets": {k: list(v) for k, v in SERVE_BUCKETS.items()},
+    })
+    with open(hash_path, "w") as f:
+        f.write(cur)
+    print(f"wrote {len(bld.manifest)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

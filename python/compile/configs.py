@@ -1,0 +1,71 @@
+"""Model / lowering configurations shared by model.py, aot.py and the tests.
+
+The Rust side mirrors these in ``rust/src/config/presets.rs``; the two MUST
+stay in sync (the artifact staleness hash covers this file, so editing it
+forces a re-lowering, and the Rust integration tests check shapes at load
+time).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """GPT-style decoder configuration.
+
+    All linear layers that get quantized+adapted are the six per-block
+    matrices: wq, wk, wv, wo (d×d) and w_up (d×ff), w_down (ff×d).
+    Embedding, positional table, layer norms and the LM head stay f32.
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    group_size: int  # quantization group size along the input dimension
+    rank: int        # adapter rank r
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        embed = 2 * self.vocab * self.d_model + self.seq_len * self.d_model
+        norms = (4 * self.n_layers + 2) * self.d_model
+        return self.n_layers * per_layer + embed + norms
+
+
+# NOTE: vocab matches rust/src/data/tokenizer.rs (char-level, 64 symbols).
+VOCAB = 64
+
+TINY = ModelConfig(
+    name="tiny", vocab=VOCAB, d_model=64, n_layers=2, n_heads=4,
+    d_ff=256, seq_len=128, group_size=16, rank=8,
+)
+SMALL = ModelConfig(
+    name="small", vocab=VOCAB, d_model=256, n_layers=4, n_heads=4,
+    d_ff=1024, seq_len=128, group_size=32, rank=16,
+)
+MEDIUM = ModelConfig(
+    name="medium", vocab=VOCAB, d_model=384, n_layers=8, n_heads=6,
+    d_ff=1536, seq_len=128, group_size=64, rank=16,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, MEDIUM)}
+
+# Training-step batch sizes (fixed shapes baked into the HLO artifacts).
+STEP_BATCH = {"tiny": 8, "small": 4, "medium": 2}
+
+# Serving forward-pass batch buckets per config: the L3 dynamic batcher
+# routes requests to the smallest bucket that fits (see rust serve/).
+SERVE_BUCKETS = {"tiny": (1, 8, 32), "small": (1, 4, 8), "medium": (1, 4)}
+
+# Methods with a training-step artifact.
+METHODS = ("lota", "lora", "qalora")
+
+# Bit-widths exercised throughout (paper: 4/3/2-bit GPTQ).
+BITS = (4, 3, 2)

@@ -1,0 +1,133 @@
+"""Golden-vector generator: pins the Rust host-side math to the JAX graphs.
+
+The lossless-merge property only holds system-wide if the Rust
+implementations (quantizer, ternary merge, optimizer schedule) compute *the
+same numbers* as the lowered HLO graphs. This module generates deterministic
+input/output pairs from the python references into ``artifacts/golden/*.json``;
+the Rust unit tests replay them (`rust/src/*/golden tests`).
+
+Run automatically by ``aot.py`` (part of ``make artifacts``).
+"""
+
+import json
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+
+def _rng():
+    return np.random.default_rng(20250710)
+
+
+def ref_rtn_quantize(w, group_size, n_bits):
+    """Round-to-nearest group-wise asymmetric quantization (paper Eq. 2):
+    per (group, out-column) ``s = (max−min)/(2^N−1)``, ``z = min``."""
+    din, dout = w.shape
+    g = din // group_size
+    wg = w.reshape(g, group_size, dout)
+    mx = wg.max(axis=1)
+    mn = wg.min(axis=1)
+    scales = (mx - mn) / float(2 ** n_bits - 1)
+    scales = np.maximum(scales, 1e-8)
+    zeros = mn
+    w_int = np.rint((wg - zeros[:, None, :]) / scales[:, None, :])
+    w_int = np.clip(w_int, 0, 2 ** n_bits - 1).reshape(din, dout)
+    return w_int.astype(np.float32), scales.astype(np.float32), zeros.astype(np.float32)
+
+
+def generate(out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    rng = _rng()
+    din, dout, gs, r = 32, 48, 8, 4
+    g = din // gs
+
+    w = (rng.normal(size=(din, dout)) * 0.1).astype(np.float32)
+    cases = {}
+
+    # --- RTN quantization, all bit-widths ---
+    for nb in (2, 3, 4):
+        w_int, sc, ze = ref_rtn_quantize(w, gs, nb)
+        cases[f"rtn_w{nb}"] = {
+            "w": w.ravel().tolist(), "din": din, "dout": dout, "gs": gs,
+            "n_bits": nb,
+            "w_int": w_int.ravel().tolist(),
+            "scales": sc.ravel().tolist(),
+            "zeros": ze.ravel().tolist(),
+        }
+
+    # --- ternary adaptation / lossless merge ---
+    w_int, sc, ze = ref_rtn_quantize(w, gs, 4)
+    a = rng.integers(-1, 2, (din, r)).astype(np.float32)
+    b = rng.integers(-1, 2, (r, dout)).astype(np.float32)
+    omega = 0.75 * r
+    w_new, z_new = ref.ternary_apply_ref(a, b, w_int, sc, ze, omega, r, 4)
+    cases["ternary_apply"] = {
+        "a": a.ravel().tolist(), "b": b.ravel().tolist(),
+        "w_int": w_int.ravel().tolist(),
+        "scales": sc.ravel().tolist(), "zeros": ze.ravel().tolist(),
+        "din": din, "dout": dout, "gs": gs, "rank": r,
+        "omega": omega, "n_bits": 4,
+        "w_int_new": np.asarray(w_new).ravel().tolist(),
+        "zeros_new": np.asarray(z_new).ravel().tolist(),
+    }
+
+    # --- t-SignSGD update ---
+    grad = rng.normal(size=(din, r)).astype(np.float32) * 1e-3
+    a_new = ref.tsign_update_ref(a, grad, np.float32(0.05))
+    cases["tsign"] = {
+        "a": a.ravel().tolist(), "grad": grad.ravel().tolist(),
+        "rows": din, "cols": r, "keep_frac": 0.05,
+        "a_new": np.asarray(a_new).ravel().tolist(),
+    }
+
+    # --- quantized matmul ---
+    x = rng.normal(size=(8, din)).astype(np.float32)
+    y = ref.quant_matmul_ref(x, w_int, sc, ze)
+    cases["quant_matmul"] = {
+        "x": x.ravel().tolist(), "m": 8,
+        "w_int": w_int.ravel().tolist(),
+        "scales": sc.ravel().tolist(), "zeros": ze.ravel().tolist(),
+        "din": din, "dout": dout, "gs": gs,
+        "y": np.asarray(y).ravel().tolist(),
+    }
+
+    # --- QA-LoRA pooling + zero-merge ---
+    qa = rng.normal(size=(g, r)).astype(np.float32) * 0.1
+    qb = rng.normal(size=(r, dout)).astype(np.float32) * 0.1
+    alpha = 2.0 * r
+    pooled = ref.qalora_pool_ref(x, gs)
+    contrib = (alpha / r) * pooled @ qa @ qb
+    z_merged = ze + (alpha / r) * (qa @ qb) / gs
+    cases["qalora"] = {
+        "x": x.ravel().tolist(), "m": 8, "din": din, "dout": dout,
+        "gs": gs, "rank": r, "alpha": alpha,
+        "a": qa.ravel().tolist(), "b": qb.ravel().tolist(),
+        "zeros": ze.ravel().tolist(), "scales": sc.ravel().tolist(),
+        "pooled": np.asarray(pooled).ravel().tolist(),
+        "contrib": np.asarray(contrib).ravel().tolist(),
+        "zeros_merged": np.asarray(z_merged).ravel().tolist(),
+    }
+
+    # --- lossy LoRA merge (requantization error demo) ---
+    la = rng.normal(size=(din, r)).astype(np.float32) * 0.05
+    lb = rng.normal(size=(r, dout)).astype(np.float32) * 0.05
+    w_int_m, w_fp = ref.lora_merge_requant_ref(w_int, sc, ze, la, lb, alpha, r, 4)
+    cases["lora_merge"] = {
+        "w_int": w_int.ravel().tolist(), "scales": sc.ravel().tolist(),
+        "zeros": ze.ravel().tolist(), "a": la.ravel().tolist(),
+        "b": lb.ravel().tolist(), "din": din, "dout": dout, "gs": gs,
+        "rank": r, "alpha": alpha, "n_bits": 4,
+        "w_int_merged": np.asarray(w_int_m).ravel().tolist(),
+        "w_fp": np.asarray(w_fp).ravel().tolist(),
+    }
+
+    for name, case in cases.items():
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(case, f)
+    print(f"wrote {len(cases)} golden cases to {out_dir}")
+
+
+if __name__ == "__main__":
+    generate("../artifacts/golden")

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused group-wise dequantize + matmul.
+
+The inference hot-spot of every QAF method here is ``y = x @ (s·W_int + z)``.
+A naive implementation materialises the dequantized ``(Din, Dout)`` f32
+matrix in HBM; the paper's GPU kernels (GPTQModel's TritonV2QuantLinear)
+instead dequantize *tiles* in shared memory on the way into the MAC loop.
+
+TPU/Pallas mapping (DESIGN.md §Hardware-Adaptation): the grid walks
+``(M/bm, Dout/bn, Din/bk)`` with ``bk == group_size`` so each k-step brings
+exactly one quantization group's ``(bk, bn)`` integer tile plus its
+``(1, bn)`` scale/zero rows into VMEM, dequantizes on the VPU, and feeds the
+MXU-shaped ``(bm, bk) @ (bk, bn)`` MAC — one HBM read per tile, no
+full-size dequantized intermediate.
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO
+(a while-loop over the grid), keeping numerics identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, w_ref, s_ref, z_ref, o_ref):
+    """One (bm, bn) output tile accumulated over the k grid axis.
+
+    k is the innermost grid dimension; the output block index map ignores k
+    so the same VMEM tile stays resident while we accumulate.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_tile = s_ref[...] * w_ref[...] + z_ref[...]  # dequant in-register
+    o_ref[...] += jnp.dot(x_ref[...], w_tile, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def quant_matmul(x, w_int, scales, zeros, *, block_m=16, block_n=64):
+    """``y = x @ dequant(w_int, scales, zeros)`` via the fused Pallas kernel.
+
+    x: (M, Din) f32; w_int: (Din, Dout) f32-coded ints;
+    scales/zeros: (G, Dout) with Din = G·gs. Block sizes must divide the
+    corresponding dims; the k-block is pinned to the group size so the
+    scale/zero index map is exact (one group per k-step).
+    """
+    m, din = x.shape
+    dout = w_int.shape[1]
+    g = scales.shape[0]
+    gs = din // g
+    bm = min(block_m, m)
+    bn = min(block_n, dout)
+    assert m % bm == 0 and dout % bn == 0 and din % gs == 0
+
+    grid = (m // bm, dout // bn, g)
+    return pl.pallas_call(
+        _qmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, dout), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, gs), lambda i, j, k: (i, k)),   # x tile
+            pl.BlockSpec((gs, bn), lambda i, j, k: (k, j)),   # W_int tile
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),    # scale row
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),    # zero row
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(x, w_int, scales, zeros)

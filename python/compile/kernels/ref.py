@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *semantic ground truth* for the three L1 kernels:
+
+* :func:`quant_matmul_ref` — group-wise asymmetric dequant + matmul
+  (paper Eq. 2 applied inside the forward pass).
+* :func:`ternary_apply_ref` — ternary adaptation: auxiliary matrix
+  ``ΔW = A_T @ B_T``, ternary map ``Ŵ`` (Eq. 3), offset matrix/factor
+  (Eq. 4) and the boundary-checked in-grid integer update used both during
+  fine-tuning and for the lossless merge (Eq. 5).
+* :func:`tsign_update_ref` — the t-SignSGD ternary update (Eq. 6).
+
+pytest + hypothesis assert the Pallas kernels match these bit-for-bit (they
+are the same f32 ops in a different schedule), and the Rust host-side
+implementations are validated against golden vectors generated from this
+file, so all three layers agree on the semantics.
+
+Convention: quantized weights travel as *f32 tensors holding integer
+values* (the PJRT CPU path has no native sub-byte dtypes, mirroring the
+paper's bf16-simulated ternary adapters, Appendix A); ``scales``/``zeros``
+are ``(G, Dout)`` with groups along the input dimension, ``Din = G * gs``.
+"""
+
+import jax.numpy as jnp
+
+
+def dequant_ref(w_int, scales, zeros):
+    """Dequantize group-quantized weights: ``W_q = s * W_int + z`` (Eq. 2).
+
+    w_int: (Din, Dout) f32-coded integers; scales/zeros: (G, Dout).
+    """
+    din = w_int.shape[0]
+    g = scales.shape[0]
+    gs = din // g
+    s = jnp.repeat(scales, gs, axis=0)
+    z = jnp.repeat(zeros, gs, axis=0)
+    return s * w_int + z
+
+
+def quant_matmul_ref(x, w_int, scales, zeros):
+    """``y = x @ dequant(W_int)`` — the quantized-linear forward."""
+    return x @ dequant_ref(w_int, scales, zeros)
+
+
+def ternary_map_ref(delta_w, omega):
+    """Eq. 3: ``Ŵ = sign(ΔW) · 1[|ΔW| > ω]``."""
+    return jnp.sign(delta_w) * (jnp.abs(delta_w) > omega).astype(delta_w.dtype)
+
+
+def ternary_apply_ref(a_t, b_t, w_int, scales, zeros, omega, rank, n_bits):
+    """Full ternary adaptation (Eqs. 3–5), per-group offset granularity.
+
+    Returns ``(w_int', zeros')`` — the adjusted integer grid (boundary
+    checked against ``[0, 2^N - 1]``) and the offset-absorbed zero factors.
+    Used by the training forward *and* the merge: they are the same map,
+    which is exactly why the merge is lossless.
+    """
+    din, dout = w_int.shape
+    g = scales.shape[0]
+    gs = din // g
+    delta_w = a_t @ b_t                                  # (Din, Dout), ints in [-r, r]
+    w_hat = ternary_map_ref(delta_w, omega)              # (Din, Dout) ∈ {-1,0,1}
+    w_int_new = jnp.clip(w_int + w_hat, 0.0, float(2 ** n_bits - 1))
+    w_tilde = delta_w - omega * w_hat                    # Eq. 4 offset matrix
+    # Per-group mean (Eq. 4 at per-group granularity — matches the group-wise
+    # quantizer; the paper notes μ "can be performed at different granularity").
+    mu = w_tilde.reshape(g, gs, dout).sum(axis=1) / (rank * gs)
+    zeros_new = zeros + scales * mu                      # Eq. 5: z' = z + s·μ
+    return w_int_new, zeros_new
+
+
+def ternary_ste_bwd_ref(a_t, b_t, w_int, scales, zeros, omega, rank, n_bits,
+                        ct_w_int, ct_zeros):
+    """Straight-through backward used by the custom_vjp (our interpretation;
+    the paper trains ternary adapters with gradients but does not spell out
+    the surrogate — DESIGN.md §3 documents this choice).
+
+    Surrogates: ``dŴ/dΔW ≈ 1/r`` gated by the boundary (clip) mask, plus the
+    exact linear part of the offset path with Ŵ treated via the same slope.
+    """
+    din, dout = w_int.shape
+    g = scales.shape[0]
+    gs = din // g
+    delta_w = a_t @ b_t
+    w_hat = ternary_map_ref(delta_w, omega)
+    inside = (w_int + w_hat >= 0.0) & (w_int + w_hat <= float(2 ** n_bits - 1))
+    d_from_wint = ct_w_int * inside.astype(ct_w_int.dtype) / rank
+    # z' = z + s * sum_group(ΔW − ωŴ)/(r·gs): dΔW = s·ct_z·(1 − ω/r)/(r·gs)
+    d_from_z = jnp.repeat(ct_zeros * scales, gs, axis=0) * (1.0 - omega / rank) / (rank * gs)
+    d_delta = d_from_wint + d_from_z
+    d_a = d_delta @ b_t.T
+    d_b = a_t.T @ d_delta
+    return d_a, d_b
+
+
+def sigma_threshold_ref(grad, keep_frac, tau=1e-9):
+    """Dynamic percentile threshold σ_t: keep the top ``keep_frac`` of |g|."""
+    q = jnp.clip(1.0 - keep_frac, 0.0, 1.0)
+    sigma = jnp.quantile(jnp.abs(grad).reshape(-1), q)
+    return jnp.maximum(sigma, tau)
+
+
+def tsign_update_ref(a_t, grad, keep_frac, tau=1e-9):
+    """Eq. 6: ``A ← clip(A − sign(g)·1[|g| > max(τ, σ_t)], −1, 1)``."""
+    thr = sigma_threshold_ref(grad, keep_frac, tau)
+    upd = jnp.sign(grad) * (jnp.abs(grad) > thr).astype(grad.dtype)
+    return jnp.clip(a_t - upd, -1.0, 1.0)
+
+
+def qalora_pool_ref(x, group_size):
+    """QA-LoRA input pooling: average x over each quantization group."""
+    *lead, din = x.shape
+    g = din // group_size
+    return x.reshape(*lead, g, group_size).mean(axis=-1)
+
+
+def lora_merge_requant_ref(w_int, scales, zeros, a, b, alpha, rank, n_bits):
+    """The *lossy* LoRA merge the paper criticises: add the fp update to the
+    dequantized weights and re-quantize onto the existing per-group grid.
+    Returned alongside the exact fp result so tests can measure the
+    reintroduced quantization error (challenge #2 in the paper's intro)."""
+    w_fp = dequant_ref(w_int, scales, zeros) + (alpha / rank) * (a @ b)
+    din = w_int.shape[0]
+    g = scales.shape[0]
+    gs = din // g
+    s = jnp.repeat(scales, gs, axis=0)
+    z = jnp.repeat(zeros, gs, axis=0)
+    w_int_new = jnp.clip(jnp.round((w_fp - z) / s), 0.0, float(2 ** n_bits - 1))
+    return w_int_new, w_fp

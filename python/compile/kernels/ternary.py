@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fused ternary adaptation (paper Eqs. 3–5, Appendix A).
+
+The paper fuses, in one Triton kernel: the auxiliary-matrix tile
+``ΔW = A_T @ B_T``, the ternary map ``Ŵ``, the boundary (overflow) masks and
+the integer update. We reproduce that fusion for the TPU memory hierarchy:
+the grid walks ``(G, Dout/bn)`` — one program per (quantization-group ×
+output-tile) — so each program:
+
+  1. loads the group's ``(gs, r)`` slice of A_T and ``(r, bn)`` slice of B_T
+     into VMEM and forms the ``(gs, bn)`` ΔW tile on the MXU;
+  2. applies the threshold ω on the VPU to get the ternary tile Ŵ;
+  3. clips ``W_int + Ŵ`` against the grid bounds (the paper's boundary
+     check — a free VPU clamp here, vs. packed boolean masks on GPU);
+  4. row-reduces the offset tile ``W̃ = ΔW − ωŴ`` to the per-group partial
+     sums that become the offset factor μ.
+
+One HBM read of A/B/W_int, one write of W_int' and the μ row — the same
+one-pass property the Triton kernel gets from shared memory.
+
+The autodiff wrapper :func:`ternary_apply` attaches the straight-through
+backward (see ``ref.ternary_ste_bwd_ref``); t-SignSGD consumes only the
+sign and relative magnitude of these gradients.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ternary_kernel(a_ref, b_ref, w_ref, omega_ref, bound_ref,
+                    w_out_ref, musum_ref):
+    delta = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    omega = omega_ref[0]
+    bound = bound_ref[0]
+    w_hat = jnp.sign(delta) * (jnp.abs(delta) > omega).astype(jnp.float32)
+    w_out_ref[...] = jnp.clip(w_ref[...] + w_hat, 0.0, bound)
+    w_tilde = delta - omega * w_hat
+    musum_ref[...] = jnp.sum(w_tilde, axis=0, keepdims=True)
+
+
+def ternary_apply_fwd_pallas(a_t, b_t, w_int, scales, zeros, omega, rank,
+                             n_bits, *, block_n=64):
+    """Fused forward: returns ``(w_int', zeros')`` like ``ternary_apply_ref``."""
+    din, r = a_t.shape
+    dout = w_int.shape[1]
+    g = scales.shape[0]
+    gs = din // g
+    bn = min(block_n, dout)
+    assert dout % bn == 0
+
+    omega_arr = jnp.full((1,), omega, jnp.float32)
+    bound_arr = jnp.full((1,), float(2 ** n_bits - 1), jnp.float32)
+    grid = (g, dout // bn)
+    w_new, musum = pl.pallas_call(
+        _ternary_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((din, dout), jnp.float32),
+            jax.ShapeDtypeStruct((g, dout), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gs, r), lambda i, j: (i, 0)),    # A_T group rows
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),    # B_T column tile
+            pl.BlockSpec((gs, bn), lambda i, j: (i, j)),   # W_int tile
+            pl.BlockSpec((1,), lambda i, j: (0,)),         # ω
+            pl.BlockSpec((1,), lambda i, j: (0,)),         # grid bound
+        ],
+        out_specs=(
+            pl.BlockSpec((gs, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+        ),
+        interpret=True,
+    )(a_t, b_t, w_int, omega_arr, bound_arr)
+    zeros_new = zeros + scales * musum / (rank * gs)
+    return w_new, zeros_new
+
+
+# omega is a *traced* scalar (swept by the L3 harness without re-lowering),
+# so it is a differentiable argument that receives a zero cotangent; only
+# rank / n_bits / use_pallas are static.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def ternary_apply(a_t, b_t, w_int, scales, zeros, omega, rank, n_bits,
+                  use_pallas=True):
+    """Differentiable ternary adaptation. Forward is discrete (exactly the
+    merge map); backward is the straight-through surrogate. Gradients flow
+    only to ``a_t``/``b_t`` — the base quantized tensors are frozen."""
+    if use_pallas:
+        return ternary_apply_fwd_pallas(a_t, b_t, w_int, scales, zeros,
+                                        omega, rank, n_bits)
+    return ref.ternary_apply_ref(a_t, b_t, w_int, scales, zeros,
+                                 omega, rank, n_bits)
+
+
+def _ternary_fwd(a_t, b_t, w_int, scales, zeros, omega, rank, n_bits,
+                 use_pallas):
+    out = ternary_apply(a_t, b_t, w_int, scales, zeros, omega, rank, n_bits,
+                        use_pallas)
+    return out, (a_t, b_t, w_int, scales, zeros, omega)
+
+
+def _ternary_bwd(rank, n_bits, use_pallas, res, cts):
+    a_t, b_t, w_int, scales, zeros, omega = res
+    ct_w, ct_z = cts
+    d_a, d_b = ref.ternary_ste_bwd_ref(a_t, b_t, w_int, scales, zeros,
+                                       omega, rank, n_bits, ct_w, ct_z)
+    zero = lambda x: jnp.zeros_like(x)
+    return (d_a, d_b, zero(w_int), zero(scales), zero(zeros),
+            jnp.zeros_like(omega))
+
+
+ternary_apply.defvjp(_ternary_fwd, _ternary_bwd)

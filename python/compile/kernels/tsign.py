@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: the t-SignSGD ternary update (paper Eq. 6).
+
+The update is element-wise once the dynamic percentile threshold σ_t is
+known: ``A ← clip(A − sign(g)·1[|g| > max(τ, σ_t)], −1, 1)``. σ_t is a
+global order statistic (top-``keep_frac`` of |g|), which on TPU is a
+sort/reduce best left to XLA's native ``sort`` — so the threshold is
+computed with ``jnp.quantile`` and broadcast into the kernel, and the
+Pallas kernel fuses the gate + sign step + clip over VMEM tiles.
+
+This mirrors the paper's Appendix A split: the percentile is a framework
+op; the hot element-wise path is the custom kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _tsign_kernel(a_ref, g_ref, thr_ref, o_ref):
+    thr = thr_ref[0]
+    g = g_ref[...]
+    upd = jnp.sign(g) * (jnp.abs(g) > thr).astype(jnp.float32)
+    o_ref[...] = jnp.clip(a_ref[...] - upd, -1.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def tsign_update(a_t, grad, keep_frac, tau=1e-9, *, block_rows=64):
+    """Apply one t-SignSGD step to a ternary adapter tensor.
+
+    ``keep_frac`` is a traced scalar (the L3 Rust scheduler feeds the
+    linearly-decaying 5% → 0.1% → 0.01% schedule per step).
+    """
+    thr = ref.sigma_threshold_ref(grad, keep_frac, tau)
+    rows, cols = a_t.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    thr_arr = jnp.reshape(thr, (1,))
+    return pl.pallas_call(
+        _tsign_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(a_t, grad, thr_arr)

@@ -1,0 +1,415 @@
+"""L2: the JAX compute graphs — transformer fwd/bwd over group-quantized
+weights with LoTA / LoRA / QA-LoRA adapters, plus full in-graph training
+steps (t-SignSGD for LoTA, AdamW for the baselines and for pretraining).
+
+Everything here is build-time only: ``aot.py`` lowers these functions once
+to HLO text and the Rust coordinator executes them through PJRT. Parameters
+cross the boundary as a flat, name-sorted list of f32 arrays; each artifact
+ships a JSON manifest recording that order (``aot.py``), which the Rust
+marshaller follows — nothing is positional by convention alone.
+
+Model: GPT-style pre-norm decoder. The six per-block matrices
+(wq/wk/wv/wo/w_up/w_down) are group-quantized and adapted; embeddings,
+position table, layer norms and the LM head stay f32 and frozen during QAF.
+Layer parameters are stacked on a leading ``L`` axis and the blocks run
+under ``lax.scan`` so the lowered HLO stays compact at any depth.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.ternary import ternary_apply
+
+# ---------------------------------------------------------------------------
+# Parameter inventory
+
+
+def slot_dims(cfg: ModelConfig):
+    """The six quantized linear slots: name -> (Din, Dout)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_up": (d, ff), "w_down": (ff, d),
+    }
+
+
+def fp_shared_shapes(cfg: ModelConfig):
+    """Frozen f32 tensors shared by every method (sorted-name order)."""
+    L, d, V, T = cfg.n_layers, cfg.d_model, cfg.vocab, cfg.seq_len
+    return {
+        "embed": (V, d),
+        "head": (d, V),
+        "ln1_b": (L, d), "ln1_w": (L, d),
+        "ln2_b": (L, d), "ln2_w": (L, d),
+        "lnf_b": (d,), "lnf_w": (d,),
+        "pos": (T, d),
+    }
+
+
+def fp_weight_shapes(cfg: ModelConfig):
+    """Full-precision per-slot weights (pretraining only)."""
+    L = cfg.n_layers
+    return {f"w_{s}": (L, din, dout) for s, (din, dout) in slot_dims(cfg).items()}
+
+
+def quant_shapes(cfg: ModelConfig):
+    """Quantized representation of each slot: ints + per-group scale/zero."""
+    L, gs = cfg.n_layers, cfg.group_size
+    out = {}
+    for s, (din, dout) in slot_dims(cfg).items():
+        g = din // gs
+        out[f"q_{s}_int"] = (L, din, dout)
+        out[f"q_{s}_s"] = (L, g, dout)
+        out[f"q_{s}_z"] = (L, g, dout)
+    return out
+
+
+def adapter_shapes(cfg: ModelConfig, method: str):
+    """Trainable adapter tensors for a method (empty for merged/fp)."""
+    L, r, gs = cfg.n_layers, cfg.rank, cfg.group_size
+    out = {}
+    for s, (din, dout) in slot_dims(cfg).items():
+        if method == "lota":
+            out[f"ta_{s}_a"] = (L, din, r)
+            out[f"ta_{s}_b"] = (L, r, dout)
+        elif method == "lora":
+            out[f"lo_{s}_a"] = (L, din, r)
+            out[f"lo_{s}_b"] = (L, r, dout)
+        elif method == "qalora":
+            out[f"qa_{s}_a"] = (L, din // gs, r)
+            out[f"qa_{s}_b"] = (L, r, dout)
+    return out
+
+
+def frozen_shapes(cfg: ModelConfig, method: str):
+    """Non-trainable inputs for a QAF method's graphs."""
+    if method == "fp":
+        return {**fp_shared_shapes(cfg), **fp_weight_shapes(cfg)}
+    return {**fp_shared_shapes(cfg), **quant_shapes(cfg)}
+
+
+def sorted_names(shapes: dict) -> list:
+    return sorted(shapes.keys())
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+
+
+def _layernorm(x, w, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * w + b
+
+
+def _linear(x, layer, slot, cfg: ModelConfig, method: str, omega, use_pallas):
+    """Method-dependent forward of one quantized linear.
+
+    ``x``: (B, T, Din); ``layer``: the dict of this block's (unstacked)
+    tensors produced by the scan body.
+    """
+    b, t, din = x.shape
+    x2 = x.reshape(b * t, din)
+    if method == "fp":
+        y2 = x2 @ layer[f"w_{slot}"]
+        return y2.reshape(b, t, -1)
+
+    w_int = layer[f"q_{slot}_int"]
+    sc = layer[f"q_{slot}_s"]
+    ze = layer[f"q_{slot}_z"]
+
+    if method == "lota":
+        # In-grid ternary adjustment (Eqs. 3–5) — the same map as the merge,
+        # so training-forward ≡ merged-forward bit-for-bit.
+        omega_arr = jnp.asarray(omega, jnp.float32)
+        w_int, ze = ternary_apply(
+            layer[f"ta_{slot}_a"], layer[f"ta_{slot}_b"],
+            w_int, sc, ze, omega_arr, cfg.rank, layer["__n_bits__"], use_pallas,
+        )
+        y2 = x2 @ ref.dequant_ref(w_int, sc, ze)
+    elif method == "lora":
+        y2 = x2 @ ref.dequant_ref(w_int, sc, ze)
+        alpha = 2.0 * cfg.rank
+        y2 = y2 + (alpha / cfg.rank) * (x2 @ layer[f"lo_{slot}_a"]) @ layer[f"lo_{slot}_b"]
+    elif method == "qalora":
+        y2 = x2 @ ref.dequant_ref(w_int, sc, ze)
+        alpha = 2.0 * cfg.rank
+        pooled = ref.qalora_pool_ref(x2, cfg.group_size)
+        y2 = y2 + (alpha / cfg.rank) * (pooled @ layer[f"qa_{slot}_a"]) @ layer[f"qa_{slot}_b"]
+    else:  # "merged" / plain GPTQ forward
+        y2 = x2 @ ref.dequant_ref(w_int, sc, ze)
+    return y2.reshape(b, t, -1)
+
+
+def _block(x, layer, cfg: ModelConfig, method: str, omega, use_pallas):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xn = _layernorm(x, layer["ln1_w"], layer["ln1_b"])
+    q = _linear(xn, layer, "wq", cfg, method, omega, use_pallas)
+    k = _linear(xn, layer, "wk", cfg, method, omega, use_pallas)
+    v = _linear(xn, layer, "wv", cfg, method, omega, use_pallas)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    att = jnp.where(mask == 0.0, -1e30, att)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + _linear(o, layer, "wo", cfg, method, omega, use_pallas)
+    xn = _layernorm(x, layer["ln2_w"], layer["ln2_b"])
+    hmid = jax.nn.gelu(_linear(xn, layer, "w_up", cfg, method, omega, use_pallas))
+    x = x + _linear(hmid, layer, "w_down", cfg, method, omega, use_pallas)
+    return x
+
+
+_PER_LAYER_PREFIXES = ("ln1_", "ln2_", "q_", "ta_", "lo_", "qa_", "w_")
+
+
+def forward(params: dict, tokens_f32, cfg: ModelConfig, method: str,
+            omega=0.0, n_bits=4, use_pallas=False):
+    """Logits (B, T, V) for a batch of f32-coded token ids."""
+    tokens = tokens_f32.astype(jnp.int32)
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :t, :]
+
+    stacked = {k: v for k, v in params.items()
+               if k.startswith(_PER_LAYER_PREFIXES)}
+
+    def body(carry, layer):
+        layer = dict(layer)
+        layer["__n_bits__"] = n_bits
+        return _block(carry, layer, cfg, method, omega, use_pallas), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    x = _layernorm(x, params["lnf_w"], params["lnf_b"])
+    return x @ params["head"]
+
+
+def loss_fn(params, batch, cfg, method, omega=0.0, n_bits=4, use_pallas=False):
+    """Masked next-token cross-entropy. ``batch`` = (tokens, targets, mask),
+    all f32-coded (B, T)."""
+    tokens, targets, mask = batch
+    logits = forward(params, tokens, cfg, method, omega, n_bits, use_pallas)
+    tgt = targets.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (in-graph)
+
+
+def adamw_update(p, g, m, v, lr, step, beta1=0.9, beta2=0.999, eps=1e-8,
+                 weight_decay=0.0):
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1 ** step)
+    vhat = v / (1.0 - beta2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p, m, v
+
+
+def clip_global_norm(grads: dict, max_norm: float):
+    """Paper setup: max gradient norm 0.3 for the AdamW baselines."""
+    total = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def tsign_update_stacked(a, g, keep_frac, tau=1e-9):
+    """t-SignSGD (Eq. 6) on a layer-stacked adapter tensor: the percentile
+    threshold σ_t is per (layer, adapter-matrix), matching the paper's
+    per-matrix updates."""
+    L = a.shape[0]
+    absg = jnp.abs(g).reshape(L, -1)
+    q = jnp.clip(1.0 - keep_frac, 0.0, 1.0)
+    sigma = jnp.quantile(absg, q, axis=1)
+    thr = jnp.maximum(sigma, tau).reshape((L,) + (1,) * (a.ndim - 1))
+    upd = jnp.sign(g) * (jnp.abs(g) > thr).astype(g.dtype)
+    return jnp.clip(a - upd, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Lowered entry points (flat-argument functions; see aot.py manifests)
+
+
+def make_fwd_fn(cfg: ModelConfig, method: str, n_bits: int, use_pallas=False):
+    """fwd_{method}: frozen+adapters (sorted) + [omega?] + tokens → logits."""
+    froz = frozen_shapes(cfg, method)
+    adap = adapter_shapes(cfg, method)
+    names = sorted_names({**froz, **adap})
+    needs_omega = method == "lota"
+
+    def fn(*args):
+        arrs = list(args)
+        params = {n: arrs[i] for i, n in enumerate(names)}
+        rest = arrs[len(names):]
+        if needs_omega:
+            omega, tokens = rest
+            omega = omega.reshape(())
+        else:
+            (tokens,) = rest
+            omega = 0.0
+        return (forward(params, tokens, cfg, method, omega, n_bits, use_pallas),)
+
+    return fn, names, needs_omega
+
+
+def make_step_fn(cfg: ModelConfig, method: str, n_bits: int, use_pallas=False):
+    """step_{method}: one full training step (loss + backward + update).
+
+    Flat inputs: frozen (sorted) + adapters (sorted) + opt-state + batch +
+    hyper scalars. Outputs: (loss, *updated-adapters[, *updated-opt-state]).
+    """
+    froz = frozen_shapes(cfg, method)
+    adap = adapter_shapes(cfg, method)
+    fnames = sorted_names(froz)
+    anames = sorted_names(adap)
+
+    if method == "lota":
+        def fn(*args):
+            arrs = list(args)
+            i = 0
+            frozen = {n: arrs[i + j] for j, n in enumerate(fnames)}; i += len(fnames)
+            adapters = {n: arrs[i + j] for j, n in enumerate(anames)}; i += len(anames)
+            tokens, targets, mask, omega, keep_frac = arrs[i:i + 5]
+            omega = omega.reshape(())
+            keep_frac = keep_frac.reshape(())
+
+            def loss_of(ad):
+                return loss_fn({**frozen, **ad}, (tokens, targets, mask),
+                               cfg, "lota", omega, n_bits, use_pallas)
+
+            loss, grads = jax.value_and_grad(loss_of)(adapters)
+            new = {n: tsign_update_stacked(adapters[n], grads[n], keep_frac)
+                   for n in anames}
+            return (loss.reshape(1),) + tuple(new[n] for n in anames)
+
+        extra = ["tokens", "targets", "mask", "omega", "keep_frac"]
+        outs = ["loss"] + anames
+        return fn, fnames, anames, extra, outs
+
+    # LoRA / QA-LoRA: AdamW on adapters (paper: paged AdamW, grad-norm 0.3).
+    def fn(*args):
+        arrs = list(args)
+        i = 0
+        frozen = {n: arrs[i + j] for j, n in enumerate(fnames)}; i += len(fnames)
+        adapters = {n: arrs[i + j] for j, n in enumerate(anames)}; i += len(anames)
+        m = {n: arrs[i + j] for j, n in enumerate(anames)}; i += len(anames)
+        v = {n: arrs[i + j] for j, n in enumerate(anames)}; i += len(anames)
+        tokens, targets, mask, lr, step = arrs[i:i + 5]
+        lr = lr.reshape(())
+        step = step.reshape(())
+
+        def loss_of(ad):
+            return loss_fn({**frozen, **ad}, (tokens, targets, mask),
+                           cfg, method, 0.0, n_bits, use_pallas)
+
+        loss, grads = jax.value_and_grad(loss_of)(adapters)
+        grads = clip_global_norm(grads, 0.3)
+        new_p, new_m, new_v = {}, {}, {}
+        for n in anames:
+            new_p[n], new_m[n], new_v[n] = adamw_update(
+                adapters[n], grads[n], m[n], v[n], lr, step)
+        out = (loss.reshape(1),)
+        out += tuple(new_p[n] for n in anames)
+        out += tuple(new_m[n] for n in anames)
+        out += tuple(new_v[n] for n in anames)
+        return out
+
+    extra = ["tokens", "targets", "mask", "lr", "step"]
+    outs = (["loss"] + anames + [f"m_{n}" for n in anames]
+            + [f"v_{n}" for n in anames])
+    return fn, fnames, anames, extra, outs
+
+
+def make_acts_fn(cfg: ModelConfig):
+    """acts_fp: capture the inputs of every quantized slot on the fp model.
+
+    GPTQ needs per-layer calibration activations X to build its Hessians
+    ``H = 2 X Xᵀ``. Returns, stacked over layers: ``xn1`` (input to
+    wq/wk/wv), ``attn_o`` (input to wo), ``xn2`` (input to w_up) and
+    ``h_mid`` (input to w_down), each (L, B, T, ·).
+    """
+    shapes = {**fp_shared_shapes(cfg), **fp_weight_shapes(cfg)}
+    names = sorted_names(shapes)
+
+    def fn(*args):
+        arrs = list(args)
+        params = {n: arrs[i] for i, n in enumerate(names)}
+        tokens = arrs[len(names)].astype(jnp.int32)
+        b, t = tokens.shape
+        x = params["embed"][tokens] + params["pos"][None, :t, :]
+        stacked = {k: v for k, v in params.items()
+                   if k.startswith(_PER_LAYER_PREFIXES)}
+
+        def body(carry, layer):
+            layer = dict(layer)
+            layer["__n_bits__"] = 4
+            bb, tt, d = carry.shape
+            h, hd = cfg.n_heads, cfg.head_dim
+            xn1 = _layernorm(carry, layer["ln1_w"], layer["ln1_b"])
+            q = _linear(xn1, layer, "wq", cfg, "fp", 0.0, False)
+            k = _linear(xn1, layer, "wk", cfg, "fp", 0.0, False)
+            v = _linear(xn1, layer, "wv", cfg, "fp", 0.0, False)
+            q = q.reshape(bb, tt, h, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(bb, tt, h, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(bb, tt, h, hd).transpose(0, 2, 1, 3)
+            att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+            mask = jnp.tril(jnp.ones((tt, tt), jnp.float32))
+            att = jnp.where(mask == 0.0, -1e30, att)
+            att = jax.nn.softmax(att, axis=-1)
+            attn_o = (att @ v).transpose(0, 2, 1, 3).reshape(bb, tt, d)
+            x2 = carry + _linear(attn_o, layer, "wo", cfg, "fp", 0.0, False)
+            xn2 = _layernorm(x2, layer["ln2_w"], layer["ln2_b"])
+            h_mid = jax.nn.gelu(_linear(xn2, layer, "w_up", cfg, "fp", 0.0, False))
+            x3 = x2 + _linear(h_mid, layer, "w_down", cfg, "fp", 0.0, False)
+            return x3, (xn1, attn_o, xn2, h_mid)
+
+        _, caps = jax.lax.scan(body, x, stacked)
+        return caps
+
+    outs = ["xn1", "attn_o", "xn2", "h_mid"]
+    return fn, names, outs
+
+
+def make_pretrain_fn(cfg: ModelConfig):
+    """pretrain_step: full-precision AdamW over every parameter (used to
+    create the in-repo 'pretrained' base model that GPTQ then quantizes)."""
+    shapes = {**fp_shared_shapes(cfg), **fp_weight_shapes(cfg)}
+    names = sorted_names(shapes)
+
+    def fn(*args):
+        arrs = list(args)
+        n = len(names)
+        params = {nm: arrs[j] for j, nm in enumerate(names)}
+        m = {nm: arrs[n + j] for j, nm in enumerate(names)}
+        v = {nm: arrs[2 * n + j] for j, nm in enumerate(names)}
+        tokens, targets, mask, lr, step = arrs[3 * n:3 * n + 5]
+        lr = lr.reshape(())
+        step = step.reshape(())
+
+        def loss_of(p):
+            return loss_fn(p, (tokens, targets, mask), cfg, "fp")
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        grads = clip_global_norm(grads, 1.0)
+        new_p, new_m, new_v = {}, {}, {}
+        for nm in names:
+            new_p[nm], new_m[nm], new_v[nm] = adamw_update(
+                params[nm], grads[nm], m[nm], v[nm], lr, step)
+        out = (loss.reshape(1),)
+        out += tuple(new_p[nm] for nm in names)
+        out += tuple(new_m[nm] for nm in names)
+        out += tuple(new_v[nm] for nm in names)
+        return out
+
+    outs = (["loss"] + names + [f"m_{n}" for n in names]
+            + [f"v_{n}" for n in names])
+    return fn, names, outs

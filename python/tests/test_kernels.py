@@ -1,0 +1,183 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes (and the key hyper-parameters ω / keep_frac /
+n_bits); every comparison is exact or within one f32 ulp-ish tolerance —
+the kernels are the same arithmetic in a different schedule.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.ternary import ternary_apply, ternary_apply_fwd_pallas
+from compile.kernels.tsign import tsign_update
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_quant(rng, din, dout, g, n_bits):
+    w_int = rng.integers(0, 2 ** n_bits, (din, dout)).astype(np.float32)
+    scales = (rng.random((g, dout)).astype(np.float32) * 0.1 + 0.01)
+    zeros = rng.normal(size=(g, dout)).astype(np.float32) * 0.1
+    return w_int, scales, zeros
+
+
+@st.composite
+def qmm_case(draw):
+    gs = draw(st.sampled_from([8, 16, 32]))
+    g = draw(st.integers(1, 4))
+    dout = draw(st.sampled_from([64, 128]))
+    m = draw(st.sampled_from([1, 8, 16]))
+    n_bits = draw(st.sampled_from([2, 3, 4]))
+    seed = draw(st.integers(0, 2 ** 31))
+    return gs, g, dout, m, n_bits, seed
+
+
+@given(qmm_case())
+@settings(**SETTINGS)
+def test_quant_matmul_matches_ref(case):
+    gs, g, dout, m, n_bits, seed = case
+    din = g * gs
+    rng = np.random.default_rng(seed)
+    w_int, sc, ze = make_quant(rng, din, dout, g, n_bits)
+    x = rng.normal(size=(m, din)).astype(np.float32)
+    got = quant_matmul(jnp.array(x), jnp.array(w_int), jnp.array(sc),
+                       jnp.array(ze), block_m=8, block_n=64)
+    want = ref.quant_matmul_ref(jnp.array(x), jnp.array(w_int),
+                                jnp.array(sc), jnp.array(ze))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@st.composite
+def ternary_case(draw):
+    gs = draw(st.sampled_from([8, 16]))
+    g = draw(st.integers(1, 4))
+    dout = draw(st.sampled_from([64, 128]))
+    r = draw(st.sampled_from([4, 8, 16]))
+    n_bits = draw(st.sampled_from([2, 3, 4]))
+    omega_frac = draw(st.sampled_from([0.5, 0.75, 0.875]))
+    seed = draw(st.integers(0, 2 ** 31))
+    return gs, g, dout, r, n_bits, omega_frac, seed
+
+
+@given(ternary_case())
+@settings(**SETTINGS)
+def test_ternary_kernel_matches_ref(case):
+    gs, g, dout, r, n_bits, omega_frac, seed = case
+    din = g * gs
+    rng = np.random.default_rng(seed)
+    w_int, sc, ze = make_quant(rng, din, dout, g, n_bits)
+    a = rng.integers(-1, 2, (din, r)).astype(np.float32)
+    b = rng.integers(-1, 2, (r, dout)).astype(np.float32)
+    omega = omega_frac * r
+    w1, z1 = ternary_apply_fwd_pallas(
+        jnp.array(a), jnp.array(b), jnp.array(w_int), jnp.array(sc),
+        jnp.array(ze), jnp.float32(omega), r, n_bits)
+    w2, z2 = ref.ternary_apply_ref(
+        jnp.array(a), jnp.array(b), jnp.array(w_int), jnp.array(sc),
+        jnp.array(ze), omega, r, n_bits)
+    # integer grid must match EXACTLY (it is the lossless-merge payload)
+    assert bool(jnp.all(w1 == w2))
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(ternary_case())
+@settings(**SETTINGS)
+def test_ternary_output_stays_in_grid(case):
+    gs, g, dout, r, n_bits, omega_frac, seed = case
+    din = g * gs
+    rng = np.random.default_rng(seed)
+    w_int, sc, ze = make_quant(rng, din, dout, g, n_bits)
+    a = rng.integers(-1, 2, (din, r)).astype(np.float32)
+    b = rng.integers(-1, 2, (r, dout)).astype(np.float32)
+    w1, _ = ref.ternary_apply_ref(
+        jnp.array(a), jnp.array(b), jnp.array(w_int), jnp.array(sc),
+        jnp.array(ze), omega_frac * r, r, n_bits)
+    w1 = np.asarray(w1)
+    assert w1.min() >= 0.0 and w1.max() <= 2 ** n_bits - 1
+    assert np.all(w1 == np.rint(w1)), "grid values must stay integral"
+    # adjustment is ternary: at most ±1 from the original grid
+    assert np.abs(w1 - w_int).max() <= 1.0
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([0.02, 0.05, 0.095, 0.001]))
+@settings(**SETTINGS)
+def test_tsign_kernel_matches_ref(seed, keep):
+    rng = np.random.default_rng(seed)
+    rows, cols = 64, 8
+    a = rng.integers(-1, 2, (rows, cols)).astype(np.float32)
+    g = rng.normal(size=(rows, cols)).astype(np.float32) * 1e-3
+    got = tsign_update(jnp.array(a), jnp.array(g), jnp.float32(keep))
+    want = ref.tsign_update_ref(jnp.array(a), jnp.array(g), jnp.float32(keep))
+    assert bool(jnp.all(got == want))
+
+
+@given(st.integers(0, 2 ** 31))
+@settings(**SETTINGS)
+def test_tsign_update_is_ternary_and_selective(seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = 128, 8
+    a = rng.integers(-1, 2, (rows, cols)).astype(np.float32)
+    g = rng.normal(size=(rows, cols)).astype(np.float32)
+    keep = 0.05
+    out = np.asarray(ref.tsign_update_ref(jnp.array(a), jnp.array(g),
+                                          jnp.float32(keep)))
+    assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+    # roughly keep-fraction of entries move (clips can reduce the count)
+    changed = (out != a).sum()
+    assert changed <= int(np.ceil(keep * a.size)) + 1
+
+
+def test_tsign_zero_grad_is_identity():
+    a = jnp.array(np.random.default_rng(0).integers(-1, 2, (64, 8)),
+                  jnp.float32)
+    g = jnp.zeros((64, 8), jnp.float32)
+    out = tsign_update(a, g, jnp.float32(0.05))
+    assert bool(jnp.all(out == a))
+
+
+def test_ternary_ste_gradients_nonzero():
+    """The custom_vjp must deliver usable gradients to both adapters."""
+    rng = np.random.default_rng(3)
+    din, dout, g, r, nb = 32, 64, 4, 8, 4
+    w_int, sc, ze = make_quant(rng, din, dout, g, nb)
+    a = jnp.array(rng.integers(-1, 2, (din, r)), jnp.float32)
+    b = jnp.array(rng.integers(-1, 2, (r, dout)), jnp.float32)
+
+    def loss(a, b):
+        w, z = ternary_apply(a, b, jnp.array(w_int), jnp.array(sc),
+                             jnp.array(ze), jnp.float32(0.75 * r), r, nb, True)
+        return jnp.sum(w ** 2) * 1e-3 + jnp.sum(z ** 2)
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(a, b)
+    assert bool(jnp.isfinite(ga).all() and jnp.isfinite(gb).all())
+    assert float(jnp.abs(ga).max()) > 0.0
+    assert float(jnp.abs(gb).max()) > 0.0
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([2, 3, 4]))
+@settings(**SETTINGS)
+def test_boundary_overflow_prevention(seed, n_bits):
+    """Paper Fig. 3: boundary values (e.g. 0 and 2^N−1) must not over/underflow."""
+    rng = np.random.default_rng(seed)
+    din, dout, g, r = 16, 64, 2, 4
+    # all-boundary grid: half at 0, half at max
+    w_int = np.where(rng.random((din, dout)) < 0.5, 0.0,
+                     float(2 ** n_bits - 1)).astype(np.float32)
+    sc = np.full((g, dout), 0.05, np.float32)
+    ze = np.zeros((g, dout), np.float32)
+    # adapters that push hard in both directions
+    a = rng.integers(-1, 2, (din, r)).astype(np.float32)
+    b = rng.integers(-1, 2, (r, dout)).astype(np.float32)
+    w1, _ = ternary_apply_fwd_pallas(
+        jnp.array(a), jnp.array(b), jnp.array(w_int), jnp.array(sc),
+        jnp.array(ze), jnp.float32(0.5 * r), r, n_bits)
+    w1 = np.asarray(w1)
+    assert w1.min() >= 0.0
+    assert w1.max() <= 2 ** n_bits - 1

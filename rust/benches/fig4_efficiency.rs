@@ -1,0 +1,121 @@
+//! Regenerates **Figure 4 (c)** — inference-efficiency analysis (§4.3):
+//! token throughput by batch bucket for the merged low-bit path (LoTA
+//! after its lossless merge) vs the quant + 16-bit-adapter path (LoRA),
+//! at 4/3/2-bit, plus the merged-over-LoRA speedup ratio and the
+//! deployed-weight footprints.
+//!
+//! Paper reference: LoTA 1.9×/1.7×/2.0× faster than LoRA at 4/3/2-bit on
+//! an A800. Here both paths run identical fixed-shape fwd artifacts on
+//! CPU PJRT, so the ratio reflects the *extra adapter matmuls* — the
+//! portable part of the claim. (Sub-byte kernels are simulated with
+//! f32-coded integers, so 4/3/2-bit merged paths share one artifact; the
+//! footprint column shows the real deployment sizes from `quant::pack`.)
+//!
+//! Env knobs: LOTA_F4C_REQS (16), LOTA_F4C_MAXNEW (8).
+
+use std::path::Path;
+
+use lota_qaf::bench_harness::Table;
+use lota_qaf::config::{preset, Method};
+use lota_qaf::data::{task_by_name, Split};
+use lota_qaf::model;
+use lota_qaf::quant::{pack::deployed_bytes, rtn_quantize};
+use lota_qaf::runtime::Runtime;
+use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::tensor::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_reqs = env_usize("LOTA_F4C_REQS", 16);
+    let max_new = env_usize("LOTA_F4C_MAXNEW", 8);
+    let model = std::env::var("LOTA_F4C_MODEL").unwrap_or_else(|_| "small".into());
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg = preset(&model)?;
+    let mut rng = Rng::new(4);
+    let fp = model::init_fp(&cfg, &mut rng);
+
+    let gen = task_by_name("arith")?;
+    let mut prng = Rng::new(5);
+    let prompts: Vec<String> = (0..n_reqs)
+        .map(|_| gen.sample(&mut prng, Split::Test).prompt)
+        .collect();
+
+    // warm-up: compile every serving executable before timing anything,
+    // so the first table row doesn't absorb PJRT compilation
+    {
+        let warm = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })?;
+        let mut warm_l = warm.clone();
+        model::init_adapters(&cfg, Method::Lora, &mut rng, &mut warm_l);
+        let wp = vec![prompts[0].clone()];
+        serve_batch(&rt, &cfg, &warm, ServePath::Merged, &wp, 2)?;
+        serve_batch(&rt, &cfg, &warm_l, ServePath::LoraAdapter, &wp, 2)?;
+    }
+
+    println!("## Figure 4c — serving throughput, merged vs LoRA path ({n_reqs} reqs × {max_new} toks)");
+    let mut t = Table::new(&[
+        "bits", "merged tok/s", "lora tok/s", "cpu speedup", "bw-model speedup",
+        "merged KiB", "lora KiB",
+    ]);
+    for bits in [4u32, 3, 2] {
+        let merged = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, bits))
+        })?;
+        let mut lora = merged.clone();
+        model::init_adapters(&cfg, Method::Lora, &mut rng, &mut lora);
+
+        let rep_m = serve_batch(&rt, &cfg, &merged, ServePath::Merged, &prompts, max_new)?;
+        let rep_l = serve_batch(&rt, &cfg, &lora, ServePath::LoraAdapter, &prompts, max_new)?;
+
+        let w_bytes: usize = cfg
+            .slots()
+            .iter()
+            .map(|(_, din, dout)| deployed_bytes(*din, *dout, cfg.group_size, bits) * cfg.n_layers)
+            .sum();
+        let a_bytes: usize = cfg
+            .slots()
+            .iter()
+            .map(|(_, din, dout)| (din * cfg.rank + cfg.rank * dout) * 4 * cfg.n_layers)
+            .sum();
+        // Real GPTQ decode is weight-bandwidth-bound, so the deployment
+        // speedup tracks bytes-moved-per-token; the CPU-f32 substrate
+        // computes both paths at full precision and compresses the gap
+        // (DESIGN.md §2). The bandwidth model reproduces the paper's
+        // 1.7–2.0x territory at low bits.
+        let bw_model = (w_bytes + a_bytes) as f64 / w_bytes as f64;
+        t.row(&[
+            bits.to_string(),
+            format!("{:.1}", rep_m.tokens_per_sec),
+            format!("{:.1}", rep_l.tokens_per_sec),
+            format!("{:.2}x", rep_m.speedup_over(&rep_l)),
+            format!("{:.2}x", bw_model),
+            format!("{:.1}", w_bytes as f64 / 1024.0),
+            format!("{:.1}", (w_bytes + a_bytes) as f64 / 1024.0),
+        ]);
+    }
+    t.print();
+
+    // throughput scaling over batch buckets (merged path, 4-bit)
+    println!("\n## Figure 4c inset — merged-path throughput by batch bucket");
+    let merged =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))?;
+    let mut t = Table::new(&["batch", "tok/s", "p50 latency s"]);
+    let buckets: &[usize] = if model == "tiny" { &[1, 8, 32] } else { &[1, 4, 8] };
+    for &bucket in buckets {
+        let prompts: Vec<String> = (0..bucket)
+            .map(|_| gen.sample(&mut prng, Split::Test).prompt)
+            .collect();
+        let rep = serve_batch(&rt, &cfg, &merged, ServePath::Merged, &prompts, max_new)?;
+        t.row(&[
+            bucket.to_string(),
+            format!("{:.1}", rep.tokens_per_sec),
+            format!("{:.3}", rep.latency.p50),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Regenerates **Figure 4 (a,b)** — hyper-parameter sensitivity of
+//! LoTA-QAF on the GSM8K stand-in (`arith`) at 4/3/2-bit:
+//!   (a) the ternary threshold ω as a fraction of the rank
+//!       (paper sweeps ω ∈ {40..60} at r=64 ⇒ fracs 0.625..0.9375);
+//!   (b) the initial σ_t percentile (top {9.5, 8.0, 6.5, 5.0, 3.5, 2.0}%).
+//!
+//! Expected shapes: a sweet spot near ω = 0.75r with larger ω preferred at
+//! 2-bit (conservative updates on a 4-level grid); small initial σ_t
+//! under-trains (the paper's "overly small σ_t limits learning").
+//!
+//! Env knobs: LOTA_F4_STEPS (120), LOTA_F4_EVAL (48).
+
+use std::path::Path;
+
+use lota_qaf::bench_harness::Table;
+use lota_qaf::config::{ExperimentConfig, Method};
+use lota_qaf::coordinator::experiments::{run_cell, ExperimentContext};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_usize("LOTA_F4_STEPS", 120);
+    let eval_n = env_usize("LOTA_F4_EVAL", 48);
+    let ctx = ExperimentContext::build(Path::new("artifacts"), "tiny", 600, 20250710)?;
+
+    let omega_fracs = [0.625, 0.6875, 0.75, 0.8125, 0.875, 0.9375];
+    let sigma_inits = [0.095, 0.080, 0.065, 0.050, 0.035, 0.020];
+
+    println!("## Figure 4a — ω sweep (arith token-acc %, LoTA-QAF, {steps} steps)");
+    let mut t = Table::new(&["omega/r", "int4", "int3", "int2"]);
+    for of in omega_fracs {
+        let mut row = vec![format!("{of:.4}")];
+        for bits in [4u32, 3, 2] {
+            let exp = ExperimentConfig {
+                method: Method::LotaQaf,
+                n_bits: bits,
+                omega_frac: of,
+                sigma_init: 0.05,
+                steps,
+                lr: 5e-4,
+                task: "arith".into(),
+                ..Default::default()
+            };
+            let cell = run_cell(&ctx, &exp, eval_n)?;
+            row.push(format!("{:.2}", cell.token_acc.unwrap_or(0.0)));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    println!("\n## Figure 4b — initial σ_t sweep (arith token-acc %, ω=0.75r)");
+    let mut t = Table::new(&["sigma_init", "int4", "int3", "int2"]);
+    for si in sigma_inits {
+        let mut row = vec![format!("{:.1}%", si * 100.0)];
+        for bits in [4u32, 3, 2] {
+            let exp = ExperimentConfig {
+                method: Method::LotaQaf,
+                n_bits: bits,
+                omega_frac: 0.75,
+                sigma_init: si,
+                steps,
+                lr: 5e-4,
+                task: "arith".into(),
+                ..Default::default()
+            };
+            let cell = run_cell(&ctx, &exp, eval_n)?;
+            row.push(format!("{:.2}", cell.token_acc.unwrap_or(0.0)));
+        }
+        t.row(&row);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Regenerates **Figure 5** (appendix) — the hyper-parameter sweeps
+//! extended across datasets: ω and initial-σ_t sensitivity of LoTA-QAF on
+//! (a) the MMLU-like recovery suite, (b) sql and (c) datatotext — the
+//! analogues of the paper's MMLU/SQL/ViGGO panels. (Panels (d)/(e) — the
+//! same sweep on bigger models — are covered by setting
+//! LOTA_F5_MODEL=small; the default keeps the bench affordable on 1 CPU.)
+//!
+//! Env knobs: LOTA_F5_MODEL (tiny), LOTA_F5_STEPS (100), LOTA_F5_EVAL (48).
+
+use std::path::Path;
+
+use lota_qaf::bench_harness::Table;
+use lota_qaf::config::{ExperimentConfig, Method};
+use lota_qaf::coordinator::experiments::{run_cell, ExperimentContext};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn score(cell: &lota_qaf::coordinator::CellResult) -> f32 {
+    cell.mmlu
+        .as_ref()
+        .map(|m| m.average)
+        .or(cell.token_acc)
+        .unwrap_or(0.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("LOTA_F5_MODEL").unwrap_or_else(|_| "tiny".into());
+    let steps = env_usize("LOTA_F5_STEPS", 100);
+    let eval_n = env_usize("LOTA_F5_EVAL", 48);
+    let pretrain = if model == "tiny" { 600 } else { 300 };
+    let ctx = ExperimentContext::build(Path::new("artifacts"), &model, pretrain, 20250710)?;
+
+    let omega_fracs = [0.625, 0.75, 0.875, 0.9375];
+    let sigma_inits = [0.080, 0.050, 0.020];
+    let datasets = ["recovery", "sql", "datatotext"];
+
+    for task in datasets {
+        println!("## Figure 5 — ω sweep on {task} (score = MMLU-avg or token-acc %)");
+        let mut t = Table::new(&["omega/r", "int4", "int3", "int2"]);
+        for of in omega_fracs {
+            let mut row = vec![format!("{of:.4}")];
+            for bits in [4u32, 3, 2] {
+                let exp = ExperimentConfig {
+                    method: Method::LotaQaf,
+                    n_bits: bits,
+                    omega_frac: of,
+                    sigma_init: 0.05,
+                    steps,
+                    lr: if task == "recovery" { 1e-4 } else { 5e-4 },
+                    task: task.into(),
+                    model: model.clone(),
+                    ..Default::default()
+                };
+                let cell = run_cell(&ctx, &exp, eval_n)?;
+                row.push(format!("{:.2}", score(&cell)));
+            }
+            t.row(&row);
+        }
+        t.print();
+
+        println!("\n## Figure 5 — σ_t sweep on {task} (ω = 0.75r)");
+        let mut t = Table::new(&["sigma_init", "int4", "int3", "int2"]);
+        for si in sigma_inits {
+            let mut row = vec![format!("{:.1}%", si * 100.0)];
+            for bits in [4u32, 3, 2] {
+                let exp = ExperimentConfig {
+                    method: Method::LotaQaf,
+                    n_bits: bits,
+                    omega_frac: 0.75,
+                    sigma_init: si,
+                    steps,
+                    lr: if task == "recovery" { 1e-4 } else { 5e-4 },
+                    task: task.into(),
+                    model: model.clone(),
+                    ..Default::default()
+                };
+                let cell = run_cell(&ctx, &exp, eval_n)?;
+                row.push(format!("{:.2}", score(&cell)));
+            }
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}

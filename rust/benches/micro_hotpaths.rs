@@ -1,0 +1,230 @@
+//! Hot-path micro-benchmarks backing EXPERIMENTS.md §Perf: per-layer
+//! timings of every operation on the training/serving critical paths —
+//! GPTQ sweeps, the host ternary merge, bit-packing, t-SignSGD host
+//! update, host matmul, PJRT forward latency per batch bucket, and the
+//! full training-step latency per method.
+//!
+//! Env knobs: LOTA_MICRO_ITERS (10).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use lota_qaf::adapter::{lota_merge, TernaryAdapter};
+use lota_qaf::bench_harness::{bench, Table};
+use lota_qaf::config::{preset, step_batch, Method};
+use lota_qaf::coordinator;
+use lota_qaf::data::{corpus, lm_batch, sft_batch, Example};
+use lota_qaf::model;
+use lota_qaf::quant::{
+    accumulate_hessian, gptq_quantize, pack_ints, rtn_quantize, unpack_ints, GptqConfig,
+};
+use lota_qaf::runtime::Runtime;
+use lota_qaf::tensor::{linalg, Rng, Tensor};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_usize("LOTA_MICRO_ITERS", 10);
+    let mut results = Table::new(&["path", "mean ms", "p50 ms", "p95 ms", "throughput"]);
+    let mut rng = Rng::new(1);
+
+    // ---- host: GPTQ sweep on a small-model slot (256×1024, gs=32) ----
+    let (din, dout, gs) = (256, 1024, 32);
+    let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+    let x = Tensor::new(&[512, din], rng.normal_vec(512 * din, 1.0));
+    let mut h = Tensor::zeros(&[din, din]);
+    accumulate_hessian(&mut h, &x);
+    let cfg4 = GptqConfig::new(4, gs);
+    let r = bench("gptq 256x1024", 1, iters.min(5), || {
+        gptq_quantize(&w, &h, &cfg4).unwrap();
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.1} Mw/s", din as f64 * dout as f64 / r.mean_secs / 1e6),
+    ]);
+
+    // ---- host: hessian accumulation ----
+    let r = bench("hessian 512x256", 1, iters, || {
+        let mut h2 = Tensor::zeros(&[din, din]);
+        accumulate_hessian(&mut h2, &x);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.2} GF/s", 2.0 * 512.0 * (din * din) as f64 / r.mean_secs / 1e9),
+    ]);
+
+    // ---- host: ternary merge ----
+    let ql = rtn_quantize(&w, gs, 4);
+    let rank = 16;
+    let ta = {
+        let mut t = TernaryAdapter::init(din, dout, rank, &mut rng);
+        t.b = Tensor::new(
+            &[rank, dout],
+            (0..rank * dout).map(|_| rng.below(3) as f32 - 1.0).collect(),
+        );
+        t
+    };
+    let r = bench("lota_merge 256x1024", 1, iters, || {
+        lota_merge(&ql, &ta, 12.0);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.1} Mw/s", din as f64 * dout as f64 / r.mean_secs / 1e6),
+    ]);
+
+    // ---- host: bit packing ----
+    let codes: Vec<f32> = (0..din * dout).map(|_| rng.below(16) as f32).collect();
+    let r = bench("pack+unpack 4-bit 256k", 1, iters, || {
+        let p = pack_ints(&codes, 4).unwrap();
+        unpack_ints(&p, codes.len(), 4).unwrap();
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.1} Mw/s", codes.len() as f64 / r.mean_secs / 1e6),
+    ]);
+
+    // ---- host: matmul (the coordinator's biggest host op) ----
+    let a = Tensor::new(&[256, 256], rng.normal_vec(256 * 256, 1.0));
+    let b = Tensor::new(&[256, 256], rng.normal_vec(256 * 256, 1.0));
+    let r = bench("host matmul 256^3", 1, iters, || {
+        linalg::matmul(&a, &b);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.2} GF/s", 2.0 * 256f64.powi(3) / r.mean_secs / 1e9),
+    ]);
+
+    // ---- PJRT: forward latency per bucket ----
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg = preset("tiny")?;
+    let fp = model::init_fp(&cfg, &mut rng);
+    let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+        Ok(rtn_quantize(w, cfg.group_size, 4))
+    })?;
+    for bucket in [1usize, 8, 32] {
+        let name = if bucket == step_batch(&cfg.name) {
+            "fwd_merged_tiny".to_string()
+        } else {
+            format!("fwd_merged_tiny_b{bucket}")
+        };
+        let exe = rt.load(&name)?;
+        let tokens = Tensor::new(
+            &[bucket, cfg.seq_len],
+            (0..bucket * cfg.seq_len).map(|_| rng.below(cfg.vocab) as f32).collect(),
+        );
+        let r = bench(&format!("pjrt fwd b{bucket}"), 2, iters, || {
+            coordinator::run_forward(&rt, &exe, &store, &tokens, None).unwrap();
+        });
+        results.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.mean_secs * 1e3),
+            format!("{:.2}", r.p50_secs * 1e3),
+            format!("{:.2}", r.p95_secs * 1e3),
+            format!(
+                "{:.0} tok/s",
+                bucket as f64 * cfg.seq_len as f64 / r.mean_secs
+            ),
+        ]);
+    }
+
+    // ---- PJRT: one full training step per method ----
+    let bsz = step_batch(&cfg.name);
+    let examples: Vec<Example> = {
+        let mut er = Rng::new(2);
+        (0..bsz)
+            .map(|_| {
+                let (p, c) = corpus::sample_recovery_example(&mut er);
+                Example { prompt: p, completion: c }
+            })
+            .collect()
+    };
+    let batch = sft_batch(&examples, bsz, cfg.seq_len);
+    for method in [Method::LotaQaf, Method::Lora, Method::QaLora] {
+        let mut store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })?;
+        let mut mrng = Rng::new(3);
+        model::init_adapters(&cfg, method, &mut mrng, &mut store);
+        let artifact = match method {
+            Method::LotaQaf => "step_lota_tiny_w4".to_string(),
+            m => format!("step_{}_tiny", m.as_str()),
+        };
+        let exe = rt.load(&artifact)?;
+        let names = model::adapter_names(method);
+        let mut m = model::ParamStore::new();
+        let mut v = model::ParamStore::new();
+        for n in &names {
+            let shape = store.get(n)?.shape().to_vec();
+            m.insert(n, Tensor::zeros(&shape));
+            v.insert(n, Tensor::zeros(&shape));
+        }
+        let mut scalars = BTreeMap::new();
+        match method {
+            Method::LotaQaf => {
+                scalars.insert("omega".to_string(), Tensor::from_scalar(6.0));
+                scalars.insert("keep_frac".to_string(), Tensor::from_scalar(0.05));
+            }
+            _ => {
+                scalars.insert("lr".to_string(), Tensor::from_scalar(5e-4));
+                scalars.insert("step".to_string(), Tensor::from_scalar(1.0));
+            }
+        }
+        let r = bench(&format!("train step {}", method.as_str()), 2, iters, || {
+            coordinator::run_step(
+                &rt,
+                &exe,
+                &mut store,
+                Some(&mut m),
+                Some(&mut v),
+                &batch,
+                &scalars,
+            )
+            .unwrap();
+        });
+        results.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.mean_secs * 1e3),
+            format!("{:.2}", r.p50_secs * 1e3),
+            format!("{:.2}", r.p95_secs * 1e3),
+            format!(
+                "{:.0} tok/s",
+                bsz as f64 * cfg.seq_len as f64 / r.mean_secs
+            ),
+        ]);
+    }
+
+    // ---- pretraining doc batch assembly (pure host path) ----
+    let mut drng = Rng::new(4);
+    let r = bench("batch assembly b8", 2, iters * 5, || {
+        let docs: Vec<String> = (0..8).map(|_| corpus::sample_document(&mut drng)).collect();
+        lm_batch(&docs, 8, cfg.seq_len);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.3}", r.mean_secs * 1e3),
+        format!("{:.3}", r.p50_secs * 1e3),
+        format!("{:.3}", r.p95_secs * 1e3),
+        format!("{:.0} batch/s", r.per_sec()),
+    ]);
+
+    println!("## §Perf micro-benchmarks (hot paths, 1 CPU core)");
+    results.print();
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Regenerates **Table 1** (and the Fig. 1 series, which is Table 1's
+//! MMLU-average column): accuracy of {16-bit, GPTQ, GPTQ+LoRA, QA-LoRA,
+//! LoTA-QAF} × bits {4,3,2} on performance recovery (MMLU-like) and the
+//! three task-specific suites (arith/sql/datatotext, the GSM8K/SQL/ViGGO
+//! stand-ins) — at simulator scale (DESIGN.md §2 substitutions).
+//!
+//! Expected shape vs the paper: QAF beats raw GPTQ with the gap exploding
+//! at 2-bit; LoTA-QAF ≥ QA-LoRA on recovery; LoRA's 16-bit adapters lead
+//! task-specific; absolute values are not comparable (tiny synthetic
+//! world, not Llama+MMLU).
+//!
+//! Env knobs: LOTA_T1_MODEL (tiny), LOTA_T1_PRETRAIN (600),
+//! LOTA_T1_STEPS (200), LOTA_T1_EVAL (160).
+
+use std::path::Path;
+
+use lota_qaf::coordinator::experiments::{print_table1, run_table1, ExperimentContext};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("LOTA_T1_MODEL").unwrap_or_else(|_| "tiny".into());
+    let pretrain = env_usize("LOTA_T1_PRETRAIN", 600);
+    let steps = env_usize("LOTA_T1_STEPS", 200);
+    let eval_n = env_usize("LOTA_T1_EVAL", 160);
+
+    println!("## Table 1 / Figure 1 — model={model} pretrain={pretrain} ft-steps={steps} eval-n={eval_n}");
+    let t0 = std::time::Instant::now();
+    let ctx = ExperimentContext::build(Path::new("artifacts"), &model, pretrain, 20250710)?;
+    let tasks = ["arith", "sql", "datatotext"];
+    let rows = run_table1(&ctx, steps, eval_n, &[4, 3, 2], &tasks)?;
+    print_table1(&rows, &tasks);
+
+    // Fig. 1 series: MMLU average per method per bit-width
+    println!("\n## Figure 1 series (MMLU-like avg by bits)");
+    for bits in ["4", "3", "2"] {
+        let line: Vec<String> = rows
+            .iter()
+            .filter(|r| r.bits.starts_with(bits))
+            .filter_map(|r| r.mmlu.as_ref().map(|m| format!("{}={:.2}", r.method, m.average)))
+            .collect();
+        println!("bits {bits}: {}", line.join("  "));
+    }
+    println!("\n(total wall time {:.0}s)", t0.elapsed().as_secs_f64());
+    Ok(())
+}

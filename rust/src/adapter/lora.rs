@@ -1,0 +1,149 @@
+//! LoRA baseline (Hu et al., 2022) over GPTQ-quantized weights — the
+//! QLoRA-style configuration of Table 1's "GPTQ+LoRA" rows: f32 ("16-bit")
+//! adapters on a frozen quantized base.
+//!
+//! Its merge is the *lossy* operation the paper's intro criticises: the fp
+//! update must be re-quantized onto the integer grid, reintroducing
+//! quantization error at the adapter level. [`merge_requantize`] implements
+//! it (and reports the error) so the benches can demonstrate the contrast
+//! with LoTA's exact merge.
+
+use crate::quant::affine::{quantize_to_grid, QuantizedLinear};
+use crate::tensor::{linalg, Rng, Tensor};
+
+/// Full-precision low-rank adapter for one quantized linear slot.
+#[derive(Clone, Debug)]
+pub struct LoraAdapter {
+    /// (Din, r)
+    pub a: Tensor,
+    /// (r, Dout)
+    pub b: Tensor,
+    pub rank: usize,
+    /// scaling coefficient α (paper setup: α = 2r)
+    pub alpha: f32,
+}
+
+impl LoraAdapter {
+    /// Standard LoRA init: A ~ N(0, 1/√Din)-ish Kaiming, B = 0.
+    pub fn init(din: usize, dout: usize, rank: usize, rng: &mut Rng) -> Self {
+        let a = Tensor::new(&[din, rank], rng.kaiming_vec(din, din * rank));
+        let b = Tensor::zeros(&[rank, dout]);
+        LoraAdapter { a, b, rank, alpha: 2.0 * rank as f32 }
+    }
+
+    /// The effective weight update `(α/r) · A B`.
+    pub fn update_matrix(&self) -> Tensor {
+        linalg::matmul(&self.a, &self.b).scale(self.alpha / self.rank as f32)
+    }
+
+    /// Adapter-path output for activations `x` (M, Din): `(α/r)·(xA)B` —
+    /// the extra matmuls the unmerged serving path pays per request.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let xa = linalg::matmul(x, &self.a);
+        linalg::matmul(&xa, &self.b).scale(self.alpha / self.rank as f32)
+    }
+}
+
+/// Lossy merge: `requantize(dequant(W) + (α/r)AB)` onto the existing
+/// per-group grid. Returns the merged layer and the max |error| the
+/// requantization introduced relative to the exact fp result.
+pub fn merge_requantize(ql: &QuantizedLinear, ad: &LoraAdapter) -> (QuantizedLinear, f32) {
+    let upd = ad.update_matrix();
+    let w_fp = ql.dequantize().add(&upd);
+    let (din, dout) = (ql.din(), ql.dout());
+    let gs = ql.group_size;
+    let grid_max = ql.grid_max();
+
+    let mut w_int = vec![0.0f32; din * dout];
+    let mut max_err = 0.0f32;
+    for i in 0..din {
+        let g = i / gs;
+        let srow = ql.scales.row(g);
+        let zrow = ql.zeros.row(g);
+        for j in 0..dout {
+            let want = w_fp.at2(i, j);
+            let q = quantize_to_grid(want, srow[j], zrow[j], grid_max);
+            w_int[i * dout + j] = q;
+            max_err = max_err.max((srow[j] * q + zrow[j] - want).abs());
+        }
+    }
+    (
+        QuantizedLinear {
+            n_bits: ql.n_bits,
+            group_size: gs,
+            w_int: Tensor::new(&[din, dout], w_int),
+            scales: ql.scales.clone(),
+            zeros: ql.zeros.clone(),
+        },
+        max_err,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+
+    fn setup(seed: u64) -> (QuantizedLinear, LoraAdapter, Tensor) {
+        let mut rng = Rng::new(seed);
+        let (din, dout, gs, r) = (32, 16, 8, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, 4);
+        let mut ad = LoraAdapter::init(din, dout, r, &mut rng);
+        ad.b = Tensor::new(&[r, dout], rng.normal_vec(r * dout, 0.05));
+        (ql, ad, w)
+    }
+
+    #[test]
+    fn zero_b_is_identity() {
+        let mut rng = Rng::new(1);
+        let ql = rtn_quantize(
+            &Tensor::new(&[16, 8], rng.normal_vec(128, 0.1)),
+            8,
+            4,
+        );
+        let ad = LoraAdapter::init(16, 8, 4, &mut rng);
+        let x = Tensor::new(&[4, 16], rng.normal_vec(64, 1.0));
+        assert!(ad.forward(&x).abs_max() == 0.0);
+        let (merged, err) = merge_requantize(&ql, &ad);
+        assert_eq!(merged.w_int, ql.w_int);
+        assert!(err < 1e-6);
+    }
+
+    #[test]
+    fn forward_matches_update_matrix() {
+        let (_, ad, _) = setup(2);
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(&[4, 32], rng.normal_vec(4 * 32, 1.0));
+        let via_path = ad.forward(&x);
+        let via_matrix = linalg::matmul(&x, &ad.update_matrix());
+        assert!(via_path.allclose(&via_matrix, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn merge_is_lossy_for_nontrivial_updates() {
+        let (ql, ad, _) = setup(4);
+        let (merged, err) = merge_requantize(&ql, &ad);
+        merged.validate().unwrap();
+        assert!(
+            err > 1e-4,
+            "requantization should introduce measurable error, got {err}"
+        );
+        // error bounded by half the largest scale step (plus clamping)
+        let max_s = ql.scales.data().iter().cloned().fold(0.0f32, f32::max);
+        let upd_max = ad.update_matrix().abs_max();
+        assert!(err <= max_s / 2.0 + upd_max + 1e-5);
+    }
+
+    #[test]
+    fn merged_output_differs_from_adapter_path() {
+        // The behavioural statement of "lossy": y_merged ≠ y_base + y_adapter
+        let (ql, ad, _) = setup(5);
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(&[8, 32], rng.normal_vec(8 * 32, 1.0));
+        let y_exact = linalg::matmul(&x, &ql.dequantize()).add(&ad.forward(&x));
+        let (merged, _) = merge_requantize(&ql, &ad);
+        let y_merged = linalg::matmul(&x, &merged.dequantize());
+        assert!(y_exact.max_abs_diff(&y_merged) > 1e-3);
+    }
+}

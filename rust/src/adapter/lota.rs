@@ -1,0 +1,265 @@
+//! Ternary adaptation (paper §3.2): trainable ternary adapters
+//! `A_T ∈ {-1,0,1}^{Din×r}`, `B_T ∈ {-1,0,1}^{r×Dout}`, the auxiliary /
+//! ternary / offset matrices of Eqs. 3–4, and the **lossless merge** of
+//! Eq. 5 that folds the adaptation into the quantized integers and zero
+//! factors with zero approximation error.
+
+use crate::quant::affine::QuantizedLinear;
+use crate::tensor::{linalg, Rng, Tensor};
+
+use anyhow::{bail, Result};
+
+/// A pair of ternary adapter matrices for one quantized linear slot.
+#[derive(Clone, Debug)]
+pub struct TernaryAdapter {
+    /// (Din, r), values in {-1, 0, 1}
+    pub a: Tensor,
+    /// (r, Dout), values in {-1, 0, 1}
+    pub b: Tensor,
+    pub rank: usize,
+}
+
+impl TernaryAdapter {
+    /// Paper init: Kaiming-normal A ternarized at `0.75·mean|w|`
+    /// (Li et al., 2016), B = 0.
+    pub fn init(din: usize, dout: usize, rank: usize, rng: &mut Rng) -> Self {
+        let a = Tensor::new(&[din, rank], rng.ternary_kaiming_vec(din, din * rank));
+        let b = Tensor::zeros(&[rank, dout]);
+        TernaryAdapter { a, b, rank }
+    }
+
+    pub fn from_parts(a: Tensor, b: Tensor) -> Result<Self> {
+        let rank = a.cols();
+        if b.rows() != rank {
+            bail!("adapter rank mismatch: A cols {} vs B rows {}", rank, b.rows());
+        }
+        let ta = TernaryAdapter { a, b, rank };
+        ta.validate()?;
+        Ok(ta)
+    }
+
+    /// All entries must be ternary — enforced after every optimizer step
+    /// round-trip through PJRT.
+    pub fn validate(&self) -> Result<()> {
+        for (name, t) in [("A", &self.a), ("B", &self.b)] {
+            if let Some(v) = t.data().iter().find(|v| **v != -1.0 && **v != 0.0 && **v != 1.0)
+            {
+                bail!("{name} contains non-ternary value {v}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Auxiliary matrix `ΔW = A_T B_T` (integer-valued, in [-r, r]).
+    pub fn delta_w(&self) -> Tensor {
+        linalg::matmul(&self.a, &self.b)
+    }
+
+    /// Fraction of non-zero entries (sparsity diagnostics for DESIGN §Perf).
+    pub fn density(&self) -> f32 {
+        let nz = self.a.data().iter().filter(|v| **v != 0.0).count()
+            + self.b.data().iter().filter(|v| **v != 0.0).count();
+        nz as f32 / (self.a.len() + self.b.len()) as f32
+    }
+}
+
+/// Eq. 3: `Ŵ = sign(ΔW) · 1[|ΔW| > ω]`.
+pub fn ternary_map(delta_w: &Tensor, omega: f32) -> Tensor {
+    delta_w.clone().map(|v| {
+        if v.abs() > omega {
+            v.signum()
+        } else {
+            0.0
+        }
+    })
+}
+
+/// The full lossless adaptation/merge map (Eqs. 3–5).
+///
+/// Returns the adjusted layer: `W'_int = clip(W_int + Ŵ, 0, 2^N−1)` and
+/// `z' = z + s·μ` with the per-group offset factor
+/// `μ_g = Σ_{i∈g} W̃_i / (r·gs)`. The same function serves as the training
+/// forward's weight map and the final merge — that identity *is* the
+/// losslessness argument, and the runtime integration test checks it
+/// end-to-end against the HLO graphs.
+pub fn lota_merge(ql: &QuantizedLinear, adapter: &TernaryAdapter, omega: f32) -> QuantizedLinear {
+    let (din, dout) = (ql.din(), ql.dout());
+    assert_eq!(adapter.a.rows(), din, "adapter A rows");
+    assert_eq!(adapter.b.cols(), dout, "adapter B cols");
+    let gs = ql.group_size;
+    let g = ql.n_groups();
+    let grid_max = ql.grid_max();
+    let r = adapter.rank as f32;
+
+    let delta = adapter.delta_w();
+    let mut w_int = ql.w_int.clone();
+    let mut zeros = ql.zeros.clone();
+
+    for gi in 0..g {
+        let mut musum = vec![0.0f32; dout];
+        for i in gi * gs..(gi + 1) * gs {
+            let drow = delta.row(i);
+            let wrow = w_int.row_mut(i);
+            for j in 0..dout {
+                let dw = drow[j];
+                let what = if dw.abs() > omega { dw.signum() } else { 0.0 };
+                // boundary check (paper Fig. 3): stay inside the grid
+                wrow[j] = (wrow[j] + what).clamp(0.0, grid_max);
+                musum[j] += dw - omega * what; // W̃ accumulation (Eq. 4)
+            }
+        }
+        let srow = ql.scales.row(gi);
+        let zrow = zeros.row_mut(gi);
+        for j in 0..dout {
+            zrow[j] += srow[j] * musum[j] / (r * gs as f32); // Eq. 5
+        }
+    }
+
+    QuantizedLinear {
+        n_bits: ql.n_bits,
+        group_size: gs,
+        w_int,
+        scales: ql.scales.clone(),
+        zeros,
+    }
+}
+
+/// Count of integer-grid entries the merge would move (|Ŵ| = 1 and not
+/// clipped) — the "adjustment budget" diagnostic reported by the benches.
+pub fn adjustment_count(ql: &QuantizedLinear, adapter: &TernaryAdapter, omega: f32) -> usize {
+    let delta = adapter.delta_w();
+    let grid_max = ql.grid_max();
+    let mut n = 0;
+    for i in 0..ql.din() {
+        let drow = delta.row(i);
+        let wrow = ql.w_int.row(i);
+        for j in 0..ql.dout() {
+            let dw = drow[j];
+            if dw.abs() > omega {
+                let next = wrow[j] + dw.signum();
+                if (0.0..=grid_max).contains(&next) {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+
+    fn setup(seed: u64, n_bits: u32) -> (QuantizedLinear, TernaryAdapter) {
+        let mut rng = Rng::new(seed);
+        let (din, dout, gs, r) = (32, 16, 8, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, n_bits);
+        let mut ta = TernaryAdapter::init(din, dout, r, &mut rng);
+        // give B random ternary values so ΔW is non-trivial
+        let bd: Vec<f32> = (0..r * dout).map(|_| (rng.below(3) as f32) - 1.0).collect();
+        ta.b = Tensor::new(&[r, dout], bd);
+        (ql, ta)
+    }
+
+    #[test]
+    fn init_is_ternary_with_zero_b() {
+        let mut rng = Rng::new(1);
+        let ta = TernaryAdapter::init(64, 32, 8, &mut rng);
+        ta.validate().unwrap();
+        assert!(ta.b.data().iter().all(|v| *v == 0.0));
+        assert!(ta.a.data().iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn zero_b_means_identity_merge() {
+        let mut rng = Rng::new(2);
+        let (din, dout, gs, r) = (32, 16, 8, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, 4);
+        let ta = TernaryAdapter::init(din, dout, r, &mut rng);
+        let merged = lota_merge(&ql, &ta, 3.0);
+        assert_eq!(merged.w_int, ql.w_int);
+        assert_eq!(merged.zeros, ql.zeros);
+    }
+
+    #[test]
+    fn delta_w_is_integer_in_rank_range() {
+        let (_, ta) = setup(3, 4);
+        let d = ta.delta_w();
+        for &v in d.data() {
+            assert_eq!(v.fract(), 0.0);
+            assert!(v.abs() <= ta.rank as f32);
+        }
+    }
+
+    #[test]
+    fn merge_stays_in_grid_all_bits() {
+        for bits in [2u32, 3, 4] {
+            for seed in 0..10u64 {
+                let (ql, ta) = setup(seed, bits);
+                let merged = lota_merge(&ql, &ta, 0.5 * ta.rank as f32);
+                merged.validate().unwrap();
+                // and moved at most ±1 per entry
+                assert!(merged.w_int.max_abs_diff(&ql.w_int) <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn omega_monotonicity() {
+        // larger ω ⇒ fewer adjustments (the paper's conservativeness knob)
+        let (ql, ta) = setup(5, 4);
+        let r = ta.rank as f32;
+        let n_low = adjustment_count(&ql, &ta, 0.25 * r);
+        let n_mid = adjustment_count(&ql, &ta, 0.5 * r);
+        let n_high = adjustment_count(&ql, &ta, 0.875 * r);
+        assert!(n_low >= n_mid && n_mid >= n_high, "{n_low} {n_mid} {n_high}");
+        assert!(n_low > 0, "test should exercise non-trivial adjustments");
+    }
+
+    #[test]
+    fn merge_is_lossless_vs_float_composition() {
+        // dequant(merged) == dequant(base) + s·Ŵ + s·μ exactly (up to f32)
+        let (ql, ta) = setup(6, 4);
+        let omega = 0.5 * ta.rank as f32;
+        let merged = lota_merge(&ql, &ta, omega);
+        let delta = ta.delta_w();
+        let gs = ql.group_size;
+        let r = ta.rank as f32;
+        let base = ql.dequantize();
+        let got = merged.dequantize();
+        // manual composition
+        for gi in 0..ql.n_groups() {
+            let mut musum = vec![0.0f32; ql.dout()];
+            for i in gi * gs..(gi + 1) * gs {
+                for j in 0..ql.dout() {
+                    let dw = delta.at2(i, j);
+                    let what = if dw.abs() > omega { dw.signum() } else { 0.0 };
+                    musum[j] += dw - omega * what;
+                }
+            }
+            for i in gi * gs..(gi + 1) * gs {
+                for j in 0..ql.dout() {
+                    let dw = delta.at2(i, j);
+                    let what = if dw.abs() > omega { dw.signum() } else { 0.0 };
+                    let clipped = (ql.w_int.at2(i, j) + what).clamp(0.0, ql.grid_max())
+                        - ql.w_int.at2(i, j);
+                    let s = ql.scales.at2(gi, j);
+                    let want =
+                        base.at2(i, j) + s * clipped + s * musum[j] / (r * gs as f32);
+                    let diff = (got.at2(i, j) - want).abs();
+                    assert!(diff < 1e-5, "({i},{j}): {} vs {want}", got.at2(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_non_ternary() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 0.0, -1.0, 0.5]);
+        let b = Tensor::zeros(&[2, 2]);
+        assert!(TernaryAdapter::from_parts(a, b).is_err());
+    }
+}

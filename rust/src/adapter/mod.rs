@@ -1,0 +1,17 @@
+//! Adapter implementations: the paper's ternary adaptation (LoTA) plus the
+//! two baselines it is evaluated against (LoRA, QA-LoRA).
+//!
+//! These are the *host-side* twins of the in-graph math in
+//! `python/compile/`: the training loop updates adapters through the HLO
+//! step artifacts, and this module performs initialization, the
+//! **lossless merge** into the quantized grid, and the checkpoint-time
+//! bookkeeping. The golden tests (`artifacts/golden/*.json`) pin both
+//! sides to identical numbers.
+
+pub mod lora;
+pub mod lota;
+pub mod qalora;
+
+pub use lora::LoraAdapter;
+pub use lota::{adjustment_count, lota_merge, ternary_map, TernaryAdapter};
+pub use qalora::QaLoraAdapter;

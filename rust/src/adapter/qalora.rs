@@ -1,0 +1,136 @@
+//! QA-LoRA baseline (Xu et al., 2023): the closest prior work. The adapter
+//! input is group-average-pooled, so the learned update is constant within
+//! each quantization group and can be absorbed **losslessly into the zero
+//! factors** — but, unlike LoTA, it cannot move the integer grid itself
+//! (the limitation the paper's §2 highlights).
+
+use crate::quant::affine::QuantizedLinear;
+use crate::tensor::{linalg, Rng, Tensor};
+
+/// Group-pooled low-rank adapter for one quantized linear slot.
+#[derive(Clone, Debug)]
+pub struct QaLoraAdapter {
+    /// (G, r) — operates on group-pooled inputs
+    pub a: Tensor,
+    /// (r, Dout)
+    pub b: Tensor,
+    pub rank: usize,
+    pub group_size: usize,
+    pub alpha: f32,
+}
+
+impl QaLoraAdapter {
+    pub fn init(din: usize, dout: usize, rank: usize, group_size: usize, rng: &mut Rng) -> Self {
+        let g = din / group_size;
+        let a = Tensor::new(&[g, rank], rng.kaiming_vec(g, g * rank));
+        let b = Tensor::zeros(&[rank, dout]);
+        QaLoraAdapter { a, b, rank, group_size, alpha: 2.0 * rank as f32 }
+    }
+
+    /// Average-pool activations over quantization groups: (M, Din) → (M, G).
+    pub fn pool(&self, x: &Tensor) -> Tensor {
+        let (m, din) = (x.rows(), x.cols());
+        let gs = self.group_size;
+        let g = din / gs;
+        let mut out = vec![0.0f32; m * g];
+        for row in 0..m {
+            let xrow = x.row(row);
+            for gi in 0..g {
+                let s: f32 = xrow[gi * gs..(gi + 1) * gs].iter().sum();
+                out[row * g + gi] = s / gs as f32;
+            }
+        }
+        Tensor::new(&[m, g], out)
+    }
+
+    /// Adapter-path output `(α/r)·(pool(x)·A)·B`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let pooled = self.pool(x);
+        let pa = linalg::matmul(&pooled, &self.a);
+        linalg::matmul(&pa, &self.b).scale(self.alpha / self.rank as f32)
+    }
+
+    /// Lossless merge into the zero factors:
+    /// `z'[g, j] = z[g, j] + (α/r)·(AB)[g, j] / gs`.
+    ///
+    /// (Each pooled input contributes `x̄_g = Σ_{i∈g} x_i / gs`, so the
+    /// per-element weight offset is the group value divided by gs.)
+    pub fn merge_zeros(&self, ql: &QuantizedLinear) -> QuantizedLinear {
+        let ab = linalg::matmul(&self.a, &self.b);
+        let mut zeros = ql.zeros.clone();
+        let scale = self.alpha / self.rank as f32 / self.group_size as f32;
+        for (z, u) in zeros.data_mut().iter_mut().zip(ab.data()) {
+            *z += scale * u;
+        }
+        QuantizedLinear {
+            n_bits: ql.n_bits,
+            group_size: ql.group_size,
+            w_int: ql.w_int.clone(),
+            scales: ql.scales.clone(),
+            zeros,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+
+    fn setup(seed: u64) -> (QuantizedLinear, QaLoraAdapter) {
+        let mut rng = Rng::new(seed);
+        let (din, dout, gs, r) = (32, 16, 8, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, 4);
+        let mut ad = QaLoraAdapter::init(din, dout, r, gs, &mut rng);
+        ad.b = Tensor::new(&[r, dout], rng.normal_vec(r * dout, 0.1));
+        (ql, ad)
+    }
+
+    #[test]
+    fn pool_averages_groups() {
+        let (_, ad) = setup(1);
+        let x = Tensor::new(&[1, 32], (0..32).map(|i| i as f32).collect());
+        let p = ad.pool(&x);
+        assert_eq!(p.shape(), &[1, 4]);
+        assert_eq!(p.data()[0], 3.5); // mean of 0..8
+        assert_eq!(p.data()[3], 27.5);
+    }
+
+    #[test]
+    fn merge_is_exactly_lossless() {
+        // y via adapter path == y via merged zeros, for any x (linear in x,
+        // so checking a random batch at tight tolerance is sufficient)
+        let (ql, ad) = setup(2);
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(&[8, 32], rng.normal_vec(8 * 32, 1.0));
+        let y_adapter = linalg::matmul(&x, &ql.dequantize()).add(&ad.forward(&x));
+        let merged = ad.merge_zeros(&ql);
+        let y_merged = linalg::matmul(&x, &merged.dequantize());
+        assert!(
+            y_adapter.allclose(&y_merged, 1e-4, 1e-4),
+            "max diff {}",
+            y_adapter.max_abs_diff(&y_merged)
+        );
+    }
+
+    #[test]
+    fn merge_never_touches_integer_grid() {
+        // the paper's point: QA-LoRA cannot modify W_int
+        let (ql, ad) = setup(4);
+        let merged = ad.merge_zeros(&ql);
+        assert_eq!(merged.w_int, ql.w_int);
+        assert_eq!(merged.scales, ql.scales);
+        assert!(merged.zeros.max_abs_diff(&ql.zeros) > 0.0);
+    }
+
+    #[test]
+    fn zero_b_identity() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::new(&[16, 8], rng.normal_vec(128, 0.1));
+        let ql = rtn_quantize(&w, 8, 4);
+        let ad = QaLoraAdapter::init(16, 8, 4, 8, &mut rng);
+        let merged = ad.merge_zeros(&ql);
+        assert_eq!(merged.zeros, ql.zeros);
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled benchmark harness (no criterion offline): warmup + timed
+//! iterations with mean/p50/p95, plus the table printer every paper-figure
+//! bench uses to emit its rows.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            1.0 / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `f` `warmup + iters` times, timing the last `iters`.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let pct = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_secs: samples.iter().sum::<f64>() / n as f64,
+        p50_secs: pct(0.5),
+        p95_secs: pct(0.95),
+        min_secs: samples[0],
+    }
+}
+
+/// Markdown-ish table printer: fixed-width rows the bench binaries emit so
+/// bench_output.txt diffs cleanly against EXPERIMENTS.md.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len().max(8)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            println!("{s}");
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Format a float as a fixed-precision cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut calls = 0;
+        let r = bench("x", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.p50_secs <= r.p95_secs + 1e-12);
+    }
+
+    #[test]
+    fn table_formats_rows() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3.5f64, &"x"]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,413 @@
+//! Minimal JSON substrate (parser + writer). The offline crate set has no
+//! serde, and we need JSON in three places: the artifact manifest written
+//! by `aot.py`, the golden vectors written by `golden.py`, and the metric
+//! logs this crate emits for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
+            _ => bail!("not an object (looking for '{key}')"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect()
+    }
+
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}, found '{}'", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i);
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            let v = self.value()?;
+            a.push(v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                c => bail!("expected ',' or ']', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape '\\{}'", e as char),
+                    }
+                }
+                _ => s.push(c as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number '{s}': {e}"))?))
+    }
+}
+
+/// Streaming JSON writer for metric logs (avoids building trees for the
+/// large float arrays the benches dump).
+pub struct JsonWriter {
+    out: String,
+    stack: Vec<bool>, // per open container: "has at least one element"
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        JsonWriter { out: String::new(), stack: Vec::new() }
+    }
+
+    fn comma(&mut self) {
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(',');
+            }
+            *has = true;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.comma();
+        self.out.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.out.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.comma();
+        self.out.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.out.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.comma();
+        write!(self.out, "\"{}\":", escape(k)).unwrap();
+        // the value that follows should not get its own comma:
+        if let Some(has) = self.stack.last_mut() {
+            *has = false;
+        }
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.comma();
+        write!(self.out, "\"{}\"", escape(v)).unwrap();
+        self
+    }
+
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.comma();
+        if v.is_finite() {
+            write!(self.out, "{v}").unwrap();
+        } else {
+            self.out.push_str("null");
+        }
+        self
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.comma();
+        write!(self.out, "{v}").unwrap();
+        self
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            '\t' => "\\t".chars().collect(),
+            '\r' => "\\r".chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": {}}"#).unwrap();
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn float_vec_roundtrip() {
+        let j = Json::parse("[0.5, -1, 3.25]").unwrap();
+        assert_eq!(j.as_f32_vec().unwrap(), vec![0.5, -1.0, 3.25]);
+    }
+
+    #[test]
+    fn writer_emits_valid_json() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str("run1");
+        w.key("vals").begin_arr().num(1.0).num(2.5).end_arr();
+        w.key("ok").bool(true);
+        w.end_obj();
+        let s = w.finish();
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "run1");
+        assert_eq!(parsed.get("vals").unwrap().as_f32_vec().unwrap(), vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn writer_parser_fuzz_roundtrip() {
+        // hand-rolled property test: random nested structures survive
+        // write→parse
+        let mut rng = crate::tensor::Rng::new(1234);
+        for _ in 0..50 {
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            let n = rng.range(1, 6);
+            for i in 0..n {
+                w.key(&format!("k{i}"));
+                match rng.below(3) {
+                    0 => {
+                        w.num((rng.normal() * 100.0) as f64);
+                    }
+                    1 => {
+                        w.str("v\"x\\y");
+                    }
+                    _ => {
+                        w.begin_arr();
+                        for _ in 0..rng.below(4) {
+                            w.num(rng.uniform() as f64);
+                        }
+                        w.end_arr();
+                    }
+                }
+            }
+            w.end_obj();
+            let s = w.finish();
+            Json::parse(&s).unwrap_or_else(|e| panic!("bad json {s}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Configuration system: model presets (mirroring `python/compile/configs.py`),
+//! experiment configs parsed from a TOML subset, and the JSON substrate used
+//! for the artifact manifest / golden vectors / metric logs.
+
+pub mod json;
+pub mod toml;
+
+pub use json::{Json, JsonWriter};
+pub use toml::TomlDoc;
+
+use anyhow::{bail, Result};
+
+/// Model architecture preset. MUST mirror `python/compile/configs.py` —
+/// the runtime cross-checks these shapes against the artifact manifest at
+/// load time and refuses to run on mismatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub group_size: usize,
+    pub rank: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The six quantized linear slots: (name, Din, Dout).
+    pub fn slots(&self) -> Vec<(&'static str, usize, usize)> {
+        let (d, ff) = (self.d_model, self.d_ff);
+        vec![
+            ("wq", d, d),
+            ("wk", d, d),
+            ("wv", d, d),
+            ("wo", d, d),
+            ("w_up", d, ff),
+            ("w_down", ff, d),
+        ]
+    }
+
+    pub fn n_params(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff;
+        let embed = 2 * self.vocab * self.d_model + self.seq_len * self.d_model;
+        let norms = (4 * self.n_layers + 2) * self.d_model;
+        self.n_layers * per_layer + embed + norms
+    }
+}
+
+pub const VOCAB: usize = 64;
+
+pub fn preset(name: &str) -> Result<ModelConfig> {
+    let c = match name {
+        "tiny" => ModelConfig {
+            name: "tiny".into(),
+            vocab: VOCAB,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            seq_len: 128,
+            group_size: 16,
+            rank: 8,
+        },
+        "small" => ModelConfig {
+            name: "small".into(),
+            vocab: VOCAB,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 1024,
+            seq_len: 128,
+            group_size: 32,
+            rank: 16,
+        },
+        "medium" => ModelConfig {
+            name: "medium".into(),
+            vocab: VOCAB,
+            d_model: 384,
+            n_layers: 8,
+            n_heads: 6,
+            d_ff: 1536,
+            seq_len: 128,
+            group_size: 64,
+            rank: 16,
+        },
+        _ => bail!("unknown model preset '{name}' (tiny|small|medium)"),
+    };
+    Ok(c)
+}
+
+/// Training-step batch size per preset (baked into the step artifacts).
+pub fn step_batch(cfg: &str) -> usize {
+    match cfg {
+        "tiny" => 8,
+        "small" => 4,
+        _ => 2,
+    }
+}
+
+/// Fine-tuning method selector used across the coordinator & benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// raw GPTQ quantized model, no fine-tuning
+    GptqOnly,
+    /// GPTQ + 16-bit LoRA adapters (QLoRA-style baseline)
+    Lora,
+    /// QA-LoRA: lossless merge into zero factors only
+    QaLora,
+    /// the paper's method
+    LotaQaf,
+}
+
+impl Method {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::GptqOnly => "gptq",
+            Method::Lora => "lora",
+            Method::QaLora => "qalora",
+            Method::LotaQaf => "lota",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "gptq" => Method::GptqOnly,
+            "lora" => Method::Lora,
+            "qalora" => Method::QaLora,
+            "lota" | "lota-qaf" => Method::LotaQaf,
+            _ => bail!("unknown method '{s}' (gptq|lora|qalora|lota)"),
+        })
+    }
+
+    pub fn trains(&self) -> bool {
+        !matches!(self, Method::GptqOnly)
+    }
+}
+
+/// A full experiment description (what `lota finetune` runs). Parsed from
+/// TOML via [`ExperimentConfig::from_toml`] or built programmatically by
+/// the benches.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub method: Method,
+    pub n_bits: u32,
+    /// ternary threshold ω expressed as a fraction of the rank (paper: 0.75r)
+    pub omega_frac: f32,
+    /// initial top-percentile for t-SignSGD σ_t (paper: 0.05)
+    pub sigma_init: f32,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// task name from data::tasks ("recovery", "arith", "sql", "datatotext")
+    pub task: String,
+    pub artifacts_dir: String,
+    pub checkpoint_dir: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "tiny".into(),
+            method: Method::LotaQaf,
+            n_bits: 4,
+            omega_frac: 0.75,
+            sigma_init: 0.05,
+            steps: 100,
+            lr: 5e-4,
+            seed: 20250710,
+            task: "recovery".into(),
+            artifacts_dir: "artifacts".into(),
+            checkpoint_dir: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        if let Some(v) = doc.get_str("model") {
+            c.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("method") {
+            c.method = Method::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("n_bits") {
+            c.n_bits = v as u32;
+        }
+        if let Some(v) = doc.get_num("omega_frac") {
+            c.omega_frac = v as f32;
+        }
+        if let Some(v) = doc.get_num("sigma_init") {
+            c.sigma_init = v as f32;
+        }
+        if let Some(v) = doc.get_num("steps") {
+            c.steps = v as usize;
+        }
+        if let Some(v) = doc.get_num("lr") {
+            c.lr = v as f32;
+        }
+        if let Some(v) = doc.get_num("seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("task") {
+            c.task = v.to_string();
+        }
+        if let Some(v) = doc.get_str("artifacts_dir") {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str("checkpoint_dir") {
+            c.checkpoint_dir = Some(v.to_string());
+        }
+        if !(2..=4).contains(&c.n_bits) {
+            bail!("n_bits must be 2, 3 or 4 (got {})", c.n_bits);
+        }
+        if !(0.0..1.0).contains(&c.omega_frac) {
+            bail!("omega_frac must be in (0,1)");
+        }
+        Ok(c)
+    }
+
+    /// ω in absolute units for a given rank.
+    pub fn omega(&self, rank: usize) -> f32 {
+        self.omega_frac * rank as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_python_side() {
+        // shape spot-checks mirroring python/compile/configs.py
+        let t = preset("tiny").unwrap();
+        assert_eq!((t.d_model, t.n_layers, t.group_size, t.rank), (64, 2, 16, 8));
+        let s = preset("small").unwrap();
+        assert_eq!((s.d_model, s.n_layers, s.group_size, s.rank), (256, 4, 32, 16));
+        assert!(preset("huge").is_err());
+        assert_eq!(t.slots().len(), 6);
+        assert!(t.n_params() > 100_000 && t.n_params() < 300_000);
+    }
+
+    #[test]
+    fn group_size_divides_all_slot_inputs() {
+        for name in ["tiny", "small", "medium"] {
+            let c = preset(name).unwrap();
+            for (slot, din, _) in c.slots() {
+                assert_eq!(din % c.group_size, 0, "{name}/{slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::GptqOnly, Method::Lora, Method::QaLora, Method::LotaQaf] {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::parse("adapterx").is_err());
+    }
+
+    #[test]
+    fn experiment_from_toml() {
+        let doc = TomlDoc::parse(
+            "model = \"small\"\nmethod = \"lota\"\nn_bits = 3\nomega_frac = 0.875\nsteps = 42\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.n_bits, 3);
+        assert_eq!(c.steps, 42);
+        assert!((c.omega(16) - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn experiment_validates_bits() {
+        let doc = TomlDoc::parse("n_bits = 7\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+}

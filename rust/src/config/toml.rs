@@ -1,0 +1,199 @@
+//! TOML-subset parser for experiment configs (no `toml` crate offline).
+//!
+//! Supported: `key = value` lines, `[section]` headers (flattened to
+//! `section.key`), strings, integers, floats, booleans, inline arrays of
+//! scalars, `#` comments. This covers every config the repo ships; anything
+//! else is a parse error rather than a silent misread.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unclosed section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            map.insert(full_key, val);
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn load(path: &str) -> Result<TomlDoc> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        TomlDoc::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.map.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        match self.map.get(key) {
+            Some(TomlValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.map.get(key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_num_arr(&self, key: &str) -> Option<Vec<f64>> {
+        match self.map.get(key) {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Num(n) => Some(*n),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?;
+        let mut vals = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let p = part.trim();
+                if p.is_empty() {
+                    continue; // tolerate trailing comma
+                }
+                vals.push(parse_value(p)?);
+            }
+        }
+        return Ok(TomlValue::Arr(vals));
+    }
+    let n: f64 = s
+        .replace('_', "")
+        .parse()
+        .with_context(|| format!("not a number/string/bool: '{s}'"))?;
+    Ok(TomlValue::Num(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_types() {
+        let doc = TomlDoc::parse(
+            "name = \"run\"\nsteps = 100\nlr = 5e-4\nflag = true\nbits = [4, 3, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("run"));
+        assert_eq!(doc.get_num("steps"), Some(100.0));
+        assert_eq!(doc.get_num("lr"), Some(5e-4));
+        assert_eq!(doc.get_bool("flag"), Some(true));
+        assert_eq!(doc.get_num_arr("bits"), Some(vec![4.0, 3.0, 2.0]));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = TomlDoc::parse("[train]\nsteps = 10\n[eval]\nsteps = 5\n").unwrap();
+        assert_eq!(doc.get_num("train.steps"), Some(10.0));
+        assert_eq!(doc.get_num("eval.steps"), Some(5.0));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = TomlDoc::parse("a = 1 # comment\nb = \"x#y\" # more\n").unwrap();
+        assert_eq!(doc.get_num("a"), Some(1.0));
+        assert_eq!(doc.get_str("b"), Some("x#y"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_num("n"), Some(1e6));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("[open\n").is_err());
+        assert!(TomlDoc::parse("x = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("x = zzz\n").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Evaluation harnesses: the MMLU-like suite (lm-eval-style option
+//! likelihood scoring), exact-match + token-level task accuracy over the
+//! HALO-style test sets, and masked perplexity.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::data::mmlu_like::{self, MmluScores, Question, N_OPTIONS};
+use crate::data::tokenizer::{self, BOS, EOS, SEP};
+use crate::data::{encode_example, Example};
+use crate::model::ParamStore;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+fn spec_batch(exe: &Executable) -> Result<usize> {
+    exe.spec
+        .batch
+        .ok_or_else(|| anyhow::anyhow!("fwd artifact '{}' has no batch size", exe.spec.name))
+}
+
+/// Length-normalized log-likelihood of `cont_ids` appended after `ctx_ids`,
+/// from a logits tensor row.
+fn seq_logprob(logits: &Tensor, row: usize, t: usize, v: usize, ids: &[u32], start: usize) -> f32 {
+    // predicts ids[p+1] at position p
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for p in (start.max(1) - 1)..(ids.len() - 1) {
+        let off = (row * t + p) * v;
+        let lrow = &logits.data()[off..off + v];
+        let maxv = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = maxv + lrow.iter().map(|x| (x - maxv).exp()).sum::<f32>().ln();
+        total += (lrow[ids[p + 1] as usize] - lse) as f64;
+        n += 1;
+    }
+    (total / n.max(1) as f64) as f32
+}
+
+/// Score the MMLU-like suite. Each question costs `N_OPTIONS` rows: the
+/// option text is appended to the context and scored by mean token
+/// log-likelihood (lm-eval's normalized protocol); argmax answers.
+pub fn mmlu_eval(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    questions: &[Question],
+    omega: Option<f32>,
+) -> Result<MmluScores> {
+    let b = spec_batch(exe)?;
+    if b < N_OPTIONS {
+        bail!("fwd batch {b} cannot hold {N_OPTIONS} option rows");
+    }
+    let per_chunk = b / N_OPTIONS;
+    let t = cfg.seq_len;
+    let v = cfg.vocab;
+
+    let mut results = Vec::with_capacity(questions.len());
+    for chunk in questions.chunks(per_chunk) {
+        let mut tokens = vec![0.0f32; b * t];
+        let mut meta: Vec<(Vec<u32>, usize)> = Vec::new(); // (ids, cont_start)
+        for (qi, q) in chunk.iter().enumerate() {
+            let ctx = tokenizer::encode(&q.context);
+            for (oi, opt) in q.options.iter().enumerate() {
+                let mut ids = vec![BOS];
+                ids.extend(&ctx);
+                let start = ids.len();
+                ids.extend(tokenizer::encode(opt));
+                if ids.len() > t {
+                    bail!("mmlu sequence too long: {} > {t}", ids.len());
+                }
+                let row = qi * N_OPTIONS + oi;
+                for (pos, id) in ids.iter().enumerate() {
+                    tokens[row * t + pos] = *id as f32;
+                }
+                meta.push((ids, start));
+            }
+        }
+        let logits =
+            super::run_forward(rt, exe, store, &Tensor::new(&[b, t], tokens), omega)?;
+        for (qi, q) in chunk.iter().enumerate() {
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for oi in 0..N_OPTIONS {
+                let (ids, start) = &meta[qi * N_OPTIONS + oi];
+                let lp = seq_logprob(&logits, qi * N_OPTIONS + oi, t, v, ids, *start);
+                if lp > best.0 {
+                    best = (lp, oi);
+                }
+            }
+            results.push((q.subject, best.1 == q.answer));
+        }
+    }
+    Ok(mmlu_like::aggregate(&results))
+}
+
+/// Teacher-forced token accuracy (%) on completion positions — the smooth
+/// companion to exact match (one forward per batch, no decoding).
+pub fn token_accuracy(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    test_set: &[Example],
+    omega: Option<f32>,
+) -> Result<f32> {
+    let b = spec_batch(exe)?;
+    let t = cfg.seq_len;
+    let v = cfg.vocab;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in test_set.chunks(b) {
+        let batch = crate::data::sft_batch(chunk, b, t);
+        let logits = super::run_forward(
+            rt,
+            exe,
+            store,
+            &Tensor::new(&[b, t], batch.tokens.clone()),
+            omega,
+        )?;
+        for i in 0..chunk.len() * t {
+            if batch.mask[i] == 0.0 {
+                continue;
+            }
+            let lrow = &logits.data()[i * v..(i + 1) * v];
+            let argmax = lrow
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            total += 1;
+            if argmax == batch.targets[i] as usize {
+                correct += 1;
+            }
+        }
+    }
+    Ok(100.0 * correct as f32 / total.max(1) as f32)
+}
+
+/// Greedy-decode completions for a batch of prompts with a fixed-shape
+/// forward artifact (recompute decoding: one forward per generated token,
+/// shared by all serving paths so path comparisons stay fair).
+pub fn greedy_decode(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    prompts: &[String],
+    max_new: usize,
+    omega: Option<f32>,
+) -> Result<Vec<String>> {
+    let b = spec_batch(exe)?;
+    let t = cfg.seq_len;
+    let v = cfg.vocab;
+    let mut outputs = Vec::with_capacity(prompts.len());
+
+    for chunk in prompts.chunks(b) {
+        let mut tokens = vec![0.0f32; b * t];
+        let mut cursor = vec![0usize; chunk.len()];
+        for (row, p) in chunk.iter().enumerate() {
+            let mut ids = vec![BOS];
+            ids.extend(tokenizer::encode(&p.replace('\n', " ")));
+            ids.push(SEP);
+            if ids.len() + max_new > t {
+                bail!("prompt+generation ({}) exceeds seq_len {t}", ids.len() + max_new);
+            }
+            for (pos, id) in ids.iter().enumerate() {
+                tokens[row * t + pos] = *id as f32;
+            }
+            cursor[row] = ids.len() - 1; // position of the last prompt token
+        }
+        let mut done = vec![false; chunk.len()];
+        let mut generated: Vec<Vec<u32>> = vec![Vec::new(); chunk.len()];
+        for _ in 0..max_new {
+            if done.iter().all(|d| *d) {
+                break;
+            }
+            let logits = super::run_forward(
+                rt,
+                exe,
+                store,
+                &Tensor::new(&[b, t], tokens.clone()),
+                omega,
+            )?;
+            for row in 0..chunk.len() {
+                if done[row] {
+                    continue;
+                }
+                let off = (row * t + cursor[row]) * v;
+                let lrow = &logits.data()[off..off + v];
+                let next = lrow
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                    .map(|(i, _)| i as u32)
+                    .unwrap();
+                if next == EOS || cursor[row] + 1 >= t {
+                    done[row] = true;
+                    continue;
+                }
+                cursor[row] += 1;
+                tokens[row * t + cursor[row]] = next as f32;
+                generated[row].push(next);
+            }
+        }
+        for g in generated {
+            outputs.push(tokenizer::decode(&g));
+        }
+    }
+    Ok(outputs)
+}
+
+/// Exact-match accuracy (%) of greedy decodes against reference
+/// completions — the HALO-style task-specific metric of Table 1.
+pub fn exact_match_eval(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    test_set: &[Example],
+    max_new: usize,
+    omega: Option<f32>,
+) -> Result<f32> {
+    let prompts: Vec<String> = test_set.iter().map(|e| e.prompt.clone()).collect();
+    let decoded = greedy_decode(rt, exe, store, cfg, &prompts, max_new, omega)?;
+    let correct = decoded
+        .iter()
+        .zip(test_set)
+        .filter(|(got, want)| got.trim() == want.completion.trim())
+        .count();
+    Ok(100.0 * correct as f32 / test_set.len().max(1) as f32)
+}
+
+/// Masked perplexity of a forward artifact over an SFT batch.
+pub fn perplexity(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    batch: &crate::data::Batch,
+    omega: Option<f32>,
+) -> Result<f32> {
+    let logits = super::run_forward(
+        rt,
+        exe,
+        store,
+        &Tensor::new(&[batch.batch, batch.seq], batch.tokens.clone()),
+        omega,
+    )?;
+    let v = cfg.vocab;
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for i in 0..batch.batch * batch.seq {
+        if batch.mask[i] == 0.0 {
+            continue;
+        }
+        let row = &logits.data()[i * v..(i + 1) * v];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = maxv + row.iter().map(|x| (x - maxv).exp()).sum::<f32>().ln();
+        let tgt = batch.targets[i] as usize;
+        nll += (lse - row[tgt]) as f64;
+        count += 1.0;
+    }
+    Ok(((nll / count.max(1.0)).exp()) as f32)
+}
+
+// `encode_example` re-exported use keeps the SFT layout single-sourced.
+#[allow(unused)]
+fn _layout_contract(ex: &Example) -> (Vec<u32>, usize) {
+    encode_example(ex)
+}

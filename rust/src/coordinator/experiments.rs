@@ -1,0 +1,317 @@
+//! Reusable experiment drivers behind Table 1 and Figures 1/4/5/6 — shared
+//! by the `lota` CLI and the `cargo bench` regenerators so the numbers in
+//! EXPERIMENTS.md come from exactly one code path.
+//!
+//! The flow mirrors the paper's §4.1 setup at simulator scale: pretrain a
+//! base model once, GPTQ-calibrate once, then for every (bits × method ×
+//! task) cell: quantize → init adapters → fine-tune → merge (lossless for
+//! LoTA/QA-LoRA, requantize for LoRA is *not* done — the paper's
+//! GPTQ+LoRA rows serve unmerged at 4+16 bit, and so do we) → evaluate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{preset, ExperimentConfig, Method, ModelConfig};
+use crate::coordinator::pipeline::{calibrate_hessians, pretrain, quantize_model, HessianMap};
+use crate::coordinator::train::{finetune, merge_into_store, FinetuneReport, TrainOptions};
+use crate::coordinator::{eval, run_forward};
+use crate::data::mmlu_like::{self, MmluScores};
+use crate::data::{tasks, Example};
+use crate::model::{self, checkpoint, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::{Rng, Tensor};
+
+/// Per-task decode budget (chars ≈ tokens for the char tokenizer).
+pub fn max_new_for(task: &str) -> usize {
+    match task {
+        "arith" => 6,
+        "sql" => 48,
+        "datatotext" => 56,
+        _ => 16,
+    }
+}
+
+/// Shared context: pretrained base + calibration Hessians, built once.
+pub struct ExperimentContext {
+    pub cfg: ModelConfig,
+    pub rt: Runtime,
+    pub fp: ParamStore,
+    pub hessians: HessianMap,
+    pub seed: u64,
+}
+
+impl ExperimentContext {
+    /// Build (or reload from `checkpoints/`) the shared base state.
+    pub fn build(
+        artifacts: &Path,
+        model_name: &str,
+        pretrain_steps: usize,
+        seed: u64,
+    ) -> Result<ExperimentContext> {
+        let cfg = preset(model_name)?;
+        let rt = Runtime::new(artifacts)?;
+        let cache = Path::new("checkpoints");
+        std::fs::create_dir_all(cache).ok();
+        let base_path = cache.join(format!("base_{model_name}_{pretrain_steps}.ckpt"));
+        let fp = if base_path.exists() {
+            log::info!("reusing cached base model {base_path:?}");
+            checkpoint::load(&base_path)?
+        } else {
+            let (fp, losses) = pretrain(&rt, &cfg, pretrain_steps, 1e-3, seed)?;
+            log::info!(
+                "pretrained {model_name}: loss {:.3} -> {:.3}",
+                losses.first().unwrap_or(&f32::NAN),
+                losses.last().unwrap_or(&f32::NAN)
+            );
+            checkpoint::save(&fp, &base_path, None)?;
+            fp
+        };
+        let hessians = calibrate_hessians(&rt, &cfg, &fp, 6, seed)?;
+        Ok(ExperimentContext { cfg, rt, fp, hessians, seed })
+    }
+
+    /// Quantize the base at a bit-width (GPTQ with the shared Hessians).
+    pub fn quantized(&self, n_bits: u32) -> Result<ParamStore> {
+        quantize_model(&self.cfg, &self.fp, n_bits, Some(&self.hessians))
+    }
+
+    /// MMLU-like scores of the *fp* model (the 16-bit reference row).
+    pub fn mmlu_fp(&self, eval_n: usize) -> Result<MmluScores> {
+        let exe = self.rt.load(&format!("fwd_fp_{}", self.cfg.name))?;
+        let qs = mmlu_like::generate_suite(eval_n / 4, 0xE7A1);
+        eval::mmlu_eval(&self.rt, &exe, &self.fp, &self.cfg, &qs, None)
+    }
+
+    /// MMLU-like scores of a (merged / gptq-only) quantized store.
+    pub fn mmlu_merged(&self, store: &ParamStore, eval_n: usize) -> Result<MmluScores> {
+        let exe = self.rt.load(&format!("fwd_merged_{}", self.cfg.name))?;
+        let qs = mmlu_like::generate_suite(eval_n / 4, 0xE7A1);
+        eval::mmlu_eval(&self.rt, &exe, store, &self.cfg, &qs, None)
+    }
+
+    /// MMLU-like scores through the unmerged LoRA path (4+16-bit serving).
+    pub fn mmlu_lora(&self, store: &ParamStore, eval_n: usize) -> Result<MmluScores> {
+        let exe = self.rt.load(&format!("fwd_lora_{}", self.cfg.name))?;
+        let qs = mmlu_like::generate_suite(eval_n / 4, 0xE7A1);
+        eval::mmlu_eval(&self.rt, &exe, store, &self.cfg, &qs, None)
+    }
+}
+
+/// Result of one fine-tuning cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub mmlu: Option<MmluScores>,
+    pub exact_match: Option<f32>,
+    pub token_acc: Option<f32>,
+    pub report: FinetuneReport,
+    pub merge_err: f32,
+}
+
+/// Run one (method × bits × task) fine-tuning cell end to end.
+///
+/// `task == "recovery"` evaluates on the MMLU-like suite; other tasks get
+/// exact-match + token accuracy on their held-out test set. LoRA cells are
+/// evaluated through the unmerged 4+16 path (as in the paper); the
+/// lossless methods are evaluated after their merge.
+pub fn run_cell(
+    ctx: &ExperimentContext,
+    exp: &ExperimentConfig,
+    eval_n: usize,
+) -> Result<CellResult> {
+    let cfg = &ctx.cfg;
+    let mut store = ctx.quantized(exp.n_bits)?;
+    let mut rng = Rng::new(exp.seed ^ 0xCE11);
+    model::init_adapters(cfg, exp.method, &mut rng, &mut store);
+    let report = if exp.method.trains() {
+        finetune(&ctx.rt, cfg, exp, &mut store, &TrainOptions::default())?
+    } else {
+        FinetuneReport { losses: vec![], wall_secs: 0.0, aux_state_elems: 0, steps: 0 }
+    };
+
+    // merge (except LoRA, which serves unmerged like the paper's rows)
+    let merge_err = if exp.method.trains() && exp.method != Method::Lora {
+        merge_into_store(cfg, exp, &mut store)?
+    } else {
+        0.0
+    };
+
+    let (fwd_name, omega) = match exp.method {
+        Method::Lora => (format!("fwd_lora_{}", cfg.name), None),
+        _ => (format!("fwd_merged_{}", cfg.name), None),
+    };
+    let exe = ctx.rt.load(&fwd_name)?;
+
+    let mut cell = CellResult {
+        mmlu: None,
+        exact_match: None,
+        token_acc: None,
+        report,
+        merge_err,
+    };
+    if exp.task == "recovery" {
+        let qs = mmlu_like::generate_suite(eval_n / 4, 0xE7A1);
+        cell.mmlu = Some(eval::mmlu_eval(&ctx.rt, &exe, &store, cfg, &qs, omega)?);
+    } else {
+        let gen = tasks::task_by_name(&exp.task)?;
+        let test: Vec<Example> = gen.test_set(eval_n);
+        cell.exact_match = Some(eval::exact_match_eval(
+            &ctx.rt,
+            &exe,
+            &store,
+            cfg,
+            &test,
+            max_new_for(&exp.task),
+            omega,
+        )?);
+        cell.token_acc = Some(eval::token_accuracy(&ctx.rt, &exe, &store, cfg, &test, omega)?);
+    }
+    Ok(cell)
+}
+
+/// One Table-1 row: method at a bit-width across MMLU + the three tasks.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub method: String,
+    pub bits: String,
+    pub mmlu: Option<MmluScores>,
+    /// task -> (exact match %, token accuracy %)
+    pub tasks: BTreeMap<String, (f32, f32)>,
+}
+
+/// Regenerate Table 1 (and thereby Fig. 1's series) for one model size.
+pub fn run_table1(
+    ctx: &ExperimentContext,
+    steps: usize,
+    eval_n: usize,
+    bits_list: &[u32],
+    task_list: &[&str],
+) -> Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+
+    // 16-bit reference row
+    rows.push(TableRow {
+        method: format!("{}-fp", ctx.cfg.name),
+        bits: "16".into(),
+        mmlu: Some(ctx.mmlu_fp(eval_n)?),
+        tasks: BTreeMap::new(),
+    });
+
+    for &bits in bits_list {
+        // GPTQ-only row
+        let q = ctx.quantized(bits)?;
+        rows.push(TableRow {
+            method: "GPTQ".into(),
+            bits: bits.to_string(),
+            mmlu: Some(ctx.mmlu_merged(&q, eval_n)?),
+            tasks: BTreeMap::new(),
+        });
+
+        for method in [Method::Lora, Method::QaLora, Method::LotaQaf] {
+            let mut row = TableRow {
+                method: match method {
+                    Method::Lora => "GPTQ+LoRA".into(),
+                    Method::QaLora => "QA-LoRA".into(),
+                    Method::LotaQaf => "LoTA-QAF".into(),
+                    Method::GptqOnly => unreachable!(),
+                },
+                bits: if method == Method::Lora {
+                    format!("{bits}+16")
+                } else {
+                    bits.to_string()
+                },
+                mmlu: None,
+                tasks: BTreeMap::new(),
+            };
+            // performance recovery
+            let exp = ExperimentConfig {
+                model: ctx.cfg.name.clone(),
+                method,
+                n_bits: bits,
+                steps,
+                // paper: recovery uses a lower lr than task-specific
+                lr: 1e-4,
+                sigma_init: 0.05,
+                omega_frac: 0.75,
+                task: "recovery".into(),
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            let cell = run_cell(ctx, &exp, eval_n).context("recovery cell")?;
+            row.mmlu = cell.mmlu;
+
+            // task-specific
+            for task in task_list {
+                let exp = ExperimentConfig {
+                    task: task.to_string(),
+                    lr: 5e-4,
+                    omega_frac: if *task == "datatotext" { 0.875 } else { 0.75 },
+                    ..exp.clone()
+                };
+                // decode-based task evals are ~10× costlier per example
+                // than likelihood scoring; use a smaller held-out slice
+                let task_eval = (eval_n / 4).clamp(16, 48);
+                let cell = run_cell(ctx, &exp, task_eval)
+                    .with_context(|| format!("cell {}/{bits}/{task}", method.as_str()))?;
+                row.tasks.insert(
+                    task.to_string(),
+                    (cell.exact_match.unwrap_or(0.0), cell.token_acc.unwrap_or(0.0)),
+                );
+            }
+            rows.push(row);
+        }
+    }
+    Ok(rows)
+}
+
+/// Pretty-print Table-1 rows in the paper's layout.
+pub fn print_table1(rows: &[TableRow], task_list: &[&str]) {
+    let mut headers = vec!["Method", "#Bit", "Hums.", "STEM", "Social", "Other", "MMLU-Avg"];
+    let mut task_headers = Vec::new();
+    for t in task_list {
+        task_headers.push(format!("{t}-EM"));
+        task_headers.push(format!("{t}-TokAcc"));
+    }
+    headers.extend(task_headers.iter().map(|s| s.as_str()));
+    let mut table = crate::bench_harness::Table::new(&headers);
+    for row in rows {
+        let mut cells = vec![row.method.clone(), row.bits.clone()];
+        match &row.mmlu {
+            Some(m) => {
+                for v in m.per_subject {
+                    cells.push(format!("{v:.2}"));
+                }
+                cells.push(format!("{:.2}", m.average));
+            }
+            None => cells.extend(std::iter::repeat("-".to_string()).take(5)),
+        }
+        for t in task_list {
+            match row.tasks.get(*t) {
+                Some((em, ta)) => {
+                    cells.push(format!("{em:.2}"));
+                    cells.push(format!("{ta:.2}"));
+                }
+                None => {
+                    cells.push("-".into());
+                    cells.push("-".into());
+                }
+            }
+        }
+        table.row(&cells);
+    }
+    table.print();
+}
+
+/// The unmerged-LoTA forward (used by hyper-parameter sweeps that evaluate
+/// *without* merging to keep the adapters live).
+pub fn fwd_lota_logits(
+    ctx: &ExperimentContext,
+    store: &ParamStore,
+    bits: u32,
+    tokens: &Tensor,
+    omega: f32,
+) -> Result<Tensor> {
+    let exe = ctx.rt.load(&format!("fwd_lota_{}_w{bits}", ctx.cfg.name))?;
+    run_forward(&ctx.rt, &exe, store, tokens, Some(omega))
+}

@@ -1,0 +1,151 @@
+//! The training/evaluation coordinator — the L3 orchestration layer.
+//!
+//! Everything model-scale runs through the PJRT artifacts; this module owns
+//! the loops around them: pretraining, GPTQ calibration + quantization,
+//! QAF fine-tuning for every method (LoTA / LoRA / QA-LoRA), the lossless
+//! merge, and the evaluation harnesses (MMLU-like suite + exact-match task
+//! scoring + perplexity).
+//!
+//! All artifact I/O is **manifest-driven**: inputs are resolved by name
+//! against the parameter store / optimizer state / batch / scalar
+//! environment, so the Rust side can never silently desynchronize from the
+//! lowered graphs.
+
+pub mod eval;
+pub mod experiments;
+pub mod pipeline;
+pub mod train;
+
+pub use eval::{exact_match_eval, greedy_decode, mmlu_eval, perplexity, token_accuracy};
+pub use experiments::{run_cell, run_table1, CellResult, ExperimentContext};
+pub use pipeline::{calibrate_hessians, pretrain, quantize_model, Pipeline};
+pub use train::{finetune, merge_into_store, FinetuneReport, TrainOptions};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::model::ParamStore;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Tensor;
+
+/// Resolve artifact-input names against the coordinator environment.
+///
+/// Priority: explicit scalars → batch fields → optimizer states (`m_`/`v_`
+/// prefixes) → the parameter store. `batch_buf` is caller-owned storage for
+/// tensors materialized from the batch.
+pub fn resolve_inputs<'a>(
+    exe: &Executable,
+    store: &'a ParamStore,
+    opt_m: Option<&'a ParamStore>,
+    opt_v: Option<&'a ParamStore>,
+    batch: Option<&Batch>,
+    scalars: &'a BTreeMap<String, Tensor>,
+    batch_buf: &'a mut Vec<(String, Tensor)>,
+) -> Result<Vec<&'a Tensor>> {
+    if let Some(b) = batch {
+        batch_buf.push(("tokens".into(), Tensor::new(&[b.batch, b.seq], b.tokens.clone())));
+        batch_buf.push(("targets".into(), Tensor::new(&[b.batch, b.seq], b.targets.clone())));
+        batch_buf.push(("mask".into(), Tensor::new(&[b.batch, b.seq], b.mask.clone())));
+    }
+    let mut out = Vec::with_capacity(exe.spec.inputs.len());
+    for io in &exe.spec.inputs {
+        let name = io.name.as_str();
+        let t: &Tensor = if let Some(t) = scalars.get(name) {
+            t
+        } else if let Some((_, t)) = batch_buf.iter().find(|(n, _)| n == name) {
+            t
+        } else if let (Some(m), Some(rest)) = (opt_m, name.strip_prefix("m_")) {
+            m.get(rest)?
+        } else if let (Some(v), Some(rest)) = (opt_v, name.strip_prefix("v_")) {
+            v.get(rest)?
+        } else if store.contains(name) {
+            store.get(name)?
+        } else {
+            bail!(
+                "artifact {}: cannot resolve input '{}' from store/opt/batch/scalars",
+                exe.spec.name,
+                name
+            );
+        };
+        if t.len() != io.n_elems() {
+            bail!(
+                "artifact {}: input '{}' size {} != manifest {:?}",
+                exe.spec.name,
+                name,
+                t.len(),
+                io.shape
+            );
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Execute a step-like artifact and write named outputs back into the
+/// store / optimizer states. Returns the scalar `loss`.
+pub fn run_step(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &mut ParamStore,
+    mut opt_m: Option<&mut ParamStore>,
+    mut opt_v: Option<&mut ParamStore>,
+    batch: &Batch,
+    scalars: &BTreeMap<String, Tensor>,
+) -> Result<f32> {
+    let mut batch_buf = Vec::new();
+    let outputs = {
+        let inputs = resolve_inputs(
+            exe,
+            store,
+            opt_m.as_deref(),
+            opt_v.as_deref(),
+            Some(batch),
+            scalars,
+            &mut batch_buf,
+        )?;
+        rt.execute(exe, &inputs)?
+    };
+    let mut loss = f32::NAN;
+    for (spec, tensor) in exe.spec.outputs.iter().zip(outputs) {
+        let name = spec.name.as_str();
+        if name == "loss" {
+            loss = tensor.data()[0];
+        } else if let Some(rest) = name.strip_prefix("m_") {
+            if let Some(m) = opt_m.as_deref_mut() {
+                m.insert(rest, tensor);
+            }
+        } else if let Some(rest) = name.strip_prefix("v_") {
+            if let Some(v) = opt_v.as_deref_mut() {
+                v.insert(rest, tensor);
+            }
+        } else {
+            store.insert(name, tensor);
+        }
+    }
+    if !loss.is_finite() {
+        bail!("artifact {} produced non-finite loss {loss}", exe.spec.name);
+    }
+    Ok(loss)
+}
+
+/// Run a forward artifact on a token tensor (B, T), returning logits
+/// (B, T, V). `omega` is required for unmerged-LoTA forwards.
+pub fn run_forward(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    tokens: &Tensor,
+    omega: Option<f32>,
+) -> Result<Tensor> {
+    let mut scalars = BTreeMap::new();
+    if let Some(w) = omega {
+        scalars.insert("omega".to_string(), Tensor::from_scalar(w));
+    }
+    scalars.insert("tokens".to_string(), tokens.clone());
+    let mut batch_buf = Vec::new();
+    let inputs = resolve_inputs(exe, store, None, None, None, &scalars, &mut batch_buf)?;
+    let mut out = rt.execute(exe, &inputs)?;
+    Ok(out.remove(0))
+}

@@ -1,0 +1,190 @@
+//! Pipeline stages: pretraining, GPTQ calibration and model quantization —
+//! the steps that produce the "pretrained-then-quantized" base model every
+//! QAF experiment starts from.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{step_batch, ModelConfig};
+use crate::data::{corpus, lm_batch};
+use crate::model::{self, ParamStore};
+use crate::quant::{accumulate_hessian, gptq_quantize, rtn_quantize, GptqConfig};
+use crate::runtime::Runtime;
+use crate::tensor::{Rng, Tensor};
+
+/// End-to-end pipeline context: a config + runtime + seed.
+pub struct Pipeline<'a> {
+    pub cfg: ModelConfig,
+    pub rt: &'a Runtime,
+    pub seed: u64,
+}
+
+/// Pretrain a full-precision base model on the synthetic corpus with the
+/// in-graph AdamW step. Returns the fp store and the loss curve.
+pub fn pretrain(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ParamStore, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let mut store = model::init_fp(cfg, &mut rng);
+    let mut opt_m = ParamStore::new();
+    let mut opt_v = ParamStore::new();
+    for name in model::fp_names() {
+        let shape = store.get(&name)?.shape().to_vec();
+        opt_m.insert(&name, Tensor::zeros(&shape));
+        opt_v.insert(&name, Tensor::zeros(&shape));
+    }
+    let exe = rt.load(&format!("pretrain_step_{}", cfg.name))?;
+    let b = step_batch(&cfg.name);
+    let mut data_rng = rng.fork(0xDA7A);
+    let mut losses = Vec::with_capacity(steps);
+    for t in 1..=steps {
+        let docs: Vec<String> = (0..b).map(|_| corpus::sample_document(&mut data_rng)).collect();
+        let batch = lm_batch(&docs, b, cfg.seq_len);
+        let mut scalars = BTreeMap::new();
+        scalars.insert("lr".to_string(), Tensor::from_scalar(lr));
+        scalars.insert("step".to_string(), Tensor::from_scalar(t as f32));
+        let loss = super::run_step(
+            rt,
+            &exe,
+            &mut store,
+            Some(&mut opt_m),
+            Some(&mut opt_v),
+            &batch,
+            &scalars,
+        )?;
+        losses.push(loss);
+        if t % 20 == 0 || t == 1 {
+            log::info!("pretrain[{}] step {t}/{steps} loss {loss:.4}", cfg.name);
+        }
+    }
+    Ok((store, losses))
+}
+
+/// Per-(slot, layer) Hessian accumulators for GPTQ calibration.
+pub type HessianMap = BTreeMap<(String, usize), Tensor>;
+
+/// Run the activation-capture artifact over `n_batches` calibration batches
+/// and accumulate `XᵀX` Hessians for every quantized slot of every layer.
+/// (Stands in for the paper's 1024 C4 samples; see DESIGN.md §2.)
+pub fn calibrate_hessians(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    fp: &ParamStore,
+    n_batches: usize,
+    seed: u64,
+) -> Result<HessianMap> {
+    let exe = rt.load(&format!("acts_fp_{}", cfg.name))?;
+    let b = step_batch(&cfg.name);
+    let (d, ff, l, t) = (cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.seq_len);
+    let mut rng = Rng::new(seed ^ 0xCA11B);
+
+    let mut hs: HessianMap = BTreeMap::new();
+    for (slot, din, _) in cfg.slots() {
+        for li in 0..l {
+            hs.insert((slot.to_string(), li), Tensor::zeros(&[din, din]));
+        }
+    }
+
+    // capture outputs: xn1 (wq/wk/wv input), attn_o (wo), xn2 (w_up),
+    // h_mid (w_down); each (L, B, T, ·)
+    let slot_of_capture: [(&str, Vec<&str>, usize); 4] = [
+        ("xn1", vec!["wq", "wk", "wv"], d),
+        ("attn_o", vec!["wo"], d),
+        ("xn2", vec!["w_up"], d),
+        ("h_mid", vec!["w_down"], ff),
+    ];
+
+    for _ in 0..n_batches {
+        let docs: Vec<String> = (0..b).map(|_| corpus::sample_document(&mut rng)).collect();
+        let batch = lm_batch(&docs, b, t);
+        let tokens = Tensor::new(&[b, t], batch.tokens.clone());
+        let mut scalars = BTreeMap::new();
+        scalars.insert("tokens".to_string(), tokens);
+        let mut batch_buf = Vec::new();
+        let inputs =
+            super::resolve_inputs(&exe, fp, None, None, None, &scalars, &mut batch_buf)?;
+        let caps = rt.execute(&exe, &inputs)?;
+        for (ci, (cap_name, slots, dim)) in slot_of_capture.iter().enumerate() {
+            let cap = &caps[ci];
+            let expect = [l, b, t, *dim];
+            if cap.shape() != expect {
+                bail!("capture {cap_name} shape {:?} != {:?}", cap.shape(), expect);
+            }
+            for li in 0..l {
+                // (B*T, dim) activation matrix for this layer
+                let rows = b * t;
+                let off = li * rows * dim;
+                let x = Tensor::new(&[rows, *dim], cap.data()[off..off + rows * dim].to_vec());
+                for slot in slots {
+                    let h = hs.get_mut(&(slot.to_string(), li)).unwrap();
+                    accumulate_hessian(h, &x);
+                }
+            }
+        }
+    }
+    Ok(hs)
+}
+
+/// Quantize a pretrained fp store with GPTQ (or RTN when `hessians` is
+/// `None` — the ablation baseline).
+pub fn quantize_model(
+    cfg: &ModelConfig,
+    fp: &ParamStore,
+    n_bits: u32,
+    hessians: Option<&HessianMap>,
+) -> Result<ParamStore> {
+    model::quantize_store(cfg, fp, |slot, layer, w| match hessians {
+        Some(hs) => {
+            let h = hs
+                .get(&(slot.to_string(), layer))
+                .with_context(|| format!("no hessian for {slot}/{layer}"))?;
+            gptq_quantize(w, h, &GptqConfig::new(n_bits, cfg.group_size))
+        }
+        None => Ok(rtn_quantize(w, cfg.group_size, n_bits)),
+    })
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(rt: &'a Runtime, cfg: ModelConfig, seed: u64) -> Self {
+        Pipeline { cfg, rt, seed }
+    }
+
+    /// Produce (or load from cache) the pretrained fp base model.
+    pub fn base_model(&self, steps: usize, cache_dir: Option<&Path>) -> Result<ParamStore> {
+        if let Some(dir) = cache_dir {
+            let path = dir.join(format!("base_{}_{steps}.ckpt", self.cfg.name));
+            if path.exists() {
+                log::info!("loading cached base model {path:?}");
+                return model::checkpoint::load(&path);
+            }
+            std::fs::create_dir_all(dir)?;
+            let (store, losses) = pretrain(self.rt, &self.cfg, steps, 1e-3, self.seed)?;
+            log::info!(
+                "pretrained {}: loss {:.3} -> {:.3}",
+                self.cfg.name,
+                losses.first().copied().unwrap_or(f32::NAN),
+                losses.last().copied().unwrap_or(f32::NAN)
+            );
+            model::checkpoint::save(&store, &path, None)?;
+            Ok(store)
+        } else {
+            Ok(pretrain(self.rt, &self.cfg, steps, 1e-3, self.seed)?.0)
+        }
+    }
+
+    /// GPTQ-quantize the base model at a bit-width (with Hessian reuse).
+    pub fn quantized(
+        &self,
+        fp: &ParamStore,
+        n_bits: u32,
+        hessians: &HessianMap,
+    ) -> Result<ParamStore> {
+        quantize_model(&self.cfg, fp, n_bits, Some(hessians))
+    }
+}

@@ -1,0 +1,223 @@
+//! QAF fine-tuning loops + the lossless merge.
+//!
+//! One generic driver handles all three methods; the differences live in
+//! which step artifact runs and which scalars feed it:
+//! * LoTA — `step_lota_{cfg}_w{bits}` with (ω, keep_frac) from the σ_t
+//!   schedule; no optimizer state (t-SignSGD is stateless).
+//! * LoRA / QA-LoRA — `step_{method}_{cfg}` with (lr, step) and AdamW
+//!   moment stores round-tripping through the artifact.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::adapter::{lota_merge, LoraAdapter, QaLoraAdapter, TernaryAdapter};
+use crate::config::{step_batch, ExperimentConfig, Method, ModelConfig};
+use crate::data::{corpus, sft_batch, tasks, Example, Split};
+use crate::model::{self, ParamStore, SLOTS};
+use crate::optim::SigmaSchedule;
+use crate::runtime::Runtime;
+use crate::tensor::{Rng, Tensor};
+
+/// Extra knobs the benches tweak on top of an [`ExperimentConfig`].
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// record the loss every step (convergence analysis, Fig. 4d)
+    pub record_losses: bool,
+    /// validate ternary invariants after every step (slower; on in tests)
+    pub paranoid: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { record_losses: true, paranoid: false }
+    }
+}
+
+/// Outcome of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct FinetuneReport {
+    pub losses: Vec<f32>,
+    pub wall_secs: f64,
+    /// peak auxiliary state elements (adapters + optimizer moments) — the
+    /// Fig. 6 memory-overhead metric
+    pub aux_state_elems: usize,
+    pub steps: usize,
+}
+
+fn sample_task_example(task: &str, rng: &mut Rng) -> Result<Example> {
+    if task == "recovery" {
+        let (prompt, completion) = corpus::sample_recovery_example(rng);
+        Ok(Example { prompt, completion })
+    } else {
+        let gen = tasks::task_by_name(task)?;
+        Ok(gen.sample(rng, Split::Train))
+    }
+}
+
+/// Fine-tune `store` (quantized base + freshly-initialized adapters) in
+/// place. Returns the loss curve and resource accounting.
+pub fn finetune(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    exp: &ExperimentConfig,
+    store: &mut ParamStore,
+    opts: &TrainOptions,
+) -> Result<FinetuneReport> {
+    let method = exp.method;
+    if !method.trains() {
+        bail!("method {:?} has no training step", method);
+    }
+    let artifact = match method {
+        Method::LotaQaf => format!("step_lota_{}_w{}", cfg.name, exp.n_bits),
+        m => format!("step_{}_{}", m.as_str(), cfg.name),
+    };
+    let exe = rt.load(&artifact)?;
+    let b = step_batch(&cfg.name);
+    let mut data_rng = Rng::new(exp.seed ^ 0xF17E);
+
+    // optimizer state for the AdamW methods
+    let adapter_names = model::adapter_names(method);
+    let (mut opt_m, mut opt_v) = if matches!(method, Method::Lora | Method::QaLora) {
+        let mut m = ParamStore::new();
+        let mut v = ParamStore::new();
+        for n in &adapter_names {
+            let shape = store.get(n)?.shape().to_vec();
+            m.insert(n, Tensor::zeros(&shape));
+            v.insert(n, Tensor::zeros(&shape));
+        }
+        (Some(m), Some(v))
+    } else {
+        (None, None)
+    };
+
+    let adapter_elems: usize = adapter_names
+        .iter()
+        .map(|n| store.get(n).map(|t| t.len()).unwrap_or(0))
+        .sum();
+    let aux_state_elems = adapter_elems
+        + opt_m.as_ref().map(|s| s.n_elems()).unwrap_or(0)
+        + opt_v.as_ref().map(|s| s.n_elems()).unwrap_or(0);
+
+    let sigma = SigmaSchedule::with_init(exp.sigma_init);
+    let omega = exp.omega(cfg.rank);
+    let t0 = Instant::now();
+    let mut losses = Vec::new();
+
+    for t in 1..=exp.steps {
+        let examples: Vec<Example> = (0..b)
+            .map(|_| sample_task_example(&exp.task, &mut data_rng))
+            .collect::<Result<_>>()?;
+        let batch = sft_batch(&examples, b, cfg.seq_len);
+
+        let mut scalars = BTreeMap::new();
+        match method {
+            Method::LotaQaf => {
+                scalars.insert("omega".to_string(), Tensor::from_scalar(omega));
+                scalars.insert(
+                    "keep_frac".to_string(),
+                    Tensor::from_scalar(sigma.keep_frac(t - 1, exp.steps)),
+                );
+            }
+            _ => {
+                scalars.insert("lr".to_string(), Tensor::from_scalar(exp.lr));
+                scalars.insert("step".to_string(), Tensor::from_scalar(t as f32));
+            }
+        }
+
+        let loss = super::run_step(
+            rt,
+            &exe,
+            store,
+            opt_m.as_mut(),
+            opt_v.as_mut(),
+            &batch,
+            &scalars,
+        )?;
+        if opts.record_losses {
+            losses.push(loss);
+        }
+        if opts.paranoid && method == Method::LotaQaf {
+            for n in &adapter_names {
+                let t = store.get(n)?;
+                if let Some(bad) =
+                    t.data().iter().find(|v| **v != -1.0 && **v != 0.0 && **v != 1.0)
+                {
+                    bail!("adapter {n} left ternary domain: {bad}");
+                }
+            }
+        }
+        if t % 25 == 0 || t == 1 {
+            log::info!(
+                "finetune[{}/{}/{}b] step {t}/{} loss {loss:.4}",
+                cfg.name,
+                method.as_str(),
+                exp.n_bits,
+                exp.steps
+            );
+        }
+    }
+
+    Ok(FinetuneReport {
+        losses,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        aux_state_elems,
+        steps: exp.steps,
+    })
+}
+
+/// Merge trained adapters into the quantized store (consuming the adapter
+/// tensors), producing a plain "merged" model the low-bit serving path
+/// runs. LoTA and QA-LoRA merge losslessly; LoRA re-quantizes (lossy) —
+/// the returned f32 is the max requantization error across slots
+/// (always 0 for the lossless methods).
+pub fn merge_into_store(
+    cfg: &ModelConfig,
+    exp: &ExperimentConfig,
+    store: &mut ParamStore,
+) -> Result<f32> {
+    let mut max_err = 0.0f32;
+    let omega = exp.omega(cfg.rank);
+    for li in 0..cfg.n_layers {
+        for slot in SLOTS {
+            let ql = model::quant_layer(cfg, store, slot, li, exp.n_bits)?;
+            let merged = match exp.method {
+                Method::LotaQaf => {
+                    let a = store.get(&format!("ta_{slot}_a"))?.layer(li);
+                    let b = store.get(&format!("ta_{slot}_b"))?.layer(li);
+                    let ta = TernaryAdapter::from_parts(a, b)?;
+                    lota_merge(&ql, &ta, omega)
+                }
+                Method::QaLora => {
+                    let a = store.get(&format!("qa_{slot}_a"))?.layer(li);
+                    let b = store.get(&format!("qa_{slot}_b"))?.layer(li);
+                    let ad = QaLoraAdapter {
+                        a,
+                        b,
+                        rank: cfg.rank,
+                        group_size: cfg.group_size,
+                        alpha: 2.0 * cfg.rank as f32,
+                    };
+                    ad.merge_zeros(&ql)
+                }
+                Method::Lora => {
+                    let a = store.get(&format!("lo_{slot}_a"))?.layer(li);
+                    let b = store.get(&format!("lo_{slot}_b"))?.layer(li);
+                    let ad = LoraAdapter { a, b, rank: cfg.rank, alpha: 2.0 * cfg.rank as f32 };
+                    let (m, err) = crate::adapter::lora::merge_requantize(&ql, &ad);
+                    max_err = max_err.max(err);
+                    m
+                }
+                Method::GptqOnly => ql.clone(),
+            };
+            merged.validate()?;
+            model::set_quant_layer(store, slot, li, &merged)?;
+        }
+    }
+    // drop adapter tensors: the merged model is adapter-free
+    for n in model::adapter_names(exp.method) {
+        store.remove(&n);
+    }
+    Ok(max_err)
+}

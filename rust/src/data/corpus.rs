@@ -1,0 +1,213 @@
+//! Synthetic pretraining corpus + the "Alpaca-like" recovery mix.
+//!
+//! Four deterministic domains play the role of the paper's data world
+//! (DESIGN.md §2): the same four families structure the MMLU-like eval, so
+//! "performance recovery" means the same thing here as in the paper —
+//! generic fine-tuning data restores general abilities measured on held-out
+//! multi-domain questions.
+//!
+//! * `facts`   — templated taxonomy facts           ("a robin is a bird")
+//! * `math`    — arithmetic equalities               ("12 + 7 = 19")
+//! * `social`  — relation triples                    ("mia likes ben")
+//! * `seq`     — alphabet/counting patterns          ("a b c d e")
+//!
+//! Every sampler takes the RNG by value-of-state, so corpora are fully
+//! reproducible from a seed.
+
+use crate::tensor::Rng;
+
+pub const DOMAINS: [&str; 4] = ["facts", "math", "social", "seq"];
+
+const ANIMALS: &[&str] = &[
+    "robin", "eagle", "crow", "owl", "shark", "trout", "salmon", "cobra",
+    "gecko", "turtle", "wolf", "fox", "bear", "otter", "horse",
+];
+const CLASSES: &[&str] = &["bird", "fish", "reptile", "mammal"];
+const NAMES: &[&str] = &[
+    "mia", "ben", "ana", "leo", "zoe", "max", "eva", "sam", "ivy", "dan",
+    "amy", "tom", "lia", "rex", "kim",
+];
+const VERBS: &[&str] = &["likes", "helps", "knows", "meets"];
+
+/// class of an animal — a fixed world model shared by corpus + eval.
+pub fn animal_class(animal: &str) -> &'static str {
+    let idx = ANIMALS.iter().position(|a| *a == animal).unwrap_or(0);
+    CLASSES[match idx {
+        0..=3 => 0,  // birds
+        4..=6 => 1,  // fish
+        7..=9 => 2,  // reptiles
+        _ => 3,      // mammals
+    }]
+}
+
+pub fn animals() -> &'static [&'static str] {
+    ANIMALS
+}
+
+pub fn names() -> &'static [&'static str] {
+    NAMES
+}
+
+pub fn verbs() -> &'static [&'static str] {
+    VERBS
+}
+
+/// deterministic "who likes whom" world: person i relates to person
+/// (i*7+3) mod n with verb (i mod verbs).
+pub fn social_fact(i: usize) -> (usize, &'static str, usize) {
+    let n = NAMES.len();
+    (i % n, VERBS[i % VERBS.len()], (i * 7 + 3) % n)
+}
+
+/// One pretraining sentence from the given domain.
+pub fn sample_sentence(domain: usize, rng: &mut Rng) -> String {
+    match domain % 4 {
+        0 => {
+            let a = rng.choose(ANIMALS);
+            format!("a {a} is a {}", animal_class(a))
+        }
+        1 => {
+            let a = rng.below(50);
+            let b = rng.below(50);
+            if rng.below(2) == 0 {
+                format!("{a} + {b} = {}", a + b)
+            } else {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                format!("{hi} - {lo} = {}", hi - lo)
+            }
+        }
+        2 => {
+            let i = rng.below(NAMES.len() * VERBS.len());
+            let (s, v, o) = social_fact(i);
+            format!("{} {v} {}", NAMES[s], NAMES[o])
+        }
+        _ => {
+            // rotating alphabet window or counting run
+            if rng.below(2) == 0 {
+                let start = rng.below(20);
+                let len = rng.range(4, 8);
+                (start..start + len)
+                    .map(|i| ((b'a' + (i % 26) as u8) as char).to_string())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            } else {
+                let start = rng.below(20);
+                let len = rng.range(4, 8);
+                (start..start + len)
+                    .map(|i| i.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            }
+        }
+    }
+}
+
+/// A pretraining document: a few sentences joined by periods, mixing
+/// domains uniformly.
+pub fn sample_document(rng: &mut Rng) -> String {
+    let n = rng.range(2, 5);
+    (0..n)
+        .map(|_| sample_sentence(rng.below(4), rng))
+        .collect::<Vec<_>>()
+        .join(" . ")
+}
+
+/// The "Alpaca-like" recovery instruction: a domain sentence rendered as a
+/// question/answer pair. Generic (covers all domains), which is what makes
+/// it performance-recovery rather than task-specific data.
+pub fn sample_recovery_example(rng: &mut Rng) -> (String, String) {
+    match rng.below(4) {
+        0 => {
+            let a = rng.choose(ANIMALS);
+            (format!("what is a {a} ?"), format!("a {a} is a {}", animal_class(a)))
+        }
+        1 => {
+            let a = rng.below(50);
+            let b = rng.below(50);
+            (format!("{a} + {b} = ?"), format!("{}", a + b))
+        }
+        2 => {
+            let i = rng.below(NAMES.len() * VERBS.len());
+            let (s, v, o) = social_fact(i);
+            (format!("who does {} {v} ?", NAMES[s]), NAMES[o].to_string())
+        }
+        _ => {
+            let start = rng.below(20);
+            (
+                format!(
+                    "continue: {} {} {}",
+                    ((b'a' + (start % 26) as u8) as char),
+                    ((b'a' + ((start + 1) % 26) as u8) as char),
+                    ((b'a' + ((start + 2) % 26) as u8) as char)
+                ),
+                format!("{}", ((b'a' + ((start + 3) % 26) as u8) as char)),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer;
+
+    #[test]
+    fn sentences_are_tokenizable() {
+        let mut rng = Rng::new(1);
+        for d in 0..4 {
+            for _ in 0..50 {
+                let s = sample_sentence(d, &mut rng);
+                let ids = tokenizer::encode(&s); // panics on bad char
+                assert!(!ids.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn documents_are_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..20 {
+            assert_eq!(sample_document(&mut a), sample_document(&mut b));
+        }
+    }
+
+    #[test]
+    fn world_model_is_consistent() {
+        assert_eq!(animal_class("robin"), "bird");
+        assert_eq!(animal_class("shark"), "fish");
+        assert_eq!(animal_class("gecko"), "reptile");
+        assert_eq!(animal_class("fox"), "mammal");
+    }
+
+    #[test]
+    fn math_sentences_are_correct() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let s = sample_sentence(1, &mut rng);
+            // parse "a op b = c" and check
+            let parts: Vec<&str> = s.split(' ').collect();
+            let a: i64 = parts[0].parse().unwrap();
+            let b: i64 = parts[2].parse().unwrap();
+            let c: i64 = parts[4].parse().unwrap();
+            match parts[1] {
+                "+" => assert_eq!(a + b, c),
+                "-" => assert_eq!(a - b, c),
+                op => panic!("unexpected op {op}"),
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_examples_cover_domains() {
+        let mut rng = Rng::new(4);
+        let mut qs = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (q, a) = sample_recovery_example(&mut rng);
+            tokenizer::encode(&q);
+            tokenizer::encode(&a);
+            qs.insert(q);
+        }
+        assert!(qs.len() > 100, "should be diverse, got {}", qs.len());
+    }
+}

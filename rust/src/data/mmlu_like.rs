@@ -1,0 +1,212 @@
+//! MMLU-like multi-subject multiple-choice benchmark (DESIGN.md §2).
+//!
+//! Four subjects mirror the paper's MMLU groups (Humanities / STEM /
+//! Social / Other → the four corpus domains). Scoring follows lm-eval's
+//! likelihood protocol: each option is appended to the question context
+//! and scored by the length-normalized log-likelihood of its tokens; the
+//! model answers with the argmax option. Contexts deliberately match the
+//! pretraining-corpus surface forms, so the suite probes *retained
+//! knowledge* — exactly what quantization destroys and recovery
+//! fine-tuning restores (the Table 1 / Fig. 1 dynamic).
+//!
+//! Held-out discipline: suite questions draw from the same fixed world
+//! model (`corpus::animal_class`, `corpus::social_fact`) the corpus
+//! teaches, but the suite seed never feeds the training samplers.
+
+use crate::data::corpus;
+use crate::tensor::Rng;
+
+pub const SUBJECTS: [&str; 4] = ["facts", "math", "social", "seq"];
+pub const N_OPTIONS: usize = 4;
+
+/// One likelihood-scored multiple-choice question.
+#[derive(Clone, Debug)]
+pub struct Question {
+    pub subject: usize,
+    /// context the options complete, e.g. `"a robin is a "`
+    pub context: String,
+    pub options: [String; 4],
+    /// index of the correct option
+    pub answer: usize,
+}
+
+fn rotate(opts: &mut [String; 4], answer: usize, rng: &mut Rng) -> usize {
+    let rot = rng.below(4);
+    opts.rotate_left(rot);
+    (answer + 4 - rot) % 4
+}
+
+fn gen_question(subject: usize, rng: &mut Rng) -> Question {
+    match subject {
+        0 => {
+            let a = *rng.choose(corpus::animals());
+            let correct = corpus::animal_class(a).to_string();
+            let mut opts = ["bird", "fish", "reptile", "mammal"].map(|s| s.to_string());
+            let answer = opts.iter().position(|o| *o == correct).unwrap();
+            let answer = rotate(&mut opts, answer, rng);
+            Question { subject, context: format!("a {a} is a "), options: opts, answer }
+        }
+        1 => {
+            let a = rng.below(50);
+            let b = rng.below(50);
+            let correct = a + b;
+            let distract = [
+                correct + 1 + rng.below(3),
+                (correct + 7 + rng.below(5)) % 100,
+                correct.saturating_sub(2 + rng.below(4)),
+            ];
+            let mut opts = [
+                correct.to_string(),
+                distract[0].to_string(),
+                distract[1].to_string(),
+                distract[2].to_string(),
+            ];
+            // dedupe collisions deterministically
+            for i in 1..4 {
+                while opts[..i].contains(&opts[i]) {
+                    let bump: usize = opts[i].parse::<usize>().unwrap() + 11;
+                    opts[i] = (bump % 113).to_string();
+                }
+            }
+            let answer = rotate(&mut opts, 0, rng);
+            Question { subject, context: format!("{a} + {b} = "), options: opts, answer }
+        }
+        2 => {
+            let i = rng.below(corpus::names().len() * corpus::verbs().len());
+            let (s, v, o) = corpus::social_fact(i);
+            let names = corpus::names();
+            let mut opts = [
+                names[o].to_string(),
+                names[(o + 1) % names.len()].to_string(),
+                names[(o + 4) % names.len()].to_string(),
+                names[(o + 7) % names.len()].to_string(),
+            ];
+            let answer = rotate(&mut opts, 0, rng);
+            Question {
+                subject,
+                context: format!("{} {v} ", names[s]),
+                options: opts,
+                answer,
+            }
+        }
+        _ => {
+            let start = rng.below(22);
+            let ch = |k: usize| ((b'a' + ((start + k) % 26) as u8) as char).to_string();
+            let mut opts = [ch(3), ch(5), ch(9), ch(14)];
+            let answer = rotate(&mut opts, 0, rng);
+            Question {
+                subject,
+                context: format!("{} {} {} ", ch(0), ch(1), ch(2)),
+                options: opts,
+                answer,
+            }
+        }
+    }
+}
+
+/// Deterministic evaluation suite: `per_subject` questions per subject.
+pub fn generate_suite(per_subject: usize, seed: u64) -> Vec<Question> {
+    let mut out = Vec::with_capacity(per_subject * SUBJECTS.len());
+    for subject in 0..SUBJECTS.len() {
+        let mut rng = Rng::new(seed ^ (subject as u64 + 1).wrapping_mul(0x9E3779B9));
+        for _ in 0..per_subject {
+            out.push(gen_question(subject, &mut rng));
+        }
+    }
+    out
+}
+
+/// Accuracy aggregation per subject + average (the Table 1 row format).
+#[derive(Clone, Debug, Default)]
+pub struct MmluScores {
+    pub per_subject: [f32; 4],
+    pub average: f32,
+}
+
+pub fn aggregate(results: &[(usize, bool)]) -> MmluScores {
+    let mut correct = [0usize; 4];
+    let mut total = [0usize; 4];
+    for (subject, ok) in results {
+        total[*subject] += 1;
+        if *ok {
+            correct[*subject] += 1;
+        }
+    }
+    let mut s = MmluScores::default();
+    let mut sum = 0.0;
+    for i in 0..4 {
+        s.per_subject[i] = if total[i] > 0 {
+            100.0 * correct[i] as f32 / total[i] as f32
+        } else {
+            0.0
+        };
+        sum += s.per_subject[i];
+    }
+    s.average = sum / 4.0;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer;
+
+    #[test]
+    fn suite_is_deterministic_and_tokenizable() {
+        let a = generate_suite(8, 42);
+        let b = generate_suite(8, 42);
+        assert_eq!(a.len(), 32);
+        for (qa, qb) in a.iter().zip(&b) {
+            assert_eq!(qa.context, qb.context);
+            assert_eq!(qa.answer, qb.answer);
+            tokenizer::encode(&qa.context);
+            for o in &qa.options {
+                tokenizer::encode(o);
+            }
+        }
+    }
+
+    #[test]
+    fn options_are_distinct_and_answer_correct() {
+        for q in generate_suite(50, 7) {
+            for i in 0..4 {
+                for j in 0..i {
+                    assert_ne!(q.options[i], q.options[j], "{q:?}");
+                }
+            }
+            assert!(q.answer < 4);
+            // spot-check subject-0 semantics: correct option matches the world
+            if q.subject == 0 {
+                let animal = q.context.split(' ').nth(1).unwrap();
+                assert_eq!(q.options[q.answer], corpus::animal_class(animal));
+            }
+            if q.subject == 1 {
+                let parts: Vec<&str> = q.context.split(' ').collect();
+                let a: usize = parts[0].parse().unwrap();
+                let b: usize = parts[2].parse().unwrap();
+                assert_eq!(q.options[q.answer], (a + b).to_string());
+            }
+        }
+    }
+
+    #[test]
+    fn answer_positions_are_balanced() {
+        let qs = generate_suite(60, 3);
+        let mut counts = [0usize; 4];
+        for q in &qs {
+            counts[q.answer] += 1;
+        }
+        for c in counts {
+            assert!(c > 30, "answer positions skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn aggregate_computes_per_subject() {
+        let results = vec![(0, true), (0, false), (1, true), (2, true), (3, false)];
+        let s = aggregate(&results);
+        assert_eq!(s.per_subject[0], 50.0);
+        assert_eq!(s.per_subject[1], 100.0);
+        assert_eq!(s.average, (50.0 + 100.0 + 100.0 + 0.0) / 4.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data substrate: tokenizer, synthetic corpora, task generators, the
+//! MMLU-like evaluation suite and batch assembly. Everything is
+//! deterministic from seeds (DESIGN.md §2 documents how each piece stands
+//! in for the paper's datasets).
+
+pub mod batch;
+pub mod corpus;
+pub mod mmlu_like;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batch::{encode_example, lm_batch, prompt_batch, sft_batch, Batch, BatchStream};
+pub use tasks::{task_by_name, Example, Split, TaskGen};

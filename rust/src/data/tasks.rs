@@ -1,0 +1,285 @@
+//! Task-specific fine-tuning datasets — the synthetic stand-ins for the
+//! paper's GSM8K / SQL-generation / ViGGO (DESIGN.md §2), each with a
+//! deterministic generator, disjoint train/test splits (hash-partitioned
+//! on the latent example id), and exact-match scoring of greedy decodes —
+//! mirroring HALO's evaluation harness that the paper follows.
+//!
+//! * `arith`      — two-step arithmetic word problems → final integer
+//! * `sql`        — NL requests compiled onto a fixed schema grammar
+//! * `datatotext` — attribute dict → templated utterance (ViGGO-like)
+
+use crate::data::corpus;
+use crate::tensor::Rng;
+
+use anyhow::{bail, Result};
+
+/// One prompt/completion pair. The model is trained on
+/// `BOS prompt | completion EOS` with the loss masked to the completion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub prompt: String,
+    pub completion: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Deterministic split: ~1/8 of ids land in Test.
+fn split_of(id: u64) -> Split {
+    // splitmix-style avalanche so consecutive ids scatter
+    let mut z = id.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    if (z ^ (z >> 31)) % 8 == 0 {
+        Split::Test
+    } else {
+        Split::Train
+    }
+}
+
+pub trait TaskGen {
+    fn name(&self) -> &'static str;
+    /// Total latent example space.
+    fn space(&self) -> u64;
+    /// Render example `id`.
+    fn render(&self, id: u64) -> Example;
+
+    /// Sample an example of the requested split.
+    fn sample(&self, rng: &mut Rng, split: Split) -> Example {
+        loop {
+            let id = rng.next_u64() % self.space();
+            if split_of(id) == split {
+                return self.render(id);
+            }
+        }
+    }
+
+    /// A deterministic test set (first `n` test-split ids in order).
+    fn test_set(&self, n: usize) -> Vec<Example> {
+        let mut out = Vec::with_capacity(n);
+        let mut id = 0u64;
+        while out.len() < n && id < self.space() {
+            if split_of(id) == Split::Test {
+                out.push(self.render(id));
+            }
+            id += 1;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// GSM8K stand-in: "x has A <obj> and gets B more then loses C . how many ?"
+pub struct ArithTask;
+
+impl TaskGen for ArithTask {
+    fn name(&self) -> &'static str {
+        "arith"
+    }
+
+    fn space(&self) -> u64 {
+        // a in 0..30, b in 0..30, c in 0..(a+b) bounded 30, name, object
+        30 * 30 * 30 * 15 * 4
+    }
+
+    fn render(&self, id: u64) -> Example {
+        let a = (id % 30) as i64;
+        let b = ((id / 30) % 30) as i64;
+        let c_raw = ((id / 900) % 30) as i64;
+        let c = c_raw.min(a + b); // keep answers non-negative
+        let name = corpus::names()[((id / 27000) % 15) as usize];
+        let obj = ["apples", "coins", "books", "cards"][((id / 405000) % 4) as usize];
+        Example {
+            prompt: format!(
+                "{name} has {a} {obj} and gets {b} more then loses {c} . how many ?"
+            ),
+            completion: format!("{}", a + b - c),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// SQL stand-in: NL request → query over a fixed table grammar.
+pub struct SqlTask;
+
+const SQL_COLS: &[&str] = &["name", "age", "city", "score", "team"];
+const SQL_TABLES: &[&str] = &["users", "players", "staff"];
+const SQL_OPS: &[(&str, &str)] = &[("over", ">"), ("under", "<"), ("exactly", "=")];
+
+impl TaskGen for SqlTask {
+    fn name(&self) -> &'static str {
+        "sql"
+    }
+
+    fn space(&self) -> u64 {
+        // select-col × table × filter-col × op × value(0..100)
+        (SQL_COLS.len() * SQL_TABLES.len() * SQL_COLS.len() * SQL_OPS.len() * 100) as u64
+    }
+
+    fn render(&self, id: u64) -> Example {
+        let ncols = SQL_COLS.len() as u64;
+        let sel = SQL_COLS[(id % ncols) as usize];
+        let table = SQL_TABLES[((id / ncols) % SQL_TABLES.len() as u64) as usize];
+        let fcol = SQL_COLS
+            [((id / (ncols * SQL_TABLES.len() as u64)) % ncols) as usize];
+        let op_idx = ((id / (ncols * ncols * SQL_TABLES.len() as u64))
+            % SQL_OPS.len() as u64) as usize;
+        let (word, op) = SQL_OPS[op_idx];
+        let val = (id / (ncols * ncols * SQL_TABLES.len() as u64 * SQL_OPS.len() as u64))
+            % 100;
+        Example {
+            prompt: format!("get {sel} of {table} with {fcol} {word} {val}"),
+            completion: format!("select {sel} from {table} where {fcol} {op} {val}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// ViGGO stand-in: attribute dictionary → templated utterance.
+pub struct DataToTextTask;
+
+const GAMES: &[&str] = &[
+    "pacman", "tetris", "pong", "doom", "myst", "zork", "portal", "halo",
+    "mario", "sonic",
+];
+const GENRES: &[&str] = &["arcade", "puzzle", "shooter", "adventure"];
+const RATINGS: &[&str] = &["good", "great", "poor", "mixed"];
+const YEARS_BASE: u64 = 1980;
+
+impl TaskGen for DataToTextTask {
+    fn name(&self) -> &'static str {
+        "datatotext"
+    }
+
+    fn space(&self) -> u64 {
+        (GAMES.len() * GENRES.len() * RATINGS.len() * 40) as u64
+    }
+
+    fn render(&self, id: u64) -> Example {
+        let g = GAMES[(id % GAMES.len() as u64) as usize];
+        let genre =
+            GENRES[((id / GAMES.len() as u64) % GENRES.len() as u64) as usize];
+        let rating = RATINGS[((id / (GAMES.len() * GENRES.len()) as u64)
+            % RATINGS.len() as u64) as usize];
+        let year = YEARS_BASE
+            + (id / (GAMES.len() * GENRES.len() * RATINGS.len()) as u64) % 40;
+        Example {
+            prompt: format!("name = {g} , genre = {genre} , year = {year} , rating = {rating}"),
+            completion: format!(
+                "{g} is a {genre} game from {year} with {rating} reviews"
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The "recovery" pseudo-task: Alpaca-like generic instruction data (no
+/// fixed latent space; splits do not apply — evaluation is the MMLU-like
+/// suite instead of exact match).
+pub struct RecoveryTask;
+
+impl RecoveryTask {
+    pub fn sample(&self, rng: &mut Rng) -> Example {
+        let (prompt, completion) = corpus::sample_recovery_example(rng);
+        Example { prompt, completion }
+    }
+}
+
+/// Look up a task generator by config name.
+pub fn task_by_name(name: &str) -> Result<Box<dyn TaskGen + Send + Sync>> {
+    Ok(match name {
+        "arith" => Box::new(ArithTask),
+        "sql" => Box::new(SqlTask),
+        "datatotext" => Box::new(DataToTextTask),
+        _ => bail!("unknown task '{name}' (arith|sql|datatotext|recovery)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer;
+
+    fn check_task(t: &dyn TaskGen) {
+        // renders are tokenizable and deterministic
+        for id in [0u64, 1, 17, t.space() - 1] {
+            let e1 = t.render(id);
+            let e2 = t.render(id);
+            assert_eq!(e1, e2);
+            tokenizer::encode(&e1.prompt);
+            tokenizer::encode(&e1.completion);
+        }
+    }
+
+    #[test]
+    fn all_tasks_render_and_tokenize() {
+        check_task(&ArithTask);
+        check_task(&SqlTask);
+        check_task(&DataToTextTask);
+    }
+
+    #[test]
+    fn arith_answers_are_correct() {
+        let t = ArithTask;
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let e = t.sample(&mut rng, Split::Train);
+            // parse "N has A obj and gets B more then loses C ..."
+            let words: Vec<&str> = e.prompt.split(' ').collect();
+            let a: i64 = words[2].parse().unwrap();
+            let b: i64 = words[6].parse().unwrap();
+            let c: i64 = words[10].parse().unwrap();
+            assert_eq!(e.completion, format!("{}", a + b - c));
+            assert!(a + b - c >= 0);
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_nonempty() {
+        let t = SqlTask;
+        let mut train_ids = std::collections::HashSet::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            train_ids.insert(t.sample(&mut rng, Split::Train).prompt);
+        }
+        let test = t.test_set(64);
+        assert_eq!(test.len(), 64);
+        for e in &test {
+            assert!(
+                !train_ids.contains(&e.prompt),
+                "test example leaked into train: {}",
+                e.prompt
+            );
+        }
+    }
+
+    #[test]
+    fn test_set_is_deterministic() {
+        let a = ArithTask.test_set(32);
+        let b = ArithTask.test_set(32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn split_fraction_is_about_an_eighth() {
+        let n = 10_000u64;
+        let tests = (0..n).filter(|&i| split_of(i) == Split::Test).count();
+        let frac = tests as f64 / n as f64;
+        assert!((0.09..0.16).contains(&frac), "test frac {frac}");
+    }
+
+    #[test]
+    fn task_lookup() {
+        assert!(task_by_name("arith").is_ok());
+        assert!(task_by_name("sql").is_ok());
+        assert!(task_by_name("datatotext").is_ok());
+        assert!(task_by_name("mmlu").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Char-level tokenizer over a fixed 64-symbol alphabet.
+//!
+//! Mirrors `python/compile/configs.py::VOCAB = 64` — the HLO artifacts bake
+//! this vocabulary size into the embedding/head shapes, so the alphabet is
+//! part of the cross-language contract (checked by a unit test against the
+//! manifest's config block at runtime).
+
+pub const VOCAB: usize = 64;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+/// prompt/completion separator (rendered as '|')
+pub const SEP: u32 = 3;
+
+/// symbol table for ids 4..: letters, digits, space and task punctuation.
+const SYMBOLS: &[char] = &[
+    'a', 'b', 'c', 'd', 'e', 'f', 'g', 'h', 'i', 'j', 'k', 'l', 'm', 'n', 'o',
+    'p', 'q', 'r', 's', 't', 'u', 'v', 'w', 'x', 'y', 'z', '0', '1', '2', '3',
+    '4', '5', '6', '7', '8', '9', ' ', '+', '-', '*', '=', '>', '<', '(', ')',
+    ',', '.', ':', '?', '_',
+];
+
+/// Encode one char; `None` if outside the alphabet.
+pub fn encode_char(c: char) -> Option<u32> {
+    match c {
+        '|' => Some(SEP),
+        _ => SYMBOLS
+            .iter()
+            .position(|s| *s == c)
+            .map(|i| (i + 4) as u32),
+    }
+}
+
+pub fn decode_char(id: u32) -> char {
+    match id {
+        PAD => '\u{2400}', // visible control pictures for specials
+        BOS => '\u{2402}',
+        EOS => '\u{2403}',
+        SEP => '|',
+        _ => SYMBOLS
+            .get(id as usize - 4)
+            .copied()
+            .unwrap_or('\u{fffd}'),
+    }
+}
+
+/// Encode a string; panics on out-of-alphabet chars (all generators emit
+/// only alphabet chars, so a panic here is a bug, not a data problem).
+pub fn encode(s: &str) -> Vec<u32> {
+    s.chars()
+        .map(|c| encode_char(c).unwrap_or_else(|| panic!("char '{c}' not in alphabet")))
+        .collect()
+}
+
+pub fn decode(ids: &[u32]) -> String {
+    ids.iter()
+        .take_while(|&&id| id != EOS)
+        .filter(|&&id| id != PAD && id != BOS)
+        .map(|&id| decode_char(id))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphabet_fits_vocab() {
+        assert!(SYMBOLS.len() + 4 <= VOCAB, "{} symbols", SYMBOLS.len());
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "select name from t where age > 30";
+        let ids = encode(s);
+        assert_eq!(decode(&ids), s);
+    }
+
+    #[test]
+    fn no_symbol_collisions() {
+        let mut seen = std::collections::HashSet::new();
+        for c in SYMBOLS {
+            assert!(seen.insert(*c), "duplicate symbol '{c}'");
+            let id = encode_char(*c).unwrap();
+            assert_eq!(decode_char(id), *c);
+        }
+    }
+
+    #[test]
+    fn sep_is_pipe() {
+        assert_eq!(encode("a|b"), vec![4, SEP, 5]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let ids = vec![4, 5, EOS, 6, 7];
+        assert_eq!(decode(&ids), "ab");
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_alphabet_panics() {
+        encode("é");
+    }
+}

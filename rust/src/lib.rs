@@ -1,0 +1,37 @@
+//! # LoTA-QAF: Lossless Ternary Adaptation for Quantization-Aware Fine-Tuning
+//!
+//! A full-stack reproduction of the NeurIPS 2025 paper *"LoTA-QAF: Lossless
+//! Ternary Adaptation for Quantization-Aware Fine-Tuning"* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1 (Pallas, build-time Python)** — fused ternary-adaptation
+//!   kernels (`python/compile/kernels/`): quantized matmul with in-grid
+//!   ternary adjustment, the ternary threshold/merge map, and the t-SignSGD
+//!   percentile update. Checked against pure-jnp oracles (`ref.py`).
+//! * **Layer 2 (JAX, build-time Python)** — the transformer forward/backward
+//!   graph over group-quantized weights with LoTA / LoRA / QA-LoRA adapters,
+//!   plus full training-step graphs, all AOT-lowered to HLO text by
+//!   `python/compile/aot.py`.
+//! * **Layer 3 (Rust, this crate)** — everything at runtime: GPTQ/RTN
+//!   quantizers, bit-packing, adapter state + lossless merge, the t-SignSGD
+//!   schedule, synthetic task corpora, the training coordinator, the batched
+//!   inference server, and the benchmark harness that regenerates every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the graphs
+//! once, and the `lota` binary loads `artifacts/*.hlo.txt` through PJRT.
+
+pub mod adapter;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,389 @@
+//! `lota` — the LoTA-QAF launcher.
+//!
+//! Subcommands drive the full life cycle against the AOT artifacts:
+//!
+//! ```text
+//! lota pretrain  --model tiny --steps 200 --out checkpoints
+//! lota quantize  --model tiny --bits 4 --base checkpoints/base_tiny_200.ckpt
+//! lota finetune  --model tiny --bits 4 --method lota --task arith --steps 100
+//! lota eval      --model tiny --ckpt <ckpt> --suite mmlu
+//! lota serve     --model tiny --ckpt <ckpt> --path merged --requests 32
+//! lota table1    --model tiny --steps 40      # regenerate the main table
+//! lota info                                    # artifact + config summary
+//! ```
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs); the offline
+//! crate set has no clap.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lota_qaf::bench_harness::Table;
+use lota_qaf::config::{preset, step_batch, ExperimentConfig, Method};
+use lota_qaf::coordinator::experiments::{print_table1, run_table1, ExperimentContext};
+use lota_qaf::coordinator::{
+    calibrate_hessians, exact_match_eval, finetune, merge_into_store, mmlu_eval, pretrain,
+    quantize_model, token_accuracy, TrainOptions,
+};
+use lota_qaf::data::{mmlu_like, tasks};
+use lota_qaf::model::{self, checkpoint};
+use lota_qaf::runtime::Runtime;
+use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::tensor::Rng;
+
+/// `--key value` argument bag.
+struct Args {
+    map: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{}'", argv[i]))?;
+            if i + 1 >= argv.len() {
+                bail!("flag --{k} needs a value");
+            }
+            map.insert(k.to_string(), argv[i + 1].clone());
+            i += 2;
+        }
+        Ok(Args { map })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.map.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a float")),
+            None => Ok(default),
+        }
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level()
+            <= match std::env::var("RUST_LOG").as_deref() {
+                Ok("debug") => log::Level::Debug,
+                Ok("warn") => log::Level::Warn,
+                _ => log::Level::Info,
+            }
+    }
+    fn log(&self, r: &log::Record) {
+        if self.enabled(r.metadata()) {
+            eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+fn main() -> Result<()> {
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Debug));
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "quantize" => cmd_quantize(&args),
+        "finetune" => cmd_finetune(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "table1" => cmd_table1(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `lota help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lota — LoTA-QAF reproduction launcher
+
+USAGE: lota <command> [--flag value]...
+
+COMMANDS
+  pretrain  --model tiny --steps 200 [--out checkpoints]
+  quantize  --model tiny --bits 4 --base <ckpt> [--quantizer gptq|rtn] [--out <ckpt>]
+  finetune  --model tiny --bits 4 --method lota|lora|qalora --task recovery|arith|sql|datatotext
+            [--steps 100] [--omega-frac 0.75] [--sigma-init 0.05] [--lr 5e-4]
+            [--base <ckpt>] [--out <ckpt>] [--merge true]
+  eval      --model tiny --ckpt <ckpt> --suite mmlu|arith|sql|datatotext [--n 64]
+  serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--requests 32] [--max-new 12]
+  table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
+  info      [--artifacts artifacts]
+
+Artifacts come from `make artifacts`; all commands take --artifacts <dir>."
+    );
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let cfg = preset(&model_name)?;
+    let steps = args.get_usize("steps", 200)?;
+    let out = PathBuf::from(args.get("out", "checkpoints"));
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let (store, losses) = pretrain(&rt, &cfg, steps, args.get_f32("lr", 1e-3)?, 20250710)?;
+    std::fs::create_dir_all(&out)?;
+    let path = out.join(format!("base_{model_name}_{steps}.ckpt"));
+    checkpoint::save(&store, &path, None)?;
+    println!(
+        "pretrained {model_name} ({} params) for {steps} steps: loss {:.3} -> {:.3}; saved {path:?}",
+        cfg.n_params(),
+        losses.first().unwrap_or(&f32::NAN),
+        losses.last().unwrap_or(&f32::NAN)
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let cfg = preset(&model_name)?;
+    let bits: u32 = args.get_usize("bits", 4)? as u32;
+    let base = args
+        .opt("base")
+        .context("--base <ckpt> required (from `lota pretrain`)")?;
+    let fp = checkpoint::load(Path::new(base))?;
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let quantizer = args.get("quantizer", "gptq");
+    let q = match quantizer.as_str() {
+        "gptq" => {
+            let hs = calibrate_hessians(&rt, &cfg, &fp, args.get_usize("calib-batches", 8)?, 7)?;
+            quantize_model(&cfg, &fp, bits, Some(&hs))?
+        }
+        "rtn" => quantize_model(&cfg, &fp, bits, None)?,
+        other => bail!("unknown quantizer '{other}'"),
+    };
+    let out = PathBuf::from(args.get(
+        "out",
+        &format!("checkpoints/quant_{model_name}_{quantizer}_w{bits}.ckpt"),
+    ));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    checkpoint::save(&q, &out, Some(bits))?;
+    println!("quantized {model_name} to {bits}-bit via {quantizer}; saved {out:?}");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let cfg = preset(&model_name)?;
+    let exp = ExperimentConfig {
+        model: model_name.clone(),
+        method: Method::parse(&args.get("method", "lota"))?,
+        n_bits: args.get_usize("bits", 4)? as u32,
+        omega_frac: args.get_f32("omega-frac", 0.75)?,
+        sigma_init: args.get_f32("sigma-init", 0.05)?,
+        steps: args.get_usize("steps", 100)?,
+        lr: args.get_f32("lr", 5e-4)?,
+        seed: args.get_usize("seed", 20250710)? as u64,
+        task: args.get("task", "recovery"),
+        artifacts_dir: artifacts_dir(args).to_string_lossy().into_owned(),
+        checkpoint_dir: None,
+    };
+    let rt = Runtime::new(&artifacts_dir(args))?;
+
+    let mut store = match args.opt("base") {
+        Some(path) => checkpoint::load(Path::new(path))?,
+        None => {
+            log::info!("no --base given: pretraining + quantizing a fresh base");
+            let (fp, _) = pretrain(&rt, &cfg, 150, 1e-3, exp.seed)?;
+            let hs = calibrate_hessians(&rt, &cfg, &fp, 4, exp.seed)?;
+            quantize_model(&cfg, &fp, exp.n_bits, Some(&hs))?
+        }
+    };
+    let mut rng = Rng::new(exp.seed ^ 0xADA7);
+    model::init_adapters(&cfg, exp.method, &mut rng, &mut store);
+    let report = finetune(&rt, &cfg, &exp, &mut store, &TrainOptions::default())?;
+    println!(
+        "finetuned {model_name}/{}/{}-bit on {}: loss {:.3} -> {:.3} in {:.1}s ({} steps)",
+        exp.method.as_str(),
+        exp.n_bits,
+        exp.task,
+        report.losses.first().unwrap_or(&f32::NAN),
+        report.losses.last().unwrap_or(&f32::NAN),
+        report.wall_secs,
+        report.steps
+    );
+    if args.get("merge", "true") == "true" {
+        let err = merge_into_store(&cfg, &exp, &mut store)?;
+        println!(
+            "merged adapters (max requant error {err:.2e}{})",
+            if err == 0.0 { " — lossless" } else { "" }
+        );
+    }
+    let out = PathBuf::from(args.get(
+        "out",
+        &format!(
+            "checkpoints/ft_{model_name}_{}_w{}_{}.ckpt",
+            exp.method.as_str(),
+            exp.n_bits,
+            exp.task
+        ),
+    ));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    checkpoint::save(&store, &out, Some(exp.n_bits))?;
+    println!("saved {out:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let cfg = preset(&model_name)?;
+    let store = checkpoint::load(Path::new(
+        args.opt("ckpt").context("--ckpt <path> required")?,
+    ))?;
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let suite = args.get("suite", "mmlu");
+    let n = args.get_usize("n", 64)?;
+    // fp checkpoints (from `lota pretrain`) carry w_* tensors; quantized
+    // ones carry q_* — route to the matching forward artifact.
+    let fwd = if store.contains("w_wq") {
+        format!("fwd_fp_{model_name}")
+    } else {
+        format!("fwd_merged_{model_name}")
+    };
+    let exe = rt.load(&fwd)?;
+    match suite.as_str() {
+        "mmlu" => {
+            let qs = mmlu_like::generate_suite(n / 4, 0xE7A1);
+            let scores = mmlu_eval(&rt, &exe, &store, &cfg, &qs, None)?;
+            let mut t = Table::new(&["subject", "accuracy %"]);
+            for (i, s) in mmlu_like::SUBJECTS.iter().enumerate() {
+                t.row(&[s.to_string(), format!("{:.2}", scores.per_subject[i])]);
+            }
+            t.row(&["average".into(), format!("{:.2}", scores.average)]);
+            t.print();
+        }
+        task => {
+            let gen = tasks::task_by_name(task)?;
+            let test = gen.test_set(n);
+            let em = exact_match_eval(
+                &rt,
+                &exe,
+                &store,
+                &cfg,
+                &test,
+                lota_qaf::coordinator::experiments::max_new_for(task),
+                None,
+            )?;
+            let ta = token_accuracy(&rt, &exe, &store, &cfg, &test, None)?;
+            println!(
+                "{task}: exact match {em:.2}%, token accuracy {ta:.2}% over {} examples",
+                test.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let cfg = preset(&model_name)?;
+    let store = checkpoint::load(Path::new(
+        args.opt("ckpt").context("--ckpt <path> required")?,
+    ))?;
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let path = match args.get("path", "merged").as_str() {
+        "merged" => ServePath::Merged,
+        "lora" => ServePath::LoraAdapter,
+        other => bail!("unknown serve path '{other}'"),
+    };
+    let n = args.get_usize("requests", 32)?;
+    let max_new = args.get_usize("max-new", 12)?;
+    let gen = tasks::task_by_name("arith")?;
+    let mut rng = Rng::new(123);
+    let prompts: Vec<String> = (0..n)
+        .map(|_| gen.sample(&mut rng, tasks::Split::Test).prompt)
+        .collect();
+    let report = serve_batch(&rt, &cfg, &store, path, &prompts, max_new)?;
+    println!(
+        "served {} requests in {:.2}s: {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s",
+        report.requests,
+        report.wall_secs,
+        report.tokens_per_sec,
+        report.requests_per_sec,
+        report.latency.p50,
+        report.latency.p95
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let model_name = args.get("model", "tiny");
+    let steps = args.get_usize("steps", 40)?;
+    let eval_n = args.get_usize("eval-n", 32)?;
+    let pre = args.get_usize("pretrain-steps", 150)?;
+    println!("# Table 1 (simulator scale): model={model_name} steps={steps} eval_n={eval_n}");
+    let ctx = ExperimentContext::build(&artifacts_dir(args), &model_name, pre, 20250710)?;
+    let tasks_list = ["arith", "sql", "datatotext"];
+    let rows = run_table1(&ctx, steps, eval_n, &[4, 3, 2], &tasks_list)?;
+    print_table1(&rows, &tasks_list);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let m = rt.manifest();
+    let mut t = Table::new(&["artifact", "kind", "cfg", "ins", "outs"]);
+    for spec in m.artifacts.values() {
+        t.row(&[
+            spec.name.clone(),
+            spec.kind.clone(),
+            spec.cfg.clone().unwrap_or_default(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    for name in ["tiny", "small", "medium"] {
+        let cfg = preset(name)?;
+        println!(
+            "{name}: {} params, d={} L={} T={} gs={} r={} step-batch={}",
+            cfg.n_params(),
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.seq_len,
+            cfg.group_size,
+            cfg.rank,
+            step_batch(name)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Self-contained binary checkpoint format for [`ParamStore`]s.
+//!
+//! Layout (little-endian):
+//! `magic "LOTA" | version u32 | count u32 |` then per tensor:
+//! `name_len u32 | name bytes | ndim u32 | dims u32... | f32 data`.
+//! A trailing CRC-style xor checksum guards against truncation.
+//!
+//! Quantized integer grids are additionally stored **bit-packed** when the
+//! store carries a `__n_bits__` hint tensor, so checkpoints of quantized
+//! models reflect the deployment footprint (and exercise `quant::pack`).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ParamStore;
+use crate::quant::{pack_ints, packed_len_u32, unpack_ints};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"LOTA";
+const VERSION: u32 = 2;
+
+/// Marker flag for packed integer tensors within the file.
+const FLAG_DENSE: u32 = 0;
+const FLAG_PACKED: u32 = 1;
+
+fn xor_fold(bytes: &[u8]) -> u32 {
+    let mut acc = 0xA5A5_5A5Au32;
+    for (i, b) in bytes.iter().enumerate() {
+        acc ^= (*b as u32) << ((i % 4) * 8);
+        acc = acc.rotate_left(1);
+    }
+    acc
+}
+
+/// Save a store. Tensors whose name ends in `_int` and whose values all
+/// fit `n_bits` are bit-packed on disk.
+pub fn save(store: &ParamStore, path: &Path, n_bits: Option<u32>) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    let mut checksum = 0u32;
+
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(store.len() as u32).to_le_bytes())?;
+
+    for (name, t) in store.iter() {
+        let name_b = name.as_bytes();
+        w.write_all(&(name_b.len() as u32).to_le_bytes())?;
+        w.write_all(name_b)?;
+        checksum ^= xor_fold(name_b);
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for d in t.shape() {
+            w.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        let packable = n_bits.is_some() && name.ends_with("_int");
+        if packable {
+            let bits = n_bits.unwrap();
+            match pack_ints(t.data(), bits) {
+                Ok(words) => {
+                    w.write_all(&FLAG_PACKED.to_le_bytes())?;
+                    w.write_all(&bits.to_le_bytes())?;
+                    for word in &words {
+                        w.write_all(&word.to_le_bytes())?;
+                        checksum ^= *word;
+                    }
+                    continue;
+                }
+                Err(_) => { /* fall through to dense */ }
+            }
+        }
+        w.write_all(&FLAG_DENSE.to_le_bytes())?;
+        for v in t.data() {
+            let b = v.to_le_bytes();
+            w.write_all(&b)?;
+            checksum ^= u32::from_le_bytes(b);
+        }
+    }
+    w.write_all(&checksum.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load a store saved by [`save`].
+pub fn load(path: &Path) -> Result<ParamStore> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a LOTA checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut store = ParamStore::new();
+    let mut checksum = 0u32;
+
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name_b = vec![0u8; name_len];
+        r.read_exact(&mut name_b)?;
+        checksum ^= xor_fold(&name_b);
+        let name = String::from_utf8(name_b)?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 4 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let flag = read_u32(&mut r)?;
+        let data = match flag {
+            FLAG_DENSE => {
+                let mut data = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let w = read_u32(&mut r)?;
+                    checksum ^= w;
+                    data.push(f32::from_le_bytes(w.to_le_bytes()));
+                }
+                data
+            }
+            FLAG_PACKED => {
+                let bits = read_u32(&mut r)?;
+                let nwords = packed_len_u32(n, bits);
+                let mut words = Vec::with_capacity(nwords);
+                for _ in 0..nwords {
+                    let w = read_u32(&mut r)?;
+                    checksum ^= w;
+                    words.push(w);
+                }
+                unpack_ints(&words, n, bits)?
+            }
+            _ => bail!("corrupt checkpoint: unknown flag {flag}"),
+        };
+        store.insert(&name, Tensor::new(&shape, data));
+    }
+
+    let stored = read_u32(&mut r)?;
+    if stored != checksum {
+        bail!("{path:?}: checksum mismatch (truncated or corrupted)");
+    }
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::tensor::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lota_ckpt_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_fp_store() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(1);
+        let store = super::super::init_fp(&cfg, &mut rng);
+        let path = tmp("fp");
+        save(&store, &path, None).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), store.len());
+        for (name, t) in store.iter() {
+            assert_eq!(loaded.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_quant_roundtrip_and_smaller() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(2);
+        let fp = super::super::init_fp(&cfg, &mut rng);
+        let q = super::super::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(crate::quant::rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        let p_dense = tmp("dense");
+        let p_packed = tmp("packed");
+        save(&q, &p_dense, None).unwrap();
+        save(&q, &p_packed, Some(4)).unwrap();
+        let dense_sz = std::fs::metadata(&p_dense).unwrap().len();
+        let packed_sz = std::fs::metadata(&p_packed).unwrap().len();
+        assert!(packed_sz < dense_sz, "{packed_sz} !< {dense_sz}");
+        let loaded = load(&p_packed).unwrap();
+        for (name, t) in q.iter() {
+            assert_eq!(loaded.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(&p_dense).ok();
+        std::fs::remove_file(&p_packed).ok();
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(3);
+        let store = super::super::init_fp(&cfg, &mut rng);
+        let path = tmp("trunc");
+        save(&store, &path, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

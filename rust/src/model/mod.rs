@@ -1,0 +1,348 @@
+//! Model parameter store: named tensors in the exact (sorted-name) layout
+//! the HLO artifacts expect, plus initialization, quantization plumbing,
+//! and a self-contained binary checkpoint format.
+//!
+//! Naming contract (mirrors `python/compile/model.py`):
+//! * shared f32: `embed, head, ln1_b, ln1_w, ln2_b, ln2_w, lnf_b, lnf_w, pos`
+//! * fp weights (pretraining): `w_{slot}` (L, Din, Dout)
+//! * quantized slots: `q_{slot}_int|_s|_z`
+//! * adapters: `ta_{slot}_a|_b` (LoTA), `lo_{slot}_a|_b` (LoRA),
+//!   `qa_{slot}_a|_b` (QA-LoRA)
+//!
+//! Layer-stacked tensors carry the layer as the leading axis. The
+//! flattening order used at the PJRT boundary is **sorted by name**, which
+//! `BTreeMap` gives for free and `aot.py` records in the manifest.
+
+pub mod checkpoint;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adapter::{LoraAdapter, QaLoraAdapter, TernaryAdapter};
+use crate::config::{Method, ModelConfig};
+use crate::quant::QuantizedLinear;
+use crate::tensor::{Rng, Tensor};
+
+pub const SLOTS: [&str; 6] = ["wq", "wk", "wv", "wo", "w_up", "w_down"];
+
+/// Named tensor collection with sorted iteration order.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(name).ok_or_else(|| anyhow!("missing param '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    /// Total f32 element count (diagnostics / Fig. 6 memory accounting).
+    pub fn n_elems(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Values in the order of `names` — the PJRT argument list.
+    pub fn ordered(&self, names: &[String]) -> Result<Vec<&Tensor>> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Initialization
+
+/// Initialize a full-precision model (pretraining start point).
+pub fn init_fp(cfg: &ModelConfig, rng: &mut Rng) -> ParamStore {
+    let mut p = ParamStore::new();
+    let (v, d, t, l) = (cfg.vocab, cfg.d_model, cfg.seq_len, cfg.n_layers);
+    p.insert("embed", Tensor::new(&[v, d], rng.normal_vec(v * d, 0.05)));
+    p.insert("pos", Tensor::new(&[t, d], rng.normal_vec(t * d, 0.02)));
+    p.insert("head", Tensor::new(&[d, v], rng.normal_vec(d * v, 0.05)));
+    p.insert("lnf_w", Tensor::full(&[d], 1.0));
+    p.insert("lnf_b", Tensor::zeros(&[d]));
+    for pre in ["ln1", "ln2"] {
+        p.insert(&format!("{pre}_w"), Tensor::full(&[l, d], 1.0));
+        p.insert(&format!("{pre}_b"), Tensor::zeros(&[l, d]));
+    }
+    for (slot, din, dout) in cfg.slots() {
+        // scaled-down residual-branch init
+        let std = (2.0 / din as f32).sqrt() * 0.5;
+        p.insert(
+            &format!("w_{slot}"),
+            Tensor::new(&[l, din, dout], rng.normal_vec(l * din * dout, std)),
+        );
+    }
+    p
+}
+
+/// Replace fp slot weights with a quantized representation. `quantize` is
+/// called per (layer, slot) with the 2-D weight and must return the grid.
+pub fn quantize_store(
+    cfg: &ModelConfig,
+    fp: &ParamStore,
+    mut quantize: impl FnMut(&str, usize, &Tensor) -> Result<QuantizedLinear>,
+) -> Result<ParamStore> {
+    let l = cfg.n_layers;
+    let mut out = ParamStore::new();
+    // copy shared tensors
+    for name in ["embed", "pos", "head", "lnf_w", "lnf_b", "ln1_w", "ln1_b", "ln2_w", "ln2_b"] {
+        out.insert(name, fp.get(name)?.clone());
+    }
+    for (slot, din, dout) in cfg.slots() {
+        let w = fp.get(&format!("w_{slot}"))?;
+        let g = din / cfg.group_size;
+        let mut w_int = Tensor::zeros(&[l, din, dout]);
+        let mut scales = Tensor::zeros(&[l, g, dout]);
+        let mut zeros = Tensor::zeros(&[l, g, dout]);
+        for li in 0..l {
+            let ql = quantize(slot, li, &w.layer(li))?;
+            if ql.group_size != cfg.group_size || ql.n_groups() != g {
+                bail!("quantizer returned wrong grouping for {slot}");
+            }
+            w_int.set_layer(li, &ql.w_int);
+            scales.set_layer(li, &ql.scales);
+            zeros.set_layer(li, &ql.zeros);
+        }
+        out.insert(&format!("q_{slot}_int"), w_int);
+        out.insert(&format!("q_{slot}_s"), scales);
+        out.insert(&format!("q_{slot}_z"), zeros);
+    }
+    Ok(out)
+}
+
+/// Extract one (layer, slot) [`QuantizedLinear`] view from a store.
+pub fn quant_layer(cfg: &ModelConfig, p: &ParamStore, slot: &str, layer: usize, n_bits: u32) -> Result<QuantizedLinear> {
+    let ql = QuantizedLinear {
+        n_bits,
+        group_size: cfg.group_size,
+        w_int: p.get(&format!("q_{slot}_int"))?.layer(layer),
+        scales: p.get(&format!("q_{slot}_s"))?.layer(layer),
+        zeros: p.get(&format!("q_{slot}_z"))?.layer(layer),
+    };
+    Ok(ql)
+}
+
+/// Write one (layer, slot) grid back into a store (post-merge).
+pub fn set_quant_layer(p: &mut ParamStore, slot: &str, layer: usize, ql: &QuantizedLinear) -> Result<()> {
+    p.get_mut(&format!("q_{slot}_int"))?.set_layer(layer, &ql.w_int);
+    p.get_mut(&format!("q_{slot}_s"))?.set_layer(layer, &ql.scales);
+    p.get_mut(&format!("q_{slot}_z"))?.set_layer(layer, &ql.zeros);
+    Ok(())
+}
+
+/// Initialize the adapter tensors for a method (paper §3.2 init for LoTA,
+/// standard LoRA init otherwise). Adds `ta_/lo_/qa_{slot}_a|_b` entries.
+pub fn init_adapters(cfg: &ModelConfig, method: Method, rng: &mut Rng, p: &mut ParamStore) {
+    let l = cfg.n_layers;
+    let g_of = |din: usize| din / cfg.group_size;
+    for (slot, din, dout) in cfg.slots() {
+        match method {
+            Method::LotaQaf => {
+                let mut a = Tensor::zeros(&[l, din, cfg.rank]);
+                for li in 0..l {
+                    let ta = TernaryAdapter::init(din, dout, cfg.rank, rng);
+                    a.set_layer(li, &ta.a);
+                }
+                p.insert(&format!("ta_{slot}_a"), a);
+                p.insert(&format!("ta_{slot}_b"), Tensor::zeros(&[l, cfg.rank, dout]));
+            }
+            Method::Lora => {
+                let mut a = Tensor::zeros(&[l, din, cfg.rank]);
+                for li in 0..l {
+                    let ad = LoraAdapter::init(din, dout, cfg.rank, rng);
+                    a.set_layer(li, &ad.a);
+                }
+                p.insert(&format!("lo_{slot}_a"), a);
+                p.insert(&format!("lo_{slot}_b"), Tensor::zeros(&[l, cfg.rank, dout]));
+            }
+            Method::QaLora => {
+                let g = g_of(din);
+                let mut a = Tensor::zeros(&[l, g, cfg.rank]);
+                for li in 0..l {
+                    let ad = QaLoraAdapter::init(din, dout, cfg.rank, cfg.group_size, rng);
+                    a.set_layer(li, &ad.a);
+                }
+                p.insert(&format!("qa_{slot}_a"), a);
+                p.insert(&format!("qa_{slot}_b"), Tensor::zeros(&[l, cfg.rank, dout]));
+            }
+            Method::GptqOnly => {}
+        }
+    }
+}
+
+/// Adapter tensor names for a method, sorted (= artifact order).
+pub fn adapter_names(method: Method) -> Vec<String> {
+    let prefix = match method {
+        Method::LotaQaf => "ta",
+        Method::Lora => "lo",
+        Method::QaLora => "qa",
+        Method::GptqOnly => return vec![],
+    };
+    let mut names: Vec<String> = SLOTS
+        .iter()
+        .flat_map(|s| [format!("{prefix}_{s}_a"), format!("{prefix}_{s}_b")])
+        .collect();
+    names.sort();
+    names
+}
+
+/// Frozen (non-adapter) tensor names for the QAF graphs, sorted.
+pub fn frozen_names() -> Vec<String> {
+    let mut names: Vec<String> = vec![
+        "embed", "head", "ln1_b", "ln1_w", "ln2_b", "ln2_w", "lnf_b", "lnf_w", "pos",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    for s in SLOTS {
+        names.push(format!("q_{s}_int"));
+        names.push(format!("q_{s}_s"));
+        names.push(format!("q_{s}_z"));
+    }
+    names.sort();
+    names
+}
+
+/// Full-precision tensor names (pretraining graphs), sorted.
+pub fn fp_names() -> Vec<String> {
+    let mut names: Vec<String> = vec![
+        "embed", "head", "ln1_b", "ln1_w", "ln2_b", "ln2_w", "lnf_b", "lnf_w", "pos",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    for s in SLOTS {
+        names.push(format!("w_{s}"));
+    }
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    #[test]
+    fn init_fp_has_expected_tensors() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(1);
+        let p = init_fp(&cfg, &mut rng);
+        for n in fp_names() {
+            assert!(p.contains(&n), "missing {n}");
+        }
+        assert_eq!(p.get("embed").unwrap().shape(), &[64, 64]);
+        assert_eq!(p.get("w_wq").unwrap().shape(), &[2, 64, 64]);
+        assert_eq!(p.get("w_w_down").unwrap().shape(), &[2, 256, 64]);
+    }
+
+    #[test]
+    fn quantize_store_roundtrip() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(2);
+        let fp = init_fp(&cfg, &mut rng);
+        let q = quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(crate::quant::rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        for n in frozen_names() {
+            assert!(q.contains(&n), "missing {n}");
+        }
+        // dequantized weights approximate the originals
+        let ql = quant_layer(&cfg, &q, "wq", 0, 4).unwrap();
+        let orig = fp.get("w_wq").unwrap().layer(0);
+        assert!(ql.max_error(&orig) < 0.05);
+    }
+
+    #[test]
+    fn adapter_init_shapes_per_method() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(3);
+        let fp = init_fp(&cfg, &mut rng);
+        let mut q = quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(crate::quant::rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        init_adapters(&cfg, Method::LotaQaf, &mut rng, &mut q);
+        assert_eq!(q.get("ta_wq_a").unwrap().shape(), &[2, 64, 8]);
+        assert_eq!(q.get("ta_w_down_b").unwrap().shape(), &[2, 8, 64]);
+        init_adapters(&cfg, Method::QaLora, &mut rng, &mut q);
+        assert_eq!(q.get("qa_wq_a").unwrap().shape(), &[2, 4, 8]); // G=64/16
+        init_adapters(&cfg, Method::Lora, &mut rng, &mut q);
+        assert_eq!(q.get("lo_w_up_a").unwrap().shape(), &[2, 64, 8]);
+    }
+
+    #[test]
+    fn lota_init_is_ternary_b_zero() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(4);
+        let mut p = ParamStore::new();
+        init_adapters(&cfg, Method::LotaQaf, &mut rng, &mut p);
+        let a = p.get("ta_wq_a").unwrap();
+        assert!(a.data().iter().all(|v| [-1.0, 0.0, 1.0].contains(v)));
+        assert!(a.data().iter().any(|v| *v != 0.0));
+        assert!(p.get("ta_wq_b").unwrap().data().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn name_lists_are_sorted() {
+        for list in [fp_names(), frozen_names(), adapter_names(Method::LotaQaf)] {
+            let mut sorted = list.clone();
+            sorted.sort();
+            assert_eq!(list, sorted);
+        }
+        assert_eq!(adapter_names(Method::GptqOnly).len(), 0);
+        assert_eq!(adapter_names(Method::Lora).len(), 12);
+    }
+
+    #[test]
+    fn set_quant_layer_writes_back() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(5);
+        let fp = init_fp(&cfg, &mut rng);
+        let mut q = quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(crate::quant::rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        let mut ql = quant_layer(&cfg, &q, "wk", 1, 4).unwrap();
+        ql.w_int.data_mut()[0] = 7.0;
+        set_quant_layer(&mut q, "wk", 1, &ql).unwrap();
+        assert_eq!(quant_layer(&cfg, &q, "wk", 1, 4).unwrap().w_int.data()[0], 7.0);
+    }
+}

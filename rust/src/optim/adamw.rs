@@ -1,0 +1,124 @@
+//! Host-side AdamW reference (the baselines' optimizer; paper §4.1 uses a
+//! paged AdamW with max grad-norm 0.3). The in-graph implementation lives
+//! in `model.py::adamw_update`; this twin validates it and backs the
+//! host-only unit tests.
+
+use crate::tensor::Tensor;
+
+/// First/second-moment state for one tensor.
+#[derive(Clone, Debug)]
+pub struct AdamWState {
+    pub m: Tensor,
+    pub v: Tensor,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl AdamWState {
+    pub fn new(shape: &[usize]) -> Self {
+        AdamWState {
+            m: Tensor::zeros(shape),
+            v: Tensor::zeros(shape),
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+
+    /// One AdamW step (bias-corrected); `t` is 1-based.
+    pub fn update(&mut self, p: &mut Tensor, g: &Tensor, lr: f32, t: usize) {
+        assert_eq!(p.shape(), g.shape());
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        for i in 0..p.len() {
+            let gi = g.data()[i];
+            let m = b1 * self.m.data()[i] + (1.0 - b1) * gi;
+            let v = b2 * self.v.data()[i] + (1.0 - b2) * gi * gi;
+            self.m.data_mut()[i] = m;
+            self.v.data_mut()[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            let pi = &mut p.data_mut()[i];
+            *pi -= lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * *pi);
+        }
+    }
+}
+
+/// Global-norm gradient clipping (paper: max-norm 0.3 for the baselines).
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let total: f32 = grads
+        .iter()
+        .map(|g| g.data().iter().map(|v| v * v).sum::<f32>())
+        .sum::<f32>()
+        .sqrt();
+    if total > max_norm && total > 0.0 {
+        let s = max_norm / total;
+        for g in grads.iter_mut() {
+            for v in g.data_mut() {
+                *v *= s;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        // minimize f(x) = ||x - c||^2 — AdamW should converge near c
+        let c = Tensor::new(&[4], vec![1.0, -2.0, 0.5, 3.0]);
+        let mut x = Tensor::zeros(&[4]);
+        let mut st = AdamWState::new(&[4]);
+        for t in 1..=500 {
+            let g = x.sub(&c).scale(2.0);
+            st.update(&mut x, &g, 0.05, t);
+        }
+        assert!(x.max_abs_diff(&c) < 0.05, "{:?}", x.data());
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut x = Tensor::new(&[1], vec![10.0]);
+        let mut st = AdamWState::new(&[1]);
+        st.weight_decay = 0.1;
+        let g = Tensor::zeros(&[1]);
+        for t in 1..=10 {
+            st.update(&mut x, &g, 0.1, t);
+        }
+        assert!(x.data()[0] < 10.0);
+    }
+
+    #[test]
+    fn clip_rescales_to_max_norm() {
+        let mut rng = Rng::new(1);
+        let mut gs = vec![
+            Tensor::new(&[8], rng.normal_vec(8, 10.0)),
+            Tensor::new(&[8], rng.normal_vec(8, 10.0)),
+        ];
+        let before = clip_global_norm(&mut gs, 0.3);
+        assert!(before > 0.3);
+        let after: f32 = gs
+            .iter()
+            .map(|g| g.data().iter().map(|v| v * v).sum::<f32>())
+            .sum::<f32>()
+            .sqrt();
+        assert!((after - 0.3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut gs = vec![Tensor::new(&[2], vec![0.01, 0.01])];
+        let orig = gs[0].clone();
+        clip_global_norm(&mut gs, 0.3);
+        assert_eq!(gs[0], orig);
+    }
+}

@@ -1,0 +1,15 @@
+//! Optimizers: t-SignSGD (the paper's contribution, §3.3) and AdamW (the
+//! baselines' optimizer and the pretrainer's).
+//!
+//! The *updates* execute inside the HLO step artifacts; this module owns
+//! the schedules the Rust coordinator feeds them per step (the σ_t
+//! percentile schedule, learning-rate schedules) and host-side reference
+//! implementations used for golden validation and unit tests.
+
+pub mod adamw;
+pub mod schedule;
+pub mod tsignsgd;
+
+pub use adamw::AdamWState;
+pub use schedule::{LrSchedule, SigmaSchedule};
+pub use tsignsgd::{sigma_threshold, tsign_update_host};

@@ -1,0 +1,106 @@
+//! Hyper-parameter schedules fed into the step artifacts each iteration.
+
+/// The paper's dynamic percentile schedule for t-SignSGD (§4.1): the kept
+/// top-fraction starts at `init` (default 5%), decays linearly to `mid`
+/// (0.1%) over the first 80% of training, then stays at `final_` (0.01%)
+/// for the last 20%.
+#[derive(Clone, Debug)]
+pub struct SigmaSchedule {
+    pub init: f32,
+    pub mid: f32,
+    pub final_: f32,
+    /// fraction of training covered by the linear decay
+    pub decay_until: f32,
+}
+
+impl Default for SigmaSchedule {
+    fn default() -> Self {
+        SigmaSchedule { init: 0.05, mid: 0.001, final_: 0.0001, decay_until: 0.8 }
+    }
+}
+
+impl SigmaSchedule {
+    pub fn with_init(init: f32) -> Self {
+        SigmaSchedule { init, ..Default::default() }
+    }
+
+    /// keep-fraction at step `t` of `total`.
+    pub fn keep_frac(&self, t: usize, total: usize) -> f32 {
+        if total == 0 {
+            return self.init;
+        }
+        let progress = t as f32 / total as f32;
+        if progress >= self.decay_until {
+            self.final_
+        } else {
+            let p = progress / self.decay_until;
+            self.init + (self.mid - self.init) * p
+        }
+    }
+}
+
+/// Learning-rate schedule for the AdamW paths (constant or cosine decay —
+/// the paper uses constant rates; cosine is exposed for the extension
+/// benches).
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    Cosine { base: f32, min: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::Cosine { base, min } => {
+                if total == 0 {
+                    return *base;
+                }
+                let p = (t as f32 / total as f32).clamp(0.0, 1.0);
+                min + 0.5 * (base - min) * (1.0 + (std::f32::consts::PI * p).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_schedule_endpoints() {
+        let s = SigmaSchedule::default();
+        assert!((s.keep_frac(0, 100) - 0.05).abs() < 1e-6);
+        // just before the knee: close to mid
+        let near = s.keep_frac(79, 100);
+        assert!(near < 0.003 && near > 0.0005, "{near}");
+        // after the knee: fixed final
+        assert_eq!(s.keep_frac(80, 100), 0.0001);
+        assert_eq!(s.keep_frac(99, 100), 0.0001);
+    }
+
+    #[test]
+    fn sigma_schedule_is_monotone_nonincreasing() {
+        let s = SigmaSchedule::default();
+        let mut prev = f32::INFINITY;
+        for t in 0..200 {
+            let k = s.keep_frac(t, 200);
+            assert!(k <= prev + 1e-9, "t={t}: {k} > {prev}");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn cosine_lr_decays_to_min() {
+        let s = LrSchedule::Cosine { base: 1e-3, min: 1e-5 };
+        assert!((s.at(0, 100) - 1e-3).abs() < 1e-9);
+        assert!((s.at(100, 100) - 1e-5).abs() < 1e-9);
+        assert!(s.at(50, 100) < 1e-3 && s.at(50, 100) > 1e-5);
+    }
+
+    #[test]
+    fn constant_lr_is_constant() {
+        let s = LrSchedule::Constant(5e-4);
+        assert_eq!(s.at(0, 10), s.at(9, 10));
+    }
+}

@@ -1,0 +1,115 @@
+//! Host-side reference of the t-SignSGD update (paper Eq. 6), used for
+//! golden validation against the HLO/Pallas implementation and by the
+//! host-only unit/property tests.
+//!
+//! `A ← clip(A − sign(g)·1[|g| > max(τ, σ_t)], −1, 1)` where σ_t is the
+//! (1 − keep_frac) quantile of |g| — i.e. only the top keep_frac of
+//! gradient magnitudes fire an update.
+
+use crate::tensor::Tensor;
+
+pub const TAU: f32 = 1e-9;
+
+/// The dynamic percentile threshold σ_t over |g| (linear-interpolated
+/// quantile, matching `jnp.quantile`'s default midpoint behaviour).
+pub fn sigma_threshold(grad: &Tensor, keep_frac: f32) -> f32 {
+    let mut mags: Vec<f32> = grad.data().iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = (1.0 - keep_frac).clamp(0.0, 1.0);
+    let n = mags.len();
+    if n == 0 {
+        return TAU;
+    }
+    let pos = q as f64 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    let val = mags[lo] + (mags[hi] - mags[lo]) * frac;
+    val.max(TAU)
+}
+
+/// One t-SignSGD step on a ternary tensor. Returns the updated tensor and
+/// the number of entries that moved.
+pub fn tsign_update_host(a: &Tensor, grad: &Tensor, keep_frac: f32) -> (Tensor, usize) {
+    assert_eq!(a.shape(), grad.shape());
+    let thr = sigma_threshold(grad, keep_frac);
+    let mut out = a.clone();
+    let mut moved = 0;
+    for (v, g) in out.data_mut().iter_mut().zip(grad.data()) {
+        if g.abs() > thr {
+            let next = (*v - g.signum()).clamp(-1.0, 1.0);
+            if next != *v {
+                moved += 1;
+            }
+            *v = next;
+        }
+    }
+    (out, moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn ternary_tensor(rng: &mut Rng, n: usize) -> Tensor {
+        Tensor::new(&[n], (0..n).map(|_| rng.below(3) as f32 - 1.0).collect())
+    }
+
+    #[test]
+    fn threshold_selects_top_fraction() {
+        let g = Tensor::new(&[100], (1..=100).map(|i| i as f32).collect());
+        let thr = sigma_threshold(&g, 0.05);
+        // top 5% of 1..=100 are {96..100}; the q=0.95 midpoint sits near 95–96
+        let kept = g.data().iter().filter(|v| v.abs() > thr).count();
+        assert!(kept >= 4 && kept <= 6, "kept {kept}, thr {thr}");
+    }
+
+    #[test]
+    fn update_is_sign_descent() {
+        let a = Tensor::new(&[4], vec![0.0, 1.0, -1.0, 0.0]);
+        let g = Tensor::new(&[4], vec![3.0, -4.0, 5.0, -0.1]);
+        // keep 75%: threshold lands between |−0.1| and |3|, so the last
+        // entry is below σ and the first three fire.
+        let (out, moved) = tsign_update_host(&a, &g, 0.75);
+        // sign descent with clipping: 0−1=−1; 1+1 clips to 1; −1−1 clips
+        // to −1; below-threshold entry untouched.
+        assert_eq!(out.data(), &[-1.0, 1.0, -1.0, 0.0]);
+        assert_eq!(moved, 1); // only the first entry actually changed value
+    }
+
+    #[test]
+    fn clip_keeps_ternary_domain() {
+        let mut rng = Rng::new(10);
+        for _ in 0..20 {
+            let n = rng.range(16, 256);
+            let a = ternary_tensor(&mut rng, n);
+            let g = Tensor::new(&[n], rng.normal_vec(n, 1.0));
+            let (out, _) = tsign_update_host(&a, &g, 0.2);
+            assert!(out.data().iter().all(|v| [-1.0, 0.0, 1.0].contains(v)));
+        }
+    }
+
+    #[test]
+    fn selectivity_bounds_moved_entries() {
+        let mut rng = Rng::new(11);
+        let n = 10_000;
+        let a = ternary_tensor(&mut rng, n);
+        let g = Tensor::new(&[n], rng.normal_vec(n, 1.0));
+        let keep = 0.05;
+        let (_, moved) = tsign_update_host(&a, &g, keep);
+        // moved <= selected (clips at ±1 can suppress movement)
+        assert!(moved as f32 <= keep * n as f32 * 1.2 + 2.0, "moved {moved}");
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn tiny_gradients_never_fire() {
+        let a = Tensor::new(&[4], vec![0.0; 4]);
+        let g = Tensor::new(&[4], vec![1e-12, -1e-12, 1e-13, 0.0]);
+        // even keeping 100%, the τ floor suppresses sub-1e-9 gradients
+        let (out, moved) = tsign_update_host(&a, &g, 1.0);
+        assert_eq!(moved, 0);
+        assert_eq!(out.data(), a.data());
+    }
+}

@@ -1,0 +1,178 @@
+//! The asymmetric affine grid (paper Eq. 2):
+//! `W_q = s · W_int + z`, `s = (max−min)/(2^N−1)`, `z = min`, per
+//! (input-group, output-column), groups along the input dimension.
+
+use crate::tensor::Tensor;
+
+use anyhow::{bail, Result};
+
+/// One quantized linear layer: f32-coded integer grid + per-group affine
+/// parameters. This is the exact representation the HLO graphs consume
+/// (`q_{slot}_int` / `_s` / `_z` inputs) and what the ternary merge edits.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub n_bits: u32,
+    pub group_size: usize,
+    /// (Din, Dout) integer grid stored as f32 values in `[0, 2^N−1]`
+    pub w_int: Tensor,
+    /// (G, Dout) scale factors
+    pub scales: Tensor,
+    /// (G, Dout) zero factors
+    pub zeros: Tensor,
+}
+
+impl QuantizedLinear {
+    pub fn din(&self) -> usize {
+        self.w_int.rows()
+    }
+
+    pub fn dout(&self) -> usize {
+        self.w_int.cols()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.scales.rows()
+    }
+
+    pub fn grid_max(&self) -> f32 {
+        ((1u32 << self.n_bits) - 1) as f32
+    }
+
+    /// Validate structural invariants (used by proptest-style checks and
+    /// after every merge).
+    pub fn validate(&self) -> Result<()> {
+        let (din, dout) = (self.din(), self.dout());
+        if din % self.group_size != 0 {
+            bail!("group size {} does not divide Din {din}", self.group_size);
+        }
+        let g = din / self.group_size;
+        if self.scales.shape() != [g, dout] || self.zeros.shape() != [g, dout] {
+            bail!(
+                "scale/zero shape mismatch: {:?}/{:?}, want [{g}, {dout}]",
+                self.scales.shape(),
+                self.zeros.shape()
+            );
+        }
+        let max = self.grid_max();
+        for (i, &v) in self.w_int.data().iter().enumerate() {
+            if v < 0.0 || v > max || v.fract() != 0.0 {
+                bail!("w_int[{i}] = {v} outside {}-bit grid", self.n_bits);
+            }
+        }
+        if self.scales.data().iter().any(|s| *s <= 0.0) {
+            bail!("non-positive scale");
+        }
+        Ok(())
+    }
+
+    /// Dequantize to a dense f32 matrix (host-side eval / error metrics).
+    pub fn dequantize(&self) -> Tensor {
+        dequant(&self.w_int, &self.scales, &self.zeros, self.group_size)
+    }
+
+    /// Quantization error vs. a reference weight matrix (max abs).
+    pub fn max_error(&self, w: &Tensor) -> f32 {
+        self.dequantize().max_abs_diff(w)
+    }
+
+    /// Frobenius reconstruction error vs. a reference weight matrix.
+    pub fn frob_error(&self, w: &Tensor) -> f32 {
+        self.dequantize().sub(w).frob_norm()
+    }
+}
+
+/// `s · W_int + z` with per-group broadcast.
+pub fn dequant(w_int: &Tensor, scales: &Tensor, zeros: &Tensor, group_size: usize) -> Tensor {
+    let (din, dout) = (w_int.rows(), w_int.cols());
+    let mut out = vec![0.0f32; din * dout];
+    for i in 0..din {
+        let g = i / group_size;
+        let srow = scales.row(g);
+        let zrow = zeros.row(g);
+        let wrow = w_int.row(i);
+        let orow = &mut out[i * dout..(i + 1) * dout];
+        for j in 0..dout {
+            orow[j] = srow[j] * wrow[j] + zrow[j];
+        }
+    }
+    Tensor::new(&[din, dout], out)
+}
+
+/// Round a single weight onto an existing (s, z) grid cell.
+#[inline]
+pub fn quantize_to_grid(w: f32, s: f32, z: f32, grid_max: f32) -> f32 {
+    (((w - z) / s).round()).clamp(0.0, grid_max)
+}
+
+/// Compute (s, z) from min/max of a weight slice (paper Eq. 2).
+#[inline]
+pub fn grid_from_minmax(mn: f32, mx: f32, n_bits: u32) -> (f32, f32) {
+    let levels = ((1u32 << n_bits) - 1) as f32;
+    let s = ((mx - mn) / levels).max(1e-8);
+    (s, mn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn sample_ql(seed: u64, n_bits: u32) -> (QuantizedLinear, Tensor) {
+        let mut rng = Rng::new(seed);
+        let (din, dout, gs) = (32, 16, 8);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = crate::quant::rtn_quantize(&w, gs, n_bits);
+        (ql, w)
+    }
+
+    #[test]
+    fn grid_from_minmax_matches_eq2() {
+        let (s, z) = grid_from_minmax(-1.0, 2.0, 4);
+        assert!((s - 3.0 / 15.0).abs() < 1e-7);
+        assert_eq!(z, -1.0);
+    }
+
+    #[test]
+    fn quantize_to_grid_clamps() {
+        assert_eq!(quantize_to_grid(100.0, 0.1, 0.0, 15.0), 15.0);
+        assert_eq!(quantize_to_grid(-100.0, 0.1, 0.0, 15.0), 0.0);
+        assert_eq!(quantize_to_grid(0.52, 0.1, 0.0, 15.0), 5.0);
+    }
+
+    #[test]
+    fn validate_accepts_rtn_output() {
+        for bits in [2, 3, 4] {
+            let (ql, _) = sample_ql(1, bits);
+            ql.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_grid() {
+        let (mut ql, _) = sample_ql(2, 4);
+        ql.w_int.data_mut()[0] = 16.0; // > 2^4 - 1
+        assert!(ql.validate().is_err());
+        let (mut ql, _) = sample_ql(2, 4);
+        ql.w_int.data_mut()[0] = 1.5; // non-integral
+        assert!(ql.validate().is_err());
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_half_scale() {
+        for bits in [2, 3, 4] {
+            let (ql, w) = sample_ql(3, bits);
+            let max_s = ql.scales.data().iter().cloned().fold(0.0f32, f32::max);
+            assert!(
+                ql.max_error(&w) <= max_s / 2.0 + 1e-6,
+                "{bits}-bit error too large"
+            );
+        }
+    }
+
+    #[test]
+    fn fewer_bits_more_error() {
+        let (q4, w) = sample_ql(4, 4);
+        let (q2, _) = sample_ql(4, 2);
+        assert!(q2.frob_error(&w) > q4.frob_error(&w));
+    }
+}

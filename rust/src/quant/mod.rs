@@ -1,0 +1,14 @@
+//! Group-wise asymmetric quantization substrate: the affine grid (paper
+//! Eq. 2), sub-byte bit-packing, the RTN baseline quantizer, and a full
+//! GPTQ implementation (Frantar et al., 2022) driven by calibration
+//! activations captured from the fp model (`acts_fp_*` artifacts).
+
+pub mod affine;
+pub mod gptq;
+pub mod pack;
+pub mod rtn;
+
+pub use affine::{dequant, QuantizedLinear};
+pub use gptq::{accumulate_hessian, gptq_quantize, output_mse, GptqConfig};
+pub use pack::{pack_ints, unpack_ints, packed_len_u32};
+pub use rtn::rtn_quantize;

@@ -1,0 +1,135 @@
+//! Sub-byte bit-packing of the integer grid.
+//!
+//! The PJRT CPU path computes on f32-coded integers, but the *deployment*
+//! representation — what the paper's memory/footprint numbers are about —
+//! packs N-bit codes densely into u32 words (GPTQModel-style). This module
+//! provides the pack/unpack pair used by checkpointing and by the serving
+//! memory accounting, with 2/3/4-bit layouts.
+//!
+//! Layout: values are packed little-endian within each u32 word, column
+//! after column of the (Din, Dout) grid in row-major order; 3-bit codes
+//! straddle word boundaries (a code's low bits live in word k, the
+//! remainder in word k+1), which keeps the stream dense at exactly
+//! `ceil(n·bits / 32)` words.
+
+use anyhow::{bail, Result};
+
+/// Number of u32 words needed for `n` codes of `bits` width.
+pub fn packed_len_u32(n: usize, bits: u32) -> usize {
+    ((n * bits as usize) + 31) / 32
+}
+
+/// Pack f32-coded integers (each in `[0, 2^bits)`) into a dense u32 stream.
+pub fn pack_ints(vals: &[f32], bits: u32) -> Result<Vec<u32>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits must be 1..=8");
+    }
+    let mask = (1u64 << bits) - 1;
+    let mut out = vec![0u32; packed_len_u32(vals.len(), bits)];
+    let mut bitpos = 0usize;
+    for (i, &v) in vals.iter().enumerate() {
+        if v < 0.0 || v.fract() != 0.0 || v as u64 > mask {
+            bail!("value {v} at index {i} not a {bits}-bit code");
+        }
+        let code = (v as u64) & mask;
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        out[word] |= (code << off) as u32;
+        if off + bits as usize > 32 {
+            out[word + 1] |= (code >> (32 - off)) as u32;
+        }
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_ints`].
+pub fn unpack_ints(words: &[u32], n: usize, bits: u32) -> Result<Vec<f32>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits must be 1..=8");
+    }
+    if words.len() < packed_len_u32(n, bits) {
+        bail!("packed stream too short: {} words for {n} codes", words.len());
+    }
+    let mask = (1u64 << bits) - 1;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        let mut code = (words[word] as u64) >> off;
+        if off + bits as usize > 32 {
+            code |= (words[word + 1] as u64) << (32 - off);
+        }
+        out.push((code & mask) as f32);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Bytes needed to store a packed (Din × Dout) grid plus its per-group f32
+/// scale/zero tables — the deployment footprint used by the efficiency
+/// benches (Fig. 4) and Fig. 6 memory rows.
+pub fn deployed_bytes(din: usize, dout: usize, group_size: usize, bits: u32) -> usize {
+    let grid = packed_len_u32(din * dout, bits) * 4;
+    let groups = din / group_size;
+    let params = groups * dout * 4 * 2; // scales + zeros
+    grid + params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Rng::new(99);
+        for bits in [2u32, 3, 4] {
+            for n in [1usize, 7, 32, 33, 100, 1024] {
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.below(1 << bits) as f32).collect();
+                let packed = pack_ints(&vals, bits).unwrap();
+                assert_eq!(packed.len(), packed_len_u32(n, bits));
+                let got = unpack_ints(&packed, n, bits).unwrap();
+                assert_eq!(got, vals, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_bit_straddles_words() {
+        // 11 × 3 bits = 33 bits -> exactly 2 words, last code straddles
+        let vals: Vec<f32> = (0..11).map(|i| ((i * 3) % 8) as f32).collect();
+        let packed = pack_ints(&vals, 3).unwrap();
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_ints(&packed, 11, 3).unwrap(), vals);
+    }
+
+    #[test]
+    fn density_is_exact() {
+        assert_eq!(packed_len_u32(64, 4), 8); // 64*4/32
+        assert_eq!(packed_len_u32(64, 3), 6); // 192/32
+        assert_eq!(packed_len_u32(64, 2), 4);
+        assert_eq!(packed_len_u32(3, 3), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(pack_ints(&[16.0], 4).is_err());
+        assert!(pack_ints(&[-1.0], 4).is_err());
+        assert!(pack_ints(&[1.5], 4).is_err());
+        assert!(unpack_ints(&[0u32], 100, 4).is_err());
+    }
+
+    #[test]
+    fn deployed_bytes_ordering() {
+        // fewer bits -> smaller deployment, always
+        let b4 = deployed_bytes(1024, 1024, 64, 4);
+        let b3 = deployed_bytes(1024, 1024, 64, 3);
+        let b2 = deployed_bytes(1024, 1024, 64, 2);
+        assert!(b2 < b3 && b3 < b4);
+        // and all far below f32 (4 bytes/weight)
+        assert!(b4 < 1024 * 1024 * 4 / 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! Round-to-nearest (RTN) group-wise asymmetric quantization — the paper's
+//! Eq. 2 applied directly, used as (a) the ablation baseline for GPTQ and
+//! (b) the grid used when re-quantizing a merged LoRA update (the lossy
+//! merge the paper criticises). Matches `golden.ref_rtn_quantize` exactly.
+
+use crate::quant::affine::{grid_from_minmax, quantize_to_grid, QuantizedLinear};
+use crate::tensor::Tensor;
+
+/// Quantize `w` (Din, Dout) onto a fresh per-(group, column) grid.
+pub fn rtn_quantize(w: &Tensor, group_size: usize, n_bits: u32) -> QuantizedLinear {
+    let (din, dout) = (w.rows(), w.cols());
+    assert_eq!(din % group_size, 0, "group size must divide Din");
+    let g = din / group_size;
+    let grid_max = ((1u32 << n_bits) - 1) as f32;
+
+    let mut w_int = vec![0.0f32; din * dout];
+    let mut scales = vec![0.0f32; g * dout];
+    let mut zeros = vec![0.0f32; g * dout];
+
+    for gi in 0..g {
+        let r0 = gi * group_size;
+        for j in 0..dout {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for i in r0..r0 + group_size {
+                let v = w.at2(i, j);
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let (s, z) = grid_from_minmax(mn, mx, n_bits);
+            scales[gi * dout + j] = s;
+            zeros[gi * dout + j] = z;
+            for i in r0..r0 + group_size {
+                w_int[i * dout + j] = quantize_to_grid(w.at2(i, j), s, z, grid_max);
+            }
+        }
+    }
+
+    QuantizedLinear {
+        n_bits,
+        group_size,
+        w_int: Tensor::new(&[din, dout], w_int),
+        scales: Tensor::new(&[g, dout], scales),
+        zeros: Tensor::new(&[g, dout], zeros),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn exact_representable_weights_roundtrip() {
+        // weights already on a 4-bit grid quantize losslessly — provided
+        // each (group, column) actually spans the grid extremes, so pin
+        // codes 0 and 15 into every group's first two rows.
+        let mut rng = Rng::new(1);
+        let (din, dout, gs) = (16, 8, 8);
+        let mut grid = vec![0.0f32; din * dout];
+        for gi in 0..din / gs {
+            for j in 0..dout {
+                for r in 0..gs {
+                    let code = match r {
+                        0 => 0,
+                        1 => 15,
+                        _ => rng.below(16),
+                    };
+                    grid[(gi * gs + r) * dout + j] = code as f32 * 0.1 - 0.5;
+                }
+            }
+        }
+        let w = Tensor::new(&[din, dout], grid);
+        let ql = rtn_quantize(&w, gs, 4);
+        assert!(ql.max_error(&w) < 1e-6, "err {}", ql.max_error(&w));
+    }
+
+    #[test]
+    fn constant_group_gets_degenerate_grid() {
+        let w = Tensor::full(&[8, 4], 0.3);
+        let ql = rtn_quantize(&w, 8, 4);
+        ql.validate().unwrap();
+        assert!(ql.max_error(&w) < 1e-6); // z = 0.3, all codes 0
+    }
+
+    #[test]
+    fn error_decreases_with_bits_property() {
+        // hand-rolled property sweep over random matrices
+        let mut rng = Rng::new(7);
+        for case in 0..20 {
+            let gs = [8usize, 16][case % 2];
+            let din = gs * rng.range(1, 5);
+            let dout = 8 * rng.range(1, 5);
+            let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.2));
+            let e4 = rtn_quantize(&w, gs, 4).frob_error(&w);
+            let e3 = rtn_quantize(&w, gs, 3).frob_error(&w);
+            let e2 = rtn_quantize(&w, gs, 2).frob_error(&w);
+            assert!(e4 <= e3 + 1e-6 && e3 <= e2 + 1e-6, "case {case}: {e4} {e3} {e2}");
+        }
+    }
+
+    #[test]
+    fn smaller_groups_reduce_error() {
+        let mut rng = Rng::new(8);
+        let w = Tensor::new(&[64, 32], rng.normal_vec(64 * 32, 0.2));
+        let e_small = rtn_quantize(&w, 8, 3).frob_error(&w);
+        let e_big = rtn_quantize(&w, 64, 3).frob_error(&w);
+        assert!(e_small < e_big);
+    }
+}

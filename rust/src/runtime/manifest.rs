@@ -1,0 +1,169 @@
+//! Artifact manifest: the data contract written by `python/compile/aot.py`.
+//!
+//! Every artifact entry records the exact ordered input and output names
+//! and shapes; the Rust marshaller follows the manifest rather than any
+//! hand-maintained convention, and the loader cross-checks the Rust-side
+//! preset shapes at startup.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// path of the HLO text file, relative to the artifacts dir
+    pub file: String,
+    pub kind: String,
+    pub cfg: Option<String>,
+    pub method: Option<String>,
+    pub n_bits: Option<u32>,
+    pub batch: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output '{name}'", self.name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v.get("shape")?.as_usize_vec()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for entry in root.get("artifacts")?.as_arr()? {
+            let spec = ArtifactSpec {
+                name: entry.get("name")?.as_str()?.to_string(),
+                file: entry.get("file")?.as_str()?.to_string(),
+                kind: entry
+                    .opt("kind")
+                    .map(|k| k.as_str().unwrap_or("").to_string())
+                    .unwrap_or_default(),
+                cfg: entry.opt("cfg").and_then(|v| v.as_str().ok().map(String::from)),
+                method: entry.opt("method").and_then(|v| v.as_str().ok().map(String::from)),
+                n_bits: entry.opt("n_bits").and_then(|v| v.as_usize().ok()).map(|v| v as u32),
+                batch: entry.opt("batch").and_then(|v| v.as_usize().ok()),
+                inputs: entry
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+                outputs: entry
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} available) — re-run `make artifacts`?",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// All artifacts of a given kind (e.g. every "fwd" for a config).
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts.values().filter(move |a| a.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+              {"name": "fwd_x", "file": "fwd_x.hlo.txt", "kind": "fwd",
+               "cfg": "tiny", "method": "merged", "batch": 8,
+               "inputs": [{"name": "a", "shape": [2, 3]}],
+               "outputs": [{"name": "y", "shape": [2, 4]}]}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join(format!("lota_manifest_{}", std::process::id()));
+        write_tmp_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("fwd_x").unwrap();
+        assert_eq!(spec.inputs[0].shape, vec![2, 3]);
+        assert_eq!(spec.inputs[0].n_elems(), 6);
+        assert_eq!(spec.batch, Some(8));
+        assert_eq!(spec.input_index("a").unwrap(), 0);
+        assert!(spec.input_index("zz").is_err());
+        assert_eq!(m.of_kind("fwd").count(), 1);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

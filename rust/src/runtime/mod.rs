@@ -1,0 +1,204 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts and executes
+//! them on the CPU client. This is the only place the `xla` crate is
+//! touched; everything above it deals in [`Tensor`]s.
+//!
+//! Pattern follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`, with HLO
+//! **text** as the interchange format (serialized protos from jax ≥ 0.5
+//! carry 64-bit ids that xla_extension 0.5.1 rejects).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT C API guarantees client/executable thread-safety
+// (PJRT_Client and PJRT_LoadedExecutable may be used from multiple threads;
+// the CPU plugin serializes internally). The `xla` crate just doesn't mark
+// its wrappers. All mutation on the Rust side sits behind Mutexes.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Runtime statistics (exposed by `lota stats` and the §Perf benches).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compilations: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// PJRT client + executable cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+// SAFETY: see `Executable` above — PJRT clients are thread-safe by API
+// contract; Rust-side caches/stats are Mutex-guarded.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.compilations += 1;
+            s.compile_secs += dt;
+        }
+        log::debug!("compiled {name} in {dt:.2}s");
+        let e = std::sync::Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Execute with inputs in manifest order. Shapes are checked against
+    /// the manifest before anything touches PJRT.
+    pub fn execute(&self, exe: &Executable, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = &exe.spec;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: {} inputs supplied, manifest wants {}",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (t, io) in inputs.iter().zip(&spec.inputs) {
+            if t.len() != io.n_elems() {
+                bail!(
+                    "artifact {}: input '{}' has {} elems, manifest wants {:?}",
+                    spec.name,
+                    io.name,
+                    t.len(),
+                    io.shape
+                );
+            }
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, io)| {
+                let lit = xla::Literal::vec1(t.data());
+                if io.shape.len() <= 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = io.shape.iter().map(|d| *d as i64).collect();
+                    lit.reshape(&dims)
+                        .with_context(|| format!("reshaping input '{}'", io.name))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", spec.name))?[0][0]
+            .to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            s.execute_secs += dt;
+        }
+
+        // aot.py lowers with return_tuple=True: unpack N outputs.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs returned, manifest wants {}",
+                spec.name,
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .with_context(|| format!("reading output '{}'", io.name))?;
+                if v.len() != io.n_elems() {
+                    bail!(
+                        "artifact {}: output '{}' has {} elems, manifest wants {:?}",
+                        spec.name,
+                        io.name,
+                        v.len(),
+                        io.shape
+                    );
+                }
+                Ok(Tensor::new(&io.shape, v))
+            })
+            .collect()
+    }
+
+    /// Convenience: load-and-run by name.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        self.execute(&exe, inputs)
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: per-request latency percentiles and aggregate token
+//! throughput — the numbers behind the paper's Fig. 4 efficiency panel
+//! (tokens/s by batch size, speedup of the merged path over LoRA's).
+
+use super::Response;
+
+/// Latency distribution summary.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_sorted(sorted: &[f64]) -> LatencyStats {
+        if sorted.is_empty() {
+            return LatencyStats::default();
+        }
+        let n = sorted.len();
+        let pct = |q: f64| sorted[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        LatencyStats {
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Aggregate serving report.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputReport {
+    pub requests: usize,
+    pub tokens: usize,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub requests_per_sec: f64,
+    pub latency: LatencyStats,
+}
+
+impl ThroughputReport {
+    pub fn from_responses(responses: &[Response], tokens: usize, wall: f64) -> ThroughputReport {
+        let mut lat: Vec<f64> = responses.iter().map(|r| r.latency_secs).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ThroughputReport {
+            requests: responses.len(),
+            tokens,
+            wall_secs: wall,
+            tokens_per_sec: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
+            requests_per_sec: if wall > 0.0 { responses.len() as f64 / wall } else { 0.0 },
+            latency: LatencyStats::from_sorted(&lat),
+        }
+    }
+
+    /// Speedup of `self` over `other` in token throughput.
+    pub fn speedup_over(&self, other: &ThroughputReport) -> f64 {
+        if other.tokens_per_sec > 0.0 {
+            self.tokens_per_sec / other.tokens_per_sec
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn resp(id: u64, lat: f64, toks: usize) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            latency_secs: lat,
+            tokens_generated: toks,
+        }
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_sorted(&sorted);
+        assert_eq!(s.p50, 51.0); // (0.5·99).round() = 50 → value 51
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let responses: Vec<Response> =
+            (0..10).map(|i| resp(i, 0.1 * (i + 1) as f64, 5)).collect();
+        let r = ThroughputReport::from_responses(&responses, 50, 2.0);
+        assert_eq!(r.requests, 10);
+        assert_eq!(r.tokens_per_sec, 25.0);
+        assert_eq!(r.requests_per_sec, 5.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = ThroughputReport { tokens_per_sec: 20.0, ..Default::default() };
+        let slow = ThroughputReport { tokens_per_sec: 10.0, ..Default::default() };
+        assert_eq!(fast.speedup_over(&slow), 2.0);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = ThroughputReport::from_responses(&[], 0, 0.0);
+        assert_eq!(r.tokens_per_sec, 0.0);
+        let _ = Instant::now(); // keep the import honest
+    }
+}

@@ -1,0 +1,204 @@
+//! Batched inference serving — the efficiency half of the paper's claims
+//! (§4.3, Fig. 4): after the lossless merge, LoTA serves with *only* the
+//! low-bit weights, while the LoRA path must run the quantized base **plus**
+//! the f32 adapter matmuls on every token. This module provides:
+//!
+//! * a [`DynamicBatcher`] that queues requests and routes them to the
+//!   smallest compiled batch bucket that fits (fixed-shape executables, the
+//!   standard AOT-serving pattern);
+//! * a [`Server`] worker loop that drains the queue, runs greedy decode
+//!   through the chosen forward artifact, and records per-request latency
+//!   and aggregate throughput;
+//! * [`ThroughputReport`] aggregation used by `examples/serve_merged.rs`
+//!   and the Fig. 4 efficiency bench.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BucketPolicy, DynamicBatcher, Request};
+pub use metrics::{LatencyStats, ThroughputReport};
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Method, ModelConfig};
+use crate::coordinator;
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+
+/// Which serving path a server instance runs (the Fig. 4 comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePath {
+    /// merged low-bit weights only (LoTA / QA-LoRA after merge)
+    Merged,
+    /// quantized base + fp adapter matmuls every forward (LoRA)
+    LoraAdapter,
+}
+
+impl ServePath {
+    pub fn artifact_prefix(&self) -> &'static str {
+        match self {
+            ServePath::Merged => "fwd_merged",
+            ServePath::LoraAdapter => "fwd_lora",
+        }
+    }
+
+    pub fn for_method(m: Method) -> ServePath {
+        match m {
+            Method::Lora => ServePath::LoraAdapter,
+            _ => ServePath::Merged,
+        }
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub latency_secs: f64,
+    pub tokens_generated: usize,
+}
+
+/// Synchronous batched server: drains a request queue bucket-by-bucket.
+pub struct Server<'a> {
+    rt: &'a Runtime,
+    cfg: ModelConfig,
+    store: &'a ParamStore,
+    path: ServePath,
+    batcher: DynamicBatcher,
+    /// compiled executables per bucket size
+    exes: BTreeMap<usize, Arc<crate::runtime::Executable>>,
+    pub max_new: usize,
+}
+
+impl<'a> Server<'a> {
+    /// Discover the available buckets for this (config, path) from the
+    /// manifest and compile them.
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: &ModelConfig,
+        store: &'a ParamStore,
+        path: ServePath,
+        max_new: usize,
+    ) -> Result<Server<'a>> {
+        let prefix = path.artifact_prefix();
+        let mut exes = BTreeMap::new();
+        for spec in rt.manifest().of_kind("fwd") {
+            if spec.cfg.as_deref() == Some(cfg.name.as_str())
+                && spec.name.starts_with(prefix)
+                && spec
+                    .method
+                    .as_deref()
+                    .map(|m| prefix.ends_with(m))
+                    .unwrap_or(false)
+            {
+                if let Some(b) = spec.batch {
+                    exes.insert(b, rt.load(&spec.name)?);
+                }
+            }
+        }
+        if exes.is_empty() {
+            bail!("no {prefix} artifacts for config {}", cfg.name);
+        }
+        let buckets: Vec<usize> = exes.keys().copied().collect();
+        log::info!("server[{}/{prefix}] buckets {:?}", cfg.name, buckets);
+        Ok(Server {
+            rt,
+            cfg: cfg.clone(),
+            store,
+            path,
+            batcher: DynamicBatcher::new(BucketPolicy::new(buckets)?),
+            exes,
+            max_new,
+        })
+    }
+
+    pub fn path(&self) -> ServePath {
+        self.path
+    }
+
+    pub fn enqueue(&mut self, prompt: String) -> u64 {
+        self.batcher.push(prompt)
+    }
+
+    /// Drain everything queued, returning responses (in completion order)
+    /// plus the aggregate report.
+    pub fn drain(&mut self) -> Result<(Vec<Response>, ThroughputReport)> {
+        let t0 = Instant::now();
+        let mut responses = Vec::new();
+        let mut total_tokens = 0usize;
+        while let Some((bucket, reqs)) = self.batcher.next_batch() {
+            let exe = self
+                .exes
+                .get(&bucket)
+                .ok_or_else(|| anyhow::anyhow!("no executable for bucket {bucket}"))?
+                .clone();
+            let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
+            let texts = coordinator::greedy_decode(
+                self.rt,
+                &exe,
+                self.store,
+                &self.cfg,
+                &prompts,
+                self.max_new,
+                None,
+            )?;
+            let now = Instant::now();
+            for (req, text) in reqs.into_iter().zip(texts) {
+                // count generated tokens without re-encoding: decodes can
+                // contain ids outside the writable alphabet (untrained or
+                // heavily-quantized models emit unused vocab slots)
+                let toks = text.chars().count();
+                total_tokens += toks;
+                responses.push(Response {
+                    id: req.id,
+                    latency_secs: now.duration_since(req.arrival).as_secs_f64(),
+                    tokens_generated: toks,
+                    text,
+                });
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let report = ThroughputReport::from_responses(&responses, total_tokens, wall);
+        Ok((responses, report))
+    }
+}
+
+/// Fire-and-drain convenience used by benches: serve `prompts` and report.
+pub fn serve_batch(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    path: ServePath,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<ThroughputReport> {
+    let mut server = Server::new(rt, cfg, store, path, max_new)?;
+    for p in prompts {
+        server.enqueue(p.clone());
+    }
+    let (_, report) = server.drain()?;
+    Ok(report)
+}
+
+/// Async wrapper: run the server on a worker thread, feeding it through a
+/// channel (demonstrates the decoupled producer/consumer deployment shape).
+pub fn serve_channel(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    path: ServePath,
+    rx: mpsc::Receiver<String>,
+    max_new: usize,
+) -> Result<(Vec<Response>, ThroughputReport)> {
+    let mut server = Server::new(rt, cfg, store, path, max_new)?;
+    while let Ok(prompt) = rx.recv() {
+        server.enqueue(prompt);
+    }
+    server.drain()
+}

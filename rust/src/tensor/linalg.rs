@@ -1,0 +1,214 @@
+//! Host-side linear algebra: blocked matmul and the Cholesky machinery GPTQ
+//! needs for its damped inverse-Hessian (Frantar et al., 2022, §3).
+
+use super::Tensor;
+
+/// `C = A @ B` with a k-blocked inner loop (cache-friendly enough for the
+/// quantizer-sized matrices that run on the host).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    // i-k-j loop order: streams B rows, accumulates into the C row.
+    for i in 0..m {
+        let crow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            if aik == 0.0 {
+                continue; // ternary/sparse operands hit this a lot
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// `C = Aᵀ @ A` (the Hessian accumulation `2 X Xᵀ` uses this shape).
+pub fn matmul_tt(a: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let mut out = vec![0.0f32; k * k];
+    let ad = a.data();
+    for r in 0..m {
+        let row = &ad[r * k..(r + 1) * k];
+        for i in 0..k {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * k..(i + 1) * k];
+            for j in i..k {
+                orow[j] += v * row[j];
+            }
+        }
+    }
+    // mirror the upper triangle
+    for i in 0..k {
+        for j in 0..i {
+            out[i * k + j] = out[j * k + i];
+        }
+    }
+    Tensor::new(&[k, k], out)
+}
+
+/// Cholesky factorization `H = L Lᵀ` (lower). Returns `None` if H is not
+/// positive definite (caller re-damps, as GPTQ does).
+pub fn cholesky(h: &Tensor) -> Option<Tensor> {
+    let n = h.rows();
+    assert_eq!(n, h.cols());
+    let mut l = vec![0.0f64; n * n];
+    let hd = h.data();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = hd[i * n + j] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(Tensor::new(&[n, n], l.into_iter().map(|v| v as f32).collect()))
+}
+
+/// Inverse of H via its Cholesky factor, returned as the **upper** Cholesky
+/// factor `U` of `H⁻¹ = Uᵀ U`... more precisely GPTQ wants
+/// `Cholesky(H⁻¹)ᵀ` — the upper-triangular factor whose diagonal entries
+/// `U[j,j]` scale the per-column quantization error. Computed as:
+/// `H = L Lᵀ  ⇒  H⁻¹ = L⁻ᵀ L⁻¹`, then a Cholesky of `H⁻¹` in upper form.
+pub fn cholesky_inverse_upper(h: &Tensor) -> Option<Tensor> {
+    let n = h.rows();
+    let l = cholesky(h)?;
+    // Invert lower-triangular L by forward substitution: L · Linv = I.
+    let ld = l.data();
+    let mut linv = vec![0.0f64; n * n];
+    for col in 0..n {
+        linv[col * n + col] = 1.0 / ld[col * n + col] as f64;
+        for i in (col + 1)..n {
+            let mut s = 0.0f64;
+            for k in col..i {
+                s += ld[i * n + k] as f64 * linv[k * n + col];
+            }
+            linv[i * n + col] = -s / ld[i * n + i] as f64;
+        }
+    }
+    // Hinv = Linvᵀ · Linv  (upper-involved product)
+    let mut hinv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            let kmin = i.max(j);
+            for k in kmin..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            hinv[i * n + j] = s;
+        }
+    }
+    // U = cholesky(Hinv)ᵀ — the `torch.linalg.cholesky(·, upper=True)`
+    // convention GPTQ uses: Hinv = Uᵀ U with U upper-triangular, and row
+    // U[i, i:] drives the error propagation from pivot i.
+    let mut l2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = hinv[i * n + j];
+            for k in 0..j {
+                s -= l2[i * n + k] * l2[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l2[i * n + i] = s.sqrt();
+            } else {
+                l2[i * n + j] = s / l2[j * n + j];
+            }
+        }
+    }
+    let mut u = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l2[i * n + j] as f32;
+        }
+    }
+    Some(Tensor::new(&[n, n], u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_tt_is_gram() {
+        let a = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let g = matmul_tt(&a);
+        let gt = matmul(&a.transpose2(), &a);
+        assert!(g.allclose(&gt, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // H = A Aᵀ + I is SPD
+        let a = Tensor::new(&[3, 3], vec![1., 2., 0., 0.5, 1., 3., 2., 0., 1.]);
+        let mut h = matmul(&a, &a.transpose2());
+        for i in 0..3 {
+            *h.at2_mut(i, i) += 1.0;
+        }
+        let l = cholesky(&h).unwrap();
+        let rec = matmul(&l, &l.transpose2());
+        assert!(rec.allclose(&h, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let h = Tensor::new(&[2, 2], vec![1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(cholesky(&h).is_none());
+    }
+
+    #[test]
+    fn inverse_upper_factor_reconstructs_inverse() {
+        let a = Tensor::new(&[3, 3], vec![2., 1., 0., 1., 3., 0.5, 0., 0.5, 1.5]);
+        let mut h = matmul(&a, &a.transpose2());
+        for i in 0..3 {
+            *h.at2_mut(i, i) += 0.5;
+        }
+        let u = cholesky_inverse_upper(&h).unwrap();
+        // Uᵀ U must equal H⁻¹, i.e. H · (Uᵀ U) = I
+        let hinv = matmul(&u.transpose2(), &u);
+        let id = matmul(&h, &hinv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (id.at2(i, j) - want).abs() < 1e-3,
+                    "H·Hinv[{i},{j}] = {}",
+                    id.at2(i, j)
+                );
+            }
+        }
+        // and U is upper-triangular
+        for i in 0..3 {
+            for j in 0..i {
+                assert_eq!(u.at2(i, j), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Minimal dense-tensor substrate.
+//!
+//! The offline environment ships no ndarray/BLAS crates, so the host-side
+//! numerics the coordinator needs — GPTQ's Hessian algebra, adapter merges,
+//! evaluation metrics — run on this small row-major f32 tensor. The PJRT
+//! artifacts do the model-scale compute; this module only has to be correct
+//! and reasonably fast for quantizer/merge-sized matrices.
+
+pub mod linalg;
+pub mod rng;
+
+pub use linalg::{cholesky_inverse_upper, matmul, matmul_tt};
+pub use rng::Rng;
+
+use std::fmt;
+
+/// Dense row-major f32 tensor with up to 3 dimensions (enough for the
+/// layer-stacked parameter tensors that cross the PJRT boundary).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_scalar(v: f32) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() needs a 2-D tensor");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() needs a 2-D tensor");
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Borrow row `i` of a 2-D tensor (last axis of any tensor).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[self.shape.len() - 1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[self.shape.len() - 1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Slice the leading axis of a 3-D tensor into a 2-D copy.
+    pub fn layer(&self, l: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 3);
+        let (a, b) = (self.shape[1], self.shape[2]);
+        let sz = a * b;
+        Tensor::new(&[a, b], self.data[l * sz..(l + 1) * sz].to_vec())
+    }
+
+    /// Write a 2-D tensor into layer `l` of a 3-D tensor.
+    pub fn set_layer(&mut self, l: usize, t: &Tensor) {
+        assert_eq!(self.shape.len(), 3);
+        let (a, b) = (self.shape[1], self.shape[2]);
+        assert_eq!(t.shape(), &[a, b]);
+        let sz = a * b;
+        self.data[l * sz..(l + 1) * sz].copy_from_slice(t.data());
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(self, s: f32) -> Tensor {
+        self.map(|v| v * s)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn layer_slicing() {
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        let l1 = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        t.set_layer(1, &l1);
+        assert_eq!(t.layer(1), l1);
+        assert_eq!(t.layer(0), Tensor::zeros(&[2, 2]));
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(&[2], vec![1., -3.]);
+        let b = Tensor::new(&[2], vec![0.5, 1.]);
+        assert_eq!(a.add(&b).data(), &[1.5, -2.]);
+        assert_eq!(a.sub(&b).data(), &[0.5, -4.]);
+        assert_eq!(a.abs_max(), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2], vec![1.0 + 1e-7, 2.0 - 1e-7]);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        let c = Tensor::new(&[2], vec![1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-6));
+    }
+}

@@ -1,0 +1,228 @@
+//! Full-pipeline integration test: pretrain → GPTQ-calibrate → quantize →
+//! fine-tune (all three methods) → merge → evaluate → serve, at sanity
+//! scale. This is the system-level smoke that everything composes; the
+//! statistically meaningful runs live in the benches / EXPERIMENTS.md.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use lota_qaf::config::{preset, ExperimentConfig, Method};
+use lota_qaf::coordinator::pipeline::{calibrate_hessians, pretrain, quantize_model};
+use lota_qaf::coordinator::{
+    exact_match_eval, finetune, greedy_decode, merge_into_store, mmlu_eval, perplexity,
+    token_accuracy, TrainOptions,
+};
+use lota_qaf::data::{mmlu_like, sft_batch, task_by_name, Split};
+use lota_qaf::model::{self, ParamStore};
+use lota_qaf::quant::output_mse;
+use lota_qaf::runtime::Runtime;
+use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::tensor::{Rng, Tensor};
+
+struct Ctx {
+    rt: Runtime,
+    fp: ParamStore,
+    hessians: lota_qaf::coordinator::pipeline::HessianMap,
+}
+
+fn ctx() -> &'static Ctx {
+    static CTX: OnceLock<Ctx> = OnceLock::new();
+    CTX.get_or_init(|| {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Runtime::new(&dir).expect("run `make artifacts` first");
+        let cfg = preset("tiny").unwrap();
+        let (fp, losses) = pretrain(&rt, &cfg, 200, 1e-3, 11).unwrap();
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "pretraining must make progress: {losses:?}"
+        );
+        let hessians = calibrate_hessians(&rt, &cfg, &fp, 2, 11).unwrap();
+        Ctx { rt, fp, hessians }
+    })
+}
+
+#[test]
+fn calibration_covers_every_slot_layer() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    assert_eq!(c.hessians.len(), 6 * cfg.n_layers);
+    for ((slot, layer), h) in &c.hessians {
+        let (_, din, _) = cfg
+            .slots()
+            .into_iter()
+            .find(|(s, _, _)| s == slot)
+            .unwrap_or_else(|| panic!("unknown slot {slot}"));
+        assert_eq!(h.shape(), &[din, din], "{slot}/{layer}");
+        // hessian diagonals are non-negative sums of squares
+        for i in 0..din {
+            assert!(h.at2(i, i) >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn gptq_beats_rtn_on_real_activations() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    // compare on the wq slot of layer 0 with its true calibration hessian:
+    // GPTQ minimizes the H-weighted quadratic form tr(Δᵀ H Δ)
+    let w = c.fp.get("w_wq").unwrap().layer(0);
+    let h = &c.hessians[&("wq".to_string(), 0)];
+    let quad = |ql: &lota_qaf::quant::QuantizedLinear| {
+        let delta = ql.dequantize().sub(&w);
+        let hd = lota_qaf::tensor::linalg::matmul(h, &delta);
+        delta
+            .data()
+            .iter()
+            .zip(hd.data())
+            .map(|(a, b)| (a * b) as f64)
+            .sum::<f64>()
+    };
+    for bits in [2u32, 3, 4] {
+        let g = lota_qaf::quant::gptq_quantize(
+            &w,
+            h,
+            &lota_qaf::quant::GptqConfig::new(bits, cfg.group_size),
+        )
+        .unwrap();
+        let r = lota_qaf::quant::rtn_quantize(&w, cfg.group_size, bits);
+        assert!(
+            quad(&g) < quad(&r),
+            "{bits}-bit: GPTQ {} !< RTN {}",
+            quad(&g),
+            quad(&r)
+        );
+        // the output-MSE helper stays exercised
+        let mut rng = Rng::new(bits as u64);
+        let x = Tensor::new(&[64, cfg.d_model], rng.normal_vec(64 * cfg.d_model, 1.0));
+        let _ = output_mse(&w, &g, &x);
+    }
+}
+
+#[test]
+fn finetune_merge_eval_all_methods() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    let quant = quantize_model(&cfg, &c.fp, 4, Some(&c.hessians)).unwrap();
+
+    let exe = c.rt.load("fwd_merged_tiny").unwrap();
+    let qs = mmlu_like::generate_suite(4, 0xAB);
+    let base_scores = mmlu_eval(&c.rt, &exe, &quant, &cfg, &qs, None).unwrap();
+    assert!(base_scores.average >= 0.0 && base_scores.average <= 100.0);
+
+    for method in [Method::LotaQaf, Method::QaLora, Method::Lora] {
+        let mut store = quant.clone();
+        let mut rng = Rng::new(0x77 ^ method as u64);
+        model::init_adapters(&cfg, method, &mut rng, &mut store);
+        let exp = ExperimentConfig {
+            method,
+            n_bits: 4,
+            steps: 8,
+            lr: 1e-3,
+            task: "arith".into(),
+            ..Default::default()
+        };
+        let report = finetune(
+            &c.rt,
+            &cfg,
+            &exp,
+            &mut store,
+            &TrainOptions { record_losses: true, paranoid: true },
+        )
+        .unwrap();
+        assert_eq!(report.losses.len(), 8);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+
+        let err = merge_into_store(&cfg, &exp, &mut store).unwrap();
+        match method {
+            Method::Lora => assert!(err > 0.0, "LoRA requant must be lossy"),
+            _ => assert_eq!(err, 0.0, "{method:?} merge must be lossless"),
+        }
+        // merged store has no adapters left and still evaluates
+        for n in model::adapter_names(method) {
+            assert!(!store.contains(&n));
+        }
+        let gen = task_by_name("arith").unwrap();
+        let test = gen.test_set(8);
+        let em = exact_match_eval(&c.rt, &exe, &store, &cfg, &test, 6, None).unwrap();
+        let ta = token_accuracy(&c.rt, &exe, &store, &cfg, &test, None).unwrap();
+        assert!((0.0..=100.0).contains(&em));
+        assert!((0.0..=100.0).contains(&ta));
+    }
+}
+
+#[test]
+fn quantization_to_2bit_hurts_in_distribution_perplexity() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    // in-distribution data the base model actually fits (recovery mix)
+    let mut rng = Rng::new(0xBEEF);
+    let examples: Vec<lota_qaf::data::Example> = (0..8)
+        .map(|_| {
+            let (p, q) = lota_qaf::data::corpus::sample_recovery_example(&mut rng);
+            lota_qaf::data::Example { prompt: p, completion: q }
+        })
+        .collect();
+    let batch = sft_batch(&examples, 8, cfg.seq_len);
+
+    let exe_fp = c.rt.load("fwd_fp_tiny").unwrap();
+    let ppl_fp = perplexity(&c.rt, &exe_fp, &c.fp, &cfg, &batch, None).unwrap();
+
+    let exe_q = c.rt.load("fwd_merged_tiny").unwrap();
+    let q2 = quantize_model(&cfg, &c.fp, 2, Some(&c.hessians)).unwrap();
+    let ppl_q2 = perplexity(&c.rt, &exe_q, &q2, &cfg, &batch, None).unwrap();
+
+    assert!(ppl_fp.is_finite() && ppl_q2.is_finite());
+    assert!(
+        ppl_q2 > ppl_fp,
+        "2-bit quantization should hurt perplexity: fp {ppl_fp} vs 2-bit {ppl_q2}"
+    );
+}
+
+#[test]
+fn serving_round_trip_both_paths() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    let quant = quantize_model(&cfg, &c.fp, 4, Some(&c.hessians)).unwrap();
+    let mut lora = quant.clone();
+    let mut rng = Rng::new(0x5E);
+    model::init_adapters(&cfg, Method::Lora, &mut rng, &mut lora);
+
+    let gen = task_by_name("arith").unwrap();
+    let mut prng = Rng::new(0x5F);
+    let prompts: Vec<String> = (0..5)
+        .map(|_| gen.sample(&mut prng, Split::Test).prompt)
+        .collect();
+    let rep_m = serve_batch(&c.rt, &cfg, &quant, ServePath::Merged, &prompts, 4).unwrap();
+    let rep_l = serve_batch(&c.rt, &cfg, &lora, ServePath::LoraAdapter, &prompts, 4).unwrap();
+    assert_eq!(rep_m.requests, 5);
+    assert_eq!(rep_l.requests, 5);
+    assert!(rep_m.tokens_per_sec > 0.0);
+    // B=0 LoRA adapters are a no-op: both paths decode identical text
+    let exe_m = c.rt.load("fwd_merged_tiny").unwrap();
+    let exe_l = c.rt.load("fwd_lora_tiny").unwrap();
+    let dm = greedy_decode(&c.rt, &exe_m, &quant, &cfg, &prompts, 4, None).unwrap();
+    let dl = greedy_decode(&c.rt, &exe_l, &lora, &cfg, &prompts, 4, None).unwrap();
+    assert_eq!(dm, dl, "zero-initialized LoRA must not change decodes");
+}
+
+#[test]
+fn checkpoint_round_trip_preserves_eval() {
+    let c = ctx();
+    let cfg = preset("tiny").unwrap();
+    let quant = quantize_model(&cfg, &c.fp, 3, Some(&c.hessians)).unwrap();
+    let path = std::env::temp_dir().join(format!("lota_pipe_ckpt_{}", std::process::id()));
+    model::checkpoint::save(&quant, &path, Some(3)).unwrap();
+    let loaded = model::checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let exe = c.rt.load("fwd_merged_tiny").unwrap();
+    let mut rng = Rng::new(0x9A);
+    let tokens = Tensor::new(
+        &[8, cfg.seq_len],
+        (0..8 * cfg.seq_len).map(|_| rng.below(cfg.vocab) as f32).collect(),
+    );
+    let a = lota_qaf::coordinator::run_forward(&c.rt, &exe, &quant, &tokens, None).unwrap();
+    let b = lota_qaf::coordinator::run_forward(&c.rt, &exe, &loaded, &tokens, None).unwrap();
+    assert_eq!(a, b, "checkpoint round-trip must be bit-exact");
+}

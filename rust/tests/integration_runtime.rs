@@ -1,0 +1,373 @@
+//! PJRT integration tests: load the AOT artifacts and prove the full
+//! cross-language stack — Pallas kernels running under the Rust CPU
+//! client, the training step moving adapters, and the system-level
+//! **lossless merge invariant**: merged-model logits ≡ adapter-model
+//! logits through two *different* HLO programs.
+//!
+//! These tests share one Runtime (PJRT clients are heavyweight) and run
+//! serially within each test; `--test-threads` does not matter because the
+//! Runtime is behind a OnceLock.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::OnceLock;
+
+use lota_qaf::adapter::lota_merge;
+use lota_qaf::config::{preset, step_batch, ExperimentConfig, Method};
+use lota_qaf::coordinator::{self, train};
+use lota_qaf::data::{corpus, lm_batch, sft_batch, Example};
+use lota_qaf::model::{self, ParamStore, SLOTS};
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::runtime::Runtime;
+use lota_qaf::tensor::{Rng, Tensor};
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir).expect("artifacts missing — run `make artifacts`")
+    })
+}
+
+/// Build a deterministic quantized tiny model + ternary adapters.
+fn tiny_setup(seed: u64) -> (lota_qaf::config::ModelConfig, ParamStore) {
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let mut store =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
+            .unwrap();
+    model::init_adapters(&cfg, Method::LotaQaf, &mut rng, &mut store);
+    (cfg, store)
+}
+
+fn rand_tokens(cfg: &lota_qaf::config::ModelConfig, b: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(
+        &[b, cfg.seq_len],
+        (0..b * cfg.seq_len).map(|_| rng.below(cfg.vocab) as f32).collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Kernel artifacts: the L1 Pallas kernels, lowered and executed via PJRT
+
+#[test]
+fn kernel_qmm_runs_and_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let (m, din, dout, g) = (16, 64, 128, 4);
+    let x = Tensor::new(&[m, din], rng.normal_vec(m * din, 1.0));
+    let w_int = Tensor::new(&[din, dout], (0..din * dout).map(|_| rng.below(16) as f32).collect());
+    let scales = Tensor::new(&[g, dout], (0..g * dout).map(|_| rng.uniform() * 0.1 + 0.01).collect());
+    let zeros = Tensor::new(&[g, dout], rng.normal_vec(g * dout, 0.1));
+    let out = rt.run("kernel_qmm", &[&x, &w_int, &scales, &zeros]).unwrap();
+    let w = lota_qaf::quant::dequant(&w_int, &scales, &zeros, din / g);
+    let want = lota_qaf::tensor::linalg::matmul(&x, &w);
+    assert!(
+        out[0].allclose(&want, 1e-4, 1e-4),
+        "pallas qmm vs host: {}",
+        out[0].max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn kernel_ternary_runs_and_matches_host_merge() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let (din, dout, g, r) = (64, 128, 4, 8);
+    let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+    let ql = rtn_quantize(&w, din / g, 4);
+    let a = Tensor::new(&[din, r], (0..din * r).map(|_| rng.below(3) as f32 - 1.0).collect());
+    let b = Tensor::new(&[r, dout], (0..r * dout).map(|_| rng.below(3) as f32 - 1.0).collect());
+    let omega = Tensor::from_scalar(6.0);
+    let out = rt
+        .run("kernel_ternary", &[&a, &b, &ql.w_int, &ql.scales, &ql.zeros, &omega])
+        .unwrap();
+    let ta = lota_qaf::adapter::TernaryAdapter::from_parts(a, b).unwrap();
+    let merged = lota_merge(&ql, &ta, 6.0);
+    // EXACT integer-grid agreement between the Pallas kernel (through
+    // PJRT) and the Rust host merge:
+    assert_eq!(out[0], merged.w_int);
+    assert!(out[1].allclose(&merged.zeros, 1e-5, 1e-6));
+}
+
+#[test]
+fn kernel_tsign_runs_and_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let (rows, cols) = (64, 8);
+    let a = Tensor::new(&[rows, cols], (0..rows * cols).map(|_| rng.below(3) as f32 - 1.0).collect());
+    let g = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 1e-3));
+    let kf = Tensor::from_scalar(0.05);
+    let out = rt.run("kernel_tsign", &[&a, &g, &kf]).unwrap();
+    let (want, _) = lota_qaf::optim::tsign_update_host(&a, &g, 0.05);
+    assert_eq!(out[0], want, "t-SignSGD kernel diverges from host reference");
+}
+
+// ---------------------------------------------------------------------------
+// Full-model invariants through the lowered graphs
+
+#[test]
+fn lossless_merge_invariant_end_to_end() {
+    let rt = runtime();
+    let (cfg, mut store) = tiny_setup(10);
+    // give B_T non-trivial ternary values so the merge actually moves grids
+    let mut rng = Rng::new(11);
+    for slot in SLOTS {
+        let name = format!("ta_{slot}_b");
+        let t = store.get(&name).unwrap();
+        let vals: Vec<f32> = (0..t.len()).map(|_| rng.below(3) as f32 - 1.0).collect();
+        let shape = t.shape().to_vec();
+        store.insert(&name, Tensor::new(&shape, vals));
+    }
+    let omega = 0.75 * cfg.rank as f32;
+    let b = step_batch(&cfg.name);
+    let tokens = rand_tokens(&cfg, b, 12);
+
+    // (1) adapter-applied forward through the lota graph
+    let exe_lota = rt.load("fwd_lota_tiny_w4").unwrap();
+    let logits_adapter =
+        coordinator::run_forward(rt, &exe_lota, &store, &tokens, Some(omega)).unwrap();
+
+    // (2) host-side merge, then the merged graph
+    let exp = ExperimentConfig {
+        method: Method::LotaQaf,
+        n_bits: 4,
+        omega_frac: 0.75,
+        ..Default::default()
+    };
+    let mut merged = store.clone();
+    let err = train::merge_into_store(&cfg, &exp, &mut merged).unwrap();
+    assert_eq!(err, 0.0, "LoTA merge must be exactly lossless");
+    let exe_merged = rt.load("fwd_merged_tiny").unwrap();
+    let logits_merged =
+        coordinator::run_forward(rt, &exe_merged, &merged, &tokens, None).unwrap();
+
+    // identical representation ⇒ logits agree to f32 reassociation noise
+    let diff = logits_adapter.max_abs_diff(&logits_merged);
+    assert!(diff < 2e-4, "lossless merge violated: logit diff {diff}");
+}
+
+#[test]
+fn lora_merge_is_visibly_lossy_end_to_end() {
+    let rt = runtime();
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(20);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let mut store =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
+            .unwrap();
+    model::init_adapters(&cfg, Method::Lora, &mut rng, &mut store);
+    // non-trivial B so the update is non-zero
+    for slot in SLOTS {
+        let name = format!("lo_{slot}_b");
+        let t = store.get(&name).unwrap();
+        let shape = t.shape().to_vec();
+        let n = t.len();
+        store.insert(&name, Tensor::new(&shape, rng.normal_vec(n, 0.05)));
+    }
+    let b = step_batch(&cfg.name);
+    let tokens = rand_tokens(&cfg, b, 21);
+
+    let exe_lora = rt.load("fwd_lora_tiny").unwrap();
+    let logits_adapter =
+        coordinator::run_forward(rt, &exe_lora, &store, &tokens, None).unwrap();
+
+    let exp = ExperimentConfig { method: Method::Lora, n_bits: 4, ..Default::default() };
+    let mut merged = store.clone();
+    let err = train::merge_into_store(&cfg, &exp, &mut merged).unwrap();
+    assert!(err > 1e-4, "requantization error should be visible, got {err}");
+    let exe_merged = rt.load("fwd_merged_tiny").unwrap();
+    let logits_merged =
+        coordinator::run_forward(rt, &exe_merged, &merged, &tokens, None).unwrap();
+    let diff = logits_adapter.max_abs_diff(&logits_merged);
+    assert!(diff > 1e-3, "LoRA requant merge should move logits, diff {diff}");
+}
+
+#[test]
+fn qalora_merge_lossless_end_to_end() {
+    let rt = runtime();
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(30);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let mut store =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
+            .unwrap();
+    model::init_adapters(&cfg, Method::QaLora, &mut rng, &mut store);
+    for slot in SLOTS {
+        let name = format!("qa_{slot}_b");
+        let t = store.get(&name).unwrap();
+        let shape = t.shape().to_vec();
+        let n = t.len();
+        store.insert(&name, Tensor::new(&shape, rng.normal_vec(n, 0.05)));
+    }
+    let b = step_batch(&cfg.name);
+    let tokens = rand_tokens(&cfg, b, 31);
+
+    let exe_qa = rt.load("fwd_qalora_tiny").unwrap();
+    let logits_adapter =
+        coordinator::run_forward(rt, &exe_qa, &store, &tokens, None).unwrap();
+    let exp = ExperimentConfig { method: Method::QaLora, n_bits: 4, ..Default::default() };
+    let mut merged = store.clone();
+    train::merge_into_store(&cfg, &exp, &mut merged).unwrap();
+    let exe_merged = rt.load("fwd_merged_tiny").unwrap();
+    let logits_merged =
+        coordinator::run_forward(rt, &exe_merged, &merged, &tokens, None).unwrap();
+    let diff = logits_adapter.max_abs_diff(&logits_merged);
+    assert!(diff < 2e-4, "QA-LoRA merge should be lossless, diff {diff}");
+}
+
+// ---------------------------------------------------------------------------
+// Training-step artifacts
+
+#[test]
+fn lota_step_moves_adapters_and_reduces_loss() {
+    let rt = runtime();
+    let (cfg, mut store) = tiny_setup(40);
+    let exe = rt.load("step_lota_tiny_w4").unwrap();
+    let b = step_batch(&cfg.name);
+    let examples: Vec<Example> = {
+        let mut rng = Rng::new(41);
+        (0..b)
+            .map(|_| {
+                let (p, c) = corpus::sample_recovery_example(&mut rng);
+                Example { prompt: p, completion: c }
+            })
+            .collect()
+    };
+    let batch = sft_batch(&examples, b, cfg.seq_len);
+    let mut scalars = BTreeMap::new();
+    scalars.insert("omega".to_string(), Tensor::from_scalar(4.0));
+    scalars.insert("keep_frac".to_string(), Tensor::from_scalar(0.05));
+
+    let before = store.get("ta_wq_b").unwrap().clone();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let loss = coordinator::run_step(rt, &exe, &mut store, None, None, &batch, &scalars)
+            .unwrap();
+        losses.push(loss);
+    }
+    // adapters stayed ternary
+    for slot in SLOTS {
+        for suffix in ["a", "b"] {
+            let t = store.get(&format!("ta_{slot}_{suffix}")).unwrap();
+            assert!(
+                t.data().iter().all(|v| [-1.0, 0.0, 1.0].contains(v)),
+                "ta_{slot}_{suffix} left ternary domain"
+            );
+        }
+    }
+    // something moved, and the fixed-batch loss went down
+    let after = store.get("ta_wq_b").unwrap();
+    assert!(before.max_abs_diff(after) > 0.0, "no adapter movement");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not improve: {losses:?}"
+    );
+}
+
+#[test]
+fn pretrain_step_reduces_loss() {
+    let rt = runtime();
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(50);
+    let mut store = model::init_fp(&cfg, &mut rng);
+    let mut m = ParamStore::new();
+    let mut v = ParamStore::new();
+    for n in model::fp_names() {
+        let shape = store.get(&n).unwrap().shape().to_vec();
+        m.insert(&n, Tensor::zeros(&shape));
+        v.insert(&n, Tensor::zeros(&shape));
+    }
+    let exe = rt.load("pretrain_step_tiny").unwrap();
+    let b = step_batch(&cfg.name);
+    let docs: Vec<String> = (0..b).map(|_| corpus::sample_document(&mut rng)).collect();
+    let batch = lm_batch(&docs, b, cfg.seq_len);
+    let mut losses = Vec::new();
+    for t in 1..=5 {
+        let mut scalars = BTreeMap::new();
+        scalars.insert("lr".to_string(), Tensor::from_scalar(1e-3));
+        scalars.insert("step".to_string(), Tensor::from_scalar(t as f32));
+        let loss = coordinator::run_step(
+            rt,
+            &exe,
+            &mut store,
+            Some(&mut m),
+            Some(&mut v),
+            &batch,
+            &scalars,
+        )
+        .unwrap();
+        losses.push(loss);
+    }
+    assert!(losses[4] < losses[0], "pretraining no progress: {losses:?}");
+}
+
+#[test]
+fn adamw_step_artifacts_run_for_baselines() {
+    let rt = runtime();
+    let cfg = preset("tiny").unwrap();
+    for (method, artifact) in [(Method::Lora, "step_lora_tiny"), (Method::QaLora, "step_qalora_tiny")]
+    {
+        let mut rng = Rng::new(60);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let mut store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        model::init_adapters(&cfg, method, &mut rng, &mut store);
+        let mut m = ParamStore::new();
+        let mut v = ParamStore::new();
+        for n in model::adapter_names(method) {
+            let shape = store.get(&n).unwrap().shape().to_vec();
+            m.insert(&n, Tensor::zeros(&shape));
+            v.insert(&n, Tensor::zeros(&shape));
+        }
+        let exe = rt.load(artifact).unwrap();
+        let b = step_batch(&cfg.name);
+        let examples: Vec<Example> = (0..b)
+            .map(|_| {
+                let (p, c) = corpus::sample_recovery_example(&mut rng);
+                Example { prompt: p, completion: c }
+            })
+            .collect();
+        let batch = sft_batch(&examples, b, cfg.seq_len);
+        let mut losses = Vec::new();
+        for t in 1..=5 {
+            let mut scalars = BTreeMap::new();
+            scalars.insert("lr".to_string(), Tensor::from_scalar(5e-3));
+            scalars.insert("step".to_string(), Tensor::from_scalar(t as f32));
+            losses.push(
+                coordinator::run_step(
+                    rt,
+                    &exe,
+                    &mut store,
+                    Some(&mut m),
+                    Some(&mut v),
+                    &batch,
+                    &scalars,
+                )
+                .unwrap(),
+            );
+        }
+        assert!(
+            losses[4] < losses[0],
+            "{artifact}: no progress {losses:?}"
+        );
+    }
+}
+
+#[test]
+fn manifest_shapes_match_rust_presets() {
+    let rt = runtime();
+    let cfg = preset("tiny").unwrap();
+    let spec = rt.manifest().get("fwd_merged_tiny").unwrap();
+    // embed input must be (vocab, d_model)
+    let embed = spec.inputs.iter().find(|i| i.name == "embed").unwrap();
+    assert_eq!(embed.shape, vec![cfg.vocab, cfg.d_model]);
+    let tokens = spec.inputs.iter().find(|i| i.name == "tokens").unwrap();
+    assert_eq!(tokens.shape[1], cfg.seq_len);
+    let wint = spec.inputs.iter().find(|i| i.name == "q_wq_int").unwrap();
+    assert_eq!(wint.shape, vec![cfg.n_layers, cfg.d_model, cfg.d_model]);
+}
