@@ -16,14 +16,14 @@
 
 use std::path::Path;
 
-use lota_qaf::config::{ExperimentConfig, Method};
+use lota_qaf::config::{Backend, ExperimentConfig, Method};
 use lota_qaf::coordinator::experiments::{max_new_for, ExperimentContext};
 use lota_qaf::coordinator::{
     exact_match_eval, finetune, merge_into_store, token_accuracy, TrainOptions,
 };
 use lota_qaf::data::tasks;
 use lota_qaf::model;
-use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -128,10 +128,19 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<String> = (0..16)
         .map(|_| gen.sample(&mut prng, tasks::Split::Test).prompt)
         .collect();
-    let rep = serve_batch(&ctx.rt, &ctx.cfg, &task_store, ServePath::Merged, &prompts, 6)?;
+    let opts = ServeOptions::new(ServePath::Merged, 6);
+    let rep = serve_batch(Some(&ctx.rt), &ctx.cfg, &task_store, &opts, &prompts)?;
     println!(
-        "[6] served {} merged-path requests: {:.1} tok/s, p50 {:.3}s, p95 {:.3}s",
+        "[6] served {} merged-path requests [pjrt]: {:.1} tok/s, p50 {:.3}s, p95 {:.3}s",
         rep.requests, rep.tokens_per_sec, rep.latency.p50, rep.latency.p95
+    );
+    // same checkpoint through the native packed-integer engine — no
+    // artifacts, no buckets, any batch size
+    let nopts = ServeOptions::new(ServePath::Merged, 6).backend(Backend::Native).bits(bits);
+    let nrep = serve_batch(None, &ctx.cfg, &task_store, &nopts, &prompts)?;
+    println!(
+        "[6] served {} merged-path requests [native]: {:.1} tok/s, p50 {:.3}s, p95 {:.3}s",
+        nrep.requests, nrep.tokens_per_sec, nrep.latency.p50, nrep.latency.p95
     );
 
     let stats = ctx.rt.stats();

@@ -2,19 +2,21 @@
 //! serve the same request stream through
 //!   (a) the merged low-bit path (LoTA-QAF after its lossless merge), and
 //!   (b) the quant + 16-bit-adapter path (LoRA, unmergeable without loss),
-//! through the same dynamic batcher, and report throughput + latency.
+//! on **both** serving backends — the fixed-bucket PJRT artifacts and the
+//! native packed-integer engine — and report throughput + latency.
 //!
 //! Run with: `cargo run --release --example serve_merged`
-//! Env knobs: LOTA_REQUESTS (24), LOTA_MAX_NEW (8), LOTA_BITS (4).
+//! Env knobs: LOTA_REQUESTS (24), LOTA_MAX_NEW (8), LOTA_BITS (4),
+//! LOTA_BACKEND (both|pjrt|native).
 
 use std::path::Path;
 
 use lota_qaf::bench_harness::Table;
-use lota_qaf::config::{preset, Method};
+use lota_qaf::config::{preset, Backend, Method};
 use lota_qaf::model;
 use lota_qaf::quant::{pack::deployed_bytes, rtn_quantize};
 use lota_qaf::runtime::Runtime;
-use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -25,8 +27,15 @@ fn main() -> anyhow::Result<()> {
     let n = env_usize("LOTA_REQUESTS", 24);
     let max_new = env_usize("LOTA_MAX_NEW", 8);
     let bits = env_usize("LOTA_BITS", 4) as u32;
+    let backend_sel = std::env::var("LOTA_BACKEND").unwrap_or_else(|_| "both".into());
+    let backends = Backend::parse_selection(&backend_sel)?;
 
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    // the native engine serves without artifacts; only load PJRT if asked
+    let rt = if backends.contains(&Backend::Pjrt) {
+        Some(Runtime::new(Path::new("artifacts"))?)
+    } else {
+        None
+    };
     let cfg = preset("tiny")?;
     let mut rng = Rng::new(9);
     let fp = model::init_fp(&cfg, &mut rng);
@@ -45,10 +54,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     println!("serving {n} requests × {max_new} new tokens on {} ...", cfg.name);
-    let rep_merged = serve_batch(&rt, &cfg, &merged, ServePath::Merged, &prompts, max_new)?;
-    let rep_lora = serve_batch(&rt, &cfg, &lora, ServePath::LoraAdapter, &prompts, max_new)?;
-
-    let mut t = Table::new(&["path", "tok/s", "req/s", "p50 s", "p95 s", "weights"]);
+    let mut t = Table::new(&["path", "backend", "tok/s", "req/s", "p50 s", "p95 s", "weights"]);
     let w_bytes: usize = cfg
         .slots()
         .iter()
@@ -59,23 +65,34 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|(_, din, dout)| (din * cfg.rank + cfg.rank * dout) * 4 * cfg.n_layers)
         .sum();
-    for (name, rep, bytes) in [
-        ("merged (LoTA/QA-LoRA)", &rep_merged, w_bytes),
-        ("quant + 16-bit LoRA", &rep_lora, w_bytes + adapter_bytes),
-    ] {
-        t.row(&[
-            name.to_string(),
-            format!("{:.1}", rep.tokens_per_sec),
-            format!("{:.2}", rep.requests_per_sec),
-            format!("{:.3}", rep.latency.p50),
-            format!("{:.3}", rep.latency.p95),
-            format!("{:.1} KiB", bytes as f64 / 1024.0),
-        ]);
+    let mut speedups = Vec::new();
+    for &backend in &backends {
+        let opts = |path| ServeOptions::new(path, max_new).backend(backend).bits(bits);
+        let rep_merged = serve_batch(rt.as_ref(), &cfg, &merged, &opts(ServePath::Merged), &prompts)?;
+        let rep_lora =
+            serve_batch(rt.as_ref(), &cfg, &lora, &opts(ServePath::LoraAdapter), &prompts)?;
+        for (name, rep, bytes) in [
+            ("merged (LoTA/QA-LoRA)", &rep_merged, w_bytes),
+            ("quant + 16-bit LoRA", &rep_lora, w_bytes + adapter_bytes),
+        ] {
+            t.row(&[
+                name.to_string(),
+                backend.as_str().to_string(),
+                format!("{:.1}", rep.tokens_per_sec),
+                format!("{:.2}", rep.requests_per_sec),
+                format!("{:.3}", rep.latency.p50),
+                format!("{:.3}", rep.latency.p95),
+                format!("{:.1} KiB", bytes as f64 / 1024.0),
+            ]);
+        }
+        speedups.push((backend, rep_merged.speedup_over(&rep_lora)));
     }
     t.print();
-    println!(
-        "merged-path speedup over LoRA path: {:.2}x (paper reports 1.7–2.0x on A800)",
-        rep_merged.speedup_over(&rep_lora)
-    );
+    for (backend, s) in speedups {
+        println!(
+            "merged-path speedup over LoRA path [{}]: {s:.2}x (paper reports 1.7–2.0x on A800)",
+            backend.as_str()
+        );
+    }
     Ok(())
 }

@@ -5,23 +5,25 @@
 //! deployed-weight footprints.
 //!
 //! Paper reference: LoTA 1.9×/1.7×/2.0× faster than LoRA at 4/3/2-bit on
-//! an A800. Here both paths run identical fixed-shape fwd artifacts on
-//! CPU PJRT, so the ratio reflects the *extra adapter matmuls* — the
-//! portable part of the claim. (Sub-byte kernels are simulated with
-//! f32-coded integers, so 4/3/2-bit merged paths share one artifact; the
-//! footprint column shows the real deployment sizes from `quant::pack`.)
+//! an A800. The comparison now runs on **both serving backends**: the
+//! fixed-shape PJRT artifacts (f32-coded compute, the portable part of
+//! the claim is the extra adapter matmuls) and the native packed-integer
+//! engine, which computes straight off the deployed `u32` grid — the
+//! representation the paper's footprint numbers describe — and therefore
+//! needs no artifacts and no batch buckets at all.
 //!
-//! Env knobs: LOTA_F4C_REQS (16), LOTA_F4C_MAXNEW (8).
+//! Env knobs: LOTA_F4C_REQS (16), LOTA_F4C_MAXNEW (8),
+//! LOTA_F4C_MODEL (small), LOTA_F4C_BACKEND (both|pjrt|native).
 
 use std::path::Path;
 
 use lota_qaf::bench_harness::Table;
-use lota_qaf::config::{preset, Method};
+use lota_qaf::config::{preset, Backend, Method};
 use lota_qaf::data::{task_by_name, Split};
 use lota_qaf::model;
 use lota_qaf::quant::{pack::deployed_bytes, rtn_quantize};
 use lota_qaf::runtime::Runtime;
-use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -32,7 +34,13 @@ fn main() -> anyhow::Result<()> {
     let n_reqs = env_usize("LOTA_F4C_REQS", 16);
     let max_new = env_usize("LOTA_F4C_MAXNEW", 8);
     let model = std::env::var("LOTA_F4C_MODEL").unwrap_or_else(|_| "small".into());
-    let rt = Runtime::new(Path::new("artifacts"))?;
+    let backend_sel = std::env::var("LOTA_F4C_BACKEND").unwrap_or_else(|_| "both".into());
+    let backends = Backend::parse_selection(&backend_sel)?;
+    let rt = if backends.contains(&Backend::Pjrt) {
+        Some(Runtime::new(Path::new("artifacts"))?)
+    } else {
+        None
+    };
     let cfg = preset(&model)?;
     let mut rng = Rng::new(4);
     let fp = model::init_fp(&cfg, &mut rng);
@@ -43,22 +51,23 @@ fn main() -> anyhow::Result<()> {
         .map(|_| gen.sample(&mut prng, Split::Test).prompt)
         .collect();
 
-    // warm-up: compile every serving executable before timing anything,
-    // so the first table row doesn't absorb PJRT compilation
-    {
+    // warm-up: compile every PJRT serving executable before timing
+    // anything, so the first table row doesn't absorb compilation (the
+    // native engine has no compile step — packing is part of setup)
+    if let Some(rt) = rt.as_ref() {
         let warm = model::quantize_store(&cfg, &fp, |_, _, w| {
             Ok(rtn_quantize(w, cfg.group_size, 4))
         })?;
         let mut warm_l = warm.clone();
         model::init_adapters(&cfg, Method::Lora, &mut rng, &mut warm_l);
         let wp = vec![prompts[0].clone()];
-        serve_batch(&rt, &cfg, &warm, ServePath::Merged, &wp, 2)?;
-        serve_batch(&rt, &cfg, &warm_l, ServePath::LoraAdapter, &wp, 2)?;
+        serve_batch(Some(rt), &cfg, &warm, &ServeOptions::new(ServePath::Merged, 2), &wp)?;
+        serve_batch(Some(rt), &cfg, &warm_l, &ServeOptions::new(ServePath::LoraAdapter, 2), &wp)?;
     }
 
     println!("## Figure 4c — serving throughput, merged vs LoRA path ({n_reqs} reqs × {max_new} toks)");
     let mut t = Table::new(&[
-        "bits", "merged tok/s", "lora tok/s", "cpu speedup", "bw-model speedup",
+        "bits", "backend", "merged tok/s", "lora tok/s", "cpu speedup", "bw-model speedup",
         "merged KiB", "lora KiB",
     ]);
     for bits in [4u32, 3, 2] {
@@ -67,9 +76,6 @@ fn main() -> anyhow::Result<()> {
         })?;
         let mut lora = merged.clone();
         model::init_adapters(&cfg, Method::Lora, &mut rng, &mut lora);
-
-        let rep_m = serve_batch(&rt, &cfg, &merged, ServePath::Merged, &prompts, max_new)?;
-        let rep_l = serve_batch(&rt, &cfg, &lora, ServePath::LoraAdapter, &prompts, max_new)?;
 
         let w_bytes: usize = cfg
             .slots()
@@ -82,39 +88,59 @@ fn main() -> anyhow::Result<()> {
             .map(|(_, din, dout)| (din * cfg.rank + cfg.rank * dout) * 4 * cfg.n_layers)
             .sum();
         // Real GPTQ decode is weight-bandwidth-bound, so the deployment
-        // speedup tracks bytes-moved-per-token; the CPU-f32 substrate
+        // speedup tracks bytes-moved-per-token; the PJRT f32 substrate
         // computes both paths at full precision and compresses the gap
-        // (DESIGN.md §2). The bandwidth model reproduces the paper's
-        // 1.7–2.0x territory at low bits.
+        // (DESIGN.md §2), while the native engine really moves packed
+        // bytes. The bandwidth model reproduces the paper's 1.7–2.0x
+        // territory at low bits.
         let bw_model = (w_bytes + a_bytes) as f64 / w_bytes as f64;
-        t.row(&[
-            bits.to_string(),
-            format!("{:.1}", rep_m.tokens_per_sec),
-            format!("{:.1}", rep_l.tokens_per_sec),
-            format!("{:.2}x", rep_m.speedup_over(&rep_l)),
-            format!("{:.2}x", bw_model),
-            format!("{:.1}", w_bytes as f64 / 1024.0),
-            format!("{:.1}", (w_bytes + a_bytes) as f64 / 1024.0),
-        ]);
+        for &backend in &backends {
+            let opts = |path| ServeOptions::new(path, max_new).backend(backend).bits(bits);
+            let rep_m =
+                serve_batch(rt.as_ref(), &cfg, &merged, &opts(ServePath::Merged), &prompts)?;
+            let rep_l =
+                serve_batch(rt.as_ref(), &cfg, &lora, &opts(ServePath::LoraAdapter), &prompts)?;
+            t.row(&[
+                bits.to_string(),
+                backend.as_str().to_string(),
+                format!("{:.1}", rep_m.tokens_per_sec),
+                format!("{:.1}", rep_l.tokens_per_sec),
+                format!("{:.2}x", rep_m.speedup_over(&rep_l)),
+                format!("{:.2}x", bw_model),
+                format!("{:.1}", w_bytes as f64 / 1024.0),
+                format!("{:.1}", (w_bytes + a_bytes) as f64 / 1024.0),
+            ]);
+        }
     }
     t.print();
 
-    // throughput scaling over batch buckets (merged path, 4-bit)
-    println!("\n## Figure 4c inset — merged-path throughput by batch bucket");
+    // throughput scaling over batch sizes (merged path, 4-bit): the PJRT
+    // rows are bucket-shaped; the native rows include sizes no bucket
+    // covers — the shape-freedom the engine buys
+    println!("\n## Figure 4c inset — merged-path throughput by batch size");
     let merged =
         model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))?;
-    let mut t = Table::new(&["batch", "tok/s", "p50 latency s"]);
+    let mut t = Table::new(&["batch", "backend", "tok/s", "p50 latency s"]);
     let buckets: &[usize] = if model == "tiny" { &[1, 8, 32] } else { &[1, 4, 8] };
-    for &bucket in buckets {
-        let prompts: Vec<String> = (0..bucket)
-            .map(|_| gen.sample(&mut prng, Split::Test).prompt)
-            .collect();
-        let rep = serve_batch(&rt, &cfg, &merged, ServePath::Merged, &prompts, max_new)?;
-        t.row(&[
-            bucket.to_string(),
-            format!("{:.1}", rep.tokens_per_sec),
-            format!("{:.3}", rep.latency.p50),
-        ]);
+    for &backend in &backends {
+        let sizes: Vec<usize> = match backend {
+            Backend::Pjrt => buckets.to_vec(),
+            // off-bucket sizes on purpose: nothing was compiled for these
+            Backend::Native => buckets.iter().map(|b| b + 1).collect(),
+        };
+        for bucket in sizes {
+            let prompts: Vec<String> = (0..bucket)
+                .map(|_| gen.sample(&mut prng, Split::Test).prompt)
+                .collect();
+            let opts = ServeOptions::new(ServePath::Merged, max_new).backend(backend);
+            let rep = serve_batch(rt.as_ref(), &cfg, &merged, &opts, &prompts)?;
+            t.row(&[
+                bucket.to_string(),
+                backend.as_str().to_string(),
+                format!("{:.1}", rep.tokens_per_sec),
+                format!("{:.3}", rep.latency.p50),
+            ]);
+        }
     }
     t.print();
     Ok(())

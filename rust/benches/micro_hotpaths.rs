@@ -1,8 +1,9 @@
 //! Hot-path micro-benchmarks backing EXPERIMENTS.md §Perf: per-layer
 //! timings of every operation on the training/serving critical paths —
 //! GPTQ sweeps, the host ternary merge, bit-packing, t-SignSGD host
-//! update, host matmul, PJRT forward latency per batch bucket, and the
-//! full training-step latency per method.
+//! update, host matmul, the native engine's fused packed GEMM against its
+//! unpack-then-f32-matmul baseline, PJRT forward latency per batch
+//! bucket, and the full training-step latency per method.
 //!
 //! Env knobs: LOTA_MICRO_ITERS (10).
 
@@ -14,6 +15,7 @@ use lota_qaf::bench_harness::{bench, Table};
 use lota_qaf::config::{preset, step_batch, Method};
 use lota_qaf::coordinator;
 use lota_qaf::data::{corpus, lm_batch, sft_batch, Example};
+use lota_qaf::engine::{self, PackedLinear};
 use lota_qaf::model;
 use lota_qaf::quant::{
     accumulate_hessian, gptq_quantize, pack_ints, rtn_quantize, unpack_ints, GptqConfig,
@@ -109,6 +111,47 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", r.p50_secs * 1e3),
         format!("{:.2}", r.p95_secs * 1e3),
         format!("{:.2} GF/s", 2.0 * 256f64.powi(3) / r.mean_secs / 1e9),
+    ]);
+
+    // ---- host: fused packed GEMM vs unpack-then-f32-matmul ----
+    // the native engine's hot path: same (256×1024, gs=32) slot, activations
+    // for a 128-row batch; the unfused baseline is what serving paid before
+    // the engine existed (unpack every code, materialize f32, dense matmul)
+    let xa = Tensor::new(&[128, din], rng.normal_vec(128 * din, 1.0));
+    let pl = PackedLinear::from_quantized(&ql)?;
+    {
+        // correctness pin before timing anything
+        let fused = engine::matmul_packed(&xa, &pl);
+        let dense = linalg::matmul(&xa, &ql.dequantize());
+        assert!(
+            fused.allclose(&dense, 1e-3, 1e-3),
+            "fused/unfused diverge: {}",
+            fused.max_abs_diff(&dense)
+        );
+    }
+    let flops = 2.0 * 128.0 * (din * dout) as f64;
+    let r = bench("quant_matmul_packed 128x256x1024", 1, iters, || {
+        engine::matmul_packed(&xa, &pl);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.2} GF/s", flops / r.mean_secs / 1e9),
+    ]);
+    let packed_grid = pack_ints(ql.w_int.data(), 4)?;
+    let r = bench("unpack+f32 matmul 128x256x1024", 1, iters, || {
+        let grid = Tensor::new(&[din, dout], unpack_ints(&packed_grid, din * dout, 4).unwrap());
+        let w_f32 = lota_qaf::quant::dequant(&grid, &ql.scales, &ql.zeros, gs);
+        linalg::matmul(&xa, &w_f32);
+    });
+    results.row(&[
+        r.name.clone(),
+        format!("{:.2}", r.mean_secs * 1e3),
+        format!("{:.2}", r.p50_secs * 1e3),
+        format!("{:.2}", r.p95_secs * 1e3),
+        format!("{:.2} GF/s", flops / r.mean_secs / 1e9),
     ]);
 
     // ---- PJRT: forward latency per bucket ----

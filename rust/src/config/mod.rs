@@ -103,6 +103,44 @@ pub fn step_batch(cfg: &str) -> usize {
     }
 }
 
+/// Serving backend selector: which executor runs the forward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// fixed-shape AOT artifacts through the PJRT CPU client (the
+    /// reference executor — shares lowered graphs with training)
+    #[default]
+    Pjrt,
+    /// the pure-Rust packed-integer engine (`engine::Engine`): any batch
+    /// size, no artifacts, weights held at the packed footprint
+    Native,
+}
+
+impl Backend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "pjrt" => Backend::Pjrt,
+            "native" => Backend::Native,
+            _ => bail!("unknown backend '{s}' (pjrt|native)"),
+        })
+    }
+
+    /// Parse a backend selection as benches/examples take it from the
+    /// environment: a single backend name, or `both`.
+    pub fn parse_selection(s: &str) -> Result<Vec<Backend>> {
+        Ok(match s {
+            "both" => vec![Backend::Pjrt, Backend::Native],
+            other => vec![Backend::parse(other)?],
+        })
+    }
+}
+
 /// Fine-tuning method selector used across the coordinator & benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -160,6 +198,8 @@ pub struct ExperimentConfig {
     pub task: String,
     pub artifacts_dir: String,
     pub checkpoint_dir: Option<String>,
+    /// which executor serves the fine-tuned model (`serve_backend` in TOML)
+    pub backend: Backend,
 }
 
 impl Default for ExperimentConfig {
@@ -176,6 +216,7 @@ impl Default for ExperimentConfig {
             task: "recovery".into(),
             artifacts_dir: "artifacts".into(),
             checkpoint_dir: None,
+            backend: Backend::Pjrt,
         }
     }
 }
@@ -215,6 +256,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("checkpoint_dir") {
             c.checkpoint_dir = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("serve_backend") {
+            c.backend = Backend::parse(v)?;
         }
         if !(2..=4).contains(&c.n_bits) {
             bail!("n_bits must be 2, 3 or 4 (got {})", c.n_bits);
@@ -276,6 +320,17 @@ mod tests {
         assert_eq!(c.n_bits, 3);
         assert_eq!(c.steps, 42);
         assert!((c.omega(16) - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [Backend::Pjrt, Backend::Native] {
+            assert_eq!(Backend::parse(b.as_str()).unwrap(), b);
+        }
+        assert!(Backend::parse("tpu").is_err());
+        assert_eq!(Backend::default(), Backend::Pjrt);
+        let doc = TomlDoc::parse("serve_backend = \"native\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().backend, Backend::Native);
     }
 
     #[test]

@@ -148,6 +148,23 @@ pub fn greedy_decode(
     max_new: usize,
     omega: Option<f32>,
 ) -> Result<Vec<String>> {
+    Ok(greedy_decode_counted(rt, exe, store, cfg, prompts, max_new, omega)?
+        .into_iter()
+        .map(|(text, _)| text)
+        .collect())
+}
+
+/// [`greedy_decode`] that also reports how many tokens each row actually
+/// generated — the unit the serving throughput metric counts.
+pub fn greedy_decode_counted(
+    rt: &Runtime,
+    exe: &Executable,
+    store: &ParamStore,
+    cfg: &ModelConfig,
+    prompts: &[String],
+    max_new: usize,
+    omega: Option<f32>,
+) -> Result<Vec<(String, usize)>> {
     let b = spec_batch(exe)?;
     let t = cfg.seq_len;
     let v = cfg.vocab;
@@ -203,7 +220,7 @@ pub fn greedy_decode(
             }
         }
         for g in generated {
-            outputs.push(tokenizer::decode(&g));
+            outputs.push((tokenizer::decode(&g), g.len()));
         }
     }
     Ok(outputs)

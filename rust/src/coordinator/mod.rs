@@ -16,7 +16,9 @@ pub mod experiments;
 pub mod pipeline;
 pub mod train;
 
-pub use eval::{exact_match_eval, greedy_decode, mmlu_eval, perplexity, token_accuracy};
+pub use eval::{
+    exact_match_eval, greedy_decode, greedy_decode_counted, mmlu_eval, perplexity, token_accuracy,
+};
 pub use experiments::{run_cell, run_table1, CellResult, ExperimentContext};
 pub use pipeline::{calibrate_hessians, pretrain, quantize_model, Pipeline};
 pub use train::{finetune, merge_into_store, FinetuneReport, TrainOptions};

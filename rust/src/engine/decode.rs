@@ -1,0 +1,159 @@
+//! Greedy decoding on the native engine — any batch size, no buckets.
+//!
+//! Semantics mirror `coordinator::eval::greedy_decode` (BOS + prompt + SEP
+//! framing, recompute decoding, EOS / seq-len stopping, last-max argmax
+//! tie-breaking) so backend comparisons are apples-to-apples. The one
+//! deliberate difference: because nothing here has a fixed shape, each
+//! forward runs at the *current* sequence length — the live prefix plus
+//! generated tokens — instead of padding every request to `seq_len`.
+//! Causal attention makes the trailing pad rows inert, so the logits at
+//! each cursor are unchanged; the engine just skips computing them.
+
+use anyhow::{bail, Result};
+
+use crate::data::tokenizer::{self, BOS, EOS, SEP};
+use crate::tensor::Tensor;
+
+use super::forward::Engine;
+
+/// One finished generation: the decoded text plus the number of tokens
+/// actually generated — the honest unit behind tokens/s (a final forward
+/// that argmaxes EOS generates nothing and is not counted).
+#[derive(Clone, Debug)]
+pub struct Generation {
+    pub text: String,
+    pub tokens: usize,
+}
+
+/// Greedy-decode completions for `prompts` in a single batch of exactly
+/// `prompts.len()` rows.
+pub fn greedy_decode(engine: &Engine, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
+    let cfg = engine.config();
+    let b = prompts.len();
+    let t_cap = cfg.seq_len;
+
+    // rows hold f32-coded ids, grown as generation proceeds
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(b);
+    let mut cursor = vec![0usize; b];
+    for (ri, p) in prompts.iter().enumerate() {
+        let mut ids = vec![BOS];
+        ids.extend(tokenizer::encode(&p.replace('\n', " ")));
+        ids.push(SEP);
+        if ids.len() + max_new > t_cap {
+            bail!("prompt+generation ({}) exceeds seq_len {t_cap}", ids.len() + max_new);
+        }
+        cursor[ri] = ids.len() - 1;
+        rows.push(ids.into_iter().map(|id| id as f32).collect());
+    }
+
+    let mut done = vec![false; b];
+    let mut generated: Vec<Vec<u32>> = vec![Vec::new(); b];
+    for _ in 0..max_new {
+        if done.iter().all(|d| *d) {
+            break;
+        }
+        // forward only the live prefix: positions 0..=max cursor
+        let t_cur = cursor.iter().max().copied().unwrap_or(0) + 1;
+        let mut tokens = vec![0.0f32; b * t_cur];
+        for (ri, row) in rows.iter().enumerate() {
+            let n = row.len().min(t_cur);
+            tokens[ri * t_cur..ri * t_cur + n].copy_from_slice(&row[..n]);
+        }
+        let logits = engine.forward(&Tensor::new(&[b, t_cur], tokens))?;
+        let v = cfg.vocab;
+        for ri in 0..b {
+            if done[ri] {
+                continue;
+            }
+            let off = (ri * t_cur + cursor[ri]) * v;
+            let lrow = &logits.data()[off..off + v];
+            let next = lrow
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            if next == EOS || cursor[ri] + 1 >= t_cap {
+                done[ri] = true;
+                continue;
+            }
+            cursor[ri] += 1;
+            rows[ri].push(next as f32);
+            generated[ri].push(next);
+        }
+    }
+
+    Ok(generated
+        .into_iter()
+        .map(|g| Generation { text: tokenizer::decode(&g), tokens: g.len() })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::model;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::Rng;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        Engine::from_store(&cfg, &store, 4).unwrap()
+    }
+
+    #[test]
+    fn decodes_any_batch_size() {
+        let engine = tiny_engine(1);
+        for n in [1usize, 3, 5, 13] {
+            let prompts: Vec<String> = (0..n).map(|i| format!("{i} + {i} =")).collect();
+            let gens = greedy_decode(&engine, &prompts, 4).unwrap();
+            assert_eq!(gens.len(), n);
+            for g in &gens {
+                assert!(g.tokens <= 4);
+                // decode() filters specials, so chars never exceed steps
+                assert!(g.text.chars().count() <= g.tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn token_counts_are_decode_steps() {
+        let engine = tiny_engine(2);
+        let gens = greedy_decode(&engine, &["1 + 2 =".to_string()], 6).unwrap();
+        assert_eq!(gens.len(), 1);
+        assert!(gens[0].tokens <= 6);
+    }
+
+    #[test]
+    fn batch_composition_does_not_change_outputs() {
+        // row independence: a prompt decodes identically alone and in a
+        // mixed batch — the property buckets used to guarantee by shape
+        let engine = tiny_engine(3);
+        let prompts: Vec<String> =
+            ["2 + 2 =", "9 - 4 =", "1 * 3 ="].iter().map(|s| s.to_string()).collect();
+        let together = greedy_decode(&engine, &prompts, 5).unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            let alone = greedy_decode(&engine, std::slice::from_ref(p), 5).unwrap();
+            assert_eq!(alone[0].text, together[i].text, "prompt {i}");
+            assert_eq!(alone[0].tokens, together[i].tokens);
+        }
+    }
+
+    #[test]
+    fn empty_and_oversized_inputs() {
+        let engine = tiny_engine(4);
+        assert!(greedy_decode(&engine, &[], 4).unwrap().is_empty());
+        let long = "1 + 2 = ".repeat(32);
+        assert!(greedy_decode(&engine, &[long], 8).is_err());
+    }
+}

@@ -1,0 +1,436 @@
+//! The native transformer forward pass over packed weights.
+//!
+//! Mirrors `python/compile/model.py::forward` with `method="merged"`
+//! operation-for-operation — pre-norm blocks, causal attention with the
+//! `-1e30` mask convention, tanh-approximate GELU, layer norm with
+//! `eps = 1e-5` — so its logits agree with the `fwd_merged_*` PJRT
+//! artifacts up to f32 summation order (the parity golden test in
+//! `tests/backend_parity.rs` pins this). The six quantized linears run
+//! through the fused packed GEMM; nothing here ever holds a dense f32
+//! weight matrix for them.
+//!
+//! The LoRA serving path (quantized base **plus** f32 adapter matmuls on
+//! every token — the baseline LoTA is compared against in Fig. 4) is
+//! supported by attaching the `lo_{slot}_a/_b` tensors with
+//! [`Engine::attach_lora`].
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::model::{self, ParamStore, SLOTS};
+use crate::tensor::{linalg, Tensor};
+
+use super::gemm::matmul_packed;
+use super::packed::PackedLinear;
+
+/// Slot indices within [`Layer::slots`], in [`SLOTS`] order.
+const WQ: usize = 0;
+const WK: usize = 1;
+const WV: usize = 2;
+const WO: usize = 3;
+const W_UP: usize = 4;
+const W_DOWN: usize = 5;
+
+/// One transformer block's serving-time parameters.
+struct Layer {
+    ln1_w: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_w: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// packed quantized linears in [`SLOTS`] order
+    slots: Vec<PackedLinear>,
+    /// optional f32 LoRA factors `(A, B)` per slot, same order
+    lora: Option<Vec<(Tensor, Tensor)>>,
+}
+
+/// The native inference engine: a merged quantized checkpoint held in
+/// deployment form, executable at **any** batch size with no AOT artifact.
+pub struct Engine {
+    cfg: ModelConfig,
+    pub n_bits: u32,
+    embed: Tensor,
+    pos: Tensor,
+    head: Tensor,
+    lnf_w: Vec<f32>,
+    lnf_b: Vec<f32>,
+    layers: Vec<Layer>,
+}
+
+impl Engine {
+    /// Build from a quantized [`ParamStore`] (the `q_{slot}_int|_s|_z`
+    /// layout every coordinator path produces).
+    pub fn from_store(cfg: &ModelConfig, store: &ParamStore, n_bits: u32) -> Result<Engine> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let mut slots = Vec::with_capacity(SLOTS.len());
+            for slot in SLOTS {
+                let ql = model::quant_layer(cfg, store, slot, li, n_bits)?;
+                slots.push(PackedLinear::from_quantized(&ql)?);
+            }
+            layers.push(Layer {
+                ln1_w: store.get("ln1_w")?.row(li).to_vec(),
+                ln1_b: store.get("ln1_b")?.row(li).to_vec(),
+                ln2_w: store.get("ln2_w")?.row(li).to_vec(),
+                ln2_b: store.get("ln2_b")?.row(li).to_vec(),
+                slots,
+                lora: None,
+            });
+        }
+        Ok(Engine {
+            cfg: cfg.clone(),
+            n_bits,
+            embed: store.get("embed")?.clone(),
+            pos: store.get("pos")?.clone(),
+            head: store.get("head")?.clone(),
+            lnf_w: store.get("lnf_w")?.data().to_vec(),
+            lnf_b: store.get("lnf_b")?.data().to_vec(),
+            layers,
+        })
+    }
+
+    /// Build from a merged checkpoint on disk. `n_bits` falls back to the
+    /// checkpoint's `__n_bits__` hint when not given.
+    pub fn from_checkpoint(
+        cfg: &ModelConfig,
+        path: &std::path::Path,
+        n_bits: Option<u32>,
+    ) -> Result<Engine> {
+        let store = model::checkpoint::load(path)?;
+        let Some(bits) = n_bits.or_else(|| model::checkpoint::n_bits_hint(&store)) else {
+            bail!("{path:?} carries no __n_bits__ hint — pass n_bits explicitly");
+        };
+        Engine::from_store(cfg, &store, bits)
+    }
+
+    /// Attach the 16-bit LoRA adapters (`lo_{slot}_a/_b`) so the forward
+    /// runs the quantized base **plus** the adapter matmuls — the
+    /// unmergeable baseline path of the Fig. 4 comparison.
+    pub fn attach_lora(&mut self, store: &ParamStore) -> Result<()> {
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            let mut mats = Vec::with_capacity(SLOTS.len());
+            for slot in SLOTS {
+                let a = store.get(&format!("lo_{slot}_a"))?.layer(li);
+                let b = store.get(&format!("lo_{slot}_b"))?.layer(li);
+                mats.push((a, b));
+            }
+            layer.lora = Some(mats);
+        }
+        Ok(())
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn has_lora(&self) -> bool {
+        self.layers.first().is_some_and(|l| l.lora.is_some())
+    }
+
+    /// Total bytes of packed grids + affine tables across all layers —
+    /// the deployment footprint this engine actually holds.
+    pub fn deployed_weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.slots.iter().map(|p| p.deployed_bytes()).sum::<usize>())
+            .sum()
+    }
+
+    /// Logits (B, T, V) for f32-coded token ids (B, T). `t` may be any
+    /// length up to `seq_len` — fixed-shape buckets do not exist here.
+    pub fn forward(&self, tokens: &Tensor) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        if tokens.shape().len() != 2 {
+            bail!("engine forward wants (B, T) tokens, got {:?}", tokens.shape());
+        }
+        let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+        if t == 0 || t > cfg.seq_len {
+            bail!("sequence length {t} outside 1..={}", cfg.seq_len);
+        }
+        let d = cfg.d_model;
+
+        // embedding + position table
+        let mut x = vec![0.0f32; b * t * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let id = tokens.data()[bi * t + ti];
+                if id < 0.0 || id.fract() != 0.0 || id as usize >= cfg.vocab {
+                    bail!("token {id} at ({bi},{ti}) outside vocab {}", cfg.vocab);
+                }
+                let row = &mut x[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                let erow = self.embed.row(id as usize);
+                let prow = self.pos.row(ti);
+                for k in 0..d {
+                    row[k] = erow[k] + prow[k];
+                }
+            }
+        }
+        let mut x = Tensor::new(&[b * t, d], x);
+
+        for layer in &self.layers {
+            x = self.block(&x, layer, b, t)?;
+        }
+        let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
+        let logits = linalg::matmul(&x, &self.head);
+        Ok(logits.reshape(&[b, t, cfg.vocab]))
+    }
+
+    /// One quantized linear, with the optional LoRA contribution
+    /// (`α/r = 2`, matching the graphs) riding on top.
+    fn linear(&self, x: &Tensor, layer: &Layer, slot: usize) -> Tensor {
+        let mut y = matmul_packed(x, &layer.slots[slot]);
+        if let Some(lora) = &layer.lora {
+            let (a, b) = &lora[slot];
+            let contrib = linalg::matmul(&linalg::matmul(x, a), b).scale(2.0);
+            y = y.add(&contrib);
+        }
+        y
+    }
+
+    fn block(&self, x: &Tensor, layer: &Layer, b: usize, t: usize) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+
+        let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
+        let q = self.linear(&xn, layer, WQ);
+        let k = self.linear(&xn, layer, WK);
+        let v = self.linear(&xn, layer, WV);
+
+        // causal multi-head attention over the (B·T, D) activations
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; b * t * d];
+        let mut scores = vec![0.0f32; t];
+        for bi in 0..b {
+            for hi in 0..h {
+                let off = hi * hd;
+                for ti in 0..t {
+                    let qrow = &q.data()[(bi * t + ti) * d + off..(bi * t + ti) * d + off + hd];
+                    // causal mask: softmax over positions 0..=ti only —
+                    // numerically identical to the graphs' -1e30 fill,
+                    // whose masked terms underflow to exactly 0 in f32
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (tj, s) in scores.iter_mut().enumerate().take(ti + 1) {
+                        let krow =
+                            &k.data()[(bi * t + tj) * d + off..(bi * t + tj) * d + off + hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += qrow[e] * krow[e];
+                        }
+                        *s = dot * scale;
+                        maxv = maxv.max(*s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut().take(ti + 1) {
+                        *s = (*s - maxv).exp();
+                        denom += *s;
+                    }
+                    let orow = &mut attn[(bi * t + ti) * d + off..(bi * t + ti) * d + off + hd];
+                    for (tj, s) in scores.iter().enumerate().take(ti + 1) {
+                        let w = s / denom;
+                        let vrow =
+                            &v.data()[(bi * t + tj) * d + off..(bi * t + tj) * d + off + hd];
+                        for e in 0..hd {
+                            orow[e] += w * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        let attn = Tensor::new(&[b * t, d], attn);
+        let x = x.add(&self.linear(&attn, layer, WO));
+
+        let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
+        let hmid = self.linear(&xn, layer, W_UP).map(gelu_tanh);
+        Ok(x.add(&self.linear(&hmid, layer, W_DOWN)))
+    }
+}
+
+/// Layer norm over the last axis, `eps = 1e-5` (matches `_layernorm` in
+/// the graphs).
+pub(crate) fn layernorm(x: &Tensor, w: &[f32], b: &[f32]) -> Tensor {
+    let d = w.len();
+    let m = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for mi in 0..m {
+        let row = &x.data()[mi * d..(mi + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = &mut out[mi * d..(mi + 1) * d];
+        for k in 0..d {
+            orow[k] = (row[k] - mu) * inv * w[k] + b[k];
+        }
+    }
+    Tensor::new(&[m, d], out)
+}
+
+/// Tanh-approximate GELU — `jax.nn.gelu`'s default, which the lowered
+/// graphs bake in.
+pub(crate) fn gelu_tanh(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::Rng;
+
+    fn tiny_engine(seed: u64) -> (ModelConfig, ParamStore, Engine) {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        let engine = Engine::from_store(&cfg, &store, 4).unwrap();
+        (cfg, store, engine)
+    }
+
+    fn rand_tokens(cfg: &ModelConfig, b: usize, t: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(&[b, t], (0..b * t).map(|_| rng.below(cfg.vocab) as f32).collect())
+    }
+
+    /// Dense reference: same math with dequantized f32 matrices via
+    /// `linalg::matmul` — the unpack-then-matmul path the engine replaces.
+    fn dense_forward(cfg: &ModelConfig, store: &ParamStore, tokens: &Tensor) -> Tensor {
+        let (b, t, d) = (tokens.shape()[0], tokens.shape()[1], cfg.d_model);
+        let embed = store.get("embed").unwrap();
+        let pos = store.get("pos").unwrap();
+        let mut x = vec![0.0f32; b * t * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let id = tokens.data()[bi * t + ti] as usize;
+                for k in 0..d {
+                    x[(bi * t + ti) * d + k] = embed.row(id)[k] + pos.row(ti)[k];
+                }
+            }
+        }
+        let mut x = Tensor::new(&[b * t, d], x);
+        for li in 0..cfg.n_layers {
+            let dense: Vec<Tensor> = SLOTS
+                .iter()
+                .map(|s| model::quant_layer(cfg, store, s, li, 4).unwrap().dequantize())
+                .collect();
+            let lin = |inp: &Tensor, slot: usize| linalg::matmul(inp, &dense[slot]);
+            let xn = layernorm(&x, store.get("ln1_w").unwrap().row(li), store.get("ln1_b").unwrap().row(li));
+            let q = lin(&xn, WQ);
+            let k = lin(&xn, WK);
+            let v = lin(&xn, WV);
+            let (h, hd) = (cfg.n_heads, cfg.head_dim());
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn = vec![0.0f32; b * t * d];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let off = hi * hd;
+                    for ti in 0..t {
+                        let mut sc = vec![0.0f32; ti + 1];
+                        let mut maxv = f32::NEG_INFINITY;
+                        for (tj, s) in sc.iter_mut().enumerate() {
+                            let mut dot = 0.0f32;
+                            for e in 0..hd {
+                                dot += q.at2(bi * t + ti, off + e) * k.at2(bi * t + tj, off + e);
+                            }
+                            *s = dot * scale;
+                            maxv = maxv.max(*s);
+                        }
+                        let denom: f32 = sc.iter_mut().map(|s| { *s = (*s - maxv).exp(); *s }).sum();
+                        for (tj, s) in sc.iter().enumerate() {
+                            for e in 0..hd {
+                                attn[(bi * t + ti) * d + off + e] +=
+                                    s / denom * v.at2(bi * t + tj, off + e);
+                            }
+                        }
+                    }
+                }
+            }
+            let attn = Tensor::new(&[b * t, d], attn);
+            x = x.add(&lin(&attn, WO));
+            let xn = layernorm(&x, store.get("ln2_w").unwrap().row(li), store.get("ln2_b").unwrap().row(li));
+            let hmid = lin(&xn, W_UP).map(gelu_tanh);
+            x = x.add(&lin(&hmid, W_DOWN));
+        }
+        let x = layernorm(&x, store.get("lnf_w").unwrap().data(), store.get("lnf_b").unwrap().data());
+        linalg::matmul(&x, store.get("head").unwrap()).reshape(&[b, t, cfg.vocab])
+    }
+
+    #[test]
+    fn fused_forward_matches_dense_reference() {
+        let (cfg, store, engine) = tiny_engine(1);
+        for (b, t) in [(1usize, 5usize), (3, 17), (5, 64)] {
+            let tokens = rand_tokens(&cfg, b, t, 7 + b as u64);
+            let got = engine.forward(&tokens).unwrap();
+            let want = dense_forward(&cfg, &store, &tokens);
+            assert_eq!(got.shape(), &[b, t, cfg.vocab]);
+            assert!(
+                got.allclose(&want, 1e-3, 1e-3),
+                "b={b} t={t}: max diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn arbitrary_batch_sizes_accepted() {
+        let (cfg, _, engine) = tiny_engine(2);
+        for b in [1usize, 3, 5, 11] {
+            let logits = engine.forward(&rand_tokens(&cfg, b, 9, b as u64)).unwrap();
+            assert_eq!(logits.shape(), &[b, 9, cfg.vocab]);
+            assert!(logits.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let (cfg, _, engine) = tiny_engine(3);
+        let tokens = rand_tokens(&cfg, 2, 12, 9);
+        assert_eq!(engine.forward(&tokens).unwrap(), engine.forward(&tokens).unwrap());
+    }
+
+    #[test]
+    fn lora_path_changes_logits() {
+        let (cfg, store, mut engine) = tiny_engine(4);
+        let mut with_adapters = store.clone();
+        let mut rng = Rng::new(5);
+        model::init_adapters(&cfg, crate::config::Method::Lora, &mut rng, &mut with_adapters);
+        // force a non-trivial B so the adapter actually contributes
+        for slot in SLOTS {
+            let name = format!("lo_{slot}_b");
+            let t = with_adapters.get_mut(&name).unwrap();
+            for v in t.data_mut() {
+                *v = 0.01;
+            }
+        }
+        let tokens = rand_tokens(&cfg, 2, 8, 6);
+        let merged_logits = engine.forward(&tokens).unwrap();
+        engine.attach_lora(&with_adapters).unwrap();
+        assert!(engine.has_lora());
+        let lora_logits = engine.forward(&tokens).unwrap();
+        assert!(merged_logits.max_abs_diff(&lora_logits) > 1e-4);
+    }
+
+    #[test]
+    fn rejects_bad_tokens_and_shapes() {
+        let (cfg, _, engine) = tiny_engine(6);
+        assert!(engine.forward(&Tensor::zeros(&[4])).is_err());
+        assert!(engine.forward(&Tensor::zeros(&[1, cfg.seq_len + 1])).is_err());
+        let bad = Tensor::full(&[1, 4], cfg.vocab as f32);
+        assert!(engine.forward(&bad).is_err());
+    }
+
+    #[test]
+    fn deployed_bytes_far_below_f32() {
+        let (cfg, _, engine) = tiny_engine(8);
+        let f32_bytes: usize = cfg
+            .slots()
+            .iter()
+            .map(|(_, din, dout)| din * dout * 4 * cfg.n_layers)
+            .sum();
+        // 4-bit grid ≈ f32/8 and the tiny preset's dense gs=16 tables add
+        // another f32/8 — well under a third of the fp32 footprint
+        assert!(engine.deployed_weight_bytes() < f32_bytes / 3);
+    }
+}

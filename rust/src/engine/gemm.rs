@@ -1,0 +1,184 @@
+//! The fused group-dequant × matmul kernel — the native engine's hot path.
+//!
+//! Computes `Y = X · (s ⊙ W_int + z)` directly from the column-packed
+//! `u32` grid, without ever materializing the dense f32 weight matrix.
+//! The affine factors distribute over the group sum:
+//!
+//! ```text
+//! y[m,j] = Σ_g ( s[g,j] · Σ_{i∈g} x[m,i]·w_int[i,j]  +  z[g,j] · Σ_{i∈g} x[m,i] )
+//! ```
+//!
+//! so the kernel needs only (a) the per-group integer dot products, decoded
+//! in-register from one column-sized code buffer, and (b) the per-row group
+//! sums of `X`, computed once and reused by every output column. Scale and
+//! zero are applied per group in-register — the f32 weights never exist.
+//!
+//! Blocking/parallelism: output columns are split into contiguous chunks
+//! and fanned out over `std::thread::scope` threads; each thread owns its
+//! chunk's output block, so there is no sharing and no locking. The group
+//! loop doubles as the cache block along the reduction dimension.
+
+use crate::tensor::Tensor;
+
+use super::packed::PackedLinear;
+
+/// Work threshold (multiply-accumulates) below which threading costs more
+/// than it saves — decode-sized calls stay on the caller's thread.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Fused packed GEMM: `x` is (M, Din), returns (M, Dout).
+pub fn matmul_packed(x: &Tensor, w: &PackedLinear) -> Tensor {
+    let work = x.rows() * x.cols() * w.dout();
+    let threads = if work < PAR_THRESHOLD {
+        1
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    matmul_packed_with_threads(x, w, threads)
+}
+
+/// [`matmul_packed`] with an explicit thread budget (bench / test knob).
+pub fn matmul_packed_with_threads(x: &Tensor, w: &PackedLinear, threads: usize) -> Tensor {
+    let (m, din) = (x.rows(), x.cols());
+    assert_eq!(din, w.din(), "packed matmul inner dims {din} vs {}", w.din());
+    let dout = w.dout();
+    let xg = group_sums(x, w.group_size, w.n_groups());
+
+    let threads = threads.clamp(1, dout.max(1));
+    if threads == 1 {
+        let block = gemm_block(x, &xg, w, 0, dout);
+        return Tensor::new(&[m, dout], block);
+    }
+
+    // Fan output-column chunks out over scoped threads; each returns its
+    // own (M × chunk) block which the scatter below interleaves into the
+    // row-major output.
+    let chunk = dout.div_ceil(threads);
+    let blocks: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let mut j0 = 0;
+        while j0 < dout {
+            let j1 = (j0 + chunk).min(dout);
+            let xg_ref = &xg;
+            handles.push(scope.spawn(move || (j0, j1, gemm_block(x, xg_ref, w, j0, j1))));
+            j0 = j1;
+        }
+        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    });
+
+    let mut out = vec![0.0f32; m * dout];
+    for (j0, j1, block) in blocks {
+        let width = j1 - j0;
+        for mi in 0..m {
+            out[mi * dout + j0..mi * dout + j1]
+                .copy_from_slice(&block[mi * width..(mi + 1) * width]);
+        }
+    }
+    Tensor::new(&[m, dout], out)
+}
+
+/// Per-row group sums of the activations: `xg[m,g] = Σ_{i∈g} x[m,i]`.
+fn group_sums(x: &Tensor, group_size: usize, n_groups: usize) -> Vec<f32> {
+    let m = x.rows();
+    let mut xg = vec![0.0f32; m * n_groups];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        let grow = &mut xg[mi * n_groups..(mi + 1) * n_groups];
+        for (g, chunk) in xrow.chunks_exact(group_size).enumerate() {
+            grow[g] = chunk.iter().sum();
+        }
+    }
+    xg
+}
+
+/// Serial kernel for output columns `[j0, j1)`: returns the (M × width)
+/// block in chunk-local row-major order.
+fn gemm_block(x: &Tensor, xg: &[f32], w: &PackedLinear, j0: usize, j1: usize) -> Vec<f32> {
+    let (m, din) = (x.rows(), x.cols());
+    let gs = w.group_size;
+    let g = w.n_groups();
+    let dout = w.dout();
+    let (scales, zeros) = (w.scales(), w.zeros());
+    let width = j1 - j0;
+    let mut out = vec![0.0f32; m * width];
+    // one column of integer codes — the only decoded weight storage
+    let mut codes = vec![0.0f32; din];
+    for j in j0..j1 {
+        w.decode_col_into(j, &mut codes);
+        for mi in 0..m {
+            let xrow = x.row(mi);
+            let xgrow = &xg[mi * g..(mi + 1) * g];
+            let mut acc = 0.0f32;
+            for gi in 0..g {
+                let s = scales[gi * dout + j];
+                let z = zeros[gi * dout + j];
+                let mut dot = 0.0f32;
+                let base = gi * gs;
+                for i in 0..gs {
+                    dot += xrow[base + i] * codes[base + i];
+                }
+                acc += s * dot + z * xgrow[gi];
+            }
+            out[mi * width + (j - j0)] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::{linalg, Rng};
+
+    fn setup(seed: u64, m: usize, din: usize, dout: usize, gs: usize, bits: u32) -> (Tensor, PackedLinear, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, bits);
+        let x = Tensor::new(&[m, din], rng.normal_vec(m * din, 1.0));
+        let dense = linalg::matmul(&x, &ql.dequantize());
+        (x, PackedLinear::from_quantized(&ql).unwrap(), dense)
+    }
+
+    #[test]
+    fn fused_matches_unpack_then_matmul() {
+        for bits in [2u32, 3, 4] {
+            for (m, din, dout, gs) in [(1, 32, 16, 8), (7, 64, 48, 16), (37, 96, 33, 32)] {
+                let (x, pl, dense) = setup(bits as u64 + m as u64, m, din, dout, gs, bits);
+                let fused = matmul_packed(&x, &pl);
+                assert!(
+                    fused.allclose(&dense, 1e-3, 1e-4),
+                    "bits={bits} m={m} din={din} dout={dout}: max diff {}",
+                    fused.max_abs_diff(&dense)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let (x, pl, _) = setup(11, 13, 64, 50, 16, 4);
+        let serial = matmul_packed_with_threads(&x, &pl, 1);
+        for threads in [2usize, 3, 8, 64] {
+            let par = matmul_packed_with_threads(&x, &pl, threads);
+            // identical summation order per column ⇒ bitwise equality
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_activations_hit_only_zero_terms() {
+        let (_, pl, _) = setup(3, 1, 32, 8, 8, 4);
+        let x = Tensor::zeros(&[4, 32]);
+        let y = matmul_packed(&x, &pl);
+        assert!(y.data().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn inner_dim_mismatch_panics() {
+        let (_, pl, _) = setup(5, 2, 32, 8, 8, 4);
+        let x = Tensor::zeros(&[2, 16]);
+        matmul_packed(&x, &pl);
+    }
+}

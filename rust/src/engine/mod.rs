@@ -1,0 +1,39 @@
+//! Native packed-integer inference engine — the second serving backend.
+//!
+//! The PJRT path executes AOT-lowered HLO at fixed batch buckets and
+//! computes on f32-coded integers, which leaves the packed `u32`
+//! deployment representation of `quant/pack.rs` unused at inference time.
+//! This module is the deployment story the paper's §4.3 efficiency claim
+//! actually makes: after the lossless merge the model *is* its low-bit
+//! codes, and the engine computes directly on them —
+//!
+//! * [`packed::PackedLinear`] — column-packed `u32` grid + per-group
+//!   scale/zero tables, built once from a [`crate::quant::QuantizedLinear`];
+//! * [`gemm::matmul_packed`] — the fused group-dequant × matmul kernel:
+//!   codes decoded in-register, affine factors applied per group, output
+//!   columns fanned out over `std::thread::scope`, and no dense f32 weight
+//!   matrix ever materialized;
+//! * [`forward::Engine`] — the full transformer forward (embedding, layer
+//!   norms, causal attention, GELU MLP, logits) mirroring the lowered
+//!   graphs operation-for-operation, with an optional LoRA adapter path
+//!   for the Fig. 4 baseline;
+//! * [`decode::greedy_decode`] — recompute greedy decoding at **any**
+//!   batch size, no bucket policy and no artifacts directory required.
+//!
+//! When to use which backend: the PJRT path is the reference executor —
+//! it shares one lowered graph with training and is what the golden /
+//! integration suites pin numerically; the native engine is for serving a
+//! *merged* checkpoint where batch shapes are unpredictable, artifacts are
+//! unavailable, or memory must stay at the packed footprint. The two are
+//! interchangeable by construction: `tests/backend_parity.rs` holds their
+//! logits together within f32 tolerance on the same checkpoint.
+
+pub mod decode;
+pub mod forward;
+pub mod gemm;
+pub mod packed;
+
+pub use decode::{greedy_decode, Generation};
+pub use forward::Engine;
+pub use gemm::{matmul_packed, matmul_packed_with_threads};
+pub use packed::PackedLinear;

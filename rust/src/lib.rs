@@ -20,12 +20,33 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the graphs
 //! once, and the `lota` binary loads `artifacts/*.hlo.txt` through PJRT.
+//!
+//! ## Serving backends
+//!
+//! Two executors sit behind the [`serve::ServeBackend`] trait:
+//!
+//! * **PJRT** ([`serve::PjrtBackend`]) — the AOT artifacts, compiled at
+//!   fixed batch buckets. The reference executor: training and inference
+//!   share one lowered graph, so this is what the golden and integration
+//!   suites pin numerically. Requires the `artifacts/` directory.
+//! * **Native** ([`serve::NativeBackend`], built on [`engine`]) — a
+//!   pure-Rust engine that computes straight off the bit-packed `u32` grid
+//!   with a fused group-dequant × matmul kernel. Any batch size, no
+//!   artifacts, weights held at the deployed (packed) footprint — the
+//!   serving shape the paper's §4.3 efficiency claim describes.
+//!
+//! Use PJRT when artifacts exist and numbers must match training
+//! bit-for-bit; use the native engine to serve merged checkpoints under
+//! unpredictable batch shapes or without an artifacts directory. The
+//! parity golden test (`tests/backend_parity.rs`) holds the two backends'
+//! logits together on the same checkpoint.
 
 pub mod adapter;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod model;
 pub mod optim;
 pub mod quant;

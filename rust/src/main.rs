@@ -7,7 +7,7 @@
 //! lota quantize  --model tiny --bits 4 --base checkpoints/base_tiny_200.ckpt
 //! lota finetune  --model tiny --bits 4 --method lota --task arith --steps 100
 //! lota eval      --model tiny --ckpt <ckpt> --suite mmlu
-//! lota serve     --model tiny --ckpt <ckpt> --path merged --requests 32
+//! lota serve     --model tiny --ckpt <ckpt> --path merged --backend native --requests 32
 //! lota table1    --model tiny --steps 40      # regenerate the main table
 //! lota info                                    # artifact + config summary
 //! ```
@@ -30,7 +30,7 @@ use lota_qaf::coordinator::{
 use lota_qaf::data::{mmlu_like, tasks};
 use lota_qaf::model::{self, checkpoint};
 use lota_qaf::runtime::Runtime;
-use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 /// `--key value` argument bag.
@@ -140,7 +140,8 @@ COMMANDS
             [--steps 100] [--omega-frac 0.75] [--sigma-init 0.05] [--lr 5e-4]
             [--base <ckpt>] [--out <ckpt>] [--merge true]
   eval      --model tiny --ckpt <ckpt> --suite mmlu|arith|sql|datatotext [--n 64]
-  serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--requests 32] [--max-new 12]
+  serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--backend pjrt|native]
+            [--bits 4] [--config <exp.toml>] [--requests 32] [--max-new 12]
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -213,7 +214,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 20250710)? as u64,
         task: args.get("task", "recovery"),
         artifacts_dir: artifacts_dir(args).to_string_lossy().into_owned(),
-        checkpoint_dir: None,
+        ..ExperimentConfig::default()
     };
     let rt = Runtime::new(&artifacts_dir(args))?;
 
@@ -314,28 +315,51 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model_name = args.get("model", "tiny");
+    // serving defaults may come from an experiment TOML (--config:
+    // `model`, `n_bits`, `serve_backend`); explicit flags win
+    let exp = match args.opt("config") {
+        Some(p) => ExperimentConfig::from_toml(&lota_qaf::config::TomlDoc::parse(
+            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+        )?)?,
+        None => ExperimentConfig::default(),
+    };
+    let model_name = args.get("model", &exp.model);
     let cfg = preset(&model_name)?;
     let store = checkpoint::load(Path::new(
         args.opt("ckpt").context("--ckpt <path> required")?,
     ))?;
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let backend = match args.opt("backend") {
+        Some(s) => lota_qaf::config::Backend::parse(s)?,
+        None => exp.backend,
+    };
     let path = match args.get("path", "merged").as_str() {
         "merged" => ServePath::Merged,
         "lora" => ServePath::LoraAdapter,
         other => bail!("unknown serve path '{other}'"),
     };
+    // bit width for the native engine's packed grids: flag, else the
+    // checkpoint's own hint, else the experiment config
+    let hint = checkpoint::n_bits_hint(&store);
+    let bits = args.get_usize("bits", hint.unwrap_or(exp.n_bits) as usize)? as u32;
     let n = args.get_usize("requests", 32)?;
     let max_new = args.get_usize("max-new", 12)?;
+    // the native engine serves straight from the checkpoint — only the
+    // PJRT backend needs an artifacts directory
+    let rt = match backend {
+        lota_qaf::config::Backend::Pjrt => Some(Runtime::new(&artifacts_dir(args))?),
+        lota_qaf::config::Backend::Native => None,
+    };
+    let opts = ServeOptions::new(path, max_new).backend(backend).bits(bits);
     let gen = tasks::task_by_name("arith")?;
     let mut rng = Rng::new(123);
     let prompts: Vec<String> = (0..n)
         .map(|_| gen.sample(&mut rng, tasks::Split::Test).prompt)
         .collect();
-    let report = serve_batch(&rt, &cfg, &store, path, &prompts, max_new)?;
+    let report = serve_batch(rt.as_ref(), &cfg, &store, &opts, &prompts)?;
     println!(
-        "served {} requests in {:.2}s: {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s",
+        "served {} requests [{}] in {:.2}s: {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s",
         report.requests,
+        backend.as_str(),
         report.wall_secs,
         report.tokens_per_sec,
         report.requests_per_sec,

@@ -22,6 +22,11 @@ use crate::tensor::Tensor;
 const MAGIC: &[u8; 4] = b"LOTA";
 const VERSION: u32 = 2;
 
+/// Name of the 1-element tensor recording the bit width of quantized
+/// checkpoints, so a merged checkpoint is self-describing — the native
+/// engine reads it back through [`n_bits_hint`] to pack the grids.
+pub const N_BITS_HINT: &str = "__n_bits__";
+
 /// Marker flag for packed integer tensors within the file.
 const FLAG_DENSE: u32 = 0;
 const FLAG_PACKED: u32 = 1;
@@ -36,17 +41,29 @@ fn xor_fold(bytes: &[u8]) -> u32 {
 }
 
 /// Save a store. Tensors whose name ends in `_int` and whose values all
-/// fit `n_bits` are bit-packed on disk.
+/// fit `n_bits` are bit-packed on disk; a [`N_BITS_HINT`] tensor is
+/// appended so the bit width survives the round trip.
 pub fn save(store: &ParamStore, path: &Path, n_bits: Option<u32>) -> Result<()> {
     let f = File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     let mut checksum = 0u32;
 
+    // a fresh `n_bits` wins over any hint already in the store, so
+    // re-quantized checkpoints never carry a stale bit width
+    let hint_entry =
+        n_bits.map(|bits| (N_BITS_HINT.to_string(), Tensor::from_scalar(bits as f32)));
+    let drop_stored_hint = hint_entry.is_some() && store.contains(N_BITS_HINT);
+    let count = store.len() - drop_stored_hint as usize + hint_entry.is_some() as usize;
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(store.len() as u32).to_le_bytes())?;
+    w.write_all(&(count as u32).to_le_bytes())?;
 
-    for (name, t) in store.iter() {
+    let entries = store
+        .iter()
+        .filter(|(n, _)| !(drop_stored_hint && n.as_str() == N_BITS_HINT))
+        .map(|(n, t)| (n.as_str(), t))
+        .chain(hint_entry.iter().map(|(n, t)| (n.as_str(), t)));
+    for (name, t) in entries {
         let name_b = name.as_bytes();
         w.write_all(&(name_b.len() as u32).to_le_bytes())?;
         w.write_all(name_b)?;
@@ -81,6 +98,18 @@ pub fn save(store: &ParamStore, path: &Path, n_bits: Option<u32>) -> Result<()> 
     w.write_all(&checksum.to_le_bytes())?;
     w.flush()?;
     Ok(())
+}
+
+/// Read back the bit width a quantized checkpoint was saved with, if the
+/// store (typically one returned by [`load`]) carries the hint tensor.
+pub fn n_bits_hint(store: &ParamStore) -> Option<u32> {
+    let t = store.get(N_BITS_HINT).ok()?;
+    let v = *t.data().first()?;
+    if v.fract() == 0.0 && (1.0..=8.0).contains(&v) {
+        Some(v as u32)
+    } else {
+        None
+    }
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -207,6 +236,36 @@ mod tests {
         }
         std::fs::remove_file(&p_dense).ok();
         std::fs::remove_file(&p_packed).ok();
+    }
+
+    #[test]
+    fn n_bits_hint_survives_roundtrip() {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(6);
+        let fp = super::super::init_fp(&cfg, &mut rng);
+        let q = super::super::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(crate::quant::rtn_quantize(w, cfg.group_size, 3))
+        })
+        .unwrap();
+        assert_eq!(n_bits_hint(&q), None);
+        let path = tmp("hint");
+        save(&q, &path, Some(3)).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(n_bits_hint(&loaded), Some(3));
+        // re-saving a store that already carries the hint doesn't dup it
+        let path2 = tmp("hint2");
+        save(&loaded, &path2, Some(3)).unwrap();
+        let again = load(&path2).unwrap();
+        assert_eq!(again.len(), loaded.len());
+        // and a fresh bit width replaces a stale stored hint
+        let path3 = tmp("hint3");
+        save(&loaded, &path3, Some(4)).unwrap();
+        let requant = load(&path3).unwrap();
+        assert_eq!(n_bits_hint(&requant), Some(4));
+        assert_eq!(requant.len(), loaded.len());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+        std::fs::remove_file(&path3).ok();
     }
 
     #[test]

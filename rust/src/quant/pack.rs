@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 /// Number of u32 words needed for `n` codes of `bits` width.
 pub fn packed_len_u32(n: usize, bits: u32) -> usize {
-    ((n * bits as usize) + 31) / 32
+    (n * bits as usize).div_ceil(32)
 }
 
 /// Pack f32-coded integers (each in `[0, 2^bits)`) into a dense u32 stream.
@@ -72,7 +72,8 @@ pub fn unpack_ints(words: &[u32], n: usize, bits: u32) -> Result<Vec<f32>> {
 /// benches (Fig. 4) and Fig. 6 memory rows.
 pub fn deployed_bytes(din: usize, dout: usize, group_size: usize, bits: u32) -> usize {
     let grid = packed_len_u32(din * dout, bits) * 4;
-    let groups = din / group_size;
+    // a trailing partial group still carries a full scale/zero row
+    let groups = din.div_ceil(group_size);
     let params = groups * dout * 4 * 2; // scales + zeros
     grid + params
 }
@@ -131,5 +132,17 @@ mod tests {
         assert!(b2 < b3 && b3 < b4);
         // and all far below f32 (4 bytes/weight)
         assert!(b4 < 1024 * 1024 * 4 / 4);
+    }
+
+    #[test]
+    fn deployed_bytes_counts_partial_groups() {
+        // Din = 100, gs = 64: the tail rows 64..100 form a second group
+        // whose scale/zero tables must be counted (was truncated to 1)
+        let got = deployed_bytes(100, 8, 64, 4);
+        let grid = packed_len_u32(100 * 8, 4) * 4;
+        assert_eq!(got, grid + 2 * 8 * 4 * 2);
+        // exact multiples are unchanged by the div_ceil
+        let exact = deployed_bytes(128, 8, 64, 4);
+        assert_eq!(exact, packed_len_u32(128 * 8, 4) * 4 + 2 * 8 * 4 * 2);
     }
 }

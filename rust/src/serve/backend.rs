@@ -1,0 +1,213 @@
+//! The serving backend abstraction: one trait, two executors.
+//!
+//! [`PjrtBackend`] wraps the original path — fixed-shape AOT artifacts
+//! compiled per batch bucket, executed through the PJRT CPU client.
+//! [`NativeBackend`] wraps the packed-integer engine (`crate::engine`),
+//! which computes directly on the merged low-bit weights and accepts any
+//! batch size. The [`Server`](super::Server) drains its queue through
+//! whichever backend it was built with; the parity golden test pins the
+//! two to the same logits on the same checkpoint.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator;
+use crate::engine::{self, Engine};
+use crate::model::ParamStore;
+use crate::runtime::{Executable, Runtime};
+
+use super::batcher::BucketPolicy;
+use super::ServePath;
+
+pub use crate::engine::Generation;
+
+/// A serving executor: turns a batch of prompts into finished generations.
+pub trait ServeBackend {
+    /// Short name for logs and report tables.
+    fn label(&self) -> &'static str;
+
+    /// The batch sizes this backend can run: a fixed bucket set for
+    /// compiled artifacts, or the adaptive policy when any size works.
+    fn bucket_policy(&self) -> BucketPolicy;
+
+    /// Greedy-decode one batch. Returns exactly `prompts.len()` entries,
+    /// each carrying its generated-token count.
+    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>>;
+}
+
+/// The AOT path: compiled `fwd_*` artifacts per batch bucket.
+pub struct PjrtBackend<'a> {
+    rt: &'a Runtime,
+    cfg: ModelConfig,
+    store: &'a ParamStore,
+    /// compiled executables per bucket size
+    exes: BTreeMap<usize, Arc<Executable>>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    /// Discover the available buckets for this (config, path) from the
+    /// manifest and compile them.
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: &ModelConfig,
+        store: &'a ParamStore,
+        path: ServePath,
+    ) -> Result<PjrtBackend<'a>> {
+        let prefix = path.artifact_prefix();
+        let mut exes = BTreeMap::new();
+        for spec in rt.manifest().of_kind("fwd") {
+            if spec.cfg.as_deref() == Some(cfg.name.as_str())
+                && spec.name.starts_with(prefix)
+                && spec
+                    .method
+                    .as_deref()
+                    .map(|m| prefix.ends_with(m))
+                    .unwrap_or(false)
+            {
+                if let Some(b) = spec.batch {
+                    exes.insert(b, rt.load(&spec.name)?);
+                }
+            }
+        }
+        if exes.is_empty() {
+            bail!("no {prefix} artifacts for config {}", cfg.name);
+        }
+        let buckets: Vec<usize> = exes.keys().copied().collect();
+        log::info!("pjrt backend[{}/{prefix}] buckets {:?}", cfg.name, buckets);
+        Ok(PjrtBackend { rt, cfg: cfg.clone(), store, exes })
+    }
+}
+
+impl ServeBackend for PjrtBackend<'_> {
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn bucket_policy(&self) -> BucketPolicy {
+        BucketPolicy::new(self.exes.keys().copied().collect())
+            .expect("non-empty bucket set by construction")
+    }
+
+    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
+        // smallest compiled bucket that holds the batch; the decoder chunks
+        // by the executable's batch if the queue handed us more than that
+        let n = prompts.len();
+        let exe = self
+            .exes
+            .range(n..)
+            .next()
+            .or_else(|| self.exes.iter().next_back())
+            .map(|(_, e)| e.clone())
+            .expect("non-empty bucket set by construction");
+        let decoded = coordinator::greedy_decode_counted(
+            self.rt,
+            &exe,
+            self.store,
+            &self.cfg,
+            prompts,
+            max_new,
+            None,
+        )?;
+        Ok(decoded.into_iter().map(|(text, tokens)| Generation { text, tokens }).collect())
+    }
+}
+
+/// The native path: the packed-integer engine, no artifacts, no buckets.
+pub struct NativeBackend {
+    engine: Engine,
+}
+
+impl NativeBackend {
+    /// Build the engine from a quantized store. For the LoRA serving path
+    /// the `lo_{slot}_a/_b` tensors are attached so every forward pays the
+    /// adapter matmuls, mirroring the artifact pair of the Fig. 4 setup.
+    pub fn new(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        path: ServePath,
+        n_bits: u32,
+    ) -> Result<NativeBackend> {
+        let mut engine = Engine::from_store(cfg, store, n_bits)?;
+        if path == ServePath::LoraAdapter {
+            engine.attach_lora(store)?;
+        }
+        log::info!(
+            "native backend[{}] {}-bit, {} packed weight bytes{}",
+            cfg.name,
+            n_bits,
+            engine.deployed_weight_bytes(),
+            if engine.has_lora() { " + lora adapters" } else { "" }
+        );
+        Ok(NativeBackend { engine })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl ServeBackend for NativeBackend {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn bucket_policy(&self) -> BucketPolicy {
+        BucketPolicy::adaptive()
+    }
+
+    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
+        engine::greedy_decode(&self.engine, prompts, max_new)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::model;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::Rng;
+
+    fn tiny_store(seed: u64) -> (ModelConfig, ParamStore) {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        (cfg, store)
+    }
+
+    #[test]
+    fn native_backend_serves_without_artifacts() {
+        let (cfg, store) = tiny_store(1);
+        let be = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        assert_eq!(be.label(), "native");
+        let prompts: Vec<String> = (0..5).map(|i| format!("{i} + 1 =")).collect();
+        let gens = be.decode(&prompts, 4).unwrap();
+        assert_eq!(gens.len(), 5);
+        assert!(gens.iter().all(|g| g.tokens <= 4));
+    }
+
+    #[test]
+    fn native_lora_path_attaches_adapters() {
+        let (cfg, mut store) = tiny_store(2);
+        let mut rng = Rng::new(3);
+        model::init_adapters(&cfg, crate::config::Method::Lora, &mut rng, &mut store);
+        let be = NativeBackend::new(&cfg, &store, ServePath::LoraAdapter, 4).unwrap();
+        assert!(be.engine().has_lora());
+        let merged = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        assert!(!merged.engine().has_lora());
+    }
+
+    #[test]
+    fn native_policy_is_adaptive() {
+        let (cfg, store) = tiny_store(4);
+        let be = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        assert_eq!(be.bucket_policy().pick(17), Some(17));
+    }
+}

@@ -23,10 +23,12 @@ pub struct Request {
     pub arrival: Instant,
 }
 
-/// The available batch buckets (sorted ascending).
+/// The available batch buckets (sorted ascending), or the adaptive policy
+/// for backends that run any batch size natively.
 #[derive(Clone, Debug)]
 pub struct BucketPolicy {
     buckets: Vec<usize>,
+    adaptive: bool,
 }
 
 impl BucketPolicy {
@@ -36,7 +38,17 @@ impl BucketPolicy {
         if buckets.is_empty() || buckets[0] == 0 {
             bail!("bucket list must be non-empty with positive sizes");
         }
-        Ok(BucketPolicy { buckets })
+        Ok(BucketPolicy { buckets, adaptive: false })
+    }
+
+    /// No fixed shapes: every drain step takes the whole queue as one
+    /// batch (the native engine's mode — no padding, no re-queue).
+    pub fn adaptive() -> BucketPolicy {
+        BucketPolicy { buckets: Vec::new(), adaptive: true }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
     }
 
     pub fn buckets(&self) -> &[usize] {
@@ -55,6 +67,9 @@ impl BucketPolicy {
     pub fn pick(&self, queued: usize) -> Option<usize> {
         if queued == 0 {
             return None;
+        }
+        if self.adaptive {
+            return Some(queued);
         }
         let largest = *self.buckets.last().unwrap();
         if queued >= largest {
@@ -125,6 +140,25 @@ mod tests {
         assert_eq!(p.pick(17), Some(32)); // 32 ≤ 2×17: one invocation
         assert_eq!(p.pick(40), Some(32)); // fill the big bucket first
         assert_eq!(p.pick(100), Some(32));
+    }
+
+    #[test]
+    fn adaptive_policy_takes_the_whole_queue() {
+        let p = BucketPolicy::adaptive();
+        assert!(p.is_adaptive());
+        assert_eq!(p.pick(0), None);
+        for q in [1usize, 7, 33, 1000] {
+            assert_eq!(p.pick(q), Some(q));
+        }
+        // one drain step, no padding, FIFO preserved
+        let mut b = DynamicBatcher::new(BucketPolicy::adaptive());
+        for i in 0..9 {
+            b.push(format!("p{i}"));
+        }
+        let (bucket, reqs) = b.next_batch().unwrap();
+        assert_eq!(bucket, 9);
+        assert_eq!(reqs.len(), 9);
+        assert!(b.next_batch().is_none());
     }
 
     #[test]

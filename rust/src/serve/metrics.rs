@@ -1,6 +1,12 @@
 //! Serving metrics: per-request latency percentiles and aggregate token
 //! throughput — the numbers behind the paper's Fig. 4 efficiency panel
 //! (tokens/s by batch size, speedup of the merged path over LoRA's).
+//!
+//! "Tokens" throughout this module means **generated tokens**, taken
+//! from each response's `tokens_decoded`. Earlier revisions counted
+//! decoded characters, which silently diverges whenever an untrained or
+//! heavily-quantized model emits special/unused vocab ids that the
+//! detokenizer drops.
 
 use super::Response;
 
@@ -33,6 +39,7 @@ impl LatencyStats {
 #[derive(Clone, Debug, Default)]
 pub struct ThroughputReport {
     pub requests: usize,
+    /// total tokens generated across all responses
     pub tokens: usize,
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
@@ -74,7 +81,7 @@ mod tests {
             id,
             text: String::new(),
             latency_secs: lat,
-            tokens_generated: toks,
+            tokens_decoded: toks,
         }
     }
 

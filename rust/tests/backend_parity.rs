@@ -1,0 +1,134 @@
+//! Backend parity goldens: the same merged checkpoint must produce the
+//! same numbers through the PJRT artifacts and the native packed-integer
+//! engine — the interpreter-vs-AOT parity contract, inverted: here the
+//! AOT artifact is the reference and the native engine must match it.
+//!
+//! Like the other integration suites, these tests need `make artifacts`.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use lota_qaf::adapter::{lota_merge, TernaryAdapter};
+use lota_qaf::config::{preset, Backend, ModelConfig};
+use lota_qaf::coordinator;
+use lota_qaf::engine::Engine;
+use lota_qaf::model::{self, ParamStore};
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::runtime::Runtime;
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
+use lota_qaf::tensor::{Rng, Tensor};
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir).expect("artifacts missing — run `make artifacts`")
+    })
+}
+
+/// A merged tiny checkpoint: quantize, then fold non-trivial ternary
+/// adapters into the grid so the parity surface isn't the identity merge.
+fn merged_tiny(seed: u64) -> (ModelConfig, ParamStore) {
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let mut store =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
+            .unwrap();
+    for (slot, din, dout) in cfg.slots() {
+        for li in 0..cfg.n_layers {
+            let ql = model::quant_layer(&cfg, &store, slot, li, 4).unwrap();
+            let mut ta = TernaryAdapter::init(din, dout, cfg.rank, &mut rng);
+            ta.b = Tensor::new(
+                &[cfg.rank, dout],
+                (0..cfg.rank * dout).map(|_| rng.below(3) as f32 - 1.0).collect(),
+            );
+            let merged = lota_merge(&ql, &ta, 0.75 * cfg.rank as f32);
+            model::set_quant_layer(&mut store, slot, li, &merged).unwrap();
+        }
+    }
+    (cfg, store)
+}
+
+fn rand_tokens(cfg: &ModelConfig, b: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(
+        &[b, cfg.seq_len],
+        (0..b * cfg.seq_len).map(|_| rng.below(cfg.vocab) as f32).collect(),
+    )
+}
+
+/// The golden: identical logits (within f32 tolerance) and identical
+/// argmax tokens at every position, through two different executors.
+#[test]
+fn merged_logits_agree_across_backends() {
+    let rt = runtime();
+    let (cfg, store) = merged_tiny(41);
+    let exe = rt.load("fwd_merged_tiny_b1").unwrap();
+    let engine = Engine::from_store(&cfg, &store, 4).unwrap();
+
+    let tokens = rand_tokens(&cfg, 1, 7);
+    let pjrt = coordinator::run_forward(rt, &exe, &store, &tokens, None).unwrap();
+    let native = engine.forward(&tokens).unwrap();
+
+    assert_eq!(pjrt.shape(), native.shape());
+    let max_diff = pjrt.max_abs_diff(&native);
+    assert!(max_diff < 1e-2, "backend logits diverge: max abs diff {max_diff}");
+
+    let v = cfg.vocab;
+    let argmax = |t: &Tensor, i: usize| -> usize {
+        t.data()[i * v..(i + 1) * v]
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(k, _)| k)
+            .unwrap()
+    };
+    for i in 0..cfg.seq_len {
+        assert_eq!(argmax(&pjrt, i), argmax(&native, i), "argmax differs at position {i}");
+    }
+}
+
+/// Serve-level parity: the same prompts through both backends produce the
+/// same texts, with the native path running a batch size no bucket offers.
+#[test]
+fn serve_texts_agree_across_backends() {
+    let rt = runtime();
+    let (cfg, store) = merged_tiny(43);
+    let gen = lota_qaf::data::task_by_name("arith").unwrap();
+    let mut prng = Rng::new(17);
+    // 5 requests: native serves them as one batch of 5; pjrt buckets them
+    let prompts: Vec<String> = (0..5)
+        .map(|_| gen.sample(&mut prng, lota_qaf::data::Split::Test).prompt)
+        .collect();
+
+    let mut pjrt_server =
+        lota_qaf::serve::Server::new(rt, &cfg, &store, ServePath::Merged, 4).unwrap();
+    let mut native_server =
+        lota_qaf::serve::Server::native(&cfg, &store, ServePath::Merged, 4, 4).unwrap();
+    for p in &prompts {
+        pjrt_server.enqueue(p.clone());
+        native_server.enqueue(p.clone());
+    }
+    let (mut pjrt_resp, pjrt_rep) = pjrt_server.drain().unwrap();
+    let (mut native_resp, native_rep) = native_server.drain().unwrap();
+    pjrt_resp.sort_by_key(|r| r.id);
+    native_resp.sort_by_key(|r| r.id);
+
+    assert_eq!(pjrt_resp.len(), native_resp.len());
+    for (p, n) in pjrt_resp.iter().zip(&native_resp) {
+        assert_eq!(p.text, n.text, "request {} decoded differently", p.id);
+        assert_eq!(p.tokens_decoded, n.tokens_decoded, "request {} step count", p.id);
+    }
+    assert_eq!(pjrt_rep.tokens, native_rep.tokens);
+}
+
+/// The ServeOptions plumbing selects the native backend without a Runtime.
+#[test]
+fn serve_options_select_native_without_runtime() {
+    let (cfg, store) = merged_tiny(47);
+    let opts = ServeOptions::new(ServePath::Merged, 3).backend(Backend::Native);
+    let prompts: Vec<String> = (0..3).map(|i| format!("{i} + 1 =")).collect();
+    let report = serve_batch(None, &cfg, &store, &opts, &prompts).unwrap();
+    assert_eq!(report.requests, 3);
+}

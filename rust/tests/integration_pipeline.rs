@@ -16,7 +16,7 @@ use lota_qaf::data::{mmlu_like, sft_batch, task_by_name, Split};
 use lota_qaf::model::{self, ParamStore};
 use lota_qaf::quant::output_mse;
 use lota_qaf::runtime::Runtime;
-use lota_qaf::serve::{serve_batch, ServePath};
+use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::{Rng, Tensor};
 
 struct Ctx {
@@ -193,8 +193,22 @@ fn serving_round_trip_both_paths() {
     let prompts: Vec<String> = (0..5)
         .map(|_| gen.sample(&mut prng, Split::Test).prompt)
         .collect();
-    let rep_m = serve_batch(&c.rt, &cfg, &quant, ServePath::Merged, &prompts, 4).unwrap();
-    let rep_l = serve_batch(&c.rt, &cfg, &lora, ServePath::LoraAdapter, &prompts, 4).unwrap();
+    let rep_m = serve_batch(
+        Some(&c.rt),
+        &cfg,
+        &quant,
+        &ServeOptions::new(ServePath::Merged, 4),
+        &prompts,
+    )
+    .unwrap();
+    let rep_l = serve_batch(
+        Some(&c.rt),
+        &cfg,
+        &lora,
+        &ServeOptions::new(ServePath::LoraAdapter, 4),
+        &prompts,
+    )
+    .unwrap();
     assert_eq!(rep_m.requests, 5);
     assert_eq!(rep_l.requests, 5);
     assert!(rep_m.tokens_per_sec > 0.0);
