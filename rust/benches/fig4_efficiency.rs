@@ -18,7 +18,7 @@
 use std::path::Path;
 
 use lota_qaf::bench_harness::Table;
-use lota_qaf::config::{preset, Backend, Method};
+use lota_qaf::config::{preset, Backend, DecodeMode, Method};
 use lota_qaf::data::{task_by_name, Split};
 use lota_qaf::model;
 use lota_qaf::quant::{pack::deployed_bytes, rtn_quantize};
@@ -143,5 +143,43 @@ fn main() -> anyhow::Result<()> {
         }
     }
     t.print();
+
+    // cached vs recompute decode on the native engine: same total
+    // generated tokens (full per-text parity is pinned by the test
+    // suites), O(T) vs O(T²) work. "pos/tok" is positions fed per token
+    // generated — the honest witness (near 1 + prefill amortization for
+    // the cache, growing with generation length for recompute).
+    if backends.contains(&Backend::Native) {
+        println!("\n## Figure 4c addendum — native decode: KV-cached vs full recompute");
+        let mut t = Table::new(&["max_new", "decode", "tok/s", "pos/tok", "speedup"]);
+        for max_new in [8usize, 32] {
+            let prompts: Vec<String> = (0..n_reqs)
+                .map(|_| gen.sample(&mut prng, Split::Test).prompt)
+                .collect();
+            let run = |mode: DecodeMode| {
+                let opts = ServeOptions::new(ServePath::Merged, max_new)
+                    .backend(Backend::Native)
+                    .decode_mode(mode);
+                serve_batch(None, &cfg, &merged, &opts, &prompts)
+            };
+            let rep_c = run(DecodeMode::Cached)?;
+            let rep_r = run(DecodeMode::Recompute)?;
+            assert_eq!(rep_c.tokens, rep_r.tokens, "decode modes generated different tokens");
+            for (mode, rep, speedup) in [
+                (DecodeMode::Cached, &rep_c, rep_c.speedup_over(&rep_r)),
+                (DecodeMode::Recompute, &rep_r, 1.0),
+            ] {
+                let ppt = rep.positions_per_token();
+                t.row(&[
+                    max_new.to_string(),
+                    mode.as_str().to_string(),
+                    format!("{:.1}", rep.tokens_per_sec),
+                    if ppt.is_nan() { "-".to_string() } else { format!("{ppt:.1}") },
+                    format!("{:.2}x", speedup),
+                ]);
+            }
+        }
+        t.print();
+    }
     Ok(())
 }

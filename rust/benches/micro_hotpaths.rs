@@ -2,8 +2,10 @@
 //! timings of every operation on the training/serving critical paths —
 //! GPTQ sweeps, the host ternary merge, bit-packing, t-SignSGD host
 //! update, host matmul, the native engine's fused packed GEMM against its
-//! unpack-then-f32-matmul baseline, PJRT forward latency per batch
-//! bucket, and the full training-step latency per method.
+//! unpack-then-f32-matmul baseline, the native decode step (KV-cached vs
+//! full-prefix recompute at growing prefix lengths — the O(1)-vs-O(T)
+//! per-token scaling), PJRT forward latency per batch bucket, and the
+//! full training-step latency per method.
 //!
 //! Env knobs: LOTA_MICRO_ITERS (10).
 
@@ -153,6 +155,53 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", r.p95_secs * 1e3),
         format!("{:.2} GF/s", flops / r.mean_secs / 1e9),
     ]);
+
+    // ---- native engine: decode-step latency, KV-cached vs recompute ----
+    // the O(T)-vs-O(1) witness: one decode step at growing prefix length.
+    // Recompute re-runs the whole prefix; the cached step feeds one token
+    // against stored K/V, so its latency should be ~flat in T while the
+    // recompute row grows linearly.
+    {
+        let dcfg = preset("tiny")?;
+        let dfp = model::init_fp(&dcfg, &mut rng);
+        let dstore = model::quantize_store(&dcfg, &dfp, |_, _, w| {
+            Ok(rtn_quantize(w, dcfg.group_size, 4))
+        })?;
+        let eng = engine::Engine::from_store(&dcfg, &dstore, 4)?;
+        for prefix in [16usize, 48, 96] {
+            let toks: Vec<f32> =
+                (0..prefix).map(|_| rng.below(dcfg.vocab) as f32).collect();
+            let full = Tensor::new(&[1, prefix], toks.clone());
+            let r = bench(&format!("decode step recompute T={prefix}"), 1, iters, || {
+                eng.forward(&full).unwrap();
+            });
+            results.row(&[
+                r.name.clone(),
+                format!("{:.2}", r.mean_secs * 1e3),
+                format!("{:.2}", r.p50_secs * 1e3),
+                format!("{:.2}", r.p95_secs * 1e3),
+                format!("{:.0} step/s", r.per_sec()),
+            ]);
+            // prefill the prefix once outside the timer, then repeatedly
+            // re-step the final token against the cached prefix (rewinding
+            // the cursor between iterations — truncate is O(1))
+            let mut cache = eng.new_cache(1);
+            let prefill = Tensor::new(&[1, prefix - 1], toks[..prefix - 1].to_vec());
+            eng.forward_incremental(&prefill, &mut cache, &[0])?;
+            let step_tok = Tensor::new(&[1, 1], vec![toks[prefix - 1]]);
+            let r = bench(&format!("decode step cached    T={prefix}"), 1, iters, || {
+                cache.truncate_row(0, prefix - 1);
+                eng.forward_incremental(&step_tok, &mut cache, &[0]).unwrap();
+            });
+            results.row(&[
+                r.name.clone(),
+                format!("{:.2}", r.mean_secs * 1e3),
+                format!("{:.2}", r.p50_secs * 1e3),
+                format!("{:.2}", r.p95_secs * 1e3),
+                format!("{:.0} step/s", r.per_sec()),
+            ]);
+        }
+    }
 
     // ---- PJRT: forward latency per bucket ----
     let rt = Runtime::new(Path::new("artifacts"))?;

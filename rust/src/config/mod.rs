@@ -141,6 +141,39 @@ impl Backend {
     }
 }
 
+/// How the native engine decodes: KV-cached incremental steps (the
+/// default — O(T) attention work per generated token instead of the
+/// recompute path's O(T²), and one GEMM row per live request) or
+/// full-prefix recompute (kept alive as the reference implementation the
+/// cached path is pinned against).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum DecodeMode {
+    /// prefill once, then step one token at a time against per-layer
+    /// K/V buffers reused across decode steps
+    #[default]
+    Cached,
+    /// re-run the full prefix through the forward on every step — the
+    /// reference path parity suites hold the cache against
+    Recompute,
+}
+
+impl DecodeMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecodeMode::Cached => "cached",
+            DecodeMode::Recompute => "recompute",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DecodeMode> {
+        Ok(match s {
+            "cached" => DecodeMode::Cached,
+            "recompute" => DecodeMode::Recompute,
+            _ => bail!("unknown decode mode '{s}' (cached|recompute)"),
+        })
+    }
+}
+
 /// Fine-tuning method selector used across the coordinator & benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -200,6 +233,9 @@ pub struct ExperimentConfig {
     pub checkpoint_dir: Option<String>,
     /// which executor serves the fine-tuned model (`serve_backend` in TOML)
     pub backend: Backend,
+    /// how the native engine decodes (`decode_mode` in TOML): KV-cached
+    /// incremental steps or full-prefix recompute
+    pub decode: DecodeMode,
 }
 
 impl Default for ExperimentConfig {
@@ -217,6 +253,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             checkpoint_dir: None,
             backend: Backend::Pjrt,
+            decode: DecodeMode::Cached,
         }
     }
 }
@@ -259,6 +296,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("serve_backend") {
             c.backend = Backend::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("decode_mode") {
+            c.decode = DecodeMode::parse(v)?;
         }
         if !(2..=4).contains(&c.n_bits) {
             bail!("n_bits must be 2, 3 or 4 (got {})", c.n_bits);
@@ -331,6 +371,17 @@ mod tests {
         assert_eq!(Backend::default(), Backend::Pjrt);
         let doc = TomlDoc::parse("serve_backend = \"native\"\n").unwrap();
         assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().backend, Backend::Native);
+    }
+
+    #[test]
+    fn decode_mode_parse_roundtrip() {
+        for m in [DecodeMode::Cached, DecodeMode::Recompute] {
+            assert_eq!(DecodeMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(DecodeMode::parse("speculative").is_err());
+        assert_eq!(DecodeMode::default(), DecodeMode::Cached);
+        let doc = TomlDoc::parse("decode_mode = \"recompute\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().decode, DecodeMode::Recompute);
     }
 
     #[test]

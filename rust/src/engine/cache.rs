@@ -1,0 +1,171 @@
+//! Per-request K/V buffers for incremental decoding.
+//!
+//! Recompute decoding re-runs attention over the whole prefix for every
+//! generated token — O(T²) per request. [`KvCache`] is what makes decoding
+//! linear: each layer keeps the already-computed key/value rows for every
+//! request, so a decode step feeds only the *new* token positions and
+//! attends against the stored prefix. The buffers hold exactly what the
+//! full forward would have recomputed, bitwise — the engine writes the
+//! same fused-GEMM outputs it would otherwise throw away — which is why
+//! the cached and recompute paths can be pinned to identical logits.
+//!
+//! Layout: one `(batch, capacity, d_model)` f32 slab per layer for keys
+//! and one for values, heads interleaved along `d_model` exactly as the
+//! forward's attention reads them. `len[row]` tracks how many positions of
+//! each request are live; positions past `len` are scratch (padded prefill
+//! writes there and [`KvCache::truncate_row`] reclaims them) and are never
+//! read before being overwritten.
+
+use anyhow::{bail, Result};
+
+/// Per-layer, per-request key/value buffers plus the live-position cursor
+/// for each request row. Built with [`super::Engine::new_cache`]; advanced
+/// by [`super::Engine::forward_incremental`].
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    batch: usize,
+    /// maximum positions per row (the engine sizes this to `seq_len`)
+    capacity: usize,
+    d_model: usize,
+    /// per-layer (batch, capacity, d_model) key rows
+    k: Vec<Vec<f32>>,
+    /// per-layer (batch, capacity, d_model) value rows
+    v: Vec<Vec<f32>>,
+    /// live cached positions per request row
+    len: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, batch: usize, capacity: usize, d_model: usize) -> KvCache {
+        let slab = batch * capacity * d_model;
+        KvCache {
+            n_layers,
+            batch,
+            capacity,
+            d_model,
+            k: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
+            len: vec![0; batch],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Live cached positions for request `row`.
+    pub fn pos_len(&self, row: usize) -> usize {
+        self.len[row]
+    }
+
+    /// Total bytes the K/V slabs hold across all layers.
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.batch * self.capacity * self.d_model * 4
+    }
+
+    /// Bytes one request row costs across all layers (K + V) — what batch
+    /// caps are computed from.
+    pub fn row_bytes(n_layers: usize, capacity: usize, d_model: usize) -> usize {
+        2 * n_layers * capacity * d_model * 4
+    }
+
+    /// Shrink `row` back to `new_len` live positions. Used after a padded
+    /// batch prefill (ragged prompts all advance by the padded length; the
+    /// pad tail becomes scratch again) and by benches to re-time a step at
+    /// a fixed prefix. Growing through this is a bug — positions can only
+    /// be *written* by a forward.
+    pub fn truncate_row(&mut self, row: usize, new_len: usize) {
+        assert!(
+            new_len <= self.len[row],
+            "truncate_row can only shrink: row {row} has {} live positions, asked for {new_len}",
+            self.len[row]
+        );
+        self.len[row] = new_len;
+    }
+
+    /// Advance the live length of each row in `rows` by `t_new` — called
+    /// once per incremental forward, after every layer has written its new
+    /// K/V rows against the *old* lengths.
+    pub(crate) fn advance(&mut self, rows: &[usize], t_new: usize) {
+        for &row in rows {
+            self.len[row] += t_new;
+            debug_assert!(self.len[row] <= self.capacity);
+        }
+    }
+
+    /// The full K and V slabs for layer `li`.
+    pub(crate) fn layer(&self, li: usize) -> (&[f32], &[f32]) {
+        (&self.k[li], &self.v[li])
+    }
+
+    /// Mutable K and V slabs for layer `li` (the forward's append phase).
+    pub(crate) fn layer_mut(&mut self, li: usize) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k[li], &mut self.v[li])
+    }
+
+    /// Refuse caches built for a different model shape. Capacity may be
+    /// anything up to the engine's context length — a decode that knows
+    /// its horizon (prompt + max_new) allocates only that much.
+    pub(crate) fn check(&self, n_layers: usize, d_model: usize, max_capacity: usize) -> Result<()> {
+        if self.n_layers != n_layers || self.d_model != d_model || self.capacity > max_capacity {
+            bail!(
+                "cache shape ({}, cap {}, d {}) does not fit engine ({n_layers}, cap ≤{max_capacity}, d {d_model})",
+                self.n_layers,
+                self.capacity,
+                self.d_model
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_advance_and_truncate() {
+        let mut c = KvCache::new(2, 3, 16, 8);
+        assert_eq!(c.batch(), 3);
+        assert_eq!(c.capacity(), 16);
+        c.advance(&[0, 2], 5);
+        assert_eq!(c.pos_len(0), 5);
+        assert_eq!(c.pos_len(1), 0);
+        assert_eq!(c.pos_len(2), 5);
+        c.truncate_row(2, 3);
+        assert_eq!(c.pos_len(2), 3);
+        c.advance(&[2], 1);
+        assert_eq!(c.pos_len(2), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn truncate_cannot_grow() {
+        let mut c = KvCache::new(1, 1, 8, 4);
+        c.truncate_row(0, 1);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let c = KvCache::new(2, 3, 16, 8);
+        assert_eq!(c.bytes(), 2 * 2 * 3 * 16 * 8 * 4);
+        assert_eq!(KvCache::row_bytes(2, 16, 8), c.bytes() / 3);
+    }
+
+    #[test]
+    fn shape_check_rejects_mismatches() {
+        let c = KvCache::new(2, 1, 16, 8);
+        assert!(c.check(2, 8, 16).is_ok());
+        // shorter-than-context caches are fine (bounded-horizon decode)…
+        assert!(c.check(2, 8, 32).is_ok());
+        // …but wrong layer count, width, or an over-long cache are not
+        assert!(c.check(3, 8, 16).is_err());
+        assert!(c.check(2, 4, 16).is_err());
+        assert!(c.check(2, 8, 8).is_err());
+    }
+}

@@ -1,17 +1,31 @@
 //! Greedy decoding on the native engine — any batch size, no buckets.
 //!
 //! Semantics mirror `coordinator::eval::greedy_decode` (BOS + prompt + SEP
-//! framing, recompute decoding, EOS / seq-len stopping, last-max argmax
-//! tie-breaking) so backend comparisons are apples-to-apples. The one
-//! deliberate difference: because nothing here has a fixed shape, each
-//! forward runs at the *current* sequence length — the live prefix plus
-//! generated tokens — instead of padding every request to `seq_len`.
-//! Causal attention makes the trailing pad rows inert, so the logits at
-//! each cursor are unchanged; the engine just skips computing them.
+//! framing, EOS / seq-len stopping, last-max argmax tie-breaking) so
+//! backend comparisons are apples-to-apples. Two execution strategies sit
+//! behind the same semantics, selected by [`DecodeMode`]:
+//!
+//! * **Cached** (the default) — prefill every prompt once through
+//!   [`Engine::forward_incremental`], then step one token per live row
+//!   against the per-layer [`super::KvCache`]. Attention work per
+//!   generated token is O(T) in prefix length and the GEMMs see one row
+//!   per request, so a whole generation costs O(T) instead of the
+//!   recompute path's O(T²).
+//! * **Recompute** — re-run the full live prefix through
+//!   [`Engine::forward`] every step. Kept alive as the reference
+//!   implementation: `tests/engine_parity.rs` pins the two modes to
+//!   bit-identical generations.
+//!
+//! Both paths drop finished rows from the step batch — a request that hit
+//! EOS stops consuming forward compute instead of padding the batch until
+//! the slowest request finishes. [`DecodeStats`] records what was actually
+//! fed so tests and benches can assert on the savings rather than trust
+//! the claim.
 
 use anyhow::{bail, Result};
 
-use crate::data::tokenizer::{self, BOS, EOS, SEP};
+use crate::config::{DecodeMode, ModelConfig};
+use crate::data::tokenizer::{self, BOS, EOS, PAD, SEP};
 use crate::tensor::Tensor;
 
 use super::forward::Engine;
@@ -25,19 +39,70 @@ pub struct Generation {
     pub tokens: usize,
 }
 
-/// Greedy-decode completions for `prompts` in a single batch of exactly
-/// `prompts.len()` rows.
-pub fn greedy_decode(engine: &Engine, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
-    if prompts.is_empty() {
-        return Ok(Vec::new());
-    }
-    let cfg = engine.config();
-    let b = prompts.len();
-    let t_cap = cfg.seq_len;
+/// What a decode actually fed through the engine. The cached path's
+/// advantage is visible here, not asserted: recompute feeds the whole live
+/// prefix every step (`forwarded_positions` ~ B·T²/2), the cached path
+/// feeds each position once (~ B·T).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// engine forward invocations (the prefill plus one per decode step)
+    pub forwards: usize,
+    /// request rows fed across those invocations — finished rows leave
+    /// the step batch, so this undershoots `batch × forwards` whenever
+    /// requests finish at different times
+    pub forwarded_rows: usize,
+    /// (row × position) pairs fed — proportional to GEMM work, the
+    /// O(T²)-vs-O(T) witness the benches report
+    pub forwarded_positions: usize,
+}
 
-    // rows hold f32-coded ids, grown as generation proceeds
-    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(b);
-    let mut cursor = vec![0usize; b];
+impl DecodeStats {
+    /// Fold another decode's accounting into this one (batch aggregation).
+    pub fn absorb(&mut self, other: &DecodeStats) {
+        self.forwards += other.forwards;
+        self.forwarded_rows += other.forwarded_rows;
+        self.forwarded_positions += other.forwarded_positions;
+    }
+}
+
+/// Greedy-decode completions for `prompts` in a single batch of exactly
+/// `prompts.len()` rows, with the default KV-cached strategy.
+pub fn greedy_decode(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<Vec<Generation>> {
+    Ok(greedy_decode_with(engine, prompts, max_new, DecodeMode::Cached)?.0)
+}
+
+/// [`greedy_decode`] with an explicit [`DecodeMode`], returning the decode
+/// accounting alongside the generations.
+pub fn greedy_decode_with(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+    mode: DecodeMode,
+) -> Result<(Vec<Generation>, DecodeStats)> {
+    if prompts.is_empty() {
+        return Ok((Vec::new(), DecodeStats::default()));
+    }
+    match mode {
+        DecodeMode::Cached => decode_cached(engine, prompts, max_new),
+        DecodeMode::Recompute => decode_recompute(engine, prompts, max_new),
+    }
+}
+
+/// BOS + prompt + SEP framing shared by both strategies. Returns the
+/// f32-coded rows and each row's cursor (the position whose logits pick
+/// the next token).
+fn frame(
+    cfg: &ModelConfig,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+    let t_cap = cfg.seq_len;
+    let mut rows = Vec::with_capacity(prompts.len());
+    let mut cursor = vec![0usize; prompts.len()];
     for (ri, p) in prompts.iter().enumerate() {
         let mut ids = vec![BOS];
         ids.extend(tokenizer::encode(&p.replace('\n', " ")));
@@ -46,50 +111,154 @@ pub fn greedy_decode(engine: &Engine, prompts: &[String], max_new: usize) -> Res
             bail!("prompt+generation ({}) exceeds seq_len {t_cap}", ids.len() + max_new);
         }
         cursor[ri] = ids.len() - 1;
-        rows.push(ids.into_iter().map(|id| id as f32).collect());
+        rows.push(ids.into_iter().map(|id| id as f32).collect::<Vec<f32>>());
     }
+    Ok((rows, cursor))
+}
 
-    let mut done = vec![false; b];
-    let mut generated: Vec<Vec<u32>> = vec![Vec::new(); b];
-    for _ in 0..max_new {
-        if done.iter().all(|d| *d) {
-            break;
-        }
-        // forward only the live prefix: positions 0..=max cursor
-        let t_cur = cursor.iter().max().copied().unwrap_or(0) + 1;
-        let mut tokens = vec![0.0f32; b * t_cur];
-        for (ri, row) in rows.iter().enumerate() {
-            let n = row.len().min(t_cur);
-            tokens[ri * t_cur..ri * t_cur + n].copy_from_slice(&row[..n]);
-        }
-        let logits = engine.forward(&Tensor::new(&[b, t_cur], tokens))?;
-        let v = cfg.vocab;
-        for ri in 0..b {
-            if done[ri] {
-                continue;
-            }
-            let off = (ri * t_cur + cursor[ri]) * v;
-            let lrow = &logits.data()[off..off + v];
-            let next = lrow
-                .iter()
-                .enumerate()
-                .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-                .map(|(i, _)| i as u32)
-                .unwrap();
-            if next == EOS || cursor[ri] + 1 >= t_cap {
-                done[ri] = true;
-                continue;
-            }
-            cursor[ri] += 1;
-            rows[ri].push(next as f32);
-            generated[ri].push(next);
-        }
+/// Last-max argmax over one vocab row (ties resolve to the higher id,
+/// matching the PJRT decoder).
+fn argmax(lrow: &[f32]) -> u32 {
+    lrow.iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(i, _)| i as u32)
+        .unwrap()
+}
+
+/// Apply one picked token to a row's state; returns whether the row
+/// finished (EOS or context cap — nothing appended in either case).
+fn step_row(
+    next: u32,
+    t_cap: usize,
+    row: &mut Vec<f32>,
+    cursor: &mut usize,
+    generated: &mut Vec<u32>,
+) -> bool {
+    if next == EOS || *cursor + 1 >= t_cap {
+        return true;
     }
+    *cursor += 1;
+    row.push(next as f32);
+    generated.push(next);
+    false
+}
 
-    Ok(generated
+fn finish(generated: Vec<Vec<u32>>) -> Vec<Generation> {
+    generated
         .into_iter()
         .map(|g| Generation { text: tokenizer::decode(&g), tokens: g.len() })
-        .collect())
+        .collect()
+}
+
+/// The KV-cached strategy: prefill once, then one token per live row per
+/// step. The cache is created per batch and reused across every step of
+/// that batch's generation.
+fn decode_cached(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<(Vec<Generation>, DecodeStats)> {
+    let cfg = engine.config();
+    let b = prompts.len();
+    let t_cap = cfg.seq_len;
+    let v = cfg.vocab;
+    let (mut rows, mut cursor) = frame(cfg, prompts, max_new)?;
+    let mut done = vec![false; b];
+    let mut generated: Vec<Vec<u32>> = vec![Vec::new(); b];
+    let mut stats = DecodeStats::default();
+    if max_new == 0 {
+        return Ok((finish(generated), stats));
+    }
+
+    // prefill: all prompts in one batched incremental forward, padded to
+    // the longest frame. Ragged rows are truncated back to their true
+    // length afterwards, so their next token overwrites the pad scratch —
+    // same inertness argument as the recompute path's trailing pads.
+    // The cache is sized to this batch's horizon, not the full context:
+    // no position past t0 + max_new can ever be written.
+    let t0 = rows.iter().map(Vec::len).max().unwrap();
+    let mut cache = engine.new_cache_for(b, t0 + max_new);
+    let mut tokens = vec![PAD as f32; b * t0];
+    for (ri, row) in rows.iter().enumerate() {
+        tokens[ri * t0..ri * t0 + row.len()].copy_from_slice(row);
+    }
+    let all: Vec<usize> = (0..b).collect();
+    let logits = engine.forward_incremental(&Tensor::new(&[b, t0], tokens), &mut cache, &all)?;
+    stats.forwards += 1;
+    stats.forwarded_rows += b;
+    stats.forwarded_positions += b * t0;
+    for ri in 0..b {
+        cache.truncate_row(ri, rows[ri].len());
+        let off = (ri * t0 + cursor[ri]) * v;
+        let next = argmax(&logits.data()[off..off + v]);
+        done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
+    }
+
+    // steps 2..=max_new: feed only the newest token of each live row; its
+    // K/V join the cache, attention runs against the stored prefix
+    for _ in 1..max_new {
+        let active: Vec<usize> = (0..b).filter(|ri| !done[*ri]).collect();
+        if active.is_empty() {
+            break;
+        }
+        let step: Vec<f32> = active.iter().map(|ri| *rows[*ri].last().unwrap()).collect();
+        let logits = engine.forward_incremental(
+            &Tensor::new(&[active.len(), 1], step),
+            &mut cache,
+            &active,
+        )?;
+        stats.forwards += 1;
+        stats.forwarded_rows += active.len();
+        stats.forwarded_positions += active.len();
+        for (i, &ri) in active.iter().enumerate() {
+            let next = argmax(&logits.data()[i * v..(i + 1) * v]);
+            done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
+        }
+    }
+    Ok((finish(generated), stats))
+}
+
+/// The reference strategy: every step re-runs the full live prefix of
+/// every unfinished row. Finished rows leave the step batch (they used to
+/// pad it until the whole batch drained).
+fn decode_recompute(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<(Vec<Generation>, DecodeStats)> {
+    let cfg = engine.config();
+    let b = prompts.len();
+    let t_cap = cfg.seq_len;
+    let v = cfg.vocab;
+    let (mut rows, mut cursor) = frame(cfg, prompts, max_new)?;
+    let mut done = vec![false; b];
+    let mut generated: Vec<Vec<u32>> = vec![Vec::new(); b];
+    let mut stats = DecodeStats::default();
+    for _ in 0..max_new {
+        let active: Vec<usize> = (0..b).filter(|ri| !done[*ri]).collect();
+        if active.is_empty() {
+            break;
+        }
+        // forward only the live rows, padded to the longest live prefix;
+        // causal attention keeps the trailing pads inert
+        let t_cur = active.iter().map(|ri| cursor[*ri]).max().unwrap() + 1;
+        let mut tokens = vec![PAD as f32; active.len() * t_cur];
+        for (i, &ri) in active.iter().enumerate() {
+            let n = rows[ri].len().min(t_cur);
+            tokens[i * t_cur..i * t_cur + n].copy_from_slice(&rows[ri][..n]);
+        }
+        let logits = engine.forward(&Tensor::new(&[active.len(), t_cur], tokens))?;
+        stats.forwards += 1;
+        stats.forwarded_rows += active.len();
+        stats.forwarded_positions += active.len() * t_cur;
+        for (i, &ri) in active.iter().enumerate() {
+            let off = (i * t_cur + cursor[ri]) * v;
+            let next = argmax(&logits.data()[off..off + v]);
+            done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
+        }
+    }
+    Ok((finish(generated), stats))
 }
 
 #[cfg(test)]
@@ -137,7 +306,7 @@ mod tests {
     #[test]
     fn batch_composition_does_not_change_outputs() {
         // row independence: a prompt decodes identically alone and in a
-        // mixed batch — the property buckets used to guarantee by shape
+        // mixed batch — cache rows never interact
         let engine = tiny_engine(3);
         let prompts: Vec<String> =
             ["2 + 2 =", "9 - 4 =", "1 * 3 ="].iter().map(|s| s.to_string()).collect();
@@ -150,10 +319,62 @@ mod tests {
     }
 
     #[test]
+    fn cached_and_recompute_agree() {
+        let engine = tiny_engine(5);
+        let prompts: Vec<String> = (0..4).map(|i| format!("{i} + 2 =")).collect();
+        let (cached, cs) =
+            greedy_decode_with(&engine, &prompts, 6, DecodeMode::Cached).unwrap();
+        let (recomp, rs) =
+            greedy_decode_with(&engine, &prompts, 6, DecodeMode::Recompute).unwrap();
+        for (c, r) in cached.iter().zip(&recomp) {
+            assert_eq!(c.text, r.text);
+            assert_eq!(c.tokens, r.tokens);
+        }
+        // identical generations, very different work: the cached path feeds
+        // each prompt position once, recompute feeds the prefix every step.
+        // (Equality is possible only in the degenerate single-forward case
+        // where every row EOSes immediately.)
+        assert_eq!(cs.forwards, rs.forwards);
+        assert!(cs.forwarded_positions <= rs.forwarded_positions);
+        if rs.forwards > 1 {
+            assert!(
+                cs.forwarded_positions < rs.forwarded_positions,
+                "cached fed {} positions, recompute {}",
+                cs.forwarded_positions,
+                rs.forwarded_positions
+            );
+        }
+    }
+
+    #[test]
+    fn zero_max_new_generates_nothing() {
+        let engine = tiny_engine(6);
+        for mode in [DecodeMode::Cached, DecodeMode::Recompute] {
+            let (gens, stats) =
+                greedy_decode_with(&engine, &["1 + 1 =".to_string()], 0, mode).unwrap();
+            assert_eq!(gens.len(), 1);
+            assert_eq!(gens[0].tokens, 0);
+            assert_eq!(stats, DecodeStats::default(), "{mode:?} ran a forward for nothing");
+        }
+    }
+
+    #[test]
     fn empty_and_oversized_inputs() {
         let engine = tiny_engine(4);
         assert!(greedy_decode(&engine, &[], 4).unwrap().is_empty());
         let long = "1 + 2 = ".repeat(32);
-        assert!(greedy_decode(&engine, &[long], 8).is_err());
+        assert!(greedy_decode(&engine, &[long.clone()], 8).is_err());
+        let (gens, stats) =
+            greedy_decode_with(&engine, &[], 4, DecodeMode::Recompute).unwrap();
+        assert!(gens.is_empty());
+        assert_eq!(stats, DecodeStats::default());
+        assert!(greedy_decode_with(&engine, &[long], 8, DecodeMode::Recompute).is_err());
+    }
+
+    #[test]
+    fn stats_absorb_sums_fields() {
+        let mut a = DecodeStats { forwards: 1, forwarded_rows: 2, forwarded_positions: 30 };
+        a.absorb(&DecodeStats { forwards: 2, forwarded_rows: 3, forwarded_positions: 7 });
+        assert_eq!(a, DecodeStats { forwards: 3, forwarded_rows: 5, forwarded_positions: 37 });
     }
 }

@@ -13,6 +13,17 @@
 //! every token — the baseline LoTA is compared against in Fig. 4) is
 //! supported by attaching the `lo_{slot}_a/_b` tensors with
 //! [`Engine::attach_lora`].
+//!
+//! Two entry points share every kernel:
+//!
+//! * [`Engine::forward`] — the full (B, T) forward, attention recomputed
+//!   over the whole prefix. The reference path.
+//! * [`Engine::forward_incremental`] — feeds only *new* token positions,
+//!   appending their keys/values to a [`KvCache`] and attending against
+//!   the stored prefix. Because every kernel here accumulates per row in
+//!   a fixed order, the incremental path is **bit-identical** to the full
+//!   forward at the same positions — `tests/engine_parity.rs` pins this
+//!   with `assert_eq`, not a tolerance.
 
 use anyhow::{bail, Result};
 
@@ -20,6 +31,7 @@ use crate::config::ModelConfig;
 use crate::model::{self, ParamStore, SLOTS};
 use crate::tensor::{linalg, Tensor};
 
+use super::cache::KvCache;
 use super::gemm::matmul_packed;
 use super::packed::PackedLinear;
 
@@ -172,6 +184,193 @@ impl Engine {
         let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
         let logits = linalg::matmul(&x, &self.head);
         Ok(logits.reshape(&[b, t, cfg.vocab]))
+    }
+
+    /// A fresh [`KvCache`] sized for `batch` concurrent requests at this
+    /// engine's full context length.
+    pub fn new_cache(&self, batch: usize) -> KvCache {
+        self.new_cache_for(batch, self.cfg.seq_len)
+    }
+
+    /// A fresh [`KvCache`] sized for a known decode horizon (prompt +
+    /// generation positions, clamped to the context length) — a short
+    /// generation on a long-context model allocates only what it can
+    /// actually write.
+    pub fn new_cache_for(&self, batch: usize, horizon: usize) -> KvCache {
+        let capacity = horizon.clamp(1, self.cfg.seq_len);
+        KvCache::new(self.layers.len(), batch, capacity, self.cfg.d_model)
+    }
+
+    /// Bytes one cached request row costs across all layers (K + V) —
+    /// what the serving layer's batch cap is computed from.
+    pub fn cache_row_bytes(&self) -> usize {
+        KvCache::row_bytes(self.layers.len(), self.cfg.seq_len, self.cfg.d_model)
+    }
+
+    /// Incremental forward: logits (R, T_new, V) for `t_new` **new** token
+    /// positions per row, appended after each row's cached prefix.
+    ///
+    /// `tokens` is (R, T_new) with `R == rows.len()`; `rows[i]` names the
+    /// cache row the i-th input row extends, so finished requests drop out
+    /// of the step batch without disturbing the others. Rows must be
+    /// strictly increasing (each cache row extended at most once per
+    /// call). New keys/values land in `cache` and the live lengths
+    /// advance by `t_new` — prefill a prompt by passing it whole (or in
+    /// chunks), then step one token at a time.
+    pub fn forward_incremental(
+        &self,
+        tokens: &Tensor,
+        cache: &mut KvCache,
+        rows: &[usize],
+    ) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        if tokens.shape().len() != 2 {
+            bail!("incremental forward wants (R, T_new) tokens, got {:?}", tokens.shape());
+        }
+        let (r, t_new) = (tokens.shape()[0], tokens.shape()[1]);
+        if r == 0 || t_new == 0 {
+            bail!("incremental forward wants at least one row and one new position");
+        }
+        if r != rows.len() {
+            bail!("{r} token rows for {} cache rows", rows.len());
+        }
+        cache.check(self.layers.len(), cfg.d_model, cfg.seq_len)?;
+        for w in rows.windows(2) {
+            if w[0] >= w[1] {
+                bail!("cache rows must be strictly increasing, got {rows:?}");
+            }
+        }
+        if let Some(&last) = rows.last() {
+            if last >= cache.batch() {
+                bail!("cache row {last} outside batch {}", cache.batch());
+            }
+        }
+        for &row in rows {
+            if cache.pos_len(row) + t_new > cache.capacity() {
+                bail!(
+                    "row {row}: {} cached + {t_new} new positions exceed cache capacity {}",
+                    cache.pos_len(row),
+                    cache.capacity()
+                );
+            }
+        }
+        let d = cfg.d_model;
+        // absolute position of each row's first new token — fixed for the
+        // whole call; cache lengths advance only after the last layer
+        let bases: Vec<usize> = rows.iter().map(|&row| cache.pos_len(row)).collect();
+
+        // embedding + position table, offset per row by its cached prefix
+        let mut x = vec![0.0f32; r * t_new * d];
+        for (i, &base) in bases.iter().enumerate() {
+            for ti in 0..t_new {
+                let id = tokens.data()[i * t_new + ti];
+                if id < 0.0 || id.fract() != 0.0 || id as usize >= cfg.vocab {
+                    bail!("token {id} at ({i},{ti}) outside vocab {}", cfg.vocab);
+                }
+                let row = &mut x[(i * t_new + ti) * d..(i * t_new + ti + 1) * d];
+                let erow = self.embed.row(id as usize);
+                let prow = self.pos.row(base + ti);
+                for k in 0..d {
+                    row[k] = erow[k] + prow[k];
+                }
+            }
+        }
+        let mut x = Tensor::new(&[r * t_new, d], x);
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            x = self.block_incremental(&x, layer, li, cache, rows, &bases, t_new)?;
+        }
+        let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
+        let logits = linalg::matmul(&x, &self.head);
+        cache.advance(rows, t_new);
+        Ok(logits.reshape(&[r, t_new, cfg.vocab]))
+    }
+
+    /// One transformer block over new positions only: same kernels and
+    /// accumulation order as [`Engine::block`], but K/V for the prefix come
+    /// from the cache instead of being recomputed.
+    #[allow(clippy::too_many_arguments)]
+    fn block_incremental(
+        &self,
+        x: &Tensor,
+        layer: &Layer,
+        li: usize,
+        cache: &mut KvCache,
+        rows: &[usize],
+        bases: &[usize],
+        t_new: usize,
+    ) -> Result<Tensor> {
+        let cfg = &self.cfg;
+        let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
+        let r = rows.len();
+        let cap = cache.capacity();
+
+        let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
+        let q = self.linear(&xn, layer, WQ);
+        let k = self.linear(&xn, layer, WK);
+        let v = self.linear(&xn, layer, WV);
+
+        // append phase: the new K/V rows join the cached prefix — these are
+        // exactly the values the full forward computes at these positions
+        {
+            let (ck, cv) = cache.layer_mut(li);
+            for (i, &row) in rows.iter().enumerate() {
+                for ti in 0..t_new {
+                    let src = (i * t_new + ti) * d;
+                    let dst = (row * cap + bases[i] + ti) * d;
+                    ck[dst..dst + d].copy_from_slice(&k.data()[src..src + d]);
+                    cv[dst..dst + d].copy_from_slice(&v.data()[src..src + d]);
+                }
+            }
+        }
+
+        // attention: each new position attends over the cached prefix plus
+        // the new positions written above — identical summation order to
+        // the full forward's causal loop
+        let (ck, cv) = cache.layer(li);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; r * t_new * d];
+        let mut scores = vec![0.0f32; cap];
+        for (i, &row) in rows.iter().enumerate() {
+            for hi in 0..h {
+                let off = hi * hd;
+                for ti in 0..t_new {
+                    let qrow =
+                        &q.data()[(i * t_new + ti) * d + off..(i * t_new + ti) * d + off + hd];
+                    let t_abs = bases[i] + ti;
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (tj, s) in scores.iter_mut().enumerate().take(t_abs + 1) {
+                        let krow = &ck[(row * cap + tj) * d + off..(row * cap + tj) * d + off + hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += qrow[e] * krow[e];
+                        }
+                        *s = dot * scale;
+                        maxv = maxv.max(*s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut().take(t_abs + 1) {
+                        *s = (*s - maxv).exp();
+                        denom += *s;
+                    }
+                    let orow =
+                        &mut attn[(i * t_new + ti) * d + off..(i * t_new + ti) * d + off + hd];
+                    for (tj, s) in scores.iter().enumerate().take(t_abs + 1) {
+                        let w = s / denom;
+                        let vrow = &cv[(row * cap + tj) * d + off..(row * cap + tj) * d + off + hd];
+                        for e in 0..hd {
+                            orow[e] += w * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        let attn = Tensor::new(&[r * t_new, d], attn);
+        let x = x.add(&self.linear(&attn, layer, WO));
+
+        let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
+        let hmid = self.linear(&xn, layer, W_UP).map(gelu_tanh);
+        Ok(x.add(&self.linear(&hmid, layer, W_DOWN)))
     }
 
     /// One quantized linear, with the optional LoRA contribution
@@ -419,6 +618,149 @@ mod tests {
         assert!(engine.forward(&Tensor::zeros(&[1, cfg.seq_len + 1])).is_err());
         let bad = Tensor::full(&[1, 4], cfg.vocab as f32);
         assert!(engine.forward(&bad).is_err());
+    }
+
+    #[test]
+    fn incremental_forward_is_bitwise_identical_to_full() {
+        let (cfg, _, engine) = tiny_engine(10);
+        let (b, t) = (3usize, 20usize);
+        let tokens = rand_tokens(&cfg, b, t, 21);
+        let full = engine.forward(&tokens).unwrap();
+
+        // prefill 13 positions in one call, then one token at a time
+        let mut cache = engine.new_cache(b);
+        let rows: Vec<usize> = (0..b).collect();
+        let split = 13usize;
+        let mut prefix = vec![0.0f32; b * split];
+        for bi in 0..b {
+            prefix[bi * split..(bi + 1) * split]
+                .copy_from_slice(&tokens.data()[bi * t..bi * t + split]);
+        }
+        let got = engine
+            .forward_incremental(&Tensor::new(&[b, split], prefix), &mut cache, &rows)
+            .unwrap();
+        assert_eq!(got.shape(), &[b, split, cfg.vocab]);
+        let v = cfg.vocab;
+        for bi in 0..b {
+            for ti in 0..split {
+                assert_eq!(
+                    &got.data()[(bi * split + ti) * v..(bi * split + ti + 1) * v],
+                    &full.data()[(bi * t + ti) * v..(bi * t + ti + 1) * v],
+                    "prefill logits differ at ({bi},{ti})"
+                );
+            }
+        }
+        for ti in split..t {
+            let step: Vec<f32> = (0..b).map(|bi| tokens.data()[bi * t + ti]).collect();
+            let got = engine
+                .forward_incremental(&Tensor::new(&[b, 1], step), &mut cache, &rows)
+                .unwrap();
+            for bi in 0..b {
+                assert_eq!(
+                    &got.data()[bi * v..(bi + 1) * v],
+                    &full.data()[(bi * t + ti) * v..(bi * t + ti + 1) * v],
+                    "step logits differ at ({bi},{ti})"
+                );
+            }
+        }
+        assert_eq!(cache.pos_len(0), t);
+    }
+
+    #[test]
+    fn incremental_forward_with_lora_matches_full() {
+        let (cfg, store, mut engine) = tiny_engine(11);
+        let mut with_adapters = store.clone();
+        let mut rng = Rng::new(12);
+        model::init_adapters(&cfg, crate::config::Method::Lora, &mut rng, &mut with_adapters);
+        for slot in SLOTS {
+            let t = with_adapters.get_mut(&format!("lo_{slot}_b")).unwrap();
+            for v in t.data_mut() {
+                *v = 0.01;
+            }
+        }
+        engine.attach_lora(&with_adapters).unwrap();
+        let tokens = rand_tokens(&cfg, 2, 9, 13);
+        let full = engine.forward(&tokens).unwrap();
+        let mut cache = engine.new_cache(2);
+        let mut got = Vec::new();
+        for ti in 0..9 {
+            let step: Vec<f32> = (0..2).map(|bi| tokens.data()[bi * 9 + ti]).collect();
+            got.push(
+                engine
+                    .forward_incremental(&Tensor::new(&[2, 1], step), &mut cache, &[0, 1])
+                    .unwrap(),
+            );
+        }
+        let v = cfg.vocab;
+        for (ti, g) in got.iter().enumerate() {
+            for bi in 0..2 {
+                assert_eq!(
+                    &g.data()[bi * v..(bi + 1) * v],
+                    &full.data()[(bi * 9 + ti) * v..(bi * 9 + ti + 1) * v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_rejects_bad_rows_and_overflow() {
+        let (cfg, _, engine) = tiny_engine(12);
+        let mut cache = engine.new_cache(2);
+        let tok = Tensor::new(&[1, 1], vec![5.0]);
+        // row outside the cache batch
+        assert!(engine.forward_incremental(&tok, &mut cache, &[2]).is_err());
+        // rows not strictly increasing
+        let two = Tensor::new(&[2, 1], vec![5.0, 6.0]);
+        assert!(engine.forward_incremental(&two, &mut cache, &[1, 0]).is_err());
+        assert!(engine.forward_incremental(&two, &mut cache, &[1, 1]).is_err());
+        // row/token count mismatch
+        assert!(engine.forward_incremental(&two, &mut cache, &[0]).is_err());
+        // cache built for a different shape
+        let mut wrong = super::KvCache::new(1, 2, cfg.seq_len, cfg.d_model);
+        assert!(engine.forward_incremental(&tok, &mut wrong, &[0]).is_err());
+        // overflowing the context
+        let mut cache = engine.new_cache(1);
+        let long = Tensor::new(&[1, cfg.seq_len], vec![5.0; cfg.seq_len]);
+        engine.forward_incremental(&long, &mut cache, &[0]).unwrap();
+        assert!(engine.forward_incremental(&tok, &mut cache, &[0]).is_err());
+    }
+
+    #[test]
+    fn incremental_skips_finished_rows_independently() {
+        // rows evolve independently: stepping a subset leaves the others'
+        // cached state untouched and still bit-identical to the full pass
+        let (cfg, _, engine) = tiny_engine(14);
+        let t = 8usize;
+        let tokens = rand_tokens(&cfg, 3, t, 15);
+        let full = engine.forward(&tokens).unwrap();
+        let mut cache = engine.new_cache(3);
+        // prefill rows 0..3 to t-1, then step only rows 0 and 2
+        let mut prefix = vec![0.0f32; 3 * (t - 1)];
+        for bi in 0..3 {
+            prefix[bi * (t - 1)..(bi + 1) * (t - 1)]
+                .copy_from_slice(&tokens.data()[bi * t..bi * t + t - 1]);
+        }
+        engine
+            .forward_incremental(&Tensor::new(&[3, t - 1], prefix), &mut cache, &[0, 1, 2])
+            .unwrap();
+        let step: Vec<f32> = [0usize, 2]
+            .iter()
+            .map(|bi| tokens.data()[bi * t + t - 1])
+            .collect();
+        let got = engine
+            .forward_incremental(&Tensor::new(&[2, 1], step), &mut cache, &[0, 2])
+            .unwrap();
+        let v = cfg.vocab;
+        for (i, bi) in [0usize, 2].into_iter().enumerate() {
+            assert_eq!(
+                &got.data()[i * v..(i + 1) * v],
+                &full.data()[(bi * t + t - 1) * v..(bi * t + t) * v],
+                "row {bi} diverged when stepped in a partial batch"
+            );
+        }
+        assert_eq!(cache.pos_len(0), t);
+        assert_eq!(cache.pos_len(1), t - 1);
+        assert_eq!(cache.pos_len(2), t);
     }
 
     #[test]

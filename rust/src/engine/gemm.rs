@@ -24,6 +24,13 @@ use super::packed::PackedLinear;
 
 /// Work threshold (multiply-accumulates) below which threading costs more
 /// than it saves — decode-sized calls stay on the caller's thread.
+///
+/// KV-cached decode steps feed one row per live request, so they land far
+/// below this threshold; that is only safe because every output element's
+/// accumulation order is independent of `M` and of the thread count — a
+/// single-row call is bitwise identical to the matching row of a batched
+/// call (pinned by `row_slices_match_batched_call_bitwise` below), which
+/// is what lets the cached decode path promise bit-equal generations.
 const PAR_THRESHOLD: usize = 1 << 20;
 
 /// Fused packed GEMM: `x` is (M, Din), returns (M, Dout).
@@ -163,6 +170,20 @@ mod tests {
             let par = matmul_packed_with_threads(&x, &pl, threads);
             // identical summation order per column ⇒ bitwise equality
             assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn row_slices_match_batched_call_bitwise() {
+        // the incremental-decode contract: feeding any subset of rows
+        // produces exactly the bits the full-batch call produces for them
+        let (x, pl, _) = setup(21, 9, 64, 48, 16, 4);
+        let full = matmul_packed(&x, &pl);
+        let dout = pl.dout();
+        for mi in 0..x.rows() {
+            let one = Tensor::new(&[1, x.cols()], x.row(mi).to_vec());
+            let y = matmul_packed(&one, &pl);
+            assert_eq!(y.data(), &full.data()[mi * dout..(mi + 1) * dout], "row {mi}");
         }
     }
 

@@ -17,8 +17,15 @@
 //!   norms, causal attention, GELU MLP, logits) mirroring the lowered
 //!   graphs operation-for-operation, with an optional LoRA adapter path
 //!   for the Fig. 4 baseline;
-//! * [`decode::greedy_decode`] — recompute greedy decoding at **any**
-//!   batch size, no bucket policy and no artifacts directory required.
+//! * [`cache::KvCache`] + [`forward::Engine::forward_incremental`] — per
+//!   request K/V buffers and the incremental forward that feeds only new
+//!   token positions against them, making decode O(T) per generation
+//!   instead of the recompute path's O(T²);
+//! * [`decode::greedy_decode`] — greedy decoding at **any** batch size,
+//!   no bucket policy and no artifacts directory required. KV-cached by
+//!   default; [`decode::greedy_decode_with`] selects the full-prefix
+//!   recompute reference, and both drop finished rows from the step
+//!   batch. [`decode::DecodeStats`] reports what was actually fed.
 //!
 //! When to use which backend: the PJRT path is the reference executor —
 //! it shares one lowered graph with training and is what the golden /
@@ -26,14 +33,18 @@
 //! *merged* checkpoint where batch shapes are unpredictable, artifacts are
 //! unavailable, or memory must stay at the packed footprint. The two are
 //! interchangeable by construction: `tests/backend_parity.rs` holds their
-//! logits together within f32 tolerance on the same checkpoint.
+//! logits together within f32 tolerance on the same checkpoint, and the
+//! engine's own cached/recompute pair is pinned **bit-identical** by
+//! `tests/engine_parity.rs` — no artifacts needed.
 
+pub mod cache;
 pub mod decode;
 pub mod forward;
 pub mod gemm;
 pub mod packed;
 
-pub use decode::{greedy_decode, Generation};
+pub use cache::KvCache;
+pub use decode::{greedy_decode, greedy_decode_with, DecodeStats, Generation};
 pub use forward::Engine;
 pub use gemm::{matmul_packed, matmul_packed_with_threads};
 pub use packed::PackedLinear;

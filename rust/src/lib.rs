@@ -33,7 +33,12 @@
 //!   pure-Rust engine that computes straight off the bit-packed `u32` grid
 //!   with a fused group-dequant × matmul kernel. Any batch size, no
 //!   artifacts, weights held at the deployed (packed) footprint — the
-//!   serving shape the paper's §4.3 efficiency claim describes.
+//!   serving shape the paper's §4.3 efficiency claim describes. Decoding
+//!   is KV-cached by default ([`engine::KvCache`]): prompts prefill once
+//!   and each generated token costs O(T) attention work instead of the
+//!   full-prefix recompute's O(T²); the recompute path survives behind
+//!   [`config::DecodeMode`] as the reference the cache is pinned
+//!   bit-identical against (`tests/engine_parity.rs`, artifact-free).
 //!
 //! Use PJRT when artifacts exist and numbers must match training
 //! bit-for-bit; use the native engine to serve merged checkpoints under

@@ -141,7 +141,8 @@ COMMANDS
             [--base <ckpt>] [--out <ckpt>] [--merge true]
   eval      --model tiny --ckpt <ckpt> --suite mmlu|arith|sql|datatotext [--n 64]
   serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--backend pjrt|native]
-            [--bits 4] [--config <exp.toml>] [--requests 32] [--max-new 12]
+            [--decode cached|recompute] [--bits 4] [--config <exp.toml>]
+            [--requests 32] [--max-new 12]
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -332,6 +333,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(s) => lota_qaf::config::Backend::parse(s)?,
         None => exp.backend,
     };
+    // native-engine decode strategy: KV-cached (default) or the
+    // full-prefix recompute reference; ignored by the pjrt backend
+    let decode = match args.opt("decode") {
+        Some(s) => lota_qaf::config::DecodeMode::parse(s)?,
+        None => exp.decode,
+    };
     let path = match args.get("path", "merged").as_str() {
         "merged" => ServePath::Merged,
         "lora" => ServePath::LoraAdapter,
@@ -349,17 +356,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lota_qaf::config::Backend::Pjrt => Some(Runtime::new(&artifacts_dir(args))?),
         lota_qaf::config::Backend::Native => None,
     };
-    let opts = ServeOptions::new(path, max_new).backend(backend).bits(bits);
+    let opts = ServeOptions::new(path, max_new).backend(backend).bits(bits).decode_mode(decode);
     let gen = tasks::task_by_name("arith")?;
     let mut rng = Rng::new(123);
     let prompts: Vec<String> = (0..n)
         .map(|_| gen.sample(&mut rng, tasks::Split::Test).prompt)
         .collect();
     let report = serve_batch(rt.as_ref(), &cfg, &store, &opts, &prompts)?;
+    let backend_tag = match backend {
+        lota_qaf::config::Backend::Native => format!("native:{}", decode.as_str()),
+        lota_qaf::config::Backend::Pjrt => "pjrt".to_string(),
+    };
     println!(
         "served {} requests [{}] in {:.2}s: {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s",
         report.requests,
-        backend.as_str(),
+        backend_tag,
         report.wall_secs,
         report.tokens_per_sec,
         report.requests_per_sec,

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::ModelConfig;
+use crate::config::{DecodeMode, ModelConfig};
 use crate::coordinator;
 use crate::engine::{self, Engine};
 use crate::model::ParamStore;
@@ -22,7 +22,11 @@ use crate::runtime::{Executable, Runtime};
 use super::batcher::BucketPolicy;
 use super::ServePath;
 
-pub use crate::engine::Generation;
+pub use crate::engine::{DecodeStats, Generation};
+
+/// Per-batch KV memory the cached native path may hold: the adaptive
+/// batcher is capped at however many request rows fit in this budget.
+const KV_CACHE_BUDGET_BYTES: usize = 1 << 30;
 
 /// A serving executor: turns a batch of prompts into finished generations.
 pub trait ServeBackend {
@@ -34,8 +38,18 @@ pub trait ServeBackend {
     fn bucket_policy(&self) -> BucketPolicy;
 
     /// Greedy-decode one batch. Returns exactly `prompts.len()` entries,
-    /// each carrying its generated-token count.
-    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>>;
+    /// each carrying its generated-token count, plus the decode-work
+    /// accounting (zeroed by backends that don't track it).
+    fn decode_with_stats(
+        &self,
+        prompts: &[String],
+        max_new: usize,
+    ) -> Result<(Vec<Generation>, DecodeStats)>;
+
+    /// [`ServeBackend::decode_with_stats`] without the accounting.
+    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
+        Ok(self.decode_with_stats(prompts, max_new)?.0)
+    }
 }
 
 /// The AOT path: compiled `fwd_*` artifacts per batch bucket.
@@ -91,7 +105,11 @@ impl ServeBackend for PjrtBackend<'_> {
             .expect("non-empty bucket set by construction")
     }
 
-    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
+    fn decode_with_stats(
+        &self,
+        prompts: &[String],
+        max_new: usize,
+    ) -> Result<(Vec<Generation>, DecodeStats)> {
         // smallest compiled bucket that holds the batch; the decoder chunks
         // by the executable's batch if the queue handed us more than that
         let n = prompts.len();
@@ -111,13 +129,18 @@ impl ServeBackend for PjrtBackend<'_> {
             max_new,
             None,
         )?;
-        Ok(decoded.into_iter().map(|(text, tokens)| Generation { text, tokens }).collect())
+        let gens = decoded.into_iter().map(|(text, tokens)| Generation { text, tokens }).collect();
+        // the AOT decoder doesn't track per-step feeding — zeroed stats
+        Ok((gens, DecodeStats::default()))
     }
 }
 
 /// The native path: the packed-integer engine, no artifacts, no buckets.
+/// Decodes KV-cached by default; [`NativeBackend::with_mode`] selects the
+/// full-prefix recompute reference instead.
 pub struct NativeBackend {
     engine: Engine,
+    mode: DecodeMode,
 }
 
 impl NativeBackend {
@@ -135,17 +158,34 @@ impl NativeBackend {
             engine.attach_lora(store)?;
         }
         log::info!(
-            "native backend[{}] {}-bit, {} packed weight bytes{}",
+            "native backend[{}] {}-bit, {} packed weight bytes{}, {} KiB KV per cached row",
             cfg.name,
             n_bits,
             engine.deployed_weight_bytes(),
-            if engine.has_lora() { " + lora adapters" } else { "" }
+            if engine.has_lora() { " + lora adapters" } else { "" },
+            engine.cache_row_bytes() / 1024
         );
-        Ok(NativeBackend { engine })
+        Ok(NativeBackend { engine, mode: DecodeMode::Cached })
+    }
+
+    /// Select the decode strategy (builder style; cached is the default).
+    pub fn with_mode(mut self, mode: DecodeMode) -> NativeBackend {
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> DecodeMode {
+        self.mode
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Rows the KV budget can cache at full context — the adaptive
+    /// batcher's per-drain-step ceiling in cached mode.
+    fn max_cached_rows(&self) -> usize {
+        (KV_CACHE_BUDGET_BYTES / self.engine.cache_row_bytes().max(1)).max(1)
     }
 }
 
@@ -155,11 +195,20 @@ impl ServeBackend for NativeBackend {
     }
 
     fn bucket_policy(&self) -> BucketPolicy {
-        BucketPolicy::adaptive()
+        // cached decode allocates K/V per request row up front, so bound
+        // what one drain step may take; recompute holds no per-row state
+        match self.mode {
+            DecodeMode::Cached => BucketPolicy::adaptive_capped(self.max_cached_rows()),
+            DecodeMode::Recompute => BucketPolicy::adaptive(),
+        }
     }
 
-    fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
-        engine::greedy_decode(&self.engine, prompts, max_new)
+    fn decode_with_stats(
+        &self,
+        prompts: &[String],
+        max_new: usize,
+    ) -> Result<(Vec<Generation>, DecodeStats)> {
+        engine::greedy_decode_with(&self.engine, prompts, max_new, self.mode)
     }
 }
 
@@ -209,5 +258,33 @@ mod tests {
         let (cfg, store) = tiny_store(4);
         let be = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
         assert_eq!(be.bucket_policy().pick(17), Some(17));
+        // tiny rows are ~128 KiB of K/V, so the 1 GiB budget caps far
+        // above any test batch — but the cap exists
+        assert_eq!(be.bucket_policy().pick(usize::MAX), Some(be.max_cached_rows()));
+        // recompute mode holds no cache, so nothing to cap
+        let be = be.with_mode(DecodeMode::Recompute);
+        assert_eq!(be.bucket_policy().pick(usize::MAX), Some(usize::MAX));
+    }
+
+    #[test]
+    fn decode_modes_agree_and_report_work() {
+        let (cfg, store) = tiny_store(5);
+        let prompts: Vec<String> = (0..3).map(|i| format!("{i} + 3 =")).collect();
+        let cached = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        assert_eq!(cached.mode(), DecodeMode::Cached);
+        let recomp = NativeBackend::new(&cfg, &store, ServePath::Merged, 4)
+            .unwrap()
+            .with_mode(DecodeMode::Recompute);
+        let (cg, cs) = cached.decode_with_stats(&prompts, 5).unwrap();
+        let (rg, rs) = recomp.decode_with_stats(&prompts, 5).unwrap();
+        for (c, r) in cg.iter().zip(&rg) {
+            assert_eq!(c.text, r.text);
+            assert_eq!(c.tokens, r.tokens);
+        }
+        assert!(cs.forwarded_positions <= rs.forwarded_positions);
+        if rs.forwards > 1 {
+            assert!(cs.forwarded_positions < rs.forwarded_positions);
+        }
+        assert!(cs.forwards > 0 && rs.forwards > 0);
     }
 }

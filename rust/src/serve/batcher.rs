@@ -29,6 +29,9 @@ pub struct Request {
 pub struct BucketPolicy {
     buckets: Vec<usize>,
     adaptive: bool,
+    /// adaptive-mode ceiling per drain step (`None` = whole queue) — the
+    /// KV-cached native backend bounds per-batch cache memory with this
+    cap: Option<usize>,
 }
 
 impl BucketPolicy {
@@ -38,13 +41,21 @@ impl BucketPolicy {
         if buckets.is_empty() || buckets[0] == 0 {
             bail!("bucket list must be non-empty with positive sizes");
         }
-        Ok(BucketPolicy { buckets, adaptive: false })
+        Ok(BucketPolicy { buckets, adaptive: false, cap: None })
     }
 
     /// No fixed shapes: every drain step takes the whole queue as one
     /// batch (the native engine's mode — no padding, no re-queue).
     pub fn adaptive() -> BucketPolicy {
-        BucketPolicy { buckets: Vec::new(), adaptive: true }
+        BucketPolicy { buckets: Vec::new(), adaptive: true, cap: None }
+    }
+
+    /// Adaptive, but at most `cap` requests per drain step. The KV-cached
+    /// decode path allocates per-request K/V buffers for the whole batch
+    /// up front, so an unbounded queue drain would allocate unbounded
+    /// cache memory; the cap turns one huge batch into several full ones.
+    pub fn adaptive_capped(cap: usize) -> BucketPolicy {
+        BucketPolicy { buckets: Vec::new(), adaptive: true, cap: Some(cap.max(1)) }
     }
 
     pub fn is_adaptive(&self) -> bool {
@@ -69,7 +80,10 @@ impl BucketPolicy {
             return None;
         }
         if self.adaptive {
-            return Some(queued);
+            return Some(match self.cap {
+                Some(cap) => queued.min(cap),
+                None => queued,
+            });
         }
         let largest = *self.buckets.last().unwrap();
         if queued >= largest {
@@ -159,6 +173,33 @@ mod tests {
         assert_eq!(bucket, 9);
         assert_eq!(reqs.len(), 9);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn capped_adaptive_bounds_each_drain_step() {
+        let p = BucketPolicy::adaptive_capped(4);
+        assert!(p.is_adaptive());
+        assert_eq!(p.pick(0), None);
+        assert_eq!(p.pick(3), Some(3));
+        assert_eq!(p.pick(4), Some(4));
+        assert_eq!(p.pick(1000), Some(4));
+        // zero caps are nonsense — clamp to 1 so the queue still drains
+        assert_eq!(BucketPolicy::adaptive_capped(0).pick(7), Some(1));
+
+        // every request still scheduled exactly once, FIFO, ≤ cap per batch
+        let mut b = DynamicBatcher::new(BucketPolicy::adaptive_capped(4));
+        for i in 0..11 {
+            b.push(format!("p{i}"));
+        }
+        let mut seen = Vec::new();
+        while let Some((bucket, reqs)) = b.next_batch() {
+            assert!(bucket <= 4);
+            assert!(reqs.len() <= 4);
+            for r in reqs {
+                seen.push(r.id);
+            }
+        }
+        assert_eq!(seen, (0..11).collect::<Vec<u64>>());
     }
 
     #[test]

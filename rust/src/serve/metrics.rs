@@ -7,6 +7,13 @@
 //! decoded characters, which silently diverges whenever an untrained or
 //! heavily-quantized model emits special/unused vocab ids that the
 //! detokenizer drops.
+//!
+//! Reports also carry the aggregate [`DecodeStats`] of what the backend
+//! actually fed through the model — the number that separates KV-cached
+//! decode (positions fed ~ tokens generated) from recompute (positions
+//! fed ~ prefix × steps). Backends that don't track it leave it zeroed.
+
+use crate::engine::DecodeStats;
 
 use super::Response;
 
@@ -45,6 +52,9 @@ pub struct ThroughputReport {
     pub tokens_per_sec: f64,
     pub requests_per_sec: f64,
     pub latency: LatencyStats,
+    /// aggregate decode-work accounting across all batches (zeroed when
+    /// the backend doesn't report it)
+    pub decode: DecodeStats,
 }
 
 impl ThroughputReport {
@@ -58,6 +68,24 @@ impl ThroughputReport {
             tokens_per_sec: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
             requests_per_sec: if wall > 0.0 { responses.len() as f64 / wall } else { 0.0 },
             latency: LatencyStats::from_sorted(&lat),
+            decode: DecodeStats::default(),
+        }
+    }
+
+    /// Attach the aggregate decode accounting (builder style).
+    pub fn with_decode(mut self, decode: DecodeStats) -> ThroughputReport {
+        self.decode = decode;
+        self
+    }
+
+    /// Positions the backend fed per token it generated — 1.0 is the
+    /// cached-decode ideal (each token paid for once, ignoring prefill);
+    /// recompute grows linearly with generation length.
+    pub fn positions_per_token(&self) -> f64 {
+        if self.tokens > 0 {
+            self.decode.forwarded_positions as f64 / self.tokens as f64
+        } else {
+            f64::NAN
         }
     }
 
@@ -103,6 +131,19 @@ mod tests {
         assert_eq!(r.requests, 10);
         assert_eq!(r.tokens_per_sec, 25.0);
         assert_eq!(r.requests_per_sec, 5.0);
+    }
+
+    #[test]
+    fn decode_stats_ride_along() {
+        let responses: Vec<Response> = (0..4).map(|i| resp(i, 0.1, 5)).collect();
+        let stats = DecodeStats { forwards: 6, forwarded_rows: 20, forwarded_positions: 120 };
+        let r = ThroughputReport::from_responses(&responses, 20, 1.0).with_decode(stats);
+        assert_eq!(r.decode, stats);
+        assert!((r.positions_per_token() - 6.0).abs() < 1e-9);
+        // zeroed by default, NaN ratio on an empty report
+        let empty = ThroughputReport::from_responses(&[], 0, 0.0);
+        assert_eq!(empty.decode, DecodeStats::default());
+        assert!(empty.positions_per_token().is_nan());
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! * a [`ServeBackend`] trait with two executors: [`PjrtBackend`] (the
 //!   fixed-shape AOT artifacts, routed by batch bucket) and
 //!   [`NativeBackend`] (the packed-integer engine of `crate::engine`,
-//!   which accepts any batch size and needs no artifacts directory);
+//!   which accepts any batch size, needs no artifacts directory, and
+//!   decodes KV-cached by default — `decode_mode` in [`ServeOptions`]
+//!   selects the full-prefix recompute reference instead);
 //! * a [`DynamicBatcher`] that queues requests and routes them to the
 //!   smallest batch the chosen backend can run — compiled buckets for
 //!   PJRT, the whole queue at once for the native engine;
@@ -20,7 +22,7 @@ pub mod backend;
 pub mod batcher;
 pub mod metrics;
 
-pub use backend::{Generation, NativeBackend, PjrtBackend, ServeBackend};
+pub use backend::{DecodeStats, Generation, NativeBackend, PjrtBackend, ServeBackend};
 pub use batcher::{BucketPolicy, DynamicBatcher, Request};
 pub use metrics::{LatencyStats, ThroughputReport};
 
@@ -29,7 +31,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::config::{Backend, Method, ModelConfig};
+use crate::config::{Backend, DecodeMode, Method, ModelConfig};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
 
@@ -66,11 +68,20 @@ pub struct ServeOptions {
     /// bit width of the packed grid (native backend only)
     pub n_bits: u32,
     pub max_new: usize,
+    /// decode strategy (native backend only): KV-cached incremental steps
+    /// or the full-prefix recompute reference
+    pub decode: DecodeMode,
 }
 
 impl ServeOptions {
     pub fn new(path: ServePath, max_new: usize) -> ServeOptions {
-        ServeOptions { path, backend: Backend::Pjrt, n_bits: 4, max_new }
+        ServeOptions {
+            path,
+            backend: Backend::Pjrt,
+            n_bits: 4,
+            max_new,
+            decode: DecodeMode::Cached,
+        }
     }
 
     pub fn backend(mut self, backend: Backend) -> ServeOptions {
@@ -80,6 +91,11 @@ impl ServeOptions {
 
     pub fn bits(mut self, n_bits: u32) -> ServeOptions {
         self.n_bits = n_bits;
+        self
+    }
+
+    pub fn decode_mode(mut self, decode: DecodeMode) -> ServeOptions {
+        self.decode = decode;
         self
     }
 }
@@ -122,9 +138,11 @@ impl<'a> Server<'a> {
         store: &ParamStore,
         path: ServePath,
         n_bits: u32,
+        mode: DecodeMode,
         max_new: usize,
     ) -> Result<Server<'a>> {
-        Ok(Server::with_backend(Box::new(NativeBackend::new(cfg, store, path, n_bits)?), max_new))
+        let backend = NativeBackend::new(cfg, store, path, n_bits)?.with_mode(mode);
+        Ok(Server::with_backend(Box::new(backend), max_new))
     }
 
     /// Wrap an already-built backend.
@@ -147,7 +165,9 @@ impl<'a> Server<'a> {
                 };
                 Server::new(rt, cfg, store, opts.path, opts.max_new)
             }
-            Backend::Native => Server::native(cfg, store, opts.path, opts.n_bits, opts.max_new),
+            Backend::Native => {
+                Server::native(cfg, store, opts.path, opts.n_bits, opts.decode, opts.max_new)
+            }
         }
     }
 
@@ -160,14 +180,18 @@ impl<'a> Server<'a> {
     }
 
     /// Drain everything queued, returning responses (in completion order)
-    /// plus the aggregate report.
+    /// plus the aggregate report. Each batch's KV cache lives for exactly
+    /// that batch's decode — created at prefill, reused across all of its
+    /// decode steps, dropped with the batch.
     pub fn drain(&mut self) -> Result<(Vec<Response>, ThroughputReport)> {
         let t0 = Instant::now();
         let mut responses = Vec::new();
         let mut total_tokens = 0usize;
+        let mut decode_stats = DecodeStats::default();
         while let Some((_bucket, reqs)) = self.batcher.next_batch() {
             let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
-            let gens = self.backend.decode(&prompts, self.max_new)?;
+            let (gens, stats) = self.backend.decode_with_stats(&prompts, self.max_new)?;
+            decode_stats.absorb(&stats);
             if gens.len() != reqs.len() {
                 bail!("backend returned {} generations for {} requests", gens.len(), reqs.len());
             }
@@ -183,7 +207,8 @@ impl<'a> Server<'a> {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let report = ThroughputReport::from_responses(&responses, total_tokens, wall);
+        let report = ThroughputReport::from_responses(&responses, total_tokens, wall)
+            .with_decode(decode_stats);
         Ok((responses, report))
     }
 }
@@ -252,6 +277,26 @@ mod tests {
         // generated-token accounting: bounded by requests × max_new
         assert!(report.tokens <= 7 * 3);
         assert!(report.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn decode_modes_serve_identically_with_honest_accounting() {
+        let (cfg, store) = tiny_store();
+        let prompts: Vec<String> = (0..5).map(|i| format!("{i} + 4 =")).collect();
+        let cached = ServeOptions::new(ServePath::Merged, 4).backend(Backend::Native);
+        let recomp = ServeOptions::new(ServePath::Merged, 4)
+            .backend(Backend::Native)
+            .decode_mode(DecodeMode::Recompute);
+        let rep_c = serve_batch(None, &cfg, &store, &cached, &prompts).unwrap();
+        let rep_r = serve_batch(None, &cfg, &store, &recomp, &prompts).unwrap();
+        assert_eq!(rep_c.tokens, rep_r.tokens, "decode modes generated different tokens");
+        // both report what they fed; the cached path never feeds more, and
+        // feeds strictly less whenever decoding went past the first step
+        assert!(rep_c.decode.forwards > 0 && rep_r.decode.forwards > 0);
+        assert!(rep_c.decode.forwarded_positions <= rep_r.decode.forwarded_positions);
+        if rep_r.decode.forwards > 1 {
+            assert!(rep_c.decode.forwarded_positions < rep_r.decode.forwarded_positions);
+        }
     }
 
     #[test]

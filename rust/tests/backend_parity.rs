@@ -8,15 +8,15 @@
 use std::path::Path;
 use std::sync::OnceLock;
 
-use lota_qaf::adapter::{lota_merge, TernaryAdapter};
-use lota_qaf::config::{preset, Backend, ModelConfig};
+use lota_qaf::config::{Backend, DecodeMode, ModelConfig};
 use lota_qaf::coordinator;
 use lota_qaf::engine::Engine;
-use lota_qaf::model::{self, ParamStore};
-use lota_qaf::quant::rtn_quantize;
 use lota_qaf::runtime::Runtime;
 use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::{Rng, Tensor};
+
+mod common;
+use common::merged_tiny;
 
 fn runtime() -> &'static Runtime {
     static RT: OnceLock<Runtime> = OnceLock::new();
@@ -24,30 +24,6 @@ fn runtime() -> &'static Runtime {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Runtime::new(&dir).expect("artifacts missing — run `make artifacts`")
     })
-}
-
-/// A merged tiny checkpoint: quantize, then fold non-trivial ternary
-/// adapters into the grid so the parity surface isn't the identity merge.
-fn merged_tiny(seed: u64) -> (ModelConfig, ParamStore) {
-    let cfg = preset("tiny").unwrap();
-    let mut rng = Rng::new(seed);
-    let fp = model::init_fp(&cfg, &mut rng);
-    let mut store =
-        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
-            .unwrap();
-    for (slot, din, dout) in cfg.slots() {
-        for li in 0..cfg.n_layers {
-            let ql = model::quant_layer(&cfg, &store, slot, li, 4).unwrap();
-            let mut ta = TernaryAdapter::init(din, dout, cfg.rank, &mut rng);
-            ta.b = Tensor::new(
-                &[cfg.rank, dout],
-                (0..cfg.rank * dout).map(|_| rng.below(3) as f32 - 1.0).collect(),
-            );
-            let merged = lota_merge(&ql, &ta, 0.75 * cfg.rank as f32);
-            model::set_quant_layer(&mut store, slot, li, &merged).unwrap();
-        }
-    }
-    (cfg, store)
 }
 
 fn rand_tokens(cfg: &ModelConfig, b: usize, seed: u64) -> Tensor {
@@ -105,7 +81,8 @@ fn serve_texts_agree_across_backends() {
     let mut pjrt_server =
         lota_qaf::serve::Server::new(rt, &cfg, &store, ServePath::Merged, 4).unwrap();
     let mut native_server =
-        lota_qaf::serve::Server::native(&cfg, &store, ServePath::Merged, 4, 4).unwrap();
+        lota_qaf::serve::Server::native(&cfg, &store, ServePath::Merged, 4, DecodeMode::Cached, 4)
+            .unwrap();
     for p in &prompts {
         pjrt_server.enqueue(p.clone());
         native_server.enqueue(p.clone());
@@ -131,4 +108,45 @@ fn serve_options_select_native_without_runtime() {
     let prompts: Vec<String> = (0..3).map(|i| format!("{i} + 1 =")).collect();
     let report = serve_batch(None, &cfg, &store, &opts, &prompts).unwrap();
     assert_eq!(report.requests, 3);
+}
+
+/// Three-way parity on the same merged checkpoint: the PJRT artifacts,
+/// the native engine's KV-cached decode, and its recompute reference all
+/// serve the same texts with the same step counts.
+#[test]
+fn serve_texts_agree_across_backends_and_decode_modes() {
+    let rt = runtime();
+    let (cfg, store) = merged_tiny(53);
+    let gen = lota_qaf::data::task_by_name("arith").unwrap();
+    let mut prng = Rng::new(29);
+    let prompts: Vec<String> = (0..4)
+        .map(|_| gen.sample(&mut prng, lota_qaf::data::Split::Test).prompt)
+        .collect();
+
+    let mut pjrt_server =
+        lota_qaf::serve::Server::new(rt, &cfg, &store, ServePath::Merged, 5).unwrap();
+    for p in &prompts {
+        pjrt_server.enqueue(p.clone());
+    }
+    let (mut pjrt_resp, _) = pjrt_server.drain().unwrap();
+    pjrt_resp.sort_by_key(|r| r.id);
+
+    for mode in [DecodeMode::Cached, DecodeMode::Recompute] {
+        let opts = ServeOptions::new(ServePath::Merged, 5)
+            .backend(Backend::Native)
+            .decode_mode(mode);
+        let mut native_server =
+            lota_qaf::serve::Server::from_options(None, &cfg, &store, &opts).unwrap();
+        for p in &prompts {
+            native_server.enqueue(p.clone());
+        }
+        let (mut native_resp, native_rep) = native_server.drain().unwrap();
+        native_resp.sort_by_key(|r| r.id);
+        assert_eq!(pjrt_resp.len(), native_resp.len());
+        for (p, n) in pjrt_resp.iter().zip(&native_resp) {
+            assert_eq!(p.text, n.text, "request {} decoded differently ({mode:?})", p.id);
+            assert_eq!(p.tokens_decoded, n.tokens_decoded, "request {} steps ({mode:?})", p.id);
+        }
+        assert!(native_rep.decode.forwards > 0, "{mode:?} reported no decode work");
+    }
 }

@@ -1,0 +1,34 @@
+//! Shared test-support for the parity suites: the synthetic merged
+//! checkpoint both `backend_parity` and `engine_parity` pin against.
+//! Cargo compiles this module into each test binary that declares
+//! `mod common;` — it is not a test target itself.
+
+use lota_qaf::adapter::{lota_merge, TernaryAdapter};
+use lota_qaf::config::{preset, ModelConfig};
+use lota_qaf::model::{self, ParamStore};
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::tensor::{Rng, Tensor};
+
+/// A merged tiny checkpoint: quantize, then fold non-trivial ternary
+/// adapters into the grid so the parity surface isn't the identity merge.
+pub fn merged_tiny(seed: u64) -> (ModelConfig, ParamStore) {
+    let cfg = preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let mut store =
+        model::quantize_store(&cfg, &fp, |_, _, w| Ok(rtn_quantize(w, cfg.group_size, 4)))
+            .unwrap();
+    for (slot, din, dout) in cfg.slots() {
+        for li in 0..cfg.n_layers {
+            let ql = model::quant_layer(&cfg, &store, slot, li, 4).unwrap();
+            let mut ta = TernaryAdapter::init(din, dout, cfg.rank, &mut rng);
+            ta.b = Tensor::new(
+                &[cfg.rank, dout],
+                (0..cfg.rank * dout).map(|_| rng.below(3) as f32 - 1.0).collect(),
+            );
+            let merged = lota_merge(&ql, &ta, 0.75 * cfg.rank as f32);
+            model::set_quant_layer(&mut store, slot, li, &merged).unwrap();
+        }
+    }
+    (cfg, store)
+}
