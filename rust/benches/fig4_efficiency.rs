@@ -18,7 +18,7 @@
 use std::path::Path;
 
 use lota_qaf::bench_harness::Table;
-use lota_qaf::config::{preset, Backend, DecodeMode, Method};
+use lota_qaf::config::{preset, Backend, DecodeMode, Method, SchedConfig};
 use lota_qaf::data::{task_by_name, Split};
 use lota_qaf::model;
 use lota_qaf::quant::{pack::deployed_bytes, rtn_quantize};
@@ -144,38 +144,57 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // cached vs recompute decode on the native engine: same total
-    // generated tokens (full per-text parity is pinned by the test
-    // suites), O(T) vs O(T²) work. "pos/tok" is positions fed per token
-    // generated — the honest witness (near 1 + prefill amortization for
-    // the cache, growing with generation length for recompute).
+    // cached vs recompute vs scheduled decode on the native engine: the
+    // same total generated tokens (full per-text parity is pinned by the
+    // test suites), O(T) vs O(T²) work. "pos/tok" is positions fed per
+    // token generated — the honest witness (near 1 + prefill
+    // amortization for the cache, growing with generation length for
+    // recompute). The sched row serves through the continuous-batching
+    // scheduler (one-shot: all requests at t = 0), which additionally
+    // observes time-to-first-token and queue wait — the request-level
+    // numbers one-shot draining can't measure.
     if backends.contains(&Backend::Native) {
-        println!("\n## Figure 4c addendum — native decode: KV-cached vs full recompute");
-        let mut t = Table::new(&["max_new", "decode", "tok/s", "pos/tok", "speedup"]);
+        println!("\n## Figure 4c addendum — native decode: KV-cached vs recompute vs scheduled");
+        let mut t = Table::new(&[
+            "max_new", "decode", "tok/s", "pos/tok", "speedup", "ttft p50/p95 ms", "queue ms",
+        ]);
         for max_new in [8usize, 32] {
             let prompts: Vec<String> = (0..n_reqs)
                 .map(|_| gen.sample(&mut prng, Split::Test).prompt)
                 .collect();
-            let run = |mode: DecodeMode| {
-                let opts = ServeOptions::new(ServePath::Merged, max_new)
+            let run = |opts: ServeOptions| serve_batch(None, &cfg, &merged, &opts, &prompts);
+            let native = |mode: DecodeMode| {
+                ServeOptions::new(ServePath::Merged, max_new)
                     .backend(Backend::Native)
-                    .decode_mode(mode);
-                serve_batch(None, &cfg, &merged, &opts, &prompts)
+                    .decode_mode(mode)
             };
-            let rep_c = run(DecodeMode::Cached)?;
-            let rep_r = run(DecodeMode::Recompute)?;
+            let rep_c = run(native(DecodeMode::Cached))?;
+            let rep_r = run(native(DecodeMode::Recompute))?;
+            let rep_s = run(native(DecodeMode::Cached).scheduled(SchedConfig::default()))?;
             assert_eq!(rep_c.tokens, rep_r.tokens, "decode modes generated different tokens");
+            assert_eq!(rep_c.tokens, rep_s.tokens, "scheduling changed the generations");
             for (mode, rep, speedup) in [
-                (DecodeMode::Cached, &rep_c, rep_c.speedup_over(&rep_r)),
-                (DecodeMode::Recompute, &rep_r, 1.0),
+                ("cached", &rep_c, rep_c.speedup_over(&rep_r)),
+                ("recompute", &rep_r, 1.0),
+                ("sched", &rep_s, rep_s.speedup_over(&rep_r)),
             ] {
                 let ppt = rep.positions_per_token();
                 t.row(&[
                     max_new.to_string(),
-                    mode.as_str().to_string(),
+                    mode.to_string(),
                     format!("{:.1}", rep.tokens_per_sec),
                     if ppt.is_nan() { "-".to_string() } else { format!("{ppt:.1}") },
                     format!("{:.2}x", speedup),
+                    if rep.sched.is_some() {
+                        format!("{:.1}/{:.1}", rep.ttft_ms_p50, rep.ttft_ms_p95)
+                    } else {
+                        "-".to_string()
+                    },
+                    if rep.sched.is_some() {
+                        format!("{:.1}", rep.queue_wait_ms)
+                    } else {
+                        "-".to_string()
+                    },
                 ]);
             }
         }

@@ -174,6 +174,53 @@ impl DecodeMode {
     }
 }
 
+/// Continuous-batching scheduler knobs (the `[sched]` TOML table and the
+/// `lota serve --sched` flags). Presence of the table — or `--sched true`
+/// — routes native serving through `sched::Scheduler` instead of the
+/// one-shot drain; the scheduler sizes its decode-slot pool as
+/// `max_batch` capped by how many full-context KV rows fit the budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchedConfig {
+    /// concurrent decode slots ceiling (`sched.max_batch`)
+    pub max_batch: usize,
+    /// KV memory budget in MiB shared by all live slots
+    /// (`sched.kv_budget_mb`)
+    pub kv_budget_mb: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig { max_batch: 8, kv_budget_mb: 1024 }
+    }
+}
+
+impl SchedConfig {
+    /// Parse the `[sched]` table: None when the document has no `sched.*`
+    /// keys (or `sched.enabled = false`), Some(config) otherwise.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Option<SchedConfig>> {
+        if !doc.keys().any(|k| k.starts_with("sched.")) {
+            return Ok(None);
+        }
+        if doc.get_bool("sched.enabled") == Some(false) {
+            return Ok(None);
+        }
+        let mut c = SchedConfig::default();
+        if let Some(v) = doc.get_num("sched.max_batch") {
+            c.max_batch = v as usize;
+        }
+        if let Some(v) = doc.get_num("sched.kv_budget_mb") {
+            c.kv_budget_mb = v as usize;
+        }
+        if c.max_batch == 0 {
+            bail!("sched.max_batch must be at least 1");
+        }
+        if c.kv_budget_mb == 0 {
+            bail!("sched.kv_budget_mb must be at least 1");
+        }
+        Ok(Some(c))
+    }
+}
+
 /// Fine-tuning method selector used across the coordinator & benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -236,6 +283,9 @@ pub struct ExperimentConfig {
     /// how the native engine decodes (`decode_mode` in TOML): KV-cached
     /// incremental steps or full-prefix recompute
     pub decode: DecodeMode,
+    /// continuous-batching scheduler config (the `[sched]` TOML table);
+    /// None serves one-shot
+    pub sched: Option<SchedConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -254,6 +304,7 @@ impl Default for ExperimentConfig {
             checkpoint_dir: None,
             backend: Backend::Pjrt,
             decode: DecodeMode::Cached,
+            sched: None,
         }
     }
 }
@@ -300,6 +351,7 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("decode_mode") {
             c.decode = DecodeMode::parse(v)?;
         }
+        c.sched = SchedConfig::from_toml(doc)?;
         if !(2..=4).contains(&c.n_bits) {
             bail!("n_bits must be 2, 3 or 4 (got {})", c.n_bits);
         }
@@ -382,6 +434,32 @@ mod tests {
         assert_eq!(DecodeMode::default(), DecodeMode::Cached);
         let doc = TomlDoc::parse("decode_mode = \"recompute\"\n").unwrap();
         assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().decode, DecodeMode::Recompute);
+    }
+
+    #[test]
+    fn sched_table_parses_and_validates() {
+        // no table → no scheduler
+        let doc = TomlDoc::parse("model = \"tiny\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().sched, None);
+        // bare table → defaults
+        let doc = TomlDoc::parse("[sched]\nenabled = true\n").unwrap();
+        assert_eq!(SchedConfig::from_toml(&doc).unwrap(), Some(SchedConfig::default()));
+        // explicit knobs
+        let doc =
+            TomlDoc::parse("[sched]\nmax_batch = 4\nkv_budget_mb = 64\n").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap().sched.unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.kv_budget_mb, 64);
+        // enabled = false turns the table off
+        let doc = TomlDoc::parse("[sched]\nenabled = false\nmax_batch = 4\n").unwrap();
+        assert_eq!(SchedConfig::from_toml(&doc).unwrap(), None);
+        // nonsense values are refused
+        assert!(SchedConfig::from_toml(&TomlDoc::parse("[sched]\nmax_batch = 0\n").unwrap())
+            .is_err());
+        assert!(
+            SchedConfig::from_toml(&TomlDoc::parse("[sched]\nkv_budget_mb = 0\n").unwrap())
+                .is_err()
+        );
     }
 
     #[test]

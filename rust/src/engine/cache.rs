@@ -74,6 +74,19 @@ impl KvCache {
         2 * n_layers * capacity * d_model * 4
     }
 
+    /// Reclaim `row` for a brand-new request: drop every live position.
+    /// The slab is *not* cleared — positions past `len` are scratch that a
+    /// forward always writes before reading — so reuse costs O(1) instead
+    /// of reallocating the whole cache, and a decode on a reused row is
+    /// bit-identical to one on a fresh cache (pinned by the reuse
+    /// regression in `engine::decode` and `tests/engine_parity.rs`). This
+    /// is what lets the scheduler hand a finished request's slot to the
+    /// next waiting request mid-generation.
+    pub fn reset_row(&mut self, row: usize) {
+        assert!(row < self.batch, "reset_row: row {row} outside batch {}", self.batch);
+        self.len[row] = 0;
+    }
+
     /// Shrink `row` back to `new_len` live positions. Used after a padded
     /// batch prefill (ragged prompts all advance by the padded length; the
     /// pad tail becomes scratch again) and by benches to re-time a step at
@@ -141,6 +154,27 @@ mod tests {
         assert_eq!(c.pos_len(2), 3);
         c.advance(&[2], 1);
         assert_eq!(c.pos_len(2), 4);
+    }
+
+    #[test]
+    fn reset_reclaims_single_rows() {
+        let mut c = KvCache::new(2, 3, 16, 8);
+        c.advance(&[0, 1, 2], 7);
+        c.reset_row(1);
+        assert_eq!(c.pos_len(0), 7);
+        assert_eq!(c.pos_len(1), 0);
+        assert_eq!(c.pos_len(2), 7);
+        // the reclaimed row advances again from zero, others undisturbed
+        c.advance(&[1], 3);
+        assert_eq!(c.pos_len(1), 3);
+        assert_eq!(c.pos_len(0), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reset_row_bounds_checked() {
+        let mut c = KvCache::new(1, 2, 8, 4);
+        c.reset_row(2);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::config::{DecodeMode, ModelConfig};
 use crate::data::tokenizer::{self, BOS, EOS, PAD, SEP};
 use crate::tensor::Tensor;
 
+use super::cache::KvCache;
 use super::forward::Engine;
 
 /// One finished generation: the decoded text plus the number of tokens
@@ -92,33 +93,44 @@ pub fn greedy_decode_with(
     }
 }
 
-/// BOS + prompt + SEP framing shared by both strategies. Returns the
-/// f32-coded rows and each row's cursor (the position whose logits pick
-/// the next token).
+/// BOS + prompt + SEP framing for one prompt: the f32-coded row and its
+/// cursor (the position whose logits pick the next token). Shared by the
+/// one-shot strategies and the scheduler's per-request admission.
+pub(crate) fn frame_prompt(
+    cfg: &ModelConfig,
+    prompt: &str,
+    max_new: usize,
+) -> Result<(Vec<f32>, usize)> {
+    let t_cap = cfg.seq_len;
+    let mut ids = vec![BOS];
+    ids.extend(tokenizer::encode(&prompt.replace('\n', " ")));
+    ids.push(SEP);
+    if ids.len() + max_new > t_cap {
+        bail!("prompt+generation ({}) exceeds seq_len {t_cap}", ids.len() + max_new);
+    }
+    let cursor = ids.len() - 1;
+    Ok((ids.into_iter().map(|id| id as f32).collect(), cursor))
+}
+
+/// [`frame_prompt`] over a batch.
 fn frame(
     cfg: &ModelConfig,
     prompts: &[String],
     max_new: usize,
 ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
-    let t_cap = cfg.seq_len;
     let mut rows = Vec::with_capacity(prompts.len());
     let mut cursor = vec![0usize; prompts.len()];
     for (ri, p) in prompts.iter().enumerate() {
-        let mut ids = vec![BOS];
-        ids.extend(tokenizer::encode(&p.replace('\n', " ")));
-        ids.push(SEP);
-        if ids.len() + max_new > t_cap {
-            bail!("prompt+generation ({}) exceeds seq_len {t_cap}", ids.len() + max_new);
-        }
-        cursor[ri] = ids.len() - 1;
-        rows.push(ids.into_iter().map(|id| id as f32).collect::<Vec<f32>>());
+        let (row, cur) = frame_prompt(cfg, p, max_new)?;
+        cursor[ri] = cur;
+        rows.push(row);
     }
     Ok((rows, cursor))
 }
 
 /// Last-max argmax over one vocab row (ties resolve to the higher id,
 /// matching the PJRT decoder).
-fn argmax(lrow: &[f32]) -> u32 {
+pub(crate) fn argmax(lrow: &[f32]) -> u32 {
     lrow.iter()
         .enumerate()
         .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
@@ -128,7 +140,7 @@ fn argmax(lrow: &[f32]) -> u32 {
 
 /// Apply one picked token to a row's state; returns whether the row
 /// finished (EOS or context cap — nothing appended in either case).
-fn step_row(
+pub(crate) fn step_row(
     next: u32,
     t_cap: usize,
     row: &mut Vec<f32>,
@@ -151,9 +163,75 @@ fn finish(generated: Vec<Vec<u32>>) -> Vec<Generation> {
         .collect()
 }
 
+/// Prefill a set of cache rows with their framed prompts in **one**
+/// padded, batched incremental forward, and pick each row's first token.
+///
+/// `rows[i]` is the (strictly increasing) cache row that `frames[i]`
+/// extends; every named row must be empty (fresh or
+/// [`KvCache::reset_row`]). Ragged frames are padded to the longest and
+/// truncated back to their true length afterwards, so the next token
+/// overwrites the pad scratch — trailing pads are causally inert, which
+/// is why a prefill's picks do not depend on what else shares the batch.
+///
+/// This is the single cached prefill implementation: the one-shot
+/// [`greedy_decode`] calls it with the whole batch at once, the
+/// continuous-batching scheduler (`crate::sched`) with whatever it
+/// admitted this step — bit-identical picks either way.
+pub(crate) fn prefill_rows(
+    engine: &Engine,
+    cache: &mut KvCache,
+    rows: &[usize],
+    frames: &[Vec<f32>],
+    stats: &mut DecodeStats,
+) -> Result<Vec<u32>> {
+    debug_assert_eq!(rows.len(), frames.len());
+    let v = engine.config().vocab;
+    let r = rows.len();
+    let t0 = frames.iter().map(Vec::len).max().unwrap();
+    let mut tokens = vec![PAD as f32; r * t0];
+    for (i, f) in frames.iter().enumerate() {
+        tokens[i * t0..i * t0 + f.len()].copy_from_slice(f);
+    }
+    let logits = engine.forward_incremental(&Tensor::new(&[r, t0], tokens), cache, rows)?;
+    stats.forwards += 1;
+    stats.forwarded_rows += r;
+    stats.forwarded_positions += r * t0;
+    let mut picks = Vec::with_capacity(r);
+    for (i, f) in frames.iter().enumerate() {
+        cache.truncate_row(rows[i], f.len());
+        let off = (i * t0 + f.len() - 1) * v;
+        picks.push(argmax(&logits.data()[off..off + v]));
+    }
+    Ok(picks)
+}
+
+/// One single-token decode step for `rows` (strictly increasing cache
+/// rows), feeding `last[i]` — each row's newest token — and picking the
+/// next via argmax. The shared step kernel of the one-shot cached decode
+/// and the scheduler's iteration loop.
+pub(crate) fn decode_step_rows(
+    engine: &Engine,
+    cache: &mut KvCache,
+    rows: &[usize],
+    last: &[f32],
+    stats: &mut DecodeStats,
+) -> Result<Vec<u32>> {
+    debug_assert_eq!(rows.len(), last.len());
+    let v = engine.config().vocab;
+    let r = rows.len();
+    let logits =
+        engine.forward_incremental(&Tensor::new(&[r, 1], last.to_vec()), cache, rows)?;
+    stats.forwards += 1;
+    stats.forwarded_rows += r;
+    stats.forwarded_positions += r;
+    Ok((0..r).map(|i| argmax(&logits.data()[i * v..(i + 1) * v])).collect())
+}
+
 /// The KV-cached strategy: prefill once, then one token per live row per
 /// step. The cache is created per batch and reused across every step of
-/// that batch's generation.
+/// that batch's generation. Built entirely on [`prefill_rows`] and
+/// [`decode_step_rows`] — the same primitives the scheduler drives — so
+/// the one-shot and scheduled paths cannot drift apart.
 fn decode_cached(
     engine: &Engine,
     prompts: &[String],
@@ -162,7 +240,6 @@ fn decode_cached(
     let cfg = engine.config();
     let b = prompts.len();
     let t_cap = cfg.seq_len;
-    let v = cfg.vocab;
     let (mut rows, mut cursor) = frame(cfg, prompts, max_new)?;
     let mut done = vec![false; b];
     let mut generated: Vec<Vec<u32>> = vec![Vec::new(); b];
@@ -171,27 +248,14 @@ fn decode_cached(
         return Ok((finish(generated), stats));
     }
 
-    // prefill: all prompts in one batched incremental forward, padded to
-    // the longest frame. Ragged rows are truncated back to their true
-    // length afterwards, so their next token overwrites the pad scratch —
-    // same inertness argument as the recompute path's trailing pads.
-    // The cache is sized to this batch's horizon, not the full context:
-    // no position past t0 + max_new can ever be written.
+    // prefill: all prompts in one batched incremental forward. The cache
+    // is sized to this batch's horizon, not the full context: no position
+    // past t0 + max_new can ever be written.
     let t0 = rows.iter().map(Vec::len).max().unwrap();
     let mut cache = engine.new_cache_for(b, t0 + max_new);
-    let mut tokens = vec![PAD as f32; b * t0];
-    for (ri, row) in rows.iter().enumerate() {
-        tokens[ri * t0..ri * t0 + row.len()].copy_from_slice(row);
-    }
     let all: Vec<usize> = (0..b).collect();
-    let logits = engine.forward_incremental(&Tensor::new(&[b, t0], tokens), &mut cache, &all)?;
-    stats.forwards += 1;
-    stats.forwarded_rows += b;
-    stats.forwarded_positions += b * t0;
-    for ri in 0..b {
-        cache.truncate_row(ri, rows[ri].len());
-        let off = (ri * t0 + cursor[ri]) * v;
-        let next = argmax(&logits.data()[off..off + v]);
+    let picks = prefill_rows(engine, &mut cache, &all, &rows, &mut stats)?;
+    for (ri, next) in picks.into_iter().enumerate() {
         done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
     }
 
@@ -203,17 +267,10 @@ fn decode_cached(
             break;
         }
         let step: Vec<f32> = active.iter().map(|ri| *rows[*ri].last().unwrap()).collect();
-        let logits = engine.forward_incremental(
-            &Tensor::new(&[active.len(), 1], step),
-            &mut cache,
-            &active,
-        )?;
-        stats.forwards += 1;
-        stats.forwarded_rows += active.len();
-        stats.forwarded_positions += active.len();
+        let picks = decode_step_rows(engine, &mut cache, &active, &step, &mut stats)?;
         for (i, &ri) in active.iter().enumerate() {
-            let next = argmax(&logits.data()[i * v..(i + 1) * v]);
-            done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
+            done[ri] =
+                step_row(picks[i], t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
         }
     }
     Ok((finish(generated), stats))

@@ -703,6 +703,26 @@ mod tests {
     }
 
     #[test]
+    fn reused_slot_is_bit_identical_to_fresh_cache() {
+        // the scheduler reclaims a finished request's cache row with
+        // reset_row instead of reallocating: a replay on the dirty,
+        // reused row must reproduce the fresh-cache logits bit for bit
+        let (cfg, _, engine) = tiny_engine(15);
+        let a = rand_tokens(&cfg, 1, 10, 16);
+        let other = rand_tokens(&cfg, 1, 14, 17);
+        let mut fresh = engine.new_cache(1);
+        let want = engine.forward_incremental(&a, &mut fresh, &[0]).unwrap();
+        let mut cache = engine.new_cache(1);
+        engine.forward_incremental(&other, &mut cache, &[0]).unwrap();
+        assert_eq!(cache.pos_len(0), 14);
+        cache.reset_row(0);
+        assert_eq!(cache.pos_len(0), 0);
+        let got = engine.forward_incremental(&a, &mut cache, &[0]).unwrap();
+        assert_eq!(got, want, "reused slot diverged from a fresh cache");
+        assert_eq!(cache.pos_len(0), 10);
+    }
+
+    #[test]
     fn incremental_rejects_bad_rows_and_overflow() {
         let (cfg, _, engine) = tiny_engine(12);
         let mut cache = engine.new_cache(2);

@@ -20,12 +20,19 @@
 //! * [`cache::KvCache`] + [`forward::Engine::forward_incremental`] — per
 //!   request K/V buffers and the incremental forward that feeds only new
 //!   token positions against them, making decode O(T) per generation
-//!   instead of the recompute path's O(T²);
+//!   instead of the recompute path's O(T²). Rows are reclaimable in
+//!   place ([`cache::KvCache::reset_row`], O(1)): the continuous-batching
+//!   scheduler (`crate::sched`) hands a finished request's row to the
+//!   next waiting request without reallocating, and a reused row decodes
+//!   bit-identically to a fresh cache;
 //! * [`decode::greedy_decode`] — greedy decoding at **any** batch size,
 //!   no bucket policy and no artifacts directory required. KV-cached by
 //!   default; [`decode::greedy_decode_with`] selects the full-prefix
 //!   recompute reference, and both drop finished rows from the step
-//!   batch. [`decode::DecodeStats`] reports what was actually fed.
+//!   batch. [`decode::DecodeStats`] reports what was actually fed. The
+//!   cached path is built on two shared primitives — a padded batch
+//!   prefill and a one-token step — that the scheduler drives directly,
+//!   so one-shot and scheduled decoding cannot drift apart.
 //!
 //! When to use which backend: the PJRT path is the reference executor —
 //! it shares one lowered graph with training and is what the golden /

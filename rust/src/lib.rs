@@ -45,6 +45,15 @@
 //! unpredictable batch shapes or without an artifacts directory. The
 //! parity golden test (`tests/backend_parity.rs`) holds the two backends'
 //! logits together on the same checkpoint.
+//!
+//! On top of the native engine, the continuous-batching scheduler
+//! ([`sched`], served through [`serve::ScheduledBackend`] / `lota serve
+//! --sched true`) turns the engine into a request-level server: requests
+//! arrive over time, are admitted into KV-cache slots under a memory
+//! budget, decode one token per iteration, and hand their slots to
+//! waiting requests the moment they finish — with TTFT / queue-wait /
+//! occupancy metrics and streaming token sinks. Scheduled greedy output
+//! stays bit-identical to the one-shot cached decode.
 
 pub mod adapter;
 pub mod bench_harness;
@@ -56,6 +65,7 @@ pub mod model;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod serve;
 pub mod tensor;
 

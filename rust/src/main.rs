@@ -8,6 +8,7 @@
 //! lota finetune  --model tiny --bits 4 --method lota --task arith --steps 100
 //! lota eval      --model tiny --ckpt <ckpt> --suite mmlu
 //! lota serve     --model tiny --ckpt <ckpt> --path merged --backend native --requests 32
+//! lota serve     --model tiny --ckpt <ckpt> --backend native --sched true --arrival-rate 64
 //! lota table1    --model tiny --steps 40      # regenerate the main table
 //! lota info                                    # artifact + config summary
 //! ```
@@ -30,7 +31,8 @@ use lota_qaf::coordinator::{
 use lota_qaf::data::{mmlu_like, tasks};
 use lota_qaf::model::{self, checkpoint};
 use lota_qaf::runtime::Runtime;
-use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
+use lota_qaf::sched::{generate_load, LoadSpec};
+use lota_qaf::serve::{serve_batch, serve_open_loop, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 /// `--key value` argument bag.
@@ -143,6 +145,12 @@ COMMANDS
   serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--backend pjrt|native]
             [--decode cached|recompute] [--bits 4] [--config <exp.toml>]
             [--requests 32] [--max-new 12]
+            [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
+            [--arrival-rate <req/s>] [--load-seed 123]
+            --sched routes the native backend through the continuous-batching
+            scheduler (defaults from the [sched] TOML table; see
+            examples/serve_sched.toml). With --arrival-rate the request
+            stream arrives open-loop (Poisson) instead of all at t=0.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -344,6 +352,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "lora" => ServePath::LoraAdapter,
         other => bail!("unknown serve path '{other}'"),
     };
+    // continuous-batching scheduler: --sched true routes native serving
+    // through the request-level scheduler; defaults (and the opt-in when
+    // the flag is absent) come from the [sched] TOML table
+    let mut sched_cfg = match args.opt("sched") {
+        Some("true") | Some("on") => Some(exp.sched.clone().unwrap_or_default()),
+        Some("false") | Some("off") => None,
+        Some(other) => bail!("--sched wants true|false (got '{other}')"),
+        None => exp.sched.clone(),
+    };
+    if let Some(sc) = sched_cfg.as_mut() {
+        sc.max_batch = args.get_usize("max-batch", sc.max_batch)?;
+        sc.kv_budget_mb = args.get_usize("kv-budget-mb", sc.kv_budget_mb)?;
+    }
     // bit width for the native engine's packed grids: flag, else the
     // checkpoint's own hint, else the experiment config
     let hint = checkpoint::n_bits_hint(&store);
@@ -356,7 +377,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lota_qaf::config::Backend::Pjrt => Some(Runtime::new(&artifacts_dir(args))?),
         lota_qaf::config::Backend::Native => None,
     };
-    let opts = ServeOptions::new(path, max_new).backend(backend).bits(bits).decode_mode(decode);
+    let mut opts =
+        ServeOptions::new(path, max_new).backend(backend).bits(bits).decode_mode(decode);
+    if let Some(sc) = &sched_cfg {
+        opts = opts.scheduled(sc.clone());
+    }
+
+    // open-loop mode: requests arrive over time (Poisson) instead of all
+    // at t = 0 — the workload shape the scheduler exists for
+    let rate = args.get_f32("arrival-rate", 0.0)?;
+    if rate > 0.0 {
+        if sched_cfg.is_none() {
+            bail!("--arrival-rate needs the scheduler: pass --sched true");
+        }
+        let spec = LoadSpec {
+            n_requests: n,
+            rate_per_sec: rate as f64,
+            seed: args.get_usize("load-seed", 123)? as u64,
+            task: "arith".into(),
+            max_new_mix: vec![max_new.max(1)],
+        };
+        let load = generate_load(&spec)?;
+        let (_responses, report) = serve_open_loop(&cfg, &store, &opts, &load)?;
+        println!(
+            "served {} requests [native:sched, open loop {rate} req/s] in {:.2}s: \
+             {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s, \
+             ttft p50 {:.1}ms p95 {:.1}ms, queue wait {:.1}ms",
+            report.requests,
+            report.wall_secs,
+            report.tokens_per_sec,
+            report.requests_per_sec,
+            report.latency.p50,
+            report.latency.p95,
+            report.ttft_ms_p50,
+            report.ttft_ms_p95,
+            report.queue_wait_ms
+        );
+        return Ok(());
+    }
+
     let gen = tasks::task_by_name("arith")?;
     let mut rng = Rng::new(123);
     let prompts: Vec<String> = (0..n)
@@ -364,6 +423,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let report = serve_batch(rt.as_ref(), &cfg, &store, &opts, &prompts)?;
     let backend_tag = match backend {
+        lota_qaf::config::Backend::Native if sched_cfg.is_some() => "native:sched".to_string(),
         lota_qaf::config::Backend::Native => format!("native:{}", decode.as_str()),
         lota_qaf::config::Backend::Pjrt => "pjrt".to_string(),
     };
@@ -377,6 +437,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.latency.p50,
         report.latency.p95
     );
+    if report.sched.is_some() {
+        println!(
+            "  scheduler: ttft p50 {:.1}ms p95 {:.1}ms, mean queue wait {:.1}ms",
+            report.ttft_ms_p50, report.ttft_ms_p95, report.queue_wait_ms
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,139 @@
+//! Synthetic open-loop load: Poisson arrivals over the task corpora.
+//!
+//! "Open loop" means arrival times are fixed up front and do not react
+//! to how fast the server drains — the workload a public endpoint sees,
+//! and the one that separates continuous batching from static batches: a
+//! static server makes late arrivals wait for the whole in-flight batch,
+//! an iteration-level scheduler admits them at the next step. Both the
+//! `bench_serve_load` bench target and the scheduler integration tests
+//! consume this generator, so the comparison and the regression tests
+//! run the exact same workload shape.
+//!
+//! Fully deterministic per seed: inter-arrival gaps are
+//! inverse-CDF-sampled exponentials, prompts come from the named task
+//! generator, and each request's token budget is drawn from the
+//! configured output-length mix.
+
+use anyhow::{bail, Result};
+
+use crate::data::{task_by_name, Split};
+use crate::tensor::Rng;
+
+/// Workload description.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub n_requests: usize,
+    /// Poisson arrival rate λ, requests per second
+    pub rate_per_sec: f64,
+    pub seed: u64,
+    /// prompt source (a `data::tasks` name: "arith", "sql", …)
+    pub task: String,
+    /// per-request `max_new` is drawn uniformly from this mix — mixed
+    /// output lengths are what make slot reuse matter (short requests
+    /// finish early; their slots should not idle behind long ones)
+    pub max_new_mix: Vec<usize>,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            n_requests: 32,
+            rate_per_sec: 16.0,
+            seed: 7,
+            task: "arith".into(),
+            max_new_mix: vec![4, 8, 24],
+        }
+    }
+}
+
+/// One request of the workload, arrival-stamped relative to t = 0.
+#[derive(Clone, Debug)]
+pub struct LoadRequest {
+    pub arrival_secs: f64,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Generate the workload: `n_requests` arrivals with Exp(λ) gaps, sorted
+/// by arrival time (cumulative sums of non-negative gaps are sorted by
+/// construction).
+pub fn generate_load(spec: &LoadSpec) -> Result<Vec<LoadRequest>> {
+    if spec.rate_per_sec <= 0.0 || !spec.rate_per_sec.is_finite() {
+        bail!("arrival rate must be a positive, finite req/s (got {})", spec.rate_per_sec);
+    }
+    if spec.max_new_mix.is_empty() {
+        bail!("output-length mix must name at least one max_new");
+    }
+    let task = task_by_name(&spec.task)?;
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for _ in 0..spec.n_requests {
+        // inverse-CDF exponential: −ln(1−u)/λ with u ∈ [0, 1)
+        let u = (rng.uniform() as f64).clamp(0.0, 1.0 - 1e-9);
+        t += -(1.0 - u).ln() / spec.rate_per_sec;
+        out.push(LoadRequest {
+            arrival_secs: t,
+            prompt: task.sample(&mut rng, Split::Test).prompt,
+            max_new: *rng.choose(&spec.max_new_mix),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = LoadSpec { n_requests: 16, ..LoadSpec::default() };
+        let a = generate_load(&spec).unwrap();
+        let b = generate_load(&spec).unwrap();
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_secs, y.arrival_secs);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        let c = generate_load(&LoadSpec { seed: 8, ..spec }).unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt
+                || x.arrival_secs != y.arrival_secs),
+            "different seeds produced identical workloads"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_rate_scales() {
+        let slow_spec =
+            LoadSpec { n_requests: 64, rate_per_sec: 2.0, ..LoadSpec::default() };
+        let slow = generate_load(&slow_spec).unwrap();
+        for w in slow.windows(2) {
+            assert!(w[0].arrival_secs <= w[1].arrival_secs);
+        }
+        let fast_spec =
+            LoadSpec { n_requests: 64, rate_per_sec: 200.0, ..LoadSpec::default() };
+        let fast = generate_load(&fast_spec).unwrap();
+        // 100× the rate compresses the horizon by roughly 100× — allow
+        // wide slack, the property under test is direction not precision
+        let (t_slow, t_fast) =
+            (slow.last().unwrap().arrival_secs, fast.last().unwrap().arrival_secs);
+        assert!(t_fast < t_slow / 10.0, "rate had no effect: {t_slow} vs {t_fast}");
+        // every max_new comes from the mix
+        let mix = LoadSpec::default().max_new_mix;
+        assert!(fast.iter().all(|r| mix.contains(&r.max_new)));
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let d = LoadSpec::default;
+        assert!(generate_load(&LoadSpec { rate_per_sec: 0.0, ..d() }).is_err());
+        assert!(generate_load(&LoadSpec { rate_per_sec: -1.0, ..d() }).is_err());
+        assert!(generate_load(&LoadSpec { max_new_mix: vec![], ..d() }).is_err());
+        assert!(generate_load(&LoadSpec { task: "nope".into(), ..d() }).is_err());
+        // zero requests is a valid empty workload
+        let empty = generate_load(&LoadSpec { n_requests: 0, ..d() }).unwrap();
+        assert!(empty.is_empty());
+    }
+}

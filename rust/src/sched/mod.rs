@@ -1,0 +1,42 @@
+//! Continuous-batching request scheduler — the native engine as a
+//! request-level server instead of a batch evaluator.
+//!
+//! PR 2 made single-batch decoding cheap (KV-cached, O(T) per
+//! generation); this module makes the *batch itself* dynamic, which is
+//! where the paper's serving-efficiency claim meets realistic load:
+//! requests arrive over time, generations finish at different lengths,
+//! and a fixed batch would leave decode slots idling behind the longest
+//! request while new arrivals wait. The scheduler closes that gap with
+//! iteration-level scheduling:
+//!
+//! * [`scheduler::Scheduler`] — a FIFO wait queue plus a fixed pool of
+//!   decode slots (one [`crate::engine::KvCache`] row each, the pool
+//!   sized by the same KV memory budget the one-shot backend caps with).
+//!   Each [`scheduler::Scheduler::step`] admits waiting requests into
+//!   free slots, prefills them in one padded batch, single-token-steps
+//!   everything already in flight, and releases finished or cancelled
+//!   requests immediately — their rows go to the next waiting request
+//!   mid-generation ([`crate::engine::KvCache::reset_row`], O(1)).
+//! * [`request::RequestState`] — per-request lifecycle (Queued →
+//!   Prefilling → Decoding → Finished/Cancelled) with
+//!   [`request::TokenSink`] streaming: tokens are observable as they are
+//!   picked, not after the batch drains.
+//! * [`loadgen`] — deterministic open-loop Poisson workloads (arrival
+//!   times, prompt mix, output-length mix) shared by the
+//!   `bench_serve_load` bench and the integration tests.
+//!
+//! The scheduler runs the *same* prefill/step kernels as the one-shot
+//! [`crate::engine::greedy_decode`] ([`crate::engine::decode`]'s shared
+//! primitives), and cache rows never interact, so scheduled greedy
+//! output is **bit-identical** to the one-shot cached decode —
+//! `tests/engine_parity.rs` pins it. One-shot serving through
+//! [`crate::serve::ScheduledBackend`] is literally this scheduler with
+//! every request submitted at t = 0.
+
+pub mod loadgen;
+pub mod request;
+pub mod scheduler;
+
+pub use loadgen::{generate_load, LoadRequest, LoadSpec};
+pub use request::{ChannelSink, FinishReason, RequestState, SchedResponse, StreamEvent, TokenSink};
+pub use scheduler::{SchedOptions, Scheduler, StepReport};

@@ -1,0 +1,133 @@
+//! Request-level types of the continuous-batching scheduler: lifecycle
+//! states, finish reasons, completed-request responses, and the streaming
+//! token sink a caller can attach to watch generations as they happen.
+
+use std::sync::mpsc;
+
+/// Where a request currently is in its life. The scheduler moves every
+/// request Queued → Prefilling → Decoding → Finished (or → Cancelled from
+/// any live state); `Prefilling` is transient — admission and the prefill
+/// forward happen within one scheduler step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// submitted, waiting for a decode slot
+    Queued,
+    /// admitted this step, prompt being prefilled
+    Prefilling,
+    /// in a decode slot, generating one token per step
+    Decoding,
+    /// left the batch: EOS, token budget, or context cap
+    Finished,
+    /// left the batch by caller request
+    Cancelled,
+}
+
+/// Why a request finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// the model picked EOS
+    Eos,
+    /// the request's `max_new` token budget is spent
+    MaxTokens,
+    /// the next token would not fit in the model context
+    ContextCap,
+    /// cancelled by the caller (queued or mid-decode)
+    Cancelled,
+}
+
+/// One completed (or cancelled) request, with its request-level timing.
+/// Durations are measured on the scheduler's clock: `queue_wait_secs`
+/// is submit → admission, `ttft_secs` submit → first generated token
+/// (None when nothing was generated), `latency_secs` submit → completion.
+#[derive(Clone, Debug)]
+pub struct SchedResponse {
+    pub id: u64,
+    pub text: String,
+    /// tokens actually generated (the honest tokens/s unit)
+    pub tokens: usize,
+    pub reason: FinishReason,
+    pub queue_wait_secs: f64,
+    pub ttft_secs: Option<f64>,
+    pub latency_secs: f64,
+}
+
+/// Streaming observer: the scheduler calls this as tokens are picked, so
+/// callers can forward partial generations (e.g. over a channel) instead
+/// of waiting for completion.
+pub trait TokenSink {
+    /// One generated token of request `id`, in generation order. Called
+    /// only for tokens that join the output — EOS and cap hits don't.
+    fn on_token(&mut self, id: u64, token: u32);
+
+    /// Request `id` left the scheduler (finished or cancelled).
+    fn on_finish(&mut self, resp: &SchedResponse);
+}
+
+/// What [`ChannelSink`] emits.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    Token { id: u64, token: u32 },
+    Finish(SchedResponse),
+}
+
+/// A [`TokenSink`] that forwards every event over an `mpsc` channel — the
+/// decoupled producer/consumer deployment shape. Send errors (receiver
+/// hung up) are ignored: a dead listener must not stall the batch the
+/// request shares with others.
+pub struct ChannelSink {
+    tx: mpsc::Sender<StreamEvent>,
+}
+
+impl ChannelSink {
+    pub fn new(tx: mpsc::Sender<StreamEvent>) -> ChannelSink {
+        ChannelSink { tx }
+    }
+}
+
+impl TokenSink for ChannelSink {
+    fn on_token(&mut self, id: u64, token: u32) {
+        let _ = self.tx.send(StreamEvent::Token { id, token });
+    }
+
+    fn on_finish(&mut self, resp: &SchedResponse) {
+        let _ = self.tx.send(StreamEvent::Finish(resp.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_sink_forwards_and_survives_hangup() {
+        let (tx, rx) = mpsc::channel();
+        let mut sink = ChannelSink::new(tx);
+        sink.on_token(3, 17);
+        let resp = SchedResponse {
+            id: 3,
+            text: "x".into(),
+            tokens: 1,
+            reason: FinishReason::Eos,
+            queue_wait_secs: 0.0,
+            ttft_secs: Some(0.01),
+            latency_secs: 0.02,
+        };
+        sink.on_finish(&resp);
+        match rx.recv().unwrap() {
+            StreamEvent::Token { id, token } => {
+                assert_eq!((id, token), (3, 17));
+            }
+            other => panic!("expected token event, got {other:?}"),
+        }
+        match rx.recv().unwrap() {
+            StreamEvent::Finish(r) => {
+                assert_eq!(r.id, 3);
+                assert_eq!(r.reason, FinishReason::Eos);
+            }
+            other => panic!("expected finish event, got {other:?}"),
+        }
+        drop(rx);
+        // receiver gone: sends are dropped, not panicking the batch
+        sink.on_token(3, 18);
+    }
+}

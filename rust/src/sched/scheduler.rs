@@ -1,0 +1,571 @@
+//! The continuous-batching scheduler: iteration-level admission, mixed
+//! prefill/decode stepping, and slot lifecycle over one shared
+//! [`KvCache`].
+//!
+//! One [`Scheduler::step`] is one iteration of the serving loop:
+//!
+//! 1. **Admit** — waiting requests (FIFO) move into free decode slots,
+//!    as many as are open; the slot count itself is fixed at build time
+//!    by the KV memory budget (the same
+//!    [`BucketPolicy::adaptive_capped`] arithmetic the one-shot native
+//!    backend caps its drain batches with).
+//! 2. **Prefill** — everything admitted this step runs one padded,
+//!    batched incremental forward ([`decode::prefill_rows`]) and picks
+//!    its first token.
+//! 3. **Decode** — every request admitted in an *earlier* step feeds its
+//!    newest token through [`decode::decode_step_rows`] — one token per
+//!    live request per step.
+//! 4. **Release** — finished/cancelled requests leave their slot
+//!    *immediately* ([`KvCache::reset_row`], O(1), no reallocation), so
+//!    the next step's admission hands the row to the next waiting
+//!    request mid-generation instead of waiting for the batch to drain.
+//!
+//! Because the prefill and step kernels are the very ones the one-shot
+//! [`crate::engine::greedy_decode`] runs, and cache rows never interact,
+//! a scheduled greedy generation is **bit-identical** to the one-shot
+//! cached decode of the same prompt — `tests/engine_parity.rs` pins
+//! this, and `tests/sched.rs` covers the lifecycle edges (cancellation
+//! mid-decode, zero-admission steps, finish-on-admission, FIFO
+//! fairness).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::SchedConfig;
+use crate::data::tokenizer::{self, EOS};
+use crate::engine::decode::{self, DecodeStats};
+use crate::engine::{Engine, KvCache};
+use crate::serve::metrics::SchedStats;
+use crate::serve::BucketPolicy;
+
+use super::request::{FinishReason, RequestState, SchedResponse, TokenSink};
+
+/// Scheduler build knobs, in engine units. [`SchedConfig`] (the
+/// TOML/CLI-facing form) converts via [`SchedOptions::from_config`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedOptions {
+    /// desired concurrent decode slots (the KV budget may cap it lower)
+    pub max_batch: usize,
+    /// KV memory budget in bytes shared by all live slots
+    pub kv_budget_bytes: usize,
+}
+
+impl Default for SchedOptions {
+    fn default() -> SchedOptions {
+        SchedOptions { max_batch: 8, kv_budget_bytes: 1 << 30 }
+    }
+}
+
+impl SchedOptions {
+    pub fn from_config(cfg: &SchedConfig) -> SchedOptions {
+        SchedOptions {
+            max_batch: cfg.max_batch,
+            kv_budget_bytes: cfg.kv_budget_mb << 20,
+        }
+    }
+}
+
+/// A request waiting for a slot.
+struct Queued {
+    id: u64,
+    frame: Vec<f32>,
+    max_new: usize,
+    arrival: Instant,
+}
+
+/// A request occupying a decode slot. `slots[i]` owns cache row `i`.
+struct Active {
+    id: u64,
+    /// BOS + prompt + SEP + generated-so-far, f32-coded
+    frame: Vec<f32>,
+    /// position whose logits pick the next token
+    cursor: usize,
+    generated: Vec<u32>,
+    max_new: usize,
+    state: RequestState,
+    reason: Option<FinishReason>,
+    arrival: Instant,
+    admitted_at: Instant,
+    /// step number this request was admitted in — a just-prefilled
+    /// request must not also take a decode step in the same iteration
+    admitted_step: u64,
+    ttft_secs: Option<f64>,
+    last_token_at: Instant,
+}
+
+/// What one [`Scheduler::step`] did — the observable unit tests and the
+/// serving loop key off.
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    /// request ids admitted (and prefilled) this step, slot order
+    pub admitted: Vec<u64>,
+    /// rows fed by the single-token decode phase
+    pub decoded_rows: usize,
+    /// request ids whose slots were released at the end of this step
+    pub finished: Vec<u64>,
+    /// requests still waiting after admission
+    pub queue_depth: usize,
+    /// busy slots / total slots during this step's compute
+    pub occupancy: f64,
+}
+
+/// The request-level serving loop over one engine and one shared cache.
+pub struct Scheduler<'a> {
+    engine: &'a Engine,
+    cache: KvCache,
+    slots: Vec<Option<Active>>,
+    queue: VecDeque<Queued>,
+    next_id: u64,
+    step_no: u64,
+    finished: Vec<SchedResponse>,
+    sink: Option<Box<dyn TokenSink + 'a>>,
+    decode_stats: DecodeStats,
+    stats: SchedStats,
+}
+
+fn secs(from: Instant, to: Instant) -> f64 {
+    to.duration_since(from).as_secs_f64()
+}
+
+impl<'a> Scheduler<'a> {
+    /// Build a scheduler whose slot count is `max_batch` capped by how
+    /// many full-context KV rows fit in the memory budget — the same
+    /// `adaptive_capped` arithmetic the one-shot native backend uses, so
+    /// the two modes serve under the same KV ceiling.
+    pub fn new(engine: &'a Engine, opts: &SchedOptions) -> Result<Scheduler<'a>> {
+        if opts.max_batch == 0 {
+            bail!("scheduler needs at least one decode slot");
+        }
+        let budget_rows = opts.kv_budget_bytes / engine.cache_row_bytes().max(1);
+        let n_slots = BucketPolicy::adaptive_capped(budget_rows)
+            .pick(opts.max_batch)
+            .expect("max_batch > 0 always picks");
+        let cache = engine.new_cache(n_slots);
+        log::info!(
+            "scheduler: {n_slots} decode slots ({} requested, {budget_rows} fit the {} MiB KV budget)",
+            opts.max_batch,
+            opts.kv_budget_bytes >> 20
+        );
+        Ok(Scheduler {
+            engine,
+            cache,
+            slots: (0..n_slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            next_id: 0,
+            step_no: 0,
+            finished: Vec::new(),
+            sink: None,
+            decode_stats: DecodeStats::default(),
+            stats: SchedStats::default(),
+        })
+    }
+
+    /// Attach a streaming observer (builder style).
+    pub fn with_sink(mut self, sink: Box<dyn TokenSink + 'a>) -> Scheduler<'a> {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Concurrent decode slots this scheduler runs (KV-budget capped).
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently holding a decode slot.
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(Option::is_none)
+    }
+
+    /// Lifecycle state of request `id`: live states for queued/in-flight
+    /// requests, `Finished`/`Cancelled` for completed ones not yet taken
+    /// with [`Scheduler::take_finished`], None after that.
+    pub fn state_of(&self, id: u64) -> Option<RequestState> {
+        if self.queue.iter().any(|q| q.id == id) {
+            return Some(RequestState::Queued);
+        }
+        for slot in self.slots.iter().flatten() {
+            if slot.id == id {
+                return Some(slot.state);
+            }
+        }
+        self.finished.iter().find(|r| r.id == id).map(|r| {
+            if r.reason == FinishReason::Cancelled {
+                RequestState::Cancelled
+            } else {
+                RequestState::Finished
+            }
+        })
+    }
+
+    /// Submit a prompt for up to `max_new` generated tokens; returns the
+    /// request id. Framing errors (prompt + generation over the context)
+    /// surface here, before the request ever queues. A zero-token request
+    /// completes immediately without consuming any forward — the same
+    /// contract as the one-shot decode.
+    pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
+        let (frame, _cursor) = decode::frame_prompt(self.engine.config(), prompt, max_new)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        if max_new == 0 {
+            let resp = SchedResponse {
+                id,
+                text: String::new(),
+                tokens: 0,
+                reason: FinishReason::MaxTokens,
+                queue_wait_secs: 0.0,
+                ttft_secs: None,
+                latency_secs: 0.0,
+            };
+            self.emit_finish(resp);
+            return Ok(id);
+        }
+        self.queue.push_back(Queued { id, frame, max_new, arrival: Instant::now() });
+        Ok(id)
+    }
+
+    /// Cancel request `id`. A queued request leaves the queue; an
+    /// in-flight one releases its slot (and cache row) immediately, so
+    /// the very next step can admit a waiting request into it. Returns
+    /// false if the id is unknown or already finished.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
+            let q = self.queue.remove(pos).expect("position came from the queue");
+            let now = Instant::now();
+            let wait = secs(q.arrival, now);
+            let resp = SchedResponse {
+                id,
+                text: String::new(),
+                tokens: 0,
+                reason: FinishReason::Cancelled,
+                queue_wait_secs: wait,
+                ttft_secs: None,
+                latency_secs: wait,
+            };
+            self.emit_finish(resp);
+            return true;
+        }
+        for si in 0..self.slots.len() {
+            if self.slots[si].as_ref().is_some_and(|a| a.id == id) {
+                let mut a = self.slots[si].take().expect("checked is_some");
+                a.reason = Some(FinishReason::Cancelled);
+                self.cache.reset_row(si);
+                let resp = Self::respond(a, Instant::now());
+                self.emit_finish(resp);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// One serving iteration: admit → prefill → decode → release. A call
+    /// on an idle scheduler is a no-op that runs no forwards.
+    pub fn step(&mut self) -> Result<StepReport> {
+        let mut report = StepReport::default();
+        if self.is_idle() {
+            return Ok(report);
+        }
+        self.step_no += 1;
+
+        // 1. admission: FIFO into free slots. Slots freed by last step's
+        // finishes (or a cancel since) are handed out here, mid-batch.
+        let mut admitted_rows: Vec<usize> = Vec::new();
+        for (si, slot) in self.slots.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(q) = self.queue.pop_front() else { break };
+            let now = Instant::now();
+            self.stats.queue_wait_ms.record(1e3 * secs(q.arrival, now));
+            report.admitted.push(q.id);
+            admitted_rows.push(si);
+            *slot = Some(Active {
+                id: q.id,
+                cursor: q.frame.len() - 1,
+                frame: q.frame,
+                generated: Vec::new(),
+                max_new: q.max_new,
+                state: RequestState::Prefilling,
+                reason: None,
+                arrival: q.arrival,
+                admitted_at: now,
+                admitted_step: self.step_no,
+                ttft_secs: None,
+                last_token_at: now,
+            });
+        }
+        let busy = self.active_count();
+        self.stats.steps += 1;
+        self.stats.queue_depth.record(self.queue.len() as f64);
+        report.queue_depth = self.queue.len();
+        report.occupancy = busy as f64 / self.slots.len() as f64;
+        self.stats.batch_occupancy.record(report.occupancy);
+
+        // 2. prefill everything admitted this step in one padded batch
+        if !admitted_rows.is_empty() {
+            let frames: Vec<Vec<f32>> = admitted_rows
+                .iter()
+                .map(|&si| self.slots[si].as_ref().expect("just admitted").frame.clone())
+                .collect();
+            let picks = decode::prefill_rows(
+                self.engine,
+                &mut self.cache,
+                &admitted_rows,
+                &frames,
+                &mut self.decode_stats,
+            )?;
+            for (i, &si) in admitted_rows.iter().enumerate() {
+                self.apply_pick(si, picks[i]);
+            }
+        }
+
+        // 3. one decode token for every request admitted in earlier steps
+        let mut rows: Vec<usize> = Vec::new();
+        let mut last: Vec<f32> = Vec::new();
+        for (si, slot) in self.slots.iter().enumerate() {
+            if let Some(a) = slot {
+                if a.state == RequestState::Decoding && a.admitted_step < self.step_no {
+                    rows.push(si);
+                    last.push(*a.frame.last().expect("frames are never empty"));
+                }
+            }
+        }
+        if !rows.is_empty() {
+            let picks = decode::decode_step_rows(
+                self.engine,
+                &mut self.cache,
+                &rows,
+                &last,
+                &mut self.decode_stats,
+            )?;
+            report.decoded_rows = rows.len();
+            for (i, &si) in rows.iter().enumerate() {
+                self.apply_pick(si, picks[i]);
+            }
+        }
+
+        // 4. release finished slots — their cache rows are reclaimed
+        // right now, so the next step's admission can reuse them
+        let mut released: Vec<Active> = Vec::new();
+        for (si, slot) in self.slots.iter_mut().enumerate() {
+            let done = slot.as_ref().is_some_and(|a| {
+                matches!(a.state, RequestState::Finished | RequestState::Cancelled)
+            });
+            if done {
+                released.push(slot.take().expect("checked is_some"));
+                self.cache.reset_row(si);
+            }
+        }
+        let now = Instant::now();
+        for a in released {
+            let resp = Self::respond(a, now);
+            report.finished.push(resp.id);
+            self.emit_finish(resp);
+        }
+        Ok(report)
+    }
+
+    /// Drive [`Scheduler::step`] until nothing is queued or in flight.
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Completed responses accumulated since the last take, in completion
+    /// order.
+    pub fn take_finished(&mut self) -> Vec<SchedResponse> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Aggregate decode-work accounting across every forward this
+    /// scheduler ran (prefills + steps).
+    pub fn decode_stats(&self) -> DecodeStats {
+        self.decode_stats
+    }
+
+    /// Request- and step-level measurements so far.
+    pub fn sched_stats(&self) -> SchedStats {
+        self.stats.clone()
+    }
+
+    /// Fold one argmax pick into slot `si`'s request: append or finish,
+    /// exactly the one-shot decode's `step_row` semantics plus the
+    /// per-request `max_new` budget.
+    fn apply_pick(&mut self, si: usize, pick: u32) {
+        let t_cap = self.engine.config().seq_len;
+        let now = Instant::now();
+        let a = self.slots[si].as_mut().expect("apply_pick on an empty slot");
+        let done = decode::step_row(pick, t_cap, &mut a.frame, &mut a.cursor, &mut a.generated);
+        if done {
+            a.state = RequestState::Finished;
+            a.reason = Some(if pick == EOS {
+                FinishReason::Eos
+            } else {
+                FinishReason::ContextCap
+            });
+            return;
+        }
+        // a token was appended
+        let id = a.id;
+        let tok = *a.generated.last().expect("step_row appended");
+        if a.ttft_secs.is_none() {
+            let ttft = secs(a.arrival, now);
+            a.ttft_secs = Some(ttft);
+            self.stats.ttft_ms.record(1e3 * ttft);
+        } else {
+            self.stats.inter_token_ms.record(1e3 * secs(a.last_token_at, now));
+        }
+        a.last_token_at = now;
+        if a.generated.len() >= a.max_new {
+            a.state = RequestState::Finished;
+            a.reason = Some(FinishReason::MaxTokens);
+        } else {
+            a.state = RequestState::Decoding;
+        }
+        if let Some(sink) = self.sink.as_mut() {
+            sink.on_token(id, tok);
+        }
+    }
+
+    fn respond(a: Active, now: Instant) -> SchedResponse {
+        SchedResponse {
+            id: a.id,
+            text: tokenizer::decode(&a.generated),
+            tokens: a.generated.len(),
+            reason: a.reason.expect("released requests always carry a reason"),
+            queue_wait_secs: secs(a.arrival, a.admitted_at),
+            ttft_secs: a.ttft_secs,
+            latency_secs: secs(a.arrival, now),
+        }
+    }
+
+    fn emit_finish(&mut self, resp: SchedResponse) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.on_finish(&resp);
+        }
+        self.finished.push(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::model;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::Rng;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        Engine::from_store(&cfg, &store, 4).unwrap()
+    }
+
+    fn opts(max_batch: usize) -> SchedOptions {
+        SchedOptions { max_batch, kv_budget_bytes: 1 << 30 }
+    }
+
+    #[test]
+    fn slot_count_respects_kv_budget() {
+        let engine = tiny_engine(1);
+        let row = engine.cache_row_bytes();
+        // budget for exactly 3 full-context rows
+        let three_rows = SchedOptions { max_batch: 8, kv_budget_bytes: 3 * row };
+        let s = Scheduler::new(&engine, &three_rows).unwrap();
+        assert_eq!(s.n_slots(), 3);
+        // a generous budget leaves max_batch in charge
+        let s = Scheduler::new(&engine, &opts(8)).unwrap();
+        assert_eq!(s.n_slots(), 8);
+        // a starved budget still yields one slot (degraded, not dead)
+        let starved = SchedOptions { max_batch: 8, kv_budget_bytes: 0 };
+        let s = Scheduler::new(&engine, &starved).unwrap();
+        assert_eq!(s.n_slots(), 1);
+        assert!(Scheduler::new(&engine, &opts(0)).is_err());
+    }
+
+    #[test]
+    fn runs_a_small_workload_to_completion() {
+        let engine = tiny_engine(2);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+        }
+        assert_eq!(s.queue_depth(), 5);
+        s.run_until_idle().unwrap();
+        let mut done = s.take_finished();
+        assert_eq!(done.len(), 5);
+        done.sort_by_key(|r| r.id);
+        for (resp, id) in done.iter().zip(&ids) {
+            assert_eq!(resp.id, *id);
+            assert!(resp.tokens <= 4);
+            assert_ne!(resp.reason, FinishReason::Cancelled);
+        }
+        // all decode work was accounted
+        assert!(s.decode_stats().forwards > 0);
+        let stats = s.sched_stats();
+        assert_eq!(stats.queue_wait_ms.len(), 5);
+        assert!(stats.steps > 0);
+    }
+
+    #[test]
+    fn zero_max_new_completes_without_forwards() {
+        let engine = tiny_engine(3);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        let id = s.submit("1 + 1 =", 0).unwrap();
+        assert!(s.is_idle(), "zero-token request should never queue");
+        let done = s.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id);
+        assert_eq!(done[0].tokens, 0);
+        assert_eq!(s.decode_stats(), DecodeStats::default());
+    }
+
+    #[test]
+    fn oversized_prompts_fail_at_submit() {
+        let engine = tiny_engine(4);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        let long = "1 + 2 = ".repeat(32);
+        assert!(s.submit(&long, 8).is_err());
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn idle_step_is_a_no_op() {
+        let engine = tiny_engine(5);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        let report = s.step().unwrap();
+        assert!(report.admitted.is_empty());
+        assert_eq!(report.decoded_rows, 0);
+        assert_eq!(s.decode_stats(), DecodeStats::default());
+        assert_eq!(s.sched_stats().steps, 0);
+    }
+
+    #[test]
+    fn unknown_cancel_is_refused() {
+        let engine = tiny_engine(6);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        assert!(!s.cancel(99));
+        let id = s.submit("1 + 1 =", 2).unwrap();
+        assert!(s.cancel(id));
+        assert!(!s.cancel(id), "double cancel must be refused");
+    }
+}

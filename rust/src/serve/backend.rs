@@ -8,18 +8,21 @@
 //! whichever backend it was built with; the parity golden test pins the
 //! two to the same logits on the same checkpoint.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{DecodeMode, ModelConfig};
+use crate::config::{DecodeMode, ModelConfig, SchedConfig};
 use crate::coordinator;
 use crate::engine::{self, Engine};
 use crate::model::ParamStore;
 use crate::runtime::{Executable, Runtime};
+use crate::sched::{SchedOptions, Scheduler};
 
 use super::batcher::BucketPolicy;
+use super::metrics::SchedStats;
 use super::ServePath;
 
 pub use crate::engine::{DecodeStats, Generation};
@@ -27,6 +30,24 @@ pub use crate::engine::{DecodeStats, Generation};
 /// Per-batch KV memory the cached native path may hold: the adaptive
 /// batcher is capped at however many request rows fit in this budget.
 const KV_CACHE_BUDGET_BYTES: usize = 1 << 30;
+
+/// Build the native engine a serving path needs: packed grids from the
+/// store, plus the f32 LoRA adapters when serving the unmerged-baseline
+/// path. The single construction point for every native serving mode
+/// (one-shot, scheduled, open-loop) — engine setup changes land here
+/// once.
+pub(crate) fn build_engine(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    path: ServePath,
+    n_bits: u32,
+) -> Result<Engine> {
+    let mut engine = Engine::from_store(cfg, store, n_bits)?;
+    if path == ServePath::LoraAdapter {
+        engine.attach_lora(store)?;
+    }
+    Ok(engine)
+}
 
 /// A serving executor: turns a batch of prompts into finished generations.
 pub trait ServeBackend {
@@ -49,6 +70,14 @@ pub trait ServeBackend {
     /// [`ServeBackend::decode_with_stats`] without the accounting.
     fn decode(&self, prompts: &[String], max_new: usize) -> Result<Vec<Generation>> {
         Ok(self.decode_with_stats(prompts, max_new)?.0)
+    }
+
+    /// Scheduler measurements from the most recent decode, for backends
+    /// that serve through `crate::sched`. Taking clears the slot so a
+    /// `Server` drain reports each run exactly once; one-shot backends
+    /// return None.
+    fn take_sched_stats(&self) -> Option<SchedStats> {
+        None
     }
 }
 
@@ -153,10 +182,7 @@ impl NativeBackend {
         path: ServePath,
         n_bits: u32,
     ) -> Result<NativeBackend> {
-        let mut engine = Engine::from_store(cfg, store, n_bits)?;
-        if path == ServePath::LoraAdapter {
-            engine.attach_lora(store)?;
-        }
+        let engine = build_engine(cfg, store, path, n_bits)?;
         log::info!(
             "native backend[{}] {}-bit, {} packed weight bytes{}, {} KiB KV per cached row",
             cfg.name,
@@ -212,6 +238,91 @@ impl ServeBackend for NativeBackend {
     }
 }
 
+/// The scheduled native path: one-shot serving as a thin wrapper over the
+/// continuous-batching scheduler — every prompt of a batch is submitted
+/// at t = 0 and the scheduler runs to idle. Because the scheduler drives
+/// the same cached prefill/step kernels, generations are bit-identical to
+/// [`NativeBackend`]'s cached decode; what this buys over it is the
+/// request-level machinery (admission under the KV budget, slot reuse,
+/// TTFT/queue/occupancy accounting) exercised on every serve call, plus
+/// honest scheduler metrics in the drain report.
+pub struct ScheduledBackend {
+    engine: Engine,
+    opts: SchedOptions,
+    /// measurements of the most recent decode, handed to the Server
+    /// drain via [`ServeBackend::take_sched_stats`]
+    last_sched: RefCell<Option<SchedStats>>,
+}
+
+impl ScheduledBackend {
+    pub fn new(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        path: ServePath,
+        n_bits: u32,
+        sched: &SchedConfig,
+    ) -> Result<ScheduledBackend> {
+        let engine = build_engine(cfg, store, path, n_bits)?;
+        let opts = SchedOptions::from_config(sched);
+        log::info!(
+            "scheduled backend[{}] {}-bit, max_batch {}, {} MiB KV budget",
+            cfg.name,
+            n_bits,
+            opts.max_batch,
+            sched.kv_budget_mb
+        );
+        Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None) })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl ServeBackend for ScheduledBackend {
+    fn label(&self) -> &'static str {
+        "native-sched"
+    }
+
+    fn bucket_policy(&self) -> BucketPolicy {
+        // hand the scheduler the whole queue: admission under the KV
+        // budget is *its* job, per step, not the batcher's per drain
+        BucketPolicy::adaptive()
+    }
+
+    fn decode_with_stats(
+        &self,
+        prompts: &[String],
+        max_new: usize,
+    ) -> Result<(Vec<Generation>, DecodeStats)> {
+        let mut sched = Scheduler::new(&self.engine, &self.opts)?;
+        let mut ids = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            ids.push(sched.submit(p, max_new)?);
+        }
+        sched.run_until_idle()?;
+        let mut by_id: BTreeMap<u64, Generation> = sched
+            .take_finished()
+            .into_iter()
+            .map(|r| (r.id, Generation { text: r.text, tokens: r.tokens }))
+            .collect();
+        let gens = ids
+            .iter()
+            .map(|id| {
+                by_id
+                    .remove(id)
+                    .ok_or_else(|| anyhow::anyhow!("scheduler lost request {id}"))
+            })
+            .collect::<Result<Vec<Generation>>>()?;
+        *self.last_sched.borrow_mut() = Some(sched.sched_stats());
+        Ok((gens, sched.decode_stats()))
+    }
+
+    fn take_sched_stats(&self) -> Option<SchedStats> {
+        self.last_sched.borrow_mut().take()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +375,30 @@ mod tests {
         // recompute mode holds no cache, so nothing to cap
         let be = be.with_mode(DecodeMode::Recompute);
         assert_eq!(be.bucket_policy().pick(usize::MAX), Some(usize::MAX));
+    }
+
+    #[test]
+    fn scheduled_backend_matches_one_shot_native() {
+        let (cfg, store) = tiny_store(6);
+        let native = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let sched =
+            ScheduledBackend::new(&cfg, &store, ServePath::Merged, 4, &SchedConfig::default())
+                .unwrap();
+        assert_eq!(sched.label(), "native-sched");
+        let prompts: Vec<String> = (0..5).map(|i| format!("{i} + 2 =")).collect();
+        let (ng, ns) = native.decode_with_stats(&prompts, 5).unwrap();
+        let (sg, ss) = sched.decode_with_stats(&prompts, 5).unwrap();
+        for (n, s) in ng.iter().zip(&sg) {
+            assert_eq!(n.text, s.text);
+            assert_eq!(n.tokens, s.tokens);
+        }
+        // 5 prompts fit the 8-slot default batch, so even the decode-work
+        // accounting is identical to the one-shot cached path
+        assert_eq!(ns, ss);
+        // scheduler measurements are taken exactly once per run
+        assert!(sched.take_sched_stats().is_some());
+        assert!(sched.take_sched_stats().is_none());
+        assert!(native.take_sched_stats().is_none());
     }
 
     #[test]

@@ -42,6 +42,74 @@ impl LatencyStats {
     }
 }
 
+/// A sample accumulator summarized on demand. Samples are kept raw (the
+/// scheduler records at most a few per request or per step) and sorted
+/// only when a summary is asked for — no binning error, exact
+/// percentiles via [`LatencyStats::from_sorted`].
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Percentile/mean/max summary of everything recorded so far.
+    pub fn stats(&self) -> LatencyStats {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyStats::from_sorted(&sorted)
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// What the continuous-batching scheduler (`crate::sched`) measured about
+/// a serving run, beyond raw decode work: request-level timing (TTFT,
+/// inter-token gaps, queue wait) and step-level pressure (queue depth,
+/// batch occupancy). One-shot backends leave this absent.
+#[derive(Clone, Debug, Default)]
+pub struct SchedStats {
+    /// time-to-first-token per request, milliseconds (submit → first pick)
+    pub ttft_ms: Histogram,
+    /// gap between consecutive generated tokens of a request, milliseconds
+    pub inter_token_ms: Histogram,
+    /// submit → admission wait per request, milliseconds
+    pub queue_wait_ms: Histogram,
+    /// waiting requests observed at each step (after admission)
+    pub queue_depth: Histogram,
+    /// fraction of decode slots busy at each step, in [0, 1]
+    pub batch_occupancy: Histogram,
+    /// scheduler iterations run
+    pub steps: usize,
+}
+
+impl SchedStats {
+    /// Fold another run's measurements into this one (multi-batch
+    /// aggregation in the `Server` drain).
+    pub fn absorb(&mut self, other: &SchedStats) {
+        self.ttft_ms.merge(&other.ttft_ms);
+        self.inter_token_ms.merge(&other.inter_token_ms);
+        self.queue_wait_ms.merge(&other.queue_wait_ms);
+        self.queue_depth.merge(&other.queue_depth);
+        self.batch_occupancy.merge(&other.batch_occupancy);
+        self.steps += other.steps;
+    }
+}
+
 /// Aggregate serving report.
 #[derive(Clone, Debug, Default)]
 pub struct ThroughputReport {
@@ -55,6 +123,16 @@ pub struct ThroughputReport {
     /// aggregate decode-work accounting across all batches (zeroed when
     /// the backend doesn't report it)
     pub decode: DecodeStats,
+    /// time-to-first-token p50, milliseconds (0.0 unless served through
+    /// the scheduler — one-shot paths never observe a first token apart)
+    pub ttft_ms_p50: f64,
+    /// time-to-first-token p95, milliseconds
+    pub ttft_ms_p95: f64,
+    /// mean submit → admission wait, milliseconds
+    pub queue_wait_ms: f64,
+    /// full scheduler measurements when the run went through
+    /// `crate::sched` (None for one-shot backends)
+    pub sched: Option<SchedStats>,
 }
 
 impl ThroughputReport {
@@ -69,6 +147,10 @@ impl ThroughputReport {
             requests_per_sec: if wall > 0.0 { responses.len() as f64 / wall } else { 0.0 },
             latency: LatencyStats::from_sorted(&lat),
             decode: DecodeStats::default(),
+            ttft_ms_p50: 0.0,
+            ttft_ms_p95: 0.0,
+            queue_wait_ms: 0.0,
+            sched: None,
         }
     }
 
@@ -76,6 +158,26 @@ impl ThroughputReport {
     pub fn with_decode(mut self, decode: DecodeStats) -> ThroughputReport {
         self.decode = decode;
         self
+    }
+
+    /// Attach the scheduler's measurements (builder style), surfacing the
+    /// headline TTFT percentiles and mean queue wait as scalar fields.
+    pub fn with_sched(mut self, sched: SchedStats) -> ThroughputReport {
+        let ttft = sched.ttft_ms.stats();
+        self.ttft_ms_p50 = ttft.p50;
+        self.ttft_ms_p95 = ttft.p95;
+        self.queue_wait_ms = sched.queue_wait_ms.stats().mean;
+        self.sched = Some(sched);
+        self
+    }
+
+    /// [`ThroughputReport::with_sched`] for backends that may or may not
+    /// have scheduled (the `Server` drain path).
+    pub fn with_sched_opt(self, sched: Option<SchedStats>) -> ThroughputReport {
+        match sched {
+            Some(s) => self.with_sched(s),
+            None => self,
+        }
     }
 
     /// Positions the backend fed per token it generated — 1.0 is the
@@ -144,6 +246,41 @@ mod tests {
         let empty = ThroughputReport::from_responses(&[], 0, 0.0);
         assert_eq!(empty.decode, DecodeStats::default());
         assert!(empty.positions_per_token().is_nan());
+    }
+
+    #[test]
+    fn histogram_summaries() {
+        let mut h = Histogram::default();
+        assert!(h.is_empty());
+        for v in [3.0, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert_eq!(h.len(), 3);
+        let s = h.stats();
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-9);
+        // empty histogram summarizes to zeros, not NaN
+        assert_eq!(Histogram::default().stats().p95, 0.0);
+    }
+
+    #[test]
+    fn sched_stats_surface_in_report() {
+        let mut sched = SchedStats::default();
+        for v in [10.0, 20.0, 30.0] {
+            sched.ttft_ms.record(v);
+        }
+        sched.queue_wait_ms.record(4.0);
+        sched.queue_wait_ms.record(6.0);
+        let r = ThroughputReport::from_responses(&[], 0, 1.0).with_sched(sched);
+        assert_eq!(r.ttft_ms_p50, 20.0);
+        assert_eq!(r.ttft_ms_p95, 30.0);
+        assert!((r.queue_wait_ms - 5.0).abs() < 1e-9);
+        assert!(r.sched.is_some());
+        // one-shot paths leave the scalar fields zeroed
+        let plain = ThroughputReport::from_responses(&[], 0, 1.0).with_sched_opt(None);
+        assert_eq!(plain.ttft_ms_p50, 0.0);
+        assert!(plain.sched.is_none());
     }
 
     #[test]

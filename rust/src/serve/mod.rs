@@ -14,26 +14,37 @@
 //!   PJRT, the whole queue at once for the native engine;
 //! * a [`Server`] worker loop that drains the queue through its backend
 //!   and records per-request latency and aggregate throughput;
+//! * a scheduled native path: [`ScheduledBackend`] (one-shot serving as a
+//!   thin wrapper over the continuous-batching `crate::sched` scheduler,
+//!   selected by `ServeOptions::sched` / the `[sched]` TOML table /
+//!   `lota serve --sched true`) and [`serve_open_loop`] (timed arrivals
+//!   admitted mid-batch — the request-level serving shape);
 //! * [`ThroughputReport`] aggregation used by `examples/serve_merged.rs`
 //!   and the Fig. 4 efficiency bench. Token throughput counts **generated
-//!   tokens**, not decoded characters.
+//!   tokens**, not decoded characters; scheduled runs additionally carry
+//!   TTFT, queue-wait, queue-depth and batch-occupancy measurements
+//!   ([`SchedStats`]).
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 
-pub use backend::{DecodeStats, Generation, NativeBackend, PjrtBackend, ServeBackend};
+pub use backend::{
+    DecodeStats, Generation, NativeBackend, PjrtBackend, ScheduledBackend, ServeBackend,
+};
 pub use batcher::{BucketPolicy, DynamicBatcher, Request};
-pub use metrics::{LatencyStats, ThroughputReport};
+pub use metrics::{Histogram, LatencyStats, SchedStats, ThroughputReport};
 
+use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::config::{Backend, DecodeMode, Method, ModelConfig};
+use crate::config::{Backend, DecodeMode, Method, ModelConfig, SchedConfig};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
+use crate::sched::{LoadRequest, SchedOptions, SchedResponse, Scheduler};
 
 /// Which serving path a server instance runs (the Fig. 4 comparison).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +82,9 @@ pub struct ServeOptions {
     /// decode strategy (native backend only): KV-cached incremental steps
     /// or the full-prefix recompute reference
     pub decode: DecodeMode,
+    /// route native serving through the continuous-batching scheduler
+    /// (`crate::sched`); None serves one-shot
+    pub sched: Option<SchedConfig>,
 }
 
 impl ServeOptions {
@@ -81,6 +95,7 @@ impl ServeOptions {
             n_bits: 4,
             max_new,
             decode: DecodeMode::Cached,
+            sched: None,
         }
     }
 
@@ -96,6 +111,11 @@ impl ServeOptions {
 
     pub fn decode_mode(mut self, decode: DecodeMode) -> ServeOptions {
         self.decode = decode;
+        self
+    }
+
+    pub fn scheduled(mut self, sched: SchedConfig) -> ServeOptions {
+        self.sched = Some(sched);
         self
     }
 }
@@ -160,14 +180,27 @@ impl<'a> Server<'a> {
     ) -> Result<Server<'a>> {
         match opts.backend {
             Backend::Pjrt => {
+                if opts.sched.is_some() {
+                    bail!("the scheduler runs on the native backend only (got pjrt)");
+                }
                 let Some(rt) = rt else {
                     bail!("pjrt backend needs a Runtime (artifacts dir)");
                 };
                 Server::new(rt, cfg, store, opts.path, opts.max_new)
             }
-            Backend::Native => {
-                Server::native(cfg, store, opts.path, opts.n_bits, opts.decode, opts.max_new)
-            }
+            Backend::Native => match &opts.sched {
+                Some(sched) => {
+                    if opts.decode == DecodeMode::Recompute {
+                        bail!("the scheduler decodes KV-cached; drop decode=recompute");
+                    }
+                    let backend =
+                        ScheduledBackend::new(cfg, store, opts.path, opts.n_bits, sched)?;
+                    Ok(Server::with_backend(Box::new(backend), opts.max_new))
+                }
+                None => {
+                    Server::native(cfg, store, opts.path, opts.n_bits, opts.decode, opts.max_new)
+                }
+            },
         }
     }
 
@@ -188,10 +221,17 @@ impl<'a> Server<'a> {
         let mut responses = Vec::new();
         let mut total_tokens = 0usize;
         let mut decode_stats = DecodeStats::default();
+        let mut sched_stats: Option<SchedStats> = None;
         while let Some((_bucket, reqs)) = self.batcher.next_batch() {
             let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
             let (gens, stats) = self.backend.decode_with_stats(&prompts, self.max_new)?;
             decode_stats.absorb(&stats);
+            if let Some(s) = self.backend.take_sched_stats() {
+                match sched_stats.as_mut() {
+                    Some(acc) => acc.absorb(&s),
+                    None => sched_stats = Some(s),
+                }
+            }
             if gens.len() != reqs.len() {
                 bail!("backend returned {} generations for {} requests", gens.len(), reqs.len());
             }
@@ -208,7 +248,8 @@ impl<'a> Server<'a> {
         }
         let wall = t0.elapsed().as_secs_f64();
         let report = ThroughputReport::from_responses(&responses, total_tokens, wall)
-            .with_decode(decode_stats);
+            .with_decode(decode_stats)
+            .with_sched_opt(sched_stats);
         Ok((responses, report))
     }
 }
@@ -229,6 +270,114 @@ pub fn serve_batch(
     }
     let (_, report) = server.drain()?;
     Ok(report)
+}
+
+/// Open-loop scheduled serving: requests from a timed workload (e.g.
+/// [`crate::sched::generate_load`]'s Poisson arrivals) are submitted to a
+/// continuous-batching [`Scheduler`] as their arrival times pass, and the
+/// step loop runs until everything drains. This is the serving shape the
+/// scheduler exists for — admission happens *during* decoding, so a
+/// request arriving mid-batch starts prefilling at the next iteration
+/// instead of waiting for the batch to finish.
+///
+/// Native backend only, scheduler required (`opts.sched` must be Some;
+/// the scheduler decodes KV-cached, so `decode = recompute` is refused —
+/// the same rules `Server::from_options` enforces). Per-request `max_new`
+/// comes from the workload; `opts.max_new` is ignored here. Returns
+/// per-request responses plus the aggregate report carrying the
+/// scheduler's measurements.
+///
+/// All per-request timing (latency, TTFT, queue wait) is measured from
+/// the request's **nominal arrival time**, not from the submit call: the
+/// driver loop can only submit between decode steps, and silently
+/// excluding that lag would flatter exactly the overloaded regime the
+/// open loop exists to measure.
+pub fn serve_open_loop(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    opts: &ServeOptions,
+    load: &[LoadRequest],
+) -> Result<(Vec<SchedResponse>, ThroughputReport)> {
+    if opts.backend != Backend::Native {
+        bail!("open-loop scheduled serving runs on the native backend only");
+    }
+    if opts.decode == DecodeMode::Recompute {
+        bail!("the scheduler decodes KV-cached; drop decode=recompute");
+    }
+    let Some(sched_cfg) = opts.sched.clone() else {
+        bail!("open-loop serving needs a scheduler config (ServeOptions::scheduled)");
+    };
+    let engine = backend::build_engine(cfg, store, opts.path, opts.n_bits)?;
+    let mut sched = Scheduler::new(&engine, &SchedOptions::from_config(&sched_cfg))?;
+
+    let mut order: Vec<&LoadRequest> = load.iter().collect();
+    order.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    // seconds between a request's nominal arrival and its actual submit
+    // (the driver only runs between steps) — folded back into the
+    // response timings below so clocks start at arrival
+    let mut submit_lag: HashMap<u64, f64> = HashMap::new();
+    let mut responses: Vec<SchedResponse> = Vec::new();
+    while next < order.len() || !sched.is_idle() {
+        // open loop: everything whose arrival time has passed gets
+        // submitted, whatever the batch is currently doing
+        let elapsed = t0.elapsed().as_secs_f64();
+        while next < order.len() && order[next].arrival_secs <= elapsed {
+            let id = sched.submit(&order[next].prompt, order[next].max_new)?;
+            submit_lag.insert(id, (elapsed - order[next].arrival_secs).max(0.0));
+            next += 1;
+        }
+        if sched.is_idle() {
+            // nothing in flight: sleep (briefly) toward the next arrival
+            // instead of spinning the step loop empty
+            if next < order.len() {
+                let wait = order[next].arrival_secs - t0.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(wait.min(0.02)));
+                }
+            }
+            continue;
+        }
+        sched.step()?;
+        responses.extend(sched.take_finished());
+    }
+    responses.extend(sched.take_finished());
+    for r in &mut responses {
+        let lag = submit_lag.get(&r.id).copied().unwrap_or(0.0);
+        r.latency_secs += lag;
+        r.queue_wait_secs += lag;
+        if let Some(t) = r.ttft_secs.as_mut() {
+            *t += lag;
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = responses.iter().map(|r| r.tokens).sum();
+    let shim: Vec<Response> = responses
+        .iter()
+        .map(|r| Response {
+            id: r.id,
+            text: r.text.clone(),
+            latency_secs: r.latency_secs,
+            tokens_decoded: r.tokens,
+        })
+        .collect();
+    // per-request histograms rebuilt on the arrival clock; step-level
+    // ones (queue depth, occupancy, inter-token) keep the scheduler's
+    let mut stats = sched.sched_stats();
+    stats.ttft_ms = Histogram::default();
+    stats.queue_wait_ms = Histogram::default();
+    for r in &responses {
+        stats.queue_wait_ms.record(1e3 * r.queue_wait_secs);
+        if let Some(t) = r.ttft_secs {
+            stats.ttft_ms.record(1e3 * t);
+        }
+    }
+    let report = ThroughputReport::from_responses(&shim, tokens, wall)
+        .with_decode(sched.decode_stats())
+        .with_sched(stats);
+    Ok((responses, report))
 }
 
 /// Async wrapper: run the server on a worker thread, feeding it through a
@@ -297,6 +446,73 @@ mod tests {
         if rep_r.decode.forwards > 1 {
             assert!(rep_c.decode.forwarded_positions < rep_r.decode.forwarded_positions);
         }
+    }
+
+    #[test]
+    fn scheduled_one_shot_serves_identically_to_native() {
+        let (cfg, store) = tiny_store();
+        let prompts: Vec<String> = (0..6).map(|i| format!("{i} + 3 =")).collect();
+        let plain = ServeOptions::new(ServePath::Merged, 4).backend(Backend::Native);
+        let sched = ServeOptions::new(ServePath::Merged, 4)
+            .backend(Backend::Native)
+            .scheduled(SchedConfig::default());
+        let rep_p = serve_batch(None, &cfg, &store, &plain, &prompts).unwrap();
+        let rep_s = serve_batch(None, &cfg, &store, &sched, &prompts).unwrap();
+        assert_eq!(rep_p.tokens, rep_s.tokens, "scheduling changed the generations");
+        assert_eq!(rep_p.requests, rep_s.requests);
+        // only the scheduled drain carries scheduler measurements
+        assert!(rep_s.sched.is_some(), "scheduled drain lost its measurements");
+        assert!(rep_p.sched.is_none());
+        assert_eq!(rep_s.sched.as_ref().unwrap().queue_wait_ms.len(), 6);
+    }
+
+    #[test]
+    fn sched_on_pjrt_or_recompute_fails_loud() {
+        let (cfg, store) = tiny_store();
+        let on_pjrt = ServeOptions::new(ServePath::Merged, 2).scheduled(SchedConfig::default());
+        assert!(serve_batch(None, &cfg, &store, &on_pjrt, &["1 + 1 =".into()]).is_err());
+        let on_recompute = ServeOptions::new(ServePath::Merged, 2)
+            .backend(Backend::Native)
+            .decode_mode(DecodeMode::Recompute)
+            .scheduled(SchedConfig::default());
+        assert!(serve_batch(None, &cfg, &store, &on_recompute, &["1 + 1 =".into()]).is_err());
+    }
+
+    #[test]
+    fn open_loop_serves_a_poisson_workload() {
+        let (cfg, store) = tiny_store();
+        // a fast workload so the test doesn't sleep its way through: 8
+        // requests arriving within ~2 ms of each other on average
+        let spec = crate::sched::LoadSpec {
+            n_requests: 8,
+            rate_per_sec: 500.0,
+            seed: 3,
+            task: "arith".into(),
+            max_new_mix: vec![2, 5],
+        };
+        let load = crate::sched::generate_load(&spec).unwrap();
+        let opts = ServeOptions::new(ServePath::Merged, 4)
+            .backend(Backend::Native)
+            .scheduled(SchedConfig { max_batch: 3, kv_budget_mb: 1024 });
+        let (responses, report) = serve_open_loop(&cfg, &store, &opts, &load).unwrap();
+        assert_eq!(responses.len(), 8);
+        assert_eq!(report.requests, 8);
+        assert!(report.tokens <= 8 * 5);
+        let sched = report.sched.as_ref().unwrap();
+        assert!(sched.steps > 0);
+        // every request was admitted exactly once
+        assert_eq!(sched.queue_wait_ms.len(), 8);
+        // open-loop enforces the same rules as from_options: native
+        // backend only, scheduler config required, no recompute
+        let bad = ServeOptions::new(ServePath::Merged, 4);
+        assert!(serve_open_loop(&cfg, &store, &bad, &load).is_err());
+        let no_sched = ServeOptions::new(ServePath::Merged, 4).backend(Backend::Native);
+        assert!(serve_open_loop(&cfg, &store, &no_sched, &load).is_err());
+        let recompute = ServeOptions::new(ServePath::Merged, 4)
+            .backend(Backend::Native)
+            .decode_mode(DecodeMode::Recompute)
+            .scheduled(SchedConfig::default());
+        assert!(serve_open_loop(&cfg, &store, &recompute, &load).is_err());
     }
 
     #[test]

@@ -10,10 +10,11 @@
 //! grid, the same recipe as `tests/backend_parity.rs`). CI runs this
 //! suite on every PR as the native-serving smoke gate.
 
-use lota_qaf::config::{preset, Backend, DecodeMode, ModelConfig};
+use lota_qaf::config::{preset, Backend, DecodeMode, ModelConfig, SchedConfig};
 use lota_qaf::engine::{greedy_decode, greedy_decode_with, Engine};
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
+use lota_qaf::sched::{SchedOptions, Scheduler};
 use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::{Rng, Tensor};
 
@@ -185,6 +186,63 @@ fn finished_rows_leave_the_step_batch() {
     assert!(rstats.forwarded_rows < b * rstats.forwards, "recompute kept finished rows");
     assert_eq!(cstats.forwarded_rows, rstats.forwarded_rows, "same rows, different strategy");
     assert!(cstats.forwarded_positions < rstats.forwarded_positions);
+}
+
+/// Scheduled greedy decoding is pinned **bit-identical** to the one-shot
+/// cached decode (PR 2's `greedy_decode`) on the same prompts — for a
+/// batch that fits in one admission wave, for waves forced by a small
+/// slot pool, and for serial slot reuse (one slot, every request recycles
+/// the same cache row). The scheduler drives the same prefill/step
+/// kernels and cache rows never interact, so text *and* token counts
+/// must match exactly.
+#[test]
+fn scheduled_decode_is_bit_identical_to_one_shot() {
+    let (cfg, engine) = merged_engine(401);
+    assert_eq!(cfg.name, "tiny");
+    let prompts: Vec<String> = (0..9).map(|i| format!("{i} + {} =", (i * 3) % 10)).collect();
+    let max_new = 8usize;
+    let want = greedy_decode(&engine, &prompts, max_new).unwrap();
+    // slot pools: everyone at once / three admission waves / serial reuse
+    for max_batch in [9usize, 3, 1] {
+        let sched_opts = SchedOptions { max_batch, kv_budget_bytes: 1 << 30 };
+        let mut sched = Scheduler::new(&engine, &sched_opts).unwrap();
+        let ids: Vec<u64> =
+            prompts.iter().map(|p| sched.submit(p, max_new).unwrap()).collect();
+        sched.run_until_idle().unwrap();
+        let responses = sched.take_finished();
+        assert_eq!(responses.len(), prompts.len());
+        for (i, id) in ids.iter().enumerate() {
+            let got = responses.iter().find(|r| r.id == *id).unwrap();
+            assert_eq!(
+                got.text, want[i].text,
+                "max_batch {max_batch}: prompt {i} diverged from one-shot decode"
+            );
+            assert_eq!(got.tokens, want[i].tokens, "max_batch {max_batch}: prompt {i}");
+        }
+    }
+}
+
+/// The scheduled serving path end to end (ServeOptions → ScheduledBackend
+/// → Server drain): same generated tokens as the one-shot native path,
+/// same decode-work accounting when the batch fits one wave, scheduler
+/// measurements in the report.
+#[test]
+fn scheduled_serving_smoke_without_artifacts() {
+    let (cfg, store) = merged_tiny(403);
+    let prompts: Vec<String> = (0..6).map(|i| format!("{i} - 2 =")).collect();
+    let one_shot = ServeOptions::new(ServePath::Merged, 5).backend(Backend::Native);
+    let scheduled = ServeOptions::new(ServePath::Merged, 5)
+        .backend(Backend::Native)
+        .scheduled(SchedConfig::default());
+    let rep_o = serve_batch(None, &cfg, &store, &one_shot, &prompts).unwrap();
+    let rep_s = serve_batch(None, &cfg, &store, &scheduled, &prompts).unwrap();
+    assert_eq!(rep_o.tokens, rep_s.tokens, "scheduling changed the generations");
+    // 6 requests fit the default 8-slot pool: identical work accounting
+    assert_eq!(rep_o.decode, rep_s.decode);
+    let sched = rep_s.sched.as_ref().expect("scheduled report lost its measurements");
+    assert_eq!(sched.queue_wait_ms.len(), 6);
+    assert!(sched.steps > 0);
+    assert!(rep_o.sched.is_none());
 }
 
 /// The no-artifact serving smoke CI runs on every PR: a synthetic merged
