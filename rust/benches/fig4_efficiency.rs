@@ -170,13 +170,20 @@ fn main() -> anyhow::Result<()> {
             };
             let rep_c = run(native(DecodeMode::Cached))?;
             let rep_r = run(native(DecodeMode::Recompute))?;
+            // scheduled rows in both KV layouts: paged (the default) and
+            // the contiguous reference — same tokens, different memory
+            // shape and admission arithmetic
             let rep_s = run(native(DecodeMode::Cached).scheduled(SchedConfig::default()))?;
+            let rep_sc = run(native(DecodeMode::Cached)
+                .scheduled(SchedConfig { kv_paged: false, ..SchedConfig::default() }))?;
             assert_eq!(rep_c.tokens, rep_r.tokens, "decode modes generated different tokens");
             assert_eq!(rep_c.tokens, rep_s.tokens, "scheduling changed the generations");
+            assert_eq!(rep_s.tokens, rep_sc.tokens, "the KV layout changed the generations");
             for (mode, rep, speedup) in [
                 ("cached", &rep_c, rep_c.speedup_over(&rep_r)),
                 ("recompute", &rep_r, 1.0),
-                ("sched", &rep_s, rep_s.speedup_over(&rep_r)),
+                ("sched-paged", &rep_s, rep_s.speedup_over(&rep_r)),
+                ("sched-contig", &rep_sc, rep_sc.speedup_over(&rep_r)),
             ] {
                 let ppt = rep.positions_per_token();
                 t.row(&[

@@ -186,11 +186,20 @@ pub struct SchedConfig {
     /// KV memory budget in MiB shared by all live slots
     /// (`sched.kv_budget_mb`)
     pub kv_budget_mb: usize,
+    /// paged KV cache (`sched.kv_paged`, default on): slots hold per-row
+    /// page tables over a shared block pool sized by the budget, so
+    /// admission is bounded by tokens actually cached rather than
+    /// full-context rows. `false` selects the contiguous reference
+    /// layout (one full-context row per slot, PR 3 semantics) — the two
+    /// decode bit-identically, only memory shape and admission change
+    pub kv_paged: bool,
+    /// token positions per KV block (`sched.kv_block_size`, paged only)
+    pub kv_block_size: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> SchedConfig {
-        SchedConfig { max_batch: 8, kv_budget_mb: 1024 }
+        SchedConfig { max_batch: 8, kv_budget_mb: 1024, kv_paged: true, kv_block_size: 16 }
     }
 }
 
@@ -211,11 +220,20 @@ impl SchedConfig {
         if let Some(v) = doc.get_num("sched.kv_budget_mb") {
             c.kv_budget_mb = v as usize;
         }
+        if let Some(v) = doc.get_bool("sched.kv_paged") {
+            c.kv_paged = v;
+        }
+        if let Some(v) = doc.get_num("sched.kv_block_size") {
+            c.kv_block_size = v as usize;
+        }
         if c.max_batch == 0 {
             bail!("sched.max_batch must be at least 1");
         }
         if c.kv_budget_mb == 0 {
             bail!("sched.kv_budget_mb must be at least 1");
+        }
+        if c.kv_block_size == 0 {
+            bail!("sched.kv_block_size must be at least 1");
         }
         Ok(Some(c))
     }
@@ -450,6 +468,13 @@ mod tests {
         let c = ExperimentConfig::from_toml(&doc).unwrap().sched.unwrap();
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.kv_budget_mb, 64);
+        // paging defaults on with 16-token blocks; both knobs parse
+        assert!(c.kv_paged);
+        assert_eq!(c.kv_block_size, 16);
+        let doc = TomlDoc::parse("[sched]\nkv_paged = false\nkv_block_size = 8\n").unwrap();
+        let c = SchedConfig::from_toml(&doc).unwrap().unwrap();
+        assert!(!c.kv_paged);
+        assert_eq!(c.kv_block_size, 8);
         // enabled = false turns the table off
         let doc = TomlDoc::parse("[sched]\nenabled = false\nmax_batch = 4\n").unwrap();
         assert_eq!(SchedConfig::from_toml(&doc).unwrap(), None);
@@ -458,6 +483,10 @@ mod tests {
             .is_err());
         assert!(
             SchedConfig::from_toml(&TomlDoc::parse("[sched]\nkv_budget_mb = 0\n").unwrap())
+                .is_err()
+        );
+        assert!(
+            SchedConfig::from_toml(&TomlDoc::parse("[sched]\nkv_block_size = 0\n").unwrap())
                 .is_err()
         );
     }

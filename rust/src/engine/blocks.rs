@@ -1,0 +1,130 @@
+//! The KV block pool: a free-list allocator over fixed-size cache blocks.
+//!
+//! Paged KV caching ([`super::KvCache`] built with
+//! [`super::KvCache::new_paged`]) slices the K/V slabs into blocks of
+//! `kv_block_size` token positions and hands them out on demand, so a
+//! request's cache footprint grows with its *actual* length instead of
+//! reserving a full-context row up front. [`BlockAllocator`] is the pool
+//! behind that: a plain LIFO free list over physical block ids, O(1)
+//! alloc and release, no compaction (blocks are position-addressed
+//! through per-row page tables, so fragmentation cannot exist).
+//!
+//! Internal invariants are enforced eagerly — a double release or an
+//! out-of-range id panics instead of corrupting the free list — and the
+//! external ones (no block owned by two rows, free + live == pool size)
+//! are pinned by the property harness in `tests/kv_paged.rs`.
+
+/// A fixed pool of KV blocks with a LIFO free list.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    /// free physical block ids, popped from the back
+    free: Vec<usize>,
+    /// `is_free[id]` — double-release / double-grant detection
+    is_free: Vec<bool>,
+    total: usize,
+}
+
+impl BlockAllocator {
+    /// A pool of `total` blocks, all free. Ids are `0..total`.
+    pub fn new(total: usize) -> BlockAllocator {
+        BlockAllocator {
+            // LIFO over descending ids so the first alloc hands out id 0
+            free: (0..total).rev().collect(),
+            is_free: vec![true; total],
+            total,
+        }
+    }
+
+    /// Take one block from the pool, or `None` when it has run dry. The
+    /// caller owns the id until it releases it.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        debug_assert!(self.is_free[id]);
+        self.is_free[id] = false;
+        Some(id)
+    }
+
+    /// Return `id` to the pool. Panics on ids the pool never granted —
+    /// an out-of-range id or a double release is page-table corruption,
+    /// not a recoverable condition.
+    pub fn release(&mut self, id: usize) {
+        assert!(id < self.total, "release of block {id} outside pool of {}", self.total);
+        assert!(!self.is_free[id], "double release of block {id}");
+        self.is_free[id] = true;
+        self.free.push(id);
+    }
+
+    /// Blocks currently available.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently granted out.
+    pub fn in_use(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Pool size (free + in use, always).
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_every_block_exactly_once() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.total_blocks(), 4);
+        let mut got = Vec::new();
+        while let Some(id) = a.alloc() {
+            got.push(id);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(a.free_blocks(), 0);
+        assert_eq!(a.in_use(), 4);
+        assert_eq!(a.alloc(), None);
+    }
+
+    #[test]
+    fn release_recycles() {
+        let mut a = BlockAllocator::new(2);
+        let x = a.alloc().unwrap();
+        let y = a.alloc().unwrap();
+        assert_eq!(a.alloc(), None);
+        a.release(x);
+        assert_eq!(a.free_blocks(), 1);
+        let z = a.alloc().unwrap();
+        assert_eq!(z, x, "LIFO free list should hand the released block back");
+        a.release(y);
+        a.release(z);
+        assert_eq!(a.free_blocks(), 2);
+        assert_eq!(a.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_release_panics() {
+        let mut a = BlockAllocator::new(2);
+        let x = a.alloc().unwrap();
+        a.release(x);
+        a.release(x);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_release_panics() {
+        let mut a = BlockAllocator::new(2);
+        a.release(5);
+    }
+
+    #[test]
+    fn empty_pool_is_legal_but_dry() {
+        let mut a = BlockAllocator::new(0);
+        assert_eq!(a.alloc(), None);
+        assert_eq!(a.total_blocks(), 0);
+    }
+}

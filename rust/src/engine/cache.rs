@@ -9,18 +9,50 @@
 //! same fused-GEMM outputs it would otherwise throw away — which is why
 //! the cached and recompute paths can be pinned to identical logits.
 //!
-//! Layout: one `(batch, capacity, d_model)` f32 slab per layer for keys
-//! and one for values, heads interleaved along `d_model` exactly as the
-//! forward's attention reads them. `len[row]` tracks how many positions of
-//! each request are live; positions past `len` are scratch (padded prefill
-//! writes there and [`KvCache::truncate_row`] reclaims them) and are never
-//! read before being overwritten.
+//! Two storage layouts sit behind one addressing API:
+//!
+//! * **Contiguous** ([`KvCache::new`]) — one `(batch, capacity, d_model)`
+//!   f32 slab per layer for keys and one for values; position `p` of row
+//!   `r` lives at `(r·capacity + p)·d`. Simple, but every row pays for
+//!   `capacity` positions whether it uses them or not. The reference
+//!   layout the paged one is pinned bit-identical against.
+//! * **Paged** ([`KvCache::new_paged`]) — the slabs are sliced into
+//!   fixed-size blocks of `block_size` token positions drawn from a
+//!   shared [`BlockAllocator`] pool; each row holds a page table mapping
+//!   logical block index → physical block id, grown on demand as the
+//!   forward appends positions. A short request holds blocks for its
+//!   *actual* length, so the same memory budget carries far more
+//!   concurrent rows. [`KvCache::reset_row`] / [`KvCache::truncate_row`]
+//!   release blocks straight back to the pool.
+//!
+//! Either way, `len[row]` tracks how many positions of each request are
+//! live; positions past `len` are scratch (padded prefill writes there
+//! and [`KvCache::truncate_row`] reclaims them) and are never read
+//! before being overwritten. The layouts address the same values in the
+//! same iteration order, so which one backs a decode is unobservable in
+//! the logits — `tests/kv_paged.rs` and `tests/engine_parity.rs` pin
+//! that with `assert_eq!`, not a tolerance.
 
 use anyhow::{bail, Result};
 
+use super::blocks::BlockAllocator;
+
+/// The paged layout's bookkeeping: the shared pool plus one page table
+/// per request row.
+#[derive(Clone, Debug)]
+struct Paged {
+    /// token positions per block
+    block_size: usize,
+    alloc: BlockAllocator,
+    /// per-row physical block ids, in logical order (`tables[row][i]`
+    /// backs positions `i·block_size .. (i+1)·block_size`)
+    tables: Vec<Vec<usize>>,
+}
+
 /// Per-layer, per-request key/value buffers plus the live-position cursor
-/// for each request row. Built with [`super::Engine::new_cache`]; advanced
-/// by [`super::Engine::forward_incremental`].
+/// for each request row. Built with [`super::Engine::new_cache`] (or
+/// [`super::Engine::new_cache_paged`]); advanced by
+/// [`super::Engine::forward_incremental`].
 #[derive(Clone, Debug)]
 pub struct KvCache {
     n_layers: usize,
@@ -28,15 +60,19 @@ pub struct KvCache {
     /// maximum positions per row (the engine sizes this to `seq_len`)
     capacity: usize,
     d_model: usize,
-    /// per-layer (batch, capacity, d_model) key rows
+    /// per-layer key slabs: `(batch, capacity, d_model)` contiguous, or
+    /// `(pool_blocks, block_size, d_model)` paged
     k: Vec<Vec<f32>>,
-    /// per-layer (batch, capacity, d_model) value rows
+    /// per-layer value slabs, same geometry as `k`
     v: Vec<Vec<f32>>,
     /// live cached positions per request row
     len: Vec<usize>,
+    /// block pool + page tables; None selects the contiguous layout
+    paged: Option<Paged>,
 }
 
 impl KvCache {
+    /// A contiguous cache: every row owns `capacity` positions up front.
     pub fn new(n_layers: usize, batch: usize, capacity: usize, d_model: usize) -> KvCache {
         let slab = batch * capacity * d_model;
         KvCache {
@@ -47,7 +83,43 @@ impl KvCache {
             k: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
             v: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
             len: vec![0; batch],
+            paged: None,
         }
+    }
+
+    /// A paged cache: rows draw blocks of `block_size` positions from a
+    /// shared pool of `pool_blocks` as they grow. `capacity` stays the
+    /// per-row *logical* ceiling (positions a row may ever hold); the
+    /// pool bounds how many positions all rows hold *together*.
+    pub fn new_paged(
+        n_layers: usize,
+        batch: usize,
+        capacity: usize,
+        d_model: usize,
+        block_size: usize,
+        pool_blocks: usize,
+    ) -> Result<KvCache> {
+        if block_size == 0 {
+            bail!("kv block size must be at least 1 token");
+        }
+        if pool_blocks == 0 {
+            bail!("kv block pool must hold at least 1 block");
+        }
+        let slab = pool_blocks * block_size * d_model;
+        Ok(KvCache {
+            n_layers,
+            batch,
+            capacity,
+            d_model,
+            k: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
+            len: vec![0; batch],
+            paged: Some(Paged {
+                block_size,
+                alloc: BlockAllocator::new(pool_blocks),
+                tables: vec![Vec::new(); batch],
+            }),
+        })
     }
 
     pub fn batch(&self) -> usize {
@@ -63,42 +135,165 @@ impl KvCache {
         self.len[row]
     }
 
-    /// Total bytes the K/V slabs hold across all layers.
-    pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.batch * self.capacity * self.d_model * 4
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
     }
 
-    /// Bytes one request row costs across all layers (K + V) — what batch
-    /// caps are computed from.
+    /// Token positions per block (None for the contiguous layout).
+    pub fn block_size(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.block_size)
+    }
+
+    /// Free blocks left in the pool (None for the contiguous layout).
+    pub fn free_blocks(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.alloc.free_blocks())
+    }
+
+    /// Pool size in blocks (None for the contiguous layout).
+    pub fn total_blocks(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.alloc.total_blocks())
+    }
+
+    /// The physical block ids backing `row`, in logical order (empty for
+    /// the contiguous layout). Exposed so the property harness can check
+    /// page tables never alias across rows.
+    pub fn row_block_ids(&self, row: usize) -> &[usize] {
+        match &self.paged {
+            Some(p) => &p.tables[row],
+            None => &[],
+        }
+    }
+
+    /// Total bytes the K/V slabs hold across all layers.
+    pub fn bytes(&self) -> usize {
+        let positions = match &self.paged {
+            Some(p) => p.alloc.total_blocks() * p.block_size,
+            None => self.batch * self.capacity,
+        };
+        2 * self.n_layers * positions * self.d_model * 4
+    }
+
+    /// Bytes one full-capacity request row costs across all layers
+    /// (K + V) in the contiguous layout — what contiguous batch caps are
+    /// computed from.
     pub fn row_bytes(n_layers: usize, capacity: usize, d_model: usize) -> usize {
         2 * n_layers * capacity * d_model * 4
     }
 
+    /// Bytes one paged block costs across all layers (K + V) — what the
+    /// paged scheduler's pool is sized from.
+    pub fn block_bytes(n_layers: usize, block_size: usize, d_model: usize) -> usize {
+        2 * n_layers * block_size * d_model * 4
+    }
+
     /// Reclaim `row` for a brand-new request: drop every live position.
     /// The slab is *not* cleared — positions past `len` are scratch that a
-    /// forward always writes before reading — so reuse costs O(1) instead
-    /// of reallocating the whole cache, and a decode on a reused row is
+    /// forward always writes before reading — so reuse costs O(1) in the
+    /// contiguous layout and O(blocks held) in the paged one (every block
+    /// goes back to the pool), and a decode on a reused row is
     /// bit-identical to one on a fresh cache (pinned by the reuse
     /// regression in `engine::decode` and `tests/engine_parity.rs`). This
     /// is what lets the scheduler hand a finished request's slot to the
     /// next waiting request mid-generation.
     pub fn reset_row(&mut self, row: usize) {
         assert!(row < self.batch, "reset_row: row {row} outside batch {}", self.batch);
+        if let Some(p) = &mut self.paged {
+            for id in p.tables[row].drain(..) {
+                p.alloc.release(id);
+            }
+        }
         self.len[row] = 0;
     }
 
     /// Shrink `row` back to `new_len` live positions. Used after a padded
     /// batch prefill (ragged prompts all advance by the padded length; the
     /// pad tail becomes scratch again) and by benches to re-time a step at
-    /// a fixed prefix. Growing through this is a bug — positions can only
-    /// be *written* by a forward.
+    /// a fixed prefix. In the paged layout, blocks past the last one still
+    /// covering a live position go straight back to the pool. Growing
+    /// through this is a bug — positions can only be *written* by a
+    /// forward.
     pub fn truncate_row(&mut self, row: usize, new_len: usize) {
         assert!(
             new_len <= self.len[row],
             "truncate_row can only shrink: row {row} has {} live positions, asked for {new_len}",
             self.len[row]
         );
+        if let Some(p) = &mut self.paged {
+            let keep = new_len.div_ceil(p.block_size);
+            for id in p.tables[row].drain(keep..) {
+                p.alloc.release(id);
+            }
+        }
         self.len[row] = new_len;
+    }
+
+    /// Grow `row` by `n` positions through the public surface: allocate
+    /// any blocks the paged layout needs, then advance the live cursor.
+    /// This is the entry point for the allocator property harness
+    /// (`tests/kv_paged.rs`), which drives alloc/extend/truncate/reset
+    /// sequences without an engine — the forward itself uses the internal
+    /// [`KvCache::ensure_blocks`]/[`KvCache::advance`] pair because K/V
+    /// must be written between the two.
+    pub fn grow_row(&mut self, row: usize, n: usize) -> Result<()> {
+        if row >= self.batch {
+            bail!("grow_row: row {row} outside batch {}", self.batch);
+        }
+        if self.len[row] + n > self.capacity {
+            bail!(
+                "grow_row: {} live + {n} new positions exceed capacity {}",
+                self.len[row],
+                self.capacity
+            );
+        }
+        self.ensure_blocks(&[row], n)?;
+        self.advance(&[row], n);
+        Ok(())
+    }
+
+    /// Make sure every row in `rows` has blocks covering `t_new` more
+    /// positions past its live length. No-op for the contiguous layout.
+    /// On pool exhaustion the blocks granted by *this call* are returned
+    /// and an error surfaces — page tables are never left half-grown.
+    pub(crate) fn ensure_blocks(&mut self, rows: &[usize], t_new: usize) -> Result<()> {
+        let Some(p) = &mut self.paged else {
+            return Ok(());
+        };
+        let mut granted: Vec<(usize, usize)> = Vec::new(); // (row, count)
+        for &row in rows {
+            let needed = (self.len[row] + t_new).div_ceil(p.block_size);
+            let mut added = 0usize;
+            while p.tables[row].len() < needed {
+                match p.alloc.alloc() {
+                    Some(id) => {
+                        p.tables[row].push(id);
+                        added += 1;
+                    }
+                    None => {
+                        // roll back: this row's partial grant, then every
+                        // earlier row's
+                        for _ in 0..added {
+                            let id = p.tables[row].pop().expect("just pushed");
+                            p.alloc.release(id);
+                        }
+                        for &(r, n) in granted.iter().rev() {
+                            for _ in 0..n {
+                                let id = p.tables[r].pop().expect("granted this call");
+                                p.alloc.release(id);
+                            }
+                        }
+                        bail!(
+                            "kv block pool exhausted: row {row} needs {needed} blocks, \
+                             pool of {} has none free",
+                            p.alloc.total_blocks()
+                        );
+                    }
+                }
+            }
+            if added > 0 {
+                granted.push((row, added));
+            }
+        }
+        Ok(())
     }
 
     /// Advance the live length of each row in `rows` by `t_new` — called
@@ -108,6 +303,47 @@ impl KvCache {
         for &row in rows {
             self.len[row] += t_new;
             debug_assert!(self.len[row] <= self.capacity);
+            if let Some(p) = &self.paged {
+                debug_assert!(p.tables[row].len() * p.block_size >= self.len[row]);
+            }
+        }
+    }
+
+    /// Slab offset of position `pos` in `row` — the layout-resolving
+    /// address every K/V read and write goes through. For paged caches the
+    /// position's block must already be allocated ([`KvCache::ensure_blocks`]).
+    pub(crate) fn pos_base(&self, row: usize, pos: usize) -> usize {
+        match &self.paged {
+            Some(p) => {
+                let table = &p.tables[row];
+                (table[pos / p.block_size] * p.block_size + pos % p.block_size) * self.d_model
+            }
+            None => (row * self.capacity + pos) * self.d_model,
+        }
+    }
+
+    /// The storage runs backing positions `0..n_pos` of `row`, in logical
+    /// order: `(first position, run length, slab offset of the run)`.
+    /// Contiguous rows are one run; paged rows are one per block. The
+    /// attention loop walks these instead of assuming contiguity — same
+    /// positions in the same order either way, which is what keeps the
+    /// two layouts bit-identical.
+    pub(crate) fn segments(&self, row: usize, n_pos: usize) -> Vec<(usize, usize, usize)> {
+        if n_pos == 0 {
+            return Vec::new();
+        }
+        match &self.paged {
+            Some(p) => {
+                let bs = p.block_size;
+                let table = &p.tables[row];
+                (0..n_pos.div_ceil(bs))
+                    .map(|bi| {
+                        let pos0 = bi * bs;
+                        (pos0, bs.min(n_pos - pos0), table[bi] * bs * self.d_model)
+                    })
+                    .collect()
+            }
+            None => vec![(0, n_pos, row * self.capacity * self.d_model)],
         }
     }
 
@@ -146,6 +382,10 @@ mod tests {
         let mut c = KvCache::new(2, 3, 16, 8);
         assert_eq!(c.batch(), 3);
         assert_eq!(c.capacity(), 16);
+        assert!(!c.is_paged());
+        assert_eq!(c.block_size(), None);
+        assert_eq!(c.free_blocks(), None);
+        assert!(c.row_block_ids(0).is_empty());
         c.advance(&[0, 2], 5);
         assert_eq!(c.pos_len(0), 5);
         assert_eq!(c.pos_len(1), 0);
@@ -189,6 +429,10 @@ mod tests {
         let c = KvCache::new(2, 3, 16, 8);
         assert_eq!(c.bytes(), 2 * 2 * 3 * 16 * 8 * 4);
         assert_eq!(KvCache::row_bytes(2, 16, 8), c.bytes() / 3);
+        // paged: the pool, not batch × capacity, is what's held
+        let p = KvCache::new_paged(2, 3, 16, 8, 4, 6).unwrap();
+        assert_eq!(p.bytes(), 2 * 2 * 6 * 4 * 8 * 4);
+        assert_eq!(KvCache::block_bytes(2, 4, 8), p.bytes() / 6);
     }
 
     #[test]
@@ -201,5 +445,142 @@ mod tests {
         assert!(c.check(3, 8, 16).is_err());
         assert!(c.check(2, 4, 16).is_err());
         assert!(c.check(2, 8, 8).is_err());
+        // the paged layout carries the same logical shape
+        let p = KvCache::new_paged(2, 1, 16, 8, 4, 2).unwrap();
+        assert!(p.check(2, 8, 16).is_ok());
+        assert!(p.check(3, 8, 16).is_err());
+    }
+
+    #[test]
+    fn paged_rows_grow_block_by_block() {
+        let mut c = KvCache::new_paged(1, 2, 32, 4, 4, 8).unwrap();
+        assert!(c.is_paged());
+        assert_eq!(c.block_size(), Some(4));
+        assert_eq!((c.free_blocks(), c.total_blocks()), (Some(8), Some(8)));
+        c.grow_row(0, 3).unwrap(); // 3 positions → 1 block
+        assert_eq!(c.row_block_ids(0).len(), 1);
+        assert_eq!(c.free_blocks(), Some(7));
+        c.grow_row(0, 1).unwrap(); // fills the block exactly — no new alloc
+        assert_eq!(c.row_block_ids(0).len(), 1);
+        assert_eq!(c.free_blocks(), Some(7));
+        c.grow_row(0, 1).unwrap(); // crosses the boundary → second block
+        assert_eq!(c.row_block_ids(0).len(), 2);
+        assert_eq!(c.free_blocks(), Some(6));
+        // rows never share blocks
+        c.grow_row(1, 9).unwrap(); // 9 positions → 3 blocks
+        assert_eq!(c.row_block_ids(1).len(), 3);
+        let mut all: Vec<usize> = c.row_block_ids(0).to_vec();
+        all.extend_from_slice(c.row_block_ids(1));
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "rows alias a physical block");
+        assert_eq!(c.free_blocks(), Some(3));
+    }
+
+    #[test]
+    fn paged_truncate_releases_at_block_boundaries() {
+        let mut c = KvCache::new_paged(1, 1, 32, 4, 4, 8).unwrap();
+        c.grow_row(0, 10).unwrap(); // 10 positions → 3 blocks
+        assert_eq!(c.row_block_ids(0).len(), 3);
+        assert_eq!(c.free_blocks(), Some(5));
+        // mid-block: 9 positions still span 3 blocks, nothing freed
+        c.truncate_row(0, 9);
+        assert_eq!(c.row_block_ids(0).len(), 3);
+        assert_eq!(c.free_blocks(), Some(5));
+        // to exactly two blocks' worth: the third goes back
+        c.truncate_row(0, 8);
+        assert_eq!(c.row_block_ids(0).len(), 2);
+        assert_eq!(c.free_blocks(), Some(6));
+        // mid-block inside the second block: second block still live
+        c.truncate_row(0, 5);
+        assert_eq!(c.row_block_ids(0).len(), 2);
+        assert_eq!(c.free_blocks(), Some(6));
+        // to exactly one block
+        c.truncate_row(0, 4);
+        assert_eq!(c.row_block_ids(0).len(), 1);
+        assert_eq!(c.free_blocks(), Some(7));
+        // to zero: everything back, row reusable
+        c.truncate_row(0, 0);
+        assert!(c.row_block_ids(0).is_empty());
+        assert_eq!(c.free_blocks(), Some(8));
+        c.grow_row(0, 4).unwrap();
+        assert_eq!(c.free_blocks(), Some(7));
+    }
+
+    #[test]
+    fn paged_reset_returns_exactly_the_rows_blocks() {
+        let mut c = KvCache::new_paged(2, 3, 64, 4, 8, 12).unwrap();
+        c.grow_row(0, 17).unwrap(); // 3 blocks
+        c.grow_row(1, 8).unwrap(); // 1 block
+        c.grow_row(2, 9).unwrap(); // 2 blocks
+        assert_eq!(c.free_blocks(), Some(6));
+        let held = c.row_block_ids(1).len();
+        let free_before = c.free_blocks().unwrap();
+        c.reset_row(1);
+        assert_eq!(c.free_blocks(), Some(free_before + held));
+        assert_eq!(c.pos_len(1), 0);
+        assert!(c.row_block_ids(1).is_empty());
+        // the other rows' tables are untouched
+        assert_eq!(c.row_block_ids(0).len(), 3);
+        assert_eq!(c.row_block_ids(2).len(), 2);
+    }
+
+    #[test]
+    fn paged_exhaustion_fails_clean_and_rolls_back() {
+        let mut c = KvCache::new_paged(1, 2, 64, 4, 4, 3).unwrap();
+        c.grow_row(0, 8).unwrap(); // 2 of 3 blocks
+        assert_eq!(c.free_blocks(), Some(1));
+        // needs 2 more blocks, pool has 1: refuse, release the partial grant
+        assert!(c.grow_row(1, 7).is_err());
+        assert_eq!(c.free_blocks(), Some(1), "failed grow leaked blocks");
+        assert!(c.row_block_ids(1).is_empty(), "failed grow left a half-grown table");
+        assert_eq!(c.pos_len(1), 0);
+        // a fitting request still succeeds afterwards
+        c.grow_row(1, 3).unwrap();
+        assert_eq!(c.free_blocks(), Some(0));
+    }
+
+    #[test]
+    fn grow_row_respects_logical_capacity() {
+        // plenty of pool, but the per-row ceiling still binds
+        let mut c = KvCache::new_paged(1, 1, 8, 4, 4, 16).unwrap();
+        assert!(c.grow_row(0, 9).is_err());
+        c.grow_row(0, 8).unwrap();
+        assert!(c.grow_row(0, 1).is_err());
+        // contiguous rows enforce the same ceiling
+        let mut c = KvCache::new(1, 1, 8, 4);
+        assert!(c.grow_row(0, 9).is_err());
+        c.grow_row(0, 8).unwrap();
+        assert!(c.grow_row(0, 1).is_err());
+    }
+
+    #[test]
+    fn invalid_paged_shapes_are_refused() {
+        assert!(KvCache::new_paged(1, 1, 8, 4, 0, 4).is_err());
+        assert!(KvCache::new_paged(1, 1, 8, 4, 4, 0).is_err());
+    }
+
+    #[test]
+    fn addressing_matches_layouts() {
+        // contiguous: row-major positions
+        let c = KvCache::new(1, 2, 8, 4);
+        assert_eq!(c.pos_base(0, 0), 0);
+        assert_eq!(c.pos_base(0, 3), 12);
+        assert_eq!(c.pos_base(1, 0), 32);
+        assert_eq!(c.segments(0, 5), vec![(0, 5, 0)]);
+        assert_eq!(c.segments(1, 2), vec![(0, 2, 32)]);
+        assert!(c.segments(0, 0).is_empty());
+        // paged: through the page table
+        let mut p = KvCache::new_paged(1, 2, 16, 4, 4, 4).unwrap();
+        p.grow_row(1, 6).unwrap(); // row 1 grabs blocks first (ids 0, 1)
+        p.grow_row(0, 2).unwrap(); // row 0 gets id 2
+        assert_eq!(p.row_block_ids(1), &[0, 1]);
+        assert_eq!(p.row_block_ids(0), &[2]);
+        assert_eq!(p.pos_base(1, 0), 0);
+        assert_eq!(p.pos_base(1, 5), (4 + 1) * 4);
+        assert_eq!(p.pos_base(0, 1), (2 * 4 + 1) * 4);
+        assert_eq!(p.segments(1, 6), vec![(0, 4, 0), (4, 2, 4 * 4)]);
+        assert_eq!(p.segments(0, 2), vec![(0, 2, 2 * 4 * 4)]);
     }
 }

@@ -227,6 +227,24 @@ pub(crate) fn decode_step_rows(
     Ok((0..r).map(|i| argmax(&logits.data()[i * v..(i + 1) * v])).collect())
 }
 
+/// One-shot greedy decoding over a **paged** KV cache: same prompts, same
+/// kernels, same picks as the cached default — only the cache's memory
+/// shape differs (K/V live in `block_size`-token blocks from a pool sized
+/// to the batch's horizon instead of per-row contiguous slabs). Pinned
+/// bit-identical to [`greedy_decode`] in `tests/engine_parity.rs` and
+/// `tests/kv_paged.rs`.
+pub fn greedy_decode_paged(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+    block_size: usize,
+) -> Result<(Vec<Generation>, DecodeStats)> {
+    if prompts.is_empty() {
+        return Ok((Vec::new(), DecodeStats::default()));
+    }
+    decode_cached_layout(engine, prompts, max_new, Some(block_size))
+}
+
 /// The KV-cached strategy: prefill once, then one token per live row per
 /// step. The cache is created per batch and reused across every step of
 /// that batch's generation. Built entirely on [`prefill_rows`] and
@@ -236,6 +254,17 @@ fn decode_cached(
     engine: &Engine,
     prompts: &[String],
     max_new: usize,
+) -> Result<(Vec<Generation>, DecodeStats)> {
+    decode_cached_layout(engine, prompts, max_new, None)
+}
+
+/// [`decode_cached`] over either cache layout: `block_size` selects paged
+/// storage, `None` the contiguous reference.
+fn decode_cached_layout(
+    engine: &Engine,
+    prompts: &[String],
+    max_new: usize,
+    block_size: Option<usize>,
 ) -> Result<(Vec<Generation>, DecodeStats)> {
     let cfg = engine.config();
     let b = prompts.len();
@@ -250,9 +279,15 @@ fn decode_cached(
 
     // prefill: all prompts in one batched incremental forward. The cache
     // is sized to this batch's horizon, not the full context: no position
-    // past t0 + max_new can ever be written.
+    // past t0 + max_new can ever be written. A paged pool of
+    // b × ⌈horizon/bs⌉ blocks covers even the padded-prefill transient,
+    // where every row briefly holds blocks for the longest frame.
     let t0 = rows.iter().map(Vec::len).max().unwrap();
-    let mut cache = engine.new_cache_for(b, t0 + max_new);
+    let horizon = (t0 + max_new).min(t_cap);
+    let mut cache = match block_size {
+        Some(bs) => engine.new_cache_paged(b, horizon, bs, b * horizon.div_ceil(bs))?,
+        None => engine.new_cache_for(b, t0 + max_new),
+    };
     let all: Vec<usize> = (0..b).collect();
     let picks = prefill_rows(engine, &mut cache, &all, &rows, &mut stats)?;
     for (ri, next) in picks.into_iter().enumerate() {
@@ -401,6 +436,31 @@ mod tests {
                 rs.forwarded_positions
             );
         }
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_exactly() {
+        let engine = tiny_engine(7);
+        let prompts: Vec<String> = (0..5).map(|i| format!("{i} + {} =", (i * 3) % 10)).collect();
+        let (want, ws) = greedy_decode_with(&engine, &prompts, 6, DecodeMode::Cached).unwrap();
+        for bs in [1usize, 3, 16, 64] {
+            let (got, gs) = greedy_decode_paged(&engine, &prompts, 6, bs).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.text, w.text, "bs={bs}");
+                assert_eq!(g.tokens, w.tokens, "bs={bs}");
+            }
+            // same forwards, same rows, same positions — the layout is
+            // invisible to the work accounting too
+            assert_eq!(gs, ws, "bs={bs}");
+        }
+        // empty batch and zero budget behave like the contiguous path
+        assert!(greedy_decode_paged(&engine, &[], 4, 16).unwrap().0.is_empty());
+        let (gens, stats) = greedy_decode_paged(&engine, &prompts, 0, 16).unwrap();
+        assert_eq!(gens.len(), 5);
+        assert!(gens.iter().all(|g| g.tokens == 0));
+        assert_eq!(stats, DecodeStats::default());
+        // invalid block size fails loud
+        assert!(greedy_decode_paged(&engine, &prompts, 4, 0).is_err());
     }
 
     #[test]

@@ -201,10 +201,40 @@ impl Engine {
         KvCache::new(self.layers.len(), batch, capacity, self.cfg.d_model)
     }
 
+    /// A fresh **paged** [`KvCache`]: `batch` rows that draw fixed-size
+    /// blocks of `block_size` token positions from a shared pool of
+    /// `pool_blocks` as they grow, instead of reserving `horizon`
+    /// positions each up front. Decoding through it is bit-identical to
+    /// the contiguous layout — only the memory shape differs.
+    pub fn new_cache_paged(
+        &self,
+        batch: usize,
+        horizon: usize,
+        block_size: usize,
+        pool_blocks: usize,
+    ) -> Result<KvCache> {
+        let capacity = horizon.clamp(1, self.cfg.seq_len);
+        KvCache::new_paged(
+            self.layers.len(),
+            batch,
+            capacity,
+            self.cfg.d_model,
+            block_size,
+            pool_blocks,
+        )
+    }
+
     /// Bytes one cached request row costs across all layers (K + V) —
     /// what the serving layer's batch cap is computed from.
     pub fn cache_row_bytes(&self) -> usize {
         KvCache::row_bytes(self.layers.len(), self.cfg.seq_len, self.cfg.d_model)
+    }
+
+    /// Bytes one paged KV block of `block_size` token positions costs
+    /// across all layers (K + V) — what the paged scheduler's pool is
+    /// sized from.
+    pub fn kv_block_bytes(&self, block_size: usize) -> usize {
+        KvCache::block_bytes(self.layers.len(), block_size, self.cfg.d_model)
     }
 
     /// Incremental forward: logits (R, T_new, V) for `t_new` **new** token
@@ -277,8 +307,24 @@ impl Engine {
         }
         let mut x = Tensor::new(&[r * t_new, d], x);
 
+        // paged layout: grab any blocks the new positions need now that
+        // every input is validated — a dry pool fails clean with the page
+        // tables rolled back and nothing written (no-op when contiguous)
+        cache.ensure_blocks(rows, t_new)?;
+        // layout-resolved addressing, identical for every layer: where
+        // each new position's K/V row lands, and the storage runs backing
+        // each request's prefix + new positions in logical order
+        let mut dsts: Vec<usize> = Vec::with_capacity(r * t_new);
+        let mut segs: Vec<Vec<(usize, usize, usize)>> = Vec::with_capacity(r);
+        for (i, &row) in rows.iter().enumerate() {
+            for ti in 0..t_new {
+                dsts.push(cache.pos_base(row, bases[i] + ti));
+            }
+            segs.push(cache.segments(row, bases[i] + t_new));
+        }
+
         for (li, layer) in self.layers.iter().enumerate() {
-            x = self.block_incremental(&x, layer, li, cache, rows, &bases, t_new)?;
+            x = self.block_incremental(&x, layer, li, cache, &bases, t_new, &dsts, &segs)?;
         }
         let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
         let logits = linalg::matmul(&x, &self.head);
@@ -288,7 +334,12 @@ impl Engine {
 
     /// One transformer block over new positions only: same kernels and
     /// accumulation order as [`Engine::block`], but K/V for the prefix come
-    /// from the cache instead of being recomputed.
+    /// from the cache instead of being recomputed. Storage is addressed
+    /// through `dsts` (slab offset of each new position's K/V row) and
+    /// `segs` (per request, the storage runs backing its prefix + new
+    /// positions in logical order) — one run for a contiguous cache, one
+    /// per block for a paged one. Positions are visited in the same
+    /// logical order either way, so the layouts are bit-identical.
     #[allow(clippy::too_many_arguments)]
     fn block_incremental(
         &self,
@@ -296,13 +347,14 @@ impl Engine {
         layer: &Layer,
         li: usize,
         cache: &mut KvCache,
-        rows: &[usize],
         bases: &[usize],
         t_new: usize,
+        dsts: &[usize],
+        segs: &[Vec<(usize, usize, usize)>],
     ) -> Result<Tensor> {
         let cfg = &self.cfg;
         let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
-        let r = rows.len();
+        let r = bases.len();
         let cap = cache.capacity();
 
         let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
@@ -314,10 +366,10 @@ impl Engine {
         // exactly the values the full forward computes at these positions
         {
             let (ck, cv) = cache.layer_mut(li);
-            for (i, &row) in rows.iter().enumerate() {
+            for i in 0..r {
                 for ti in 0..t_new {
                     let src = (i * t_new + ti) * d;
-                    let dst = (row * cap + bases[i] + ti) * d;
+                    let dst = dsts[i * t_new + ti];
                     ck[dst..dst + d].copy_from_slice(&k.data()[src..src + d]);
                     cv[dst..dst + d].copy_from_slice(&v.data()[src..src + d]);
                 }
@@ -325,13 +377,14 @@ impl Engine {
         }
 
         // attention: each new position attends over the cached prefix plus
-        // the new positions written above — identical summation order to
-        // the full forward's causal loop
+        // the new positions written above, gathered run by run through the
+        // page table — identical summation order to the full forward's
+        // causal loop
         let (ck, cv) = cache.layer(li);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut attn = vec![0.0f32; r * t_new * d];
         let mut scores = vec![0.0f32; cap];
-        for (i, &row) in rows.iter().enumerate() {
+        for i in 0..r {
             for hi in 0..h {
                 let off = hi * hd;
                 for ti in 0..t_new {
@@ -339,14 +392,21 @@ impl Engine {
                         &q.data()[(i * t_new + ti) * d + off..(i * t_new + ti) * d + off + hd];
                     let t_abs = bases[i] + ti;
                     let mut maxv = f32::NEG_INFINITY;
-                    for (tj, s) in scores.iter_mut().enumerate().take(t_abs + 1) {
-                        let krow = &ck[(row * cap + tj) * d + off..(row * cap + tj) * d + off + hd];
-                        let mut dot = 0.0f32;
-                        for e in 0..hd {
-                            dot += qrow[e] * krow[e];
+                    for &(pos0, n, base) in &segs[i] {
+                        if pos0 > t_abs {
+                            break;
                         }
-                        *s = dot * scale;
-                        maxv = maxv.max(*s);
+                        let take = n.min(t_abs + 1 - pos0);
+                        for jj in 0..take {
+                            let krow = &ck[base + jj * d + off..base + jj * d + off + hd];
+                            let mut dot = 0.0f32;
+                            for e in 0..hd {
+                                dot += qrow[e] * krow[e];
+                            }
+                            let s = dot * scale;
+                            scores[pos0 + jj] = s;
+                            maxv = maxv.max(s);
+                        }
                     }
                     let mut denom = 0.0f32;
                     for s in scores.iter_mut().take(t_abs + 1) {
@@ -355,11 +415,17 @@ impl Engine {
                     }
                     let orow =
                         &mut attn[(i * t_new + ti) * d + off..(i * t_new + ti) * d + off + hd];
-                    for (tj, s) in scores.iter().enumerate().take(t_abs + 1) {
-                        let w = s / denom;
-                        let vrow = &cv[(row * cap + tj) * d + off..(row * cap + tj) * d + off + hd];
-                        for e in 0..hd {
-                            orow[e] += w * vrow[e];
+                    for &(pos0, n, base) in &segs[i] {
+                        if pos0 > t_abs {
+                            break;
+                        }
+                        let take = n.min(t_abs + 1 - pos0);
+                        for jj in 0..take {
+                            let w = scores[pos0 + jj] / denom;
+                            let vrow = &cv[base + jj * d + off..base + jj * d + off + hd];
+                            for e in 0..hd {
+                                orow[e] += w * vrow[e];
+                            }
                         }
                     }
                 }
@@ -720,6 +786,98 @@ mod tests {
         let got = engine.forward_incremental(&a, &mut cache, &[0]).unwrap();
         assert_eq!(got, want, "reused slot diverged from a fresh cache");
         assert_eq!(cache.pos_len(0), 10);
+    }
+
+    #[test]
+    fn paged_incremental_is_bitwise_identical_to_contiguous() {
+        // the paged layout changes where K/V rows live, not what they
+        // hold: chunked prefill + stepping through a paged cache must
+        // reproduce the contiguous cache's logits bit for bit, for block
+        // sizes that divide the sequence and ones that don't
+        let (cfg, _, engine) = tiny_engine(20);
+        let (b, t) = (3usize, 21usize);
+        let tokens = rand_tokens(&cfg, b, t, 22);
+        let v = cfg.vocab;
+        let mut contiguous = engine.new_cache(b);
+        let rows: Vec<usize> = (0..b).collect();
+        let mut want = Vec::new();
+        for ti in 0..t {
+            let step: Vec<f32> = (0..b).map(|bi| tokens.data()[bi * t + ti]).collect();
+            want.push(
+                engine
+                    .forward_incremental(&Tensor::new(&[b, 1], step), &mut contiguous, &rows)
+                    .unwrap(),
+            );
+        }
+        for bs in [1usize, 5, 16] {
+            let pool = b * cfg.seq_len.div_ceil(bs);
+            let mut cache = engine.new_cache_paged(b, cfg.seq_len, bs, pool).unwrap();
+            // prefill 8 positions in one chunk, then one token at a time —
+            // chunks cross block boundaries for every bs here
+            let split = 8usize;
+            let mut prefix = vec![0.0f32; b * split];
+            for bi in 0..b {
+                prefix[bi * split..(bi + 1) * split]
+                    .copy_from_slice(&tokens.data()[bi * t..bi * t + split]);
+            }
+            let got = engine
+                .forward_incremental(&Tensor::new(&[b, split], prefix), &mut cache, &rows)
+                .unwrap();
+            for bi in 0..b {
+                for ti in 0..split {
+                    assert_eq!(
+                        &got.data()[(bi * split + ti) * v..(bi * split + ti + 1) * v],
+                        &want[ti].data()[bi * v..(bi + 1) * v],
+                        "bs={bs}: paged prefill diverged at ({bi},{ti})"
+                    );
+                }
+            }
+            for ti in split..t {
+                let step: Vec<f32> = (0..b).map(|bi| tokens.data()[bi * t + ti]).collect();
+                let got = engine
+                    .forward_incremental(&Tensor::new(&[b, 1], step), &mut cache, &rows)
+                    .unwrap();
+                assert_eq!(got, want[ti], "bs={bs}: paged step {ti} diverged");
+            }
+            assert_eq!(cache.pos_len(0), t);
+            // every row holds exactly the blocks its length needs
+            for bi in 0..b {
+                assert_eq!(cache.row_block_ids(bi).len(), t.div_ceil(bs));
+            }
+        }
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_fails_before_writing() {
+        let (cfg, _, engine) = tiny_engine(21);
+        // one block of 4 positions total: a 5-token prefill cannot fit
+        let mut cache = engine.new_cache_paged(1, cfg.seq_len, 4, 1).unwrap();
+        let tokens = rand_tokens(&cfg, 1, 5, 23);
+        assert!(engine.forward_incremental(&tokens, &mut cache, &[0]).is_err());
+        assert_eq!(cache.pos_len(0), 0, "failed forward advanced the row");
+        assert_eq!(cache.free_blocks(), Some(1), "failed forward leaked blocks");
+        // a fitting prefill still works afterwards
+        let short = rand_tokens(&cfg, 1, 3, 24);
+        engine.forward_incremental(&short, &mut cache, &[0]).unwrap();
+        assert_eq!(cache.pos_len(0), 3);
+    }
+
+    #[test]
+    fn reused_paged_row_is_bit_identical_to_fresh_cache() {
+        // reset_row hands a paged row's blocks back to the pool; a new
+        // request on the reused row may land on different physical blocks
+        // and must still decode bit-identically
+        let (cfg, _, engine) = tiny_engine(22);
+        let a = rand_tokens(&cfg, 1, 10, 25);
+        let other = rand_tokens(&cfg, 1, 14, 26);
+        let mut fresh = engine.new_cache_paged(1, cfg.seq_len, 4, 8).unwrap();
+        let want = engine.forward_incremental(&a, &mut fresh, &[0]).unwrap();
+        let mut cache = engine.new_cache_paged(1, cfg.seq_len, 4, 8).unwrap();
+        engine.forward_incremental(&other, &mut cache, &[0]).unwrap();
+        cache.reset_row(0);
+        assert_eq!(cache.free_blocks(), Some(8));
+        let got = engine.forward_incremental(&a, &mut cache, &[0]).unwrap();
+        assert_eq!(got, want, "reused paged row diverged from a fresh cache");
     }
 
     #[test]

@@ -24,7 +24,13 @@
 //!   place ([`cache::KvCache::reset_row`], O(1)): the continuous-batching
 //!   scheduler (`crate::sched`) hands a finished request's row to the
 //!   next waiting request without reallocating, and a reused row decodes
-//!   bit-identically to a fresh cache;
+//!   bit-identically to a fresh cache. Storage comes in two layouts —
+//!   contiguous per-row slabs (the reference) or **paged**
+//!   ([`cache::KvCache::new_paged`]): fixed-size blocks from a shared
+//!   [`blocks::BlockAllocator`] pool mapped through per-row page tables,
+//!   so a row's footprint tracks its actual length and the same KV budget
+//!   carries far more concurrent requests. The layouts are pinned
+//!   bit-identical (`tests/kv_paged.rs`) — only the memory shape moves;
 //! * [`decode::greedy_decode`] — greedy decoding at **any** batch size,
 //!   no bucket policy and no artifacts directory required. KV-cached by
 //!   default; [`decode::greedy_decode_with`] selects the full-prefix
@@ -44,14 +50,16 @@
 //! engine's own cached/recompute pair is pinned **bit-identical** by
 //! `tests/engine_parity.rs` — no artifacts needed.
 
+pub mod blocks;
 pub mod cache;
 pub mod decode;
 pub mod forward;
 pub mod gemm;
 pub mod packed;
 
+pub use blocks::BlockAllocator;
 pub use cache::KvCache;
-pub use decode::{greedy_decode, greedy_decode_with, DecodeStats, Generation};
+pub use decode::{greedy_decode, greedy_decode_paged, greedy_decode_with, DecodeStats, Generation};
 pub use forward::Engine;
 pub use gemm::{matmul_packed, matmul_packed_with_threads};
 pub use packed::PackedLinear;

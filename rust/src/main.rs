@@ -146,11 +146,15 @@ COMMANDS
             [--decode cached|recompute] [--bits 4] [--config <exp.toml>]
             [--requests 32] [--max-new 12]
             [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
+            [--kv-paged true|false] [--kv-block-size 16]
             [--arrival-rate <req/s>] [--load-seed 123]
             --sched routes the native backend through the continuous-batching
             scheduler (defaults from the [sched] TOML table; see
             examples/serve_sched.toml). With --arrival-rate the request
             stream arrives open-loop (Poisson) instead of all at t=0.
+            --kv-paged (default true) serves over paged KV blocks — the
+            budget admits by tokens actually cached, not full-context
+            rows; false selects the contiguous reference layout.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -364,6 +368,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(sc) = sched_cfg.as_mut() {
         sc.max_batch = args.get_usize("max-batch", sc.max_batch)?;
         sc.kv_budget_mb = args.get_usize("kv-budget-mb", sc.kv_budget_mb)?;
+        sc.kv_block_size = args.get_usize("kv-block-size", sc.kv_block_size)?;
+        sc.kv_paged = match args.opt("kv-paged") {
+            Some("true") | Some("on") => true,
+            Some("false") | Some("off") => false,
+            Some(other) => bail!("--kv-paged wants true|false (got '{other}')"),
+            None => sc.kv_paged,
+        };
     }
     // bit width for the native engine's packed grids: flag, else the
     // checkpoint's own hint, else the experiment config

@@ -126,6 +126,39 @@ mod tests {
     }
 
     #[test]
+    fn golden_replay_pins_the_sampling_order() {
+        // Load-bench comparisons across PRs are only honest if a fixed
+        // seed keeps producing the *exact* workload. This pin replays the
+        // documented sampling sequence by hand — one uniform for the
+        // arrival gap, then the prompt draw, then the max_new choice, per
+        // request — so any reordering or reformulation inside
+        // generate_load (extra RNG draw, changed gap formula, swapped
+        // prompt/length order) fails here even though generate_load would
+        // still be self-consistent.
+        let spec = LoadSpec {
+            n_requests: 12,
+            rate_per_sec: 8.0,
+            seed: 42,
+            task: "arith".into(),
+            max_new_mix: vec![3, 9, 27],
+        };
+        let got = generate_load(&spec).unwrap();
+        assert_eq!(got.len(), 12);
+        let task = task_by_name("arith").unwrap();
+        let mut rng = Rng::new(42);
+        let mut t = 0.0f64;
+        for (i, req) in got.iter().enumerate() {
+            let u = (rng.uniform() as f64).clamp(0.0, 1.0 - 1e-9);
+            t += -(1.0 - u).ln() / spec.rate_per_sec;
+            let prompt = task.sample(&mut rng, Split::Test).prompt;
+            let max_new = *rng.choose(&spec.max_new_mix);
+            assert_eq!(req.arrival_secs, t, "request {i}: arrival time drifted");
+            assert_eq!(req.prompt, prompt, "request {i}: prompt sequence drifted");
+            assert_eq!(req.max_new, max_new, "request {i}: length sequence drifted");
+        }
+    }
+
+    #[test]
     fn invalid_specs_are_rejected() {
         let d = LoadSpec::default;
         assert!(generate_load(&LoadSpec { rate_per_sec: 0.0, ..d() }).is_err());

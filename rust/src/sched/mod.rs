@@ -9,14 +9,22 @@
 //! request while new arrivals wait. The scheduler closes that gap with
 //! iteration-level scheduling:
 //!
-//! * [`scheduler::Scheduler`] — a FIFO wait queue plus a fixed pool of
-//!   decode slots (one [`crate::engine::KvCache`] row each, the pool
-//!   sized by the same KV memory budget the one-shot backend caps with).
-//!   Each [`scheduler::Scheduler::step`] admits waiting requests into
-//!   free slots, prefills them in one padded batch, single-token-steps
+//! * [`scheduler::Scheduler`] — a FIFO wait queue plus a pool of decode
+//!   slots (one [`crate::engine::KvCache`] row each). With the **paged**
+//!   cache (the default) the KV budget buys a shared block pool: all
+//!   `max_batch` slots exist and admission reserves each request's
+//!   prompt + decode horizon in blocks, denying (never evicting) when
+//!   the pool can't cover a candidate — so mixed-length workloads carry
+//!   strictly more concurrent requests at the same budget than the
+//!   contiguous reference layout, whose slot count is capped at
+//!   full-context rows (the same KV arithmetic the one-shot backend caps
+//!   with, kept behind `kv_paged = false`). Each
+//!   [`scheduler::Scheduler::step`] admits waiting requests into free
+//!   slots, prefills them in one padded batch, single-token-steps
 //!   everything already in flight, and releases finished or cancelled
-//!   requests immediately — their rows go to the next waiting request
-//!   mid-generation ([`crate::engine::KvCache::reset_row`], O(1)).
+//!   requests immediately — their rows (and blocks) go to the next
+//!   waiting request mid-generation
+//!   ([`crate::engine::KvCache::reset_row`]).
 //! * [`request::RequestState`] — per-request lifecycle (Queued →
 //!   Prefilling → Decoding → Finished/Cancelled) with
 //!   [`request::TokenSink`] streaming: tokens are observable as they are

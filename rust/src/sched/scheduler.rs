@@ -5,10 +5,22 @@
 //! One [`Scheduler::step`] is one iteration of the serving loop:
 //!
 //! 1. **Admit** — waiting requests (FIFO) move into free decode slots,
-//!    as many as are open; the slot count itself is fixed at build time
-//!    by the KV memory budget (the same
+//!    as many as are open. With the **paged** KV cache (the default),
+//!    the real resource is the shared block pool: slots are cheap
+//!    (`max_batch` of them exist) and a candidate is admitted when the
+//!    pool can cover its prompt plus decode horizon in blocks, *net of
+//!    blocks already promised to in-flight rows* — a reservation that
+//!    makes backpressure sound: when the pool runs dry the candidate
+//!    simply stays queued (admission denied, counted in
+//!    [`SchedStats::admission_denied`]) and nothing in flight is ever
+//!    evicted or starved mid-decode. Admitting on anything less than the
+//!    horizon (say, prompt + one block) could deadlock a no-eviction
+//!    scheduler: every live row blocked on a dry pool, none able to
+//!    finish. With the contiguous layout the slot count itself is fixed
+//!    at build time by the KV memory budget (the same
 //!    [`BucketPolicy::adaptive_capped`] arithmetic the one-shot native
-//!    backend caps its drain batches with).
+//!    backend caps its drain batches with) — every slot a full-context
+//!    row, which is exactly the over-reservation paging removes.
 //! 2. **Prefill** — everything admitted this step runs one padded,
 //!    batched incremental forward ([`decode::prefill_rows`]) and picks
 //!    its first token.
@@ -46,15 +58,26 @@ use super::request::{FinishReason, RequestState, SchedResponse, TokenSink};
 /// TOML/CLI-facing form) converts via [`SchedOptions::from_config`].
 #[derive(Clone, Copy, Debug)]
 pub struct SchedOptions {
-    /// desired concurrent decode slots (the KV budget may cap it lower)
+    /// desired concurrent decode slots (with the contiguous layout the
+    /// KV budget may cap it lower; paged slots are bounded only by this)
     pub max_batch: usize,
     /// KV memory budget in bytes shared by all live slots
     pub kv_budget_bytes: usize,
+    /// paged KV (default): the budget buys a shared block pool and
+    /// admission reserves blocks per request instead of full-context rows
+    pub kv_paged: bool,
+    /// token positions per KV block (paged only)
+    pub kv_block_size: usize,
 }
 
 impl Default for SchedOptions {
     fn default() -> SchedOptions {
-        SchedOptions { max_batch: 8, kv_budget_bytes: 1 << 30 }
+        SchedOptions {
+            max_batch: 8,
+            kv_budget_bytes: 1 << 30,
+            kv_paged: true,
+            kv_block_size: 16,
+        }
     }
 }
 
@@ -63,6 +86,8 @@ impl SchedOptions {
         SchedOptions {
             max_batch: cfg.max_batch,
             kv_budget_bytes: cfg.kv_budget_mb << 20,
+            kv_paged: cfg.kv_paged,
+            kv_block_size: cfg.kv_block_size,
         }
     }
 }
@@ -91,6 +116,10 @@ struct Active {
     /// step number this request was admitted in — a just-prefilled
     /// request must not also take a decode step in the same iteration
     admitted_step: u64,
+    /// KV blocks promised to this request (paged only, 0 contiguous):
+    /// enough for prompt + max_new, so its decode can never run the pool
+    /// dry mid-flight. Returned to the unpromised pool on release.
+    reserved_blocks: usize,
     ttft_secs: Option<f64>,
     last_token_at: Instant,
 }
@@ -109,6 +138,9 @@ pub struct StepReport {
     pub queue_depth: usize,
     /// busy slots / total slots during this step's compute
     pub occupancy: f64,
+    /// 1 if this step stopped admitting because the KV block pool could
+    /// not cover the next candidate (paged backpressure), else 0
+    pub admission_denied: usize,
 }
 
 /// The request-level serving loop over one engine and one shared cache.
@@ -123,6 +155,14 @@ pub struct Scheduler<'a> {
     sink: Option<Box<dyn TokenSink + 'a>>,
     decode_stats: DecodeStats,
     stats: SchedStats,
+    /// paged layout: token positions per block (None when contiguous)
+    block_size: Option<usize>,
+    /// paged layout: pool size in blocks
+    pool_blocks: usize,
+    /// paged layout: Σ reserved_blocks over live rows — what admission
+    /// checks candidates against (`pool_blocks - reserved_blocks` is the
+    /// unpromised pool, regardless of how much is physically allocated)
+    reserved_blocks: usize,
 }
 
 fn secs(from: Instant, to: Instant) -> f64 {
@@ -130,24 +170,57 @@ fn secs(from: Instant, to: Instant) -> f64 {
 }
 
 impl<'a> Scheduler<'a> {
-    /// Build a scheduler whose slot count is `max_batch` capped by how
-    /// many full-context KV rows fit in the memory budget — the same
-    /// `adaptive_capped` arithmetic the one-shot native backend uses, so
-    /// the two modes serve under the same KV ceiling.
+    /// Build a scheduler. With the paged layout (the default) the KV
+    /// budget buys a shared block pool and all `max_batch` slots exist —
+    /// concurrency is bounded by tokens actually cached, not by
+    /// full-context rows. With the contiguous layout the slot count is
+    /// `max_batch` capped by how many full-context KV rows fit in the
+    /// memory budget — the same `adaptive_capped` arithmetic the one-shot
+    /// native backend uses, so the two modes serve under the same KV
+    /// ceiling.
     pub fn new(engine: &'a Engine, opts: &SchedOptions) -> Result<Scheduler<'a>> {
         if opts.max_batch == 0 {
             bail!("scheduler needs at least one decode slot");
         }
-        let budget_rows = opts.kv_budget_bytes / engine.cache_row_bytes().max(1);
-        let n_slots = BucketPolicy::adaptive_capped(budget_rows)
-            .pick(opts.max_batch)
-            .expect("max_batch > 0 always picks");
-        let cache = engine.new_cache(n_slots);
-        log::info!(
-            "scheduler: {n_slots} decode slots ({} requested, {budget_rows} fit the {} MiB KV budget)",
-            opts.max_batch,
-            opts.kv_budget_bytes >> 20
-        );
+        let (cache, n_slots, block_size, pool_blocks) = if opts.kv_paged {
+            if opts.kv_block_size == 0 {
+                bail!("paged scheduler needs kv_block_size of at least 1 token");
+            }
+            let block_bytes = engine.kv_block_bytes(opts.kv_block_size).max(1);
+            let n_slots = opts.max_batch;
+            // the budget buys the pool, capped at what n_slots rows can
+            // ever address (slots × full-context blocks) — blocks beyond
+            // that are unreachable by construction, and allocating them
+            // would zero out the whole budget (1 GiB by default) for
+            // nothing
+            let reachable = n_slots * engine.config().seq_len.div_ceil(opts.kv_block_size);
+            let pool = (opts.kv_budget_bytes / block_bytes).min(reachable).max(1);
+            let cache = engine.new_cache_paged(
+                n_slots,
+                engine.config().seq_len,
+                opts.kv_block_size,
+                pool,
+            )?;
+            log::info!(
+                "scheduler: {n_slots} paged decode slots over {pool} blocks × {} tokens \
+                 ({} MiB KV budget)",
+                opts.kv_block_size,
+                opts.kv_budget_bytes >> 20
+            );
+            (cache, n_slots, Some(opts.kv_block_size), pool)
+        } else {
+            let budget_rows = opts.kv_budget_bytes / engine.cache_row_bytes().max(1);
+            let n_slots = BucketPolicy::adaptive_capped(budget_rows)
+                .pick(opts.max_batch)
+                .expect("max_batch > 0 always picks");
+            let cache = engine.new_cache(n_slots);
+            log::info!(
+                "scheduler: {n_slots} decode slots ({} requested, {budget_rows} fit the {} MiB KV budget)",
+                opts.max_batch,
+                opts.kv_budget_bytes >> 20
+            );
+            (cache, n_slots, None, 0)
+        };
         Ok(Scheduler {
             engine,
             cache,
@@ -159,6 +232,9 @@ impl<'a> Scheduler<'a> {
             sink: None,
             decode_stats: DecodeStats::default(),
             stats: SchedStats::default(),
+            block_size,
+            pool_blocks,
+            reserved_blocks: 0,
         })
     }
 
@@ -168,9 +244,20 @@ impl<'a> Scheduler<'a> {
         self
     }
 
-    /// Concurrent decode slots this scheduler runs (KV-budget capped).
+    /// Concurrent decode slots this scheduler runs (KV-budget capped in
+    /// the contiguous layout; `max_batch` in the paged one).
     pub fn n_slots(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Whether this scheduler serves over a paged KV cache.
+    pub fn kv_paged(&self) -> bool {
+        self.block_size.is_some()
+    }
+
+    /// `(free, total)` KV block pool state (None when contiguous).
+    pub fn block_pool(&self) -> Option<(usize, usize)> {
+        self.cache.free_blocks().map(|free| (free, self.pool_blocks))
     }
 
     /// Requests waiting for a slot.
@@ -211,11 +298,26 @@ impl<'a> Scheduler<'a> {
 
     /// Submit a prompt for up to `max_new` generated tokens; returns the
     /// request id. Framing errors (prompt + generation over the context)
-    /// surface here, before the request ever queues. A zero-token request
-    /// completes immediately without consuming any forward — the same
-    /// contract as the one-shot decode.
+    /// surface here, before the request ever queues — as does a paged
+    /// request whose horizon exceeds the whole block pool, which no
+    /// amount of waiting could ever admit. A zero-token request completes
+    /// immediately without consuming any forward — the same contract as
+    /// the one-shot decode.
     pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
         let (frame, _cursor) = decode::frame_prompt(self.engine.config(), prompt, max_new)?;
+        // zero-token requests complete below without ever touching the
+        // cache, so only real generations are held to the pool bound
+        if let (Some(bs), true) = (self.block_size, max_new > 0) {
+            let need = (frame.len() + max_new).div_ceil(bs);
+            if need > self.pool_blocks {
+                bail!(
+                    "request needs {need} KV blocks (prompt {} + {max_new} tokens) but the \
+                     pool holds {} — raise the KV budget or lower kv_block_size",
+                    frame.len(),
+                    self.pool_blocks
+                );
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         if max_new == 0 {
@@ -261,6 +363,7 @@ impl<'a> Scheduler<'a> {
                 let mut a = self.slots[si].take().expect("checked is_some");
                 a.reason = Some(FinishReason::Cancelled);
                 self.cache.reset_row(si);
+                self.reserved_blocks -= a.reserved_blocks;
                 let resp = Self::respond(a, Instant::now());
                 self.emit_finish(resp);
                 return true;
@@ -280,17 +383,57 @@ impl<'a> Scheduler<'a> {
 
         // 1. admission: FIFO into free slots. Slots freed by last step's
         // finishes (or a cancel since) are handed out here, mid-batch.
+        // Paged admission additionally requires the block pool to cover
+        // the candidate net of what's promised to in-flight rows. The
+        // standing reservation is the candidate's decode horizon in
+        // blocks; the admission check also covers the wave's transient —
+        // a padded batch prefill briefly writes every admitted row out to
+        // the longest frame before `truncate_row` hands the pad-tail
+        // blocks back, so each wave member transiently needs
+        // max(pad, horizon). Denial stops the scan (FIFO — no skip-ahead)
+        // and the candidate just waits; nothing in flight is ever
+        // evicted.
         let mut admitted_rows: Vec<usize> = Vec::new();
-        for (si, slot) in self.slots.iter_mut().enumerate() {
-            if slot.is_some() {
-                continue;
-            }
-            let Some(q) = self.queue.pop_front() else { break };
+        // (frame len, horizon blocks) of requests admitted this wave
+        let mut wave: Vec<(usize, usize)> = Vec::new();
+        let free_slots: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(si, _)| si)
+            .collect();
+        for si in free_slots {
+            let Some(front) = self.queue.front() else { break };
+            let reserve = if let Some(bs) = self.block_size {
+                let (q_len, q_max_new) = (front.frame.len(), front.max_new);
+                let q_horizon = (q_len + q_max_new).div_ceil(bs);
+                // padded prefill length if this candidate joins the wave
+                let t0 = wave.iter().map(|&(len, _)| len).max().unwrap_or(0).max(q_len);
+                let pad = t0.div_ceil(bs);
+                // total demand: every wave member (candidate included)
+                // transiently needs max(pad, its horizon); live rows keep
+                // their standing reservations
+                let wave_need: usize =
+                    wave.iter().map(|&(_, h)| h.max(pad)).sum::<usize>() + q_horizon.max(pad);
+                let standing: usize = wave.iter().map(|&(_, h)| h).sum();
+                if self.reserved_blocks - standing + wave_need > self.pool_blocks {
+                    self.stats.admission_denied += 1;
+                    report.admission_denied = 1;
+                    break;
+                }
+                wave.push((q_len, q_horizon));
+                q_horizon
+            } else {
+                0
+            };
+            let q = self.queue.pop_front().expect("front() checked");
             let now = Instant::now();
             self.stats.queue_wait_ms.record(1e3 * secs(q.arrival, now));
+            self.reserved_blocks += reserve;
             report.admitted.push(q.id);
             admitted_rows.push(si);
-            *slot = Some(Active {
+            self.slots[si] = Some(Active {
                 id: q.id,
                 cursor: q.frame.len() - 1,
                 frame: q.frame,
@@ -301,6 +444,7 @@ impl<'a> Scheduler<'a> {
                 arrival: q.arrival,
                 admitted_at: now,
                 admitted_step: self.step_no,
+                reserved_blocks: reserve,
                 ttft_secs: None,
                 last_token_at: now,
             });
@@ -308,6 +452,7 @@ impl<'a> Scheduler<'a> {
         let busy = self.active_count();
         self.stats.steps += 1;
         self.stats.queue_depth.record(self.queue.len() as f64);
+        self.stats.peak_active = self.stats.peak_active.max(busy);
         report.queue_depth = self.queue.len();
         report.occupancy = busy as f64 / self.slots.len() as f64;
         self.stats.batch_occupancy.record(report.occupancy);
@@ -355,8 +500,9 @@ impl<'a> Scheduler<'a> {
             }
         }
 
-        // 4. release finished slots — their cache rows are reclaimed
-        // right now, so the next step's admission can reuse them
+        // 4. release finished slots — their cache rows (and, paged, their
+        // blocks and reservations) are reclaimed right now, so the next
+        // step's admission can reuse them
         let mut released: Vec<Active> = Vec::new();
         for (si, slot) in self.slots.iter_mut().enumerate() {
             let done = slot.as_ref().is_some_and(|a| {
@@ -369,9 +515,15 @@ impl<'a> Scheduler<'a> {
         }
         let now = Instant::now();
         for a in released {
+            self.reserved_blocks -= a.reserved_blocks;
             let resp = Self::respond(a, now);
             report.finished.push(resp.id);
             self.emit_finish(resp);
+        }
+        // paged pool pressure after this step's releases — what the
+        // benches chart against the admission-denied counter
+        if let Some((free, total)) = self.block_pool() {
+            self.stats.block_util.record((total - free) as f64 / total.max(1) as f64);
         }
         Ok(report)
     }
@@ -480,25 +632,130 @@ mod tests {
     }
 
     fn opts(max_batch: usize) -> SchedOptions {
-        SchedOptions { max_batch, kv_budget_bytes: 1 << 30 }
+        // generous budget, paged by default — the lifecycle tests below
+        // run on the default layout
+        SchedOptions { max_batch, ..SchedOptions::default() }
+    }
+
+    fn contiguous(max_batch: usize, kv_budget_bytes: usize) -> SchedOptions {
+        SchedOptions { max_batch, kv_budget_bytes, kv_paged: false, kv_block_size: 16 }
     }
 
     #[test]
     fn slot_count_respects_kv_budget() {
+        // the contiguous reference layout: the budget caps the slot pool
+        // at full-context rows
         let engine = tiny_engine(1);
         let row = engine.cache_row_bytes();
         // budget for exactly 3 full-context rows
-        let three_rows = SchedOptions { max_batch: 8, kv_budget_bytes: 3 * row };
-        let s = Scheduler::new(&engine, &three_rows).unwrap();
+        let s = Scheduler::new(&engine, &contiguous(8, 3 * row)).unwrap();
         assert_eq!(s.n_slots(), 3);
+        assert!(!s.kv_paged());
+        assert_eq!(s.block_pool(), None);
         // a generous budget leaves max_batch in charge
-        let s = Scheduler::new(&engine, &opts(8)).unwrap();
+        let s = Scheduler::new(&engine, &contiguous(8, 1 << 30)).unwrap();
         assert_eq!(s.n_slots(), 8);
         // a starved budget still yields one slot (degraded, not dead)
-        let starved = SchedOptions { max_batch: 8, kv_budget_bytes: 0 };
-        let s = Scheduler::new(&engine, &starved).unwrap();
+        let s = Scheduler::new(&engine, &contiguous(8, 0)).unwrap();
         assert_eq!(s.n_slots(), 1);
         assert!(Scheduler::new(&engine, &opts(0)).is_err());
+    }
+
+    #[test]
+    fn paged_pool_sizing_and_slot_count() {
+        let engine = tiny_engine(1);
+        let block = engine.kv_block_bytes(16);
+        // the same budget that caps contiguous at 3 rows buys a paged
+        // pool of 3 × (seq_len / block_size) blocks — and all max_batch
+        // slots exist, because blocks, not rows, are the resource
+        let budget = 3 * engine.cache_row_bytes();
+        let s = Scheduler::new(
+            &engine,
+            &SchedOptions {
+                max_batch: 8,
+                kv_budget_bytes: budget,
+                kv_paged: true,
+                kv_block_size: 16,
+            },
+        )
+        .unwrap();
+        assert!(s.kv_paged());
+        assert_eq!(s.n_slots(), 8);
+        assert_eq!(s.block_pool(), Some((budget / block, budget / block)));
+        // a huge budget is capped at what the slots can ever address —
+        // 8 slots × (seq_len / block_size) blocks — instead of eagerly
+        // zero-allocating the whole budget
+        let generous = Scheduler::new(&engine, &SchedOptions::default()).unwrap();
+        let reachable = 8 * engine.config().seq_len.div_ceil(16);
+        assert_eq!(generous.block_pool(), Some((reachable, reachable)));
+        // degenerate knobs fail loud or degrade to one block
+        assert!(Scheduler::new(
+            &engine,
+            &SchedOptions { kv_block_size: 0, ..SchedOptions::default() }
+        )
+        .is_err());
+        let starved = Scheduler::new(
+            &engine,
+            &SchedOptions { kv_budget_bytes: 0, ..SchedOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(starved.n_slots(), 8, "paged slots are not budget-capped");
+        assert_eq!(starved.block_pool(), Some((1, 1)));
+    }
+
+    #[test]
+    fn paged_admission_denies_and_recovers_without_eviction() {
+        let engine = tiny_engine(8);
+        // a pool of 2 blocks × 16 tokens: short requests need 1 block
+        // each (frame + max_new ≤ 16), so at most 2 can be in flight even
+        // though 4 slots exist
+        let tight = SchedOptions {
+            max_batch: 4,
+            kv_budget_bytes: 2 * engine.kv_block_bytes(16),
+            kv_paged: true,
+            kv_block_size: 16,
+        };
+        let mut s = Scheduler::new(&engine, &tight).unwrap();
+        assert_eq!(s.block_pool(), Some((2, 2)));
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+        }
+        let report = s.step().unwrap();
+        assert_eq!(report.admitted.len(), 2, "pool of 2 blocks admitted {report:?}");
+        assert_eq!(report.admission_denied, 1);
+        s.run_until_idle().unwrap();
+        let done = s.take_finished();
+        assert_eq!(done.len(), 4, "denied requests were lost, not delayed");
+        for r in &done {
+            assert_ne!(r.reason, FinishReason::Cancelled);
+        }
+        let stats = s.sched_stats();
+        assert!(stats.admission_denied >= 1);
+        assert!(stats.peak_active <= 2, "pool bound was violated: {}", stats.peak_active);
+        assert!(!stats.block_util.is_empty());
+        // all blocks returned once idle
+        assert_eq!(s.block_pool(), Some((2, 2)));
+    }
+
+    #[test]
+    fn paged_submit_rejects_requests_larger_than_the_pool() {
+        let engine = tiny_engine(9);
+        let tight = SchedOptions {
+            max_batch: 2,
+            kv_budget_bytes: 3 * engine.kv_block_bytes(16),
+            kv_paged: true,
+            kv_block_size: 16,
+        };
+        let mut s = Scheduler::new(&engine, &tight).unwrap();
+        // ~9 frame tokens + 100 generated needs 7 blocks > pool of 3: no
+        // amount of waiting could admit this — refuse at submit
+        assert!(s.submit("1 + 1 =", 100).is_err());
+        assert!(s.is_idle());
+        // a fitting request on the same scheduler still serves
+        let id = s.submit("1 + 1 =", 4).unwrap();
+        s.run_until_idle().unwrap();
+        assert_eq!(s.take_finished()[0].id, id);
     }
 
     #[test]

@@ -265,11 +265,16 @@ impl ScheduledBackend {
         let engine = build_engine(cfg, store, path, n_bits)?;
         let opts = SchedOptions::from_config(sched);
         log::info!(
-            "scheduled backend[{}] {}-bit, max_batch {}, {} MiB KV budget",
+            "scheduled backend[{}] {}-bit, max_batch {}, {} MiB KV budget, {} cache",
             cfg.name,
             n_bits,
             opts.max_batch,
-            sched.kv_budget_mb
+            sched.kv_budget_mb,
+            if opts.kv_paged {
+                format!("paged ({}-token blocks)", opts.kv_block_size)
+            } else {
+                "contiguous".to_string()
+            }
         );
         Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None) })
     }

@@ -93,6 +93,16 @@ pub struct SchedStats {
     pub queue_depth: Histogram,
     /// fraction of decode slots busy at each step, in [0, 1]
     pub batch_occupancy: Histogram,
+    /// fraction of the KV block pool in use at each step, in [0, 1]
+    /// (paged caches only — contiguous runs leave it empty)
+    pub block_util: Histogram,
+    /// admissions denied because the block pool couldn't cover the
+    /// candidate's prompt + decode horizon (the paged backpressure path:
+    /// the request stays queued, nothing in flight is ever evicted)
+    pub admission_denied: usize,
+    /// most requests simultaneously holding decode slots in any step —
+    /// the concurrency headline the paged layout moves at a fixed budget
+    pub peak_active: usize,
     /// scheduler iterations run
     pub steps: usize,
 }
@@ -106,6 +116,9 @@ impl SchedStats {
         self.queue_wait_ms.merge(&other.queue_wait_ms);
         self.queue_depth.merge(&other.queue_depth);
         self.batch_occupancy.merge(&other.batch_occupancy);
+        self.block_util.merge(&other.block_util);
+        self.admission_denied += other.admission_denied;
+        self.peak_active = self.peak_active.max(other.peak_active);
         self.steps += other.steps;
     }
 }
@@ -262,6 +275,62 @@ mod tests {
         assert!((s.mean - 2.0).abs() < 1e-9);
         // empty histogram summarizes to zeros, not NaN
         assert_eq!(Histogram::default().stats().p95, 0.0);
+    }
+
+    #[test]
+    fn histogram_empty_single_and_all_equal() {
+        // empty: summaries are zeros across the board, not NaN
+        let empty = Histogram::default();
+        assert!(empty.is_empty());
+        assert_eq!(empty.len(), 0);
+        let s = empty.stats();
+        assert_eq!((s.mean, s.p50, s.p95, s.max), (0.0, 0.0, 0.0, 0.0));
+        // single sample: every summary collapses to that sample
+        let mut one = Histogram::default();
+        one.record(7.5);
+        assert_eq!(one.len(), 1);
+        let s = one.stats();
+        assert_eq!((s.mean, s.p50, s.p95, s.max), (7.5, 7.5, 7.5, 7.5));
+        // all-equal samples: percentiles are exact, mean has no rounding
+        let mut eq = Histogram::default();
+        for _ in 0..17 {
+            eq.record(3.0);
+        }
+        let s = eq.stats();
+        assert_eq!((s.mean, s.p50, s.p95, s.max), (3.0, 3.0, 3.0, 3.0));
+        // merging an empty histogram changes nothing; merging into an
+        // empty one copies the samples
+        let before = eq.stats();
+        eq.merge(&Histogram::default());
+        assert_eq!(eq.len(), 17);
+        assert_eq!(eq.stats().p95, before.p95);
+        let mut fresh = Histogram::default();
+        fresh.merge(&one);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh.stats().max, 7.5);
+    }
+
+    #[test]
+    fn sched_stats_absorb_folds_paging_counters() {
+        let mut a = SchedStats::default();
+        a.block_util.record(0.5);
+        a.admission_denied = 2;
+        a.peak_active = 3;
+        a.steps = 10;
+        let mut b = SchedStats::default();
+        b.block_util.record(0.75);
+        b.admission_denied = 1;
+        b.peak_active = 7;
+        b.steps = 4;
+        a.absorb(&b);
+        assert_eq!(a.block_util.len(), 2);
+        assert_eq!(a.admission_denied, 3);
+        assert_eq!(a.peak_active, 7, "peak concurrency folds by max, not sum");
+        assert_eq!(a.steps, 14);
+        // absorbing a lower peak does not shrink the fold
+        let quiet = SchedStats { peak_active: 1, ..SchedStats::default() };
+        a.absorb(&quiet);
+        assert_eq!(a.peak_active, 7);
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!   thin wrapper over the continuous-batching `crate::sched` scheduler,
 //!   selected by `ServeOptions::sched` / the `[sched]` TOML table /
 //!   `lota serve --sched true`) and [`serve_open_loop`] (timed arrivals
-//!   admitted mid-batch — the request-level serving shape);
+//!   admitted mid-batch — the request-level serving shape). Scheduled
+//!   serving runs over a **paged** KV cache by default
+//!   (`sched.kv_paged`): the KV budget buys a shared block pool and
+//!   admission reserves each request's actual horizon, so mixed-length
+//!   workloads sustain more concurrency at the same budget than the
+//!   contiguous full-context-row reference (kept behind the flag,
+//!   bit-identical tokens either way);
 //! * [`ThroughputReport`] aggregation used by `examples/serve_merged.rs`
 //!   and the Fig. 4 efficiency bench. Token throughput counts **generated
 //!   tokens**, not decoded characters; scheduled runs additionally carry
@@ -493,7 +499,7 @@ mod tests {
         let load = crate::sched::generate_load(&spec).unwrap();
         let opts = ServeOptions::new(ServePath::Merged, 4)
             .backend(Backend::Native)
-            .scheduled(SchedConfig { max_batch: 3, kv_budget_mb: 1024 });
+            .scheduled(SchedConfig { max_batch: 3, ..SchedConfig::default() });
         let (responses, report) = serve_open_loop(&cfg, &store, &opts, &load).unwrap();
         assert_eq!(responses.len(), 8);
         assert_eq!(report.requests, 8);

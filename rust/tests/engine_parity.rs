@@ -11,7 +11,7 @@
 //! suite on every PR as the native-serving smoke gate.
 
 use lota_qaf::config::{preset, Backend, DecodeMode, ModelConfig, SchedConfig};
-use lota_qaf::engine::{greedy_decode, greedy_decode_with, Engine};
+use lota_qaf::engine::{greedy_decode, greedy_decode_paged, greedy_decode_with, Engine};
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
 use lota_qaf::sched::{SchedOptions, Scheduler};
@@ -192,9 +192,9 @@ fn finished_rows_leave_the_step_batch() {
 /// cached decode (PR 2's `greedy_decode`) on the same prompts — for a
 /// batch that fits in one admission wave, for waves forced by a small
 /// slot pool, and for serial slot reuse (one slot, every request recycles
-/// the same cache row). The scheduler drives the same prefill/step
-/// kernels and cache rows never interact, so text *and* token counts
-/// must match exactly.
+/// the same cache row) — under **both** KV layouts, paged and contiguous.
+/// The scheduler drives the same prefill/step kernels and cache rows
+/// never interact, so text *and* token counts must match exactly.
 #[test]
 fn scheduled_decode_is_bit_identical_to_one_shot() {
     let (cfg, engine) = merged_engine(401);
@@ -204,20 +204,101 @@ fn scheduled_decode_is_bit_identical_to_one_shot() {
     let want = greedy_decode(&engine, &prompts, max_new).unwrap();
     // slot pools: everyone at once / three admission waves / serial reuse
     for max_batch in [9usize, 3, 1] {
-        let sched_opts = SchedOptions { max_batch, kv_budget_bytes: 1 << 30 };
-        let mut sched = Scheduler::new(&engine, &sched_opts).unwrap();
-        let ids: Vec<u64> =
-            prompts.iter().map(|p| sched.submit(p, max_new).unwrap()).collect();
-        sched.run_until_idle().unwrap();
-        let responses = sched.take_finished();
-        assert_eq!(responses.len(), prompts.len());
-        for (i, id) in ids.iter().enumerate() {
-            let got = responses.iter().find(|r| r.id == *id).unwrap();
-            assert_eq!(
-                got.text, want[i].text,
-                "max_batch {max_batch}: prompt {i} diverged from one-shot decode"
-            );
-            assert_eq!(got.tokens, want[i].tokens, "max_batch {max_batch}: prompt {i}");
+        for kv_paged in [true, false] {
+            let sched_opts = SchedOptions { max_batch, kv_paged, ..SchedOptions::default() };
+            let mut sched = Scheduler::new(&engine, &sched_opts).unwrap();
+            let ids: Vec<u64> =
+                prompts.iter().map(|p| sched.submit(p, max_new).unwrap()).collect();
+            sched.run_until_idle().unwrap();
+            let responses = sched.take_finished();
+            assert_eq!(responses.len(), prompts.len());
+            for (i, id) in ids.iter().enumerate() {
+                let got = responses.iter().find(|r| r.id == *id).unwrap();
+                assert_eq!(
+                    got.text, want[i].text,
+                    "max_batch {max_batch} paged {kv_paged}: prompt {i} diverged from one-shot"
+                );
+                assert_eq!(
+                    got.tokens, want[i].tokens,
+                    "max_batch {max_batch} paged {kv_paged}: prompt {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: a paged cache reproduces the full forward's logits
+/// bit-for-bit through random prefill chunkings — the paged counterpart
+/// of `incremental_chunking_matches_full_forward_bitwise`, with block
+/// sizes that divide the positions evenly and ones that never do.
+#[test]
+fn paged_chunking_matches_full_forward_bitwise() {
+    let (cfg, engine) = merged_engine(101);
+    let v = cfg.vocab;
+    let mut rng = Rng::new(505);
+    for (case, &bs) in [1usize, 3, 16].iter().enumerate() {
+        let b = 1 + rng.below(3); // 1..=3 rows
+        let t = 6 + rng.below(30); // 6..=35 positions
+        let tokens = Tensor::new(
+            &[b, t],
+            (0..b * t).map(|_| rng.below(cfg.vocab) as f32).collect(),
+        );
+        let full = engine.forward(&tokens).unwrap();
+        let pool = b * cfg.seq_len.div_ceil(bs);
+        let mut cache = engine.new_cache_paged(b, cfg.seq_len, bs, pool).unwrap();
+        let rows: Vec<usize> = (0..b).collect();
+        let mut t0 = 0usize;
+        while t0 < t {
+            let chunk = match rng.below(3) {
+                0 => 1,
+                1 => 2 + rng.below(5),
+                _ => t - t0,
+            }
+            .min(t - t0);
+            let mut step = vec![0.0f32; b * chunk];
+            for bi in 0..b {
+                step[bi * chunk..(bi + 1) * chunk]
+                    .copy_from_slice(&tokens.data()[bi * t + t0..bi * t + t0 + chunk]);
+            }
+            let got = engine
+                .forward_incremental(&Tensor::new(&[b, chunk], step), &mut cache, &rows)
+                .unwrap();
+            for bi in 0..b {
+                for ti in 0..chunk {
+                    assert_eq!(
+                        &got.data()[(bi * chunk + ti) * v..(bi * chunk + ti + 1) * v],
+                        &full.data()[(bi * t + t0 + ti) * v..(bi * t + t0 + ti + 1) * v],
+                        "case {case} bs {bs}: paged logits diverge at row {bi} position {}",
+                        t0 + ti
+                    );
+                }
+            }
+            t0 += chunk;
+        }
+        for bi in 0..b {
+            assert_eq!(cache.pos_len(bi), t);
+            assert_eq!(cache.row_block_ids(bi).len(), t.div_ceil(bs));
+        }
+    }
+}
+
+/// One-shot paged greedy decoding matches the contiguous default exactly
+/// — generations *and* decode-work accounting — on a non-trivially merged
+/// checkpoint.
+#[test]
+fn paged_one_shot_decode_is_bit_identical() {
+    let (_cfg, engine) = merged_engine(407);
+    for b in [1usize, 4, 9] {
+        let prompts: Vec<String> =
+            (0..b).map(|i| format!("{i} - {} =", (i * 5) % 10)).collect();
+        let (want, ws) = greedy_decode_with(&engine, &prompts, 8, DecodeMode::Cached).unwrap();
+        for bs in [1usize, 7, 16] {
+            let (got, gs) = greedy_decode_paged(&engine, &prompts, 8, bs).unwrap();
+            for i in 0..b {
+                assert_eq!(got[i].text, want[i].text, "b={b} bs={bs} prompt {i}");
+                assert_eq!(got[i].tokens, want[i].tokens, "b={b} bs={bs} prompt {i}");
+            }
+            assert_eq!(gs, ws, "b={b} bs={bs}: work accounting diverged");
         }
     }
 }

@@ -1,0 +1,335 @@
+//! Paged-KV suite — artifact-free, in the CI `build` job (debug *and*
+//! release) alongside `engine_parity` and `sched`.
+//!
+//! Two halves:
+//!
+//! 1. **Allocator properties** — a deterministic hand-rolled-PRNG harness
+//!    (`tensor::Rng`, the repo's xorshift; there is no rand dep) drives
+//!    thousands of random alloc/extend/truncate/reset sequences against
+//!    [`BlockAllocator`] and the paged [`KvCache`], asserting the pool
+//!    invariants after every single operation: no block owned by two
+//!    rows, free + live == pool size, `reset_row` returns exactly the
+//!    row's blocks, page tables never alias.
+//! 2. **Differential fuzz** — random staggered-arrival workloads (from
+//!    `sched::generate_load`, the same generator the serving bench uses)
+//!    run through the scheduler with paged vs contiguous caches, every
+//!    generated token stream held together with `assert_eq!` — the PR 3
+//!    bit-identity discipline extended to the memory layout. Backpressure
+//!    (a pool too small for the offered load) must delay requests, never
+//!    change their tokens.
+
+use std::collections::HashSet;
+
+use lota_qaf::engine::{greedy_decode, greedy_decode_paged, BlockAllocator, Engine, KvCache};
+use lota_qaf::model;
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::sched::{generate_load, LoadSpec, SchedOptions, Scheduler};
+use lota_qaf::tensor::Rng;
+
+fn plain_engine(seed: u64) -> Engine {
+    let cfg = lota_qaf::config::preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+        Ok(rtn_quantize(w, cfg.group_size, 4))
+    })
+    .unwrap();
+    Engine::from_store(&cfg, &store, 4).unwrap()
+}
+
+/// Model-checked allocator fuzz: mirror every alloc/release in a plain
+/// ownership table and assert the allocator never double-grants, never
+/// loses a block, and always accounts free + live == total.
+#[test]
+fn block_allocator_never_double_grants_or_leaks() {
+    let mut rng = Rng::new(0xb10c);
+    for total in [1usize, 2, 7, 32] {
+        let mut a = BlockAllocator::new(total);
+        // ownership model as a plain Vec so the replay is fully
+        // deterministic (no hash-order dependence)
+        let mut owned: Vec<usize> = Vec::new();
+        for op in 0..2_000usize {
+            if rng.below(2) == 0 {
+                match a.alloc() {
+                    Some(id) => {
+                        assert!(id < total, "op {op}: granted id {id} outside pool {total}");
+                        assert!(
+                            !owned.contains(&id),
+                            "op {op}: block {id} granted while already owned"
+                        );
+                        owned.push(id);
+                    }
+                    None => {
+                        assert_eq!(
+                            owned.len(),
+                            total,
+                            "op {op}: pool claims dry with {} of {total} owned",
+                            owned.len()
+                        );
+                    }
+                }
+            } else if !owned.is_empty() {
+                // release a pseudo-random owned block
+                let pick = rng.below(owned.len());
+                let id = owned.swap_remove(pick);
+                a.release(id);
+            }
+            assert_eq!(a.in_use(), owned.len(), "op {op}: in_use drifted from the model");
+            assert_eq!(
+                a.free_blocks() + owned.len(),
+                total,
+                "op {op}: free + live != pool size"
+            );
+        }
+    }
+}
+
+/// The paged-cache invariants, checked after every operation of a long
+/// random alloc(grow)/truncate/reset sequence over many rows.
+fn assert_cache_invariants(c: &KvCache, op: usize) {
+    let bs = c.block_size().expect("paged cache");
+    let total = c.total_blocks().unwrap();
+    let mut live = 0usize;
+    let mut seen: HashSet<usize> = HashSet::new();
+    for row in 0..c.batch() {
+        let table = c.row_block_ids(row);
+        // a page table holds exactly the blocks its length needs
+        assert_eq!(
+            table.len(),
+            c.pos_len(row).div_ceil(bs),
+            "op {op}: row {row} holds {} blocks for {} positions (bs {bs})",
+            table.len(),
+            c.pos_len(row)
+        );
+        for &id in table {
+            assert!(id < total, "op {op}: row {row} maps block {id} outside pool {total}");
+            assert!(seen.insert(id), "op {op}: block {id} owned by two rows");
+        }
+        live += table.len();
+    }
+    assert_eq!(
+        c.free_blocks().unwrap() + live,
+        total,
+        "op {op}: free + live != pool size"
+    );
+}
+
+#[test]
+fn paged_cache_invariants_hold_under_random_ops() {
+    let mut rng = Rng::new(0x9a9e);
+    // (rows, capacity, block_size, pool) shapes incl. a pool too small to
+    // hold every row at capacity — exhaustion is part of the domain
+    for (batch, cap, bs, pool) in
+        [(4usize, 32usize, 4usize, 16usize), (3, 48, 7, 9), (8, 16, 1, 40), (2, 64, 16, 4)]
+    {
+        let mut c = KvCache::new_paged(1, batch, cap, 8, bs, pool).unwrap();
+        for op in 0..3_000usize {
+            let row = rng.below(batch);
+            match rng.below(4) {
+                // extend by 1..=9 positions — may legitimately fail on
+                // capacity or a dry pool; the cache must stay consistent
+                // either way (failed grows roll back completely)
+                0 | 1 => {
+                    let n = 1 + rng.below(9);
+                    let before = (c.pos_len(row), c.row_block_ids(row).len());
+                    if c.grow_row(row, n).is_err() {
+                        assert_eq!(
+                            (c.pos_len(row), c.row_block_ids(row).len()),
+                            before,
+                            "op {op}: failed grow mutated row {row}"
+                        );
+                    }
+                }
+                // truncate to a random fraction of the live length
+                2 => {
+                    let new_len = if c.pos_len(row) == 0 {
+                        0
+                    } else {
+                        rng.below(c.pos_len(row) + 1)
+                    };
+                    c.truncate_row(row, new_len);
+                    assert_eq!(c.pos_len(row), new_len);
+                }
+                // reset: the row's blocks — exactly them — come back
+                _ => {
+                    let held = c.row_block_ids(row).len();
+                    let free_before = c.free_blocks().unwrap();
+                    c.reset_row(row);
+                    assert_eq!(
+                        c.free_blocks().unwrap(),
+                        free_before + held,
+                        "op {op}: reset_row returned a different count than row {row} held"
+                    );
+                    assert_eq!(c.pos_len(row), 0);
+                    assert!(c.row_block_ids(row).is_empty());
+                }
+            }
+            assert_cache_invariants(&c, op);
+        }
+    }
+}
+
+/// Run a workload through a scheduler, dripping submissions between steps
+/// on a deterministic schedule (`chunks[i]` arrivals before step i) so
+/// admission waves, slot reuse, and backpressure all get exercised
+/// without any wall-clock dependence. Returns (text, tokens) in
+/// submission order.
+fn run_staggered(
+    engine: &Engine,
+    load: &[lota_qaf::sched::LoadRequest],
+    opts: &SchedOptions,
+    chunks: &[usize],
+) -> Vec<(String, usize)> {
+    let mut s = Scheduler::new(engine, opts).unwrap();
+    let mut next = 0usize;
+    let mut ids = Vec::with_capacity(load.len());
+    let mut ci = 0usize;
+    loop {
+        let take = if ci < chunks.len() { chunks[ci] } else { 1 };
+        ci += 1;
+        for _ in 0..take {
+            if next < load.len() {
+                ids.push(s.submit(&load[next].prompt, load[next].max_new).unwrap());
+                next += 1;
+            }
+        }
+        if next >= load.len() && s.is_idle() {
+            break;
+        }
+        s.step().unwrap();
+    }
+    let responses = s.take_finished();
+    assert_eq!(responses.len(), load.len());
+    ids.iter()
+        .map(|id| {
+            let r = responses.iter().find(|r| r.id == *id).unwrap();
+            (r.text.clone(), r.tokens)
+        })
+        .collect()
+}
+
+/// Differential fuzz: the same staggered workload served paged vs
+/// contiguous emits identical token streams, request by request — and
+/// both match the one-shot single-prompt decode, so neither layout's
+/// batching leaks into anyone's tokens.
+#[test]
+fn paged_and_contiguous_schedulers_emit_identical_streams() {
+    let engine = plain_engine(640);
+    let mut rng = Rng::new(0xd1ff);
+    for seed in [11u64, 29, 47] {
+        let spec = LoadSpec {
+            n_requests: 14,
+            rate_per_sec: 50.0,
+            seed,
+            task: "arith".into(),
+            max_new_mix: vec![2, 5, 11],
+        };
+        let load = generate_load(&spec).unwrap();
+        // one deterministic drip schedule shared by both arms
+        let chunks: Vec<usize> = (0..load.len()).map(|_| rng.below(3)).collect();
+        let paged = run_staggered(
+            &engine,
+            &load,
+            &SchedOptions { max_batch: 3, ..SchedOptions::default() },
+            &chunks,
+        );
+        let contiguous = run_staggered(
+            &engine,
+            &load,
+            &SchedOptions { max_batch: 3, kv_paged: false, ..SchedOptions::default() },
+            &chunks,
+        );
+        for (i, (p, c)) in paged.iter().zip(&contiguous).enumerate() {
+            assert_eq!(p, c, "seed {seed}: request {i} diverged between layouts");
+        }
+        // and against ground truth: the one-shot decode of each prompt
+        for (i, req) in load.iter().enumerate() {
+            let want = greedy_decode(&engine, &[req.prompt.clone()], req.max_new).unwrap();
+            assert_eq!(
+                paged[i],
+                (want[0].text.clone(), want[0].tokens),
+                "seed {seed}: request {i} diverged from one-shot decode"
+            );
+        }
+    }
+}
+
+/// Backpressure fuzz: a pool far too small for the offered load forces
+/// admission denials on most steps — requests must come out delayed but
+/// token-identical to an unconstrained contiguous run, and the denial
+/// counter must actually fire.
+#[test]
+fn backpressure_delays_but_never_changes_tokens() {
+    let engine = plain_engine(641);
+    let spec = LoadSpec {
+        n_requests: 12,
+        rate_per_sec: 50.0,
+        seed: 83,
+        task: "arith".into(),
+        max_new_mix: vec![3, 8, 16],
+    };
+    let load = generate_load(&spec).unwrap();
+    let chunks: Vec<usize> = vec![4; load.len()]; // arrive much faster than service
+    // 3 blocks × 16 tokens: roughly one long or two short requests in
+    // flight at a time, against 6 nominal slots
+    let tight = SchedOptions {
+        max_batch: 6,
+        kv_budget_bytes: 3 * engine.kv_block_bytes(16),
+        kv_paged: true,
+        kv_block_size: 16,
+    };
+    let mut s = Scheduler::new(&engine, &tight).unwrap();
+    let mut next = 0usize;
+    let mut ids = Vec::new();
+    let mut ci = 0usize;
+    loop {
+        let take = if ci < chunks.len() { chunks[ci] } else { 0 };
+        ci += 1;
+        for _ in 0..take {
+            if next < load.len() {
+                ids.push(s.submit(&load[next].prompt, load[next].max_new).unwrap());
+                next += 1;
+            }
+        }
+        if next >= load.len() && s.is_idle() {
+            break;
+        }
+        s.step().unwrap();
+    }
+    let responses = s.take_finished();
+    assert_eq!(responses.len(), load.len(), "backpressure dropped requests");
+    let stats = s.sched_stats();
+    assert!(
+        stats.admission_denied > 0,
+        "a 3-block pool under a 12-request burst never denied admission"
+    );
+    assert!(stats.peak_active <= 3, "pool of 3 blocks held {} rows", stats.peak_active);
+    assert!(!stats.block_util.is_empty());
+    for (i, id) in ids.iter().enumerate() {
+        let got = responses.iter().find(|r| r.id == *id).unwrap();
+        let want = greedy_decode(&engine, &[load[i].prompt.clone()], load[i].max_new).unwrap();
+        assert_eq!(got.text, want[0].text, "request {i}: backpressure changed the tokens");
+        assert_eq!(got.tokens, want[0].tokens, "request {i}");
+    }
+    // nothing leaked once drained
+    let (free, total) = s.block_pool().unwrap();
+    assert_eq!(free, total);
+}
+
+/// One-shot sanity for the paged decode entry point on the plain engine
+/// (the merged-checkpoint version is pinned in `tests/engine_parity.rs`):
+/// identical generations and identical work accounting vs the contiguous
+/// default, across block sizes.
+#[test]
+fn one_shot_paged_decode_round_trip() {
+    let engine = plain_engine(642);
+    let prompts: Vec<String> = (0..6).map(|i| format!("{i} * 2 =")).collect();
+    let want = greedy_decode(&engine, &prompts, 7).unwrap();
+    for bs in [1usize, 4, 16, 128] {
+        let (got, _) = greedy_decode_paged(&engine, &prompts, 7, bs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.text, w.text, "bs={bs}");
+            assert_eq!(g.tokens, w.tokens, "bs={bs}");
+        }
+    }
+}

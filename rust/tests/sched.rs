@@ -35,7 +35,9 @@ fn plain_engine(seed: u64) -> Engine {
 }
 
 fn opts(max_batch: usize) -> SchedOptions {
-    SchedOptions { max_batch, kv_budget_bytes: 1 << 30 }
+    // generous budget, default (paged) layout — the lifecycle edges run
+    // on what serving actually ships
+    SchedOptions { max_batch, ..SchedOptions::default() }
 }
 
 /// Cancelling an in-flight request releases its slot immediately: the
@@ -87,7 +89,13 @@ fn cancellation_mid_decode_frees_the_slot() {
 fn full_batch_admits_zero_until_a_slot_frees() {
     let engine = plain_engine(7);
     let budget = engine.cache_row_bytes(); // exactly one row fits
-    let one_row = SchedOptions { max_batch: 4, kv_budget_bytes: budget };
+    // the contiguous reference layout: the budget caps the slot count
+    let one_row = SchedOptions {
+        max_batch: 4,
+        kv_budget_bytes: budget,
+        kv_paged: false,
+        ..SchedOptions::default()
+    };
     let mut s = Scheduler::new(&engine, &one_row).unwrap();
     assert_eq!(s.n_slots(), 1);
     let first = s.submit("1 + 1 =", 3).unwrap();
