@@ -1,0 +1,95 @@
+//! Packed-GEMM kernel micro-bench: the SIMD path against the scalar
+//! reference, per bit width and group shape — the number the CI
+//! `perf-gate` job pins so the speedup can't silently rot.
+//!
+//! Artifact-free by construction (weights are RTN-quantized in-process),
+//! so it runs on every PR. Before timing anything, every case asserts the
+//! two kernels produce **bit-identical** outputs (`assert_eq!`, not a
+//! tolerance) — a perf number for a kernel that drifted is worthless.
+//!
+//! Output: a markdown table on stdout plus `BENCH_gemm.json`
+//! ([`JsonReport`] schema). The JSON's `meta.speedup_min` is the
+//! smallest scalar/SIMD mean-time ratio across cases — the single value
+//! the perf gate compares against its 1.5× threshold.
+//!
+//! Env knobs:
+//!   LOTA_GEMM_QUICK=1      smaller shapes/iters (what CI runs)
+//!   LOTA_GEMM_ITERS=N      timed iterations per case
+//!   LOTA_BENCH_JSON_DIR=d  where BENCH_gemm.json lands (default ".")
+
+use lota_qaf::bench_harness::{bench, f, JsonReport, Table};
+use lota_qaf::config::GemmKernel;
+use lota_qaf::engine::{matmul_packed_opts, simd, PackedLinear};
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::tensor::{Rng, Tensor};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("LOTA_GEMM_QUICK").map(|v| v != "0").unwrap_or(false);
+    let iters = env_usize("LOTA_GEMM_ITERS", if quick { 15 } else { 40 });
+    let m = if quick { 48 } else { 128 };
+    // (din, dout, gs): the small-model slot shape, plus — in full mode —
+    // a gs with an 8-lane remainder tail so the masked path gets timed too
+    let shapes: &[(usize, usize, usize)] =
+        if quick { &[(256, 512, 32)] } else { &[(256, 1024, 32), (240, 1024, 20)] };
+
+    let simd_label = simd::resolve(GemmKernel::Simd).label();
+    let mut table =
+        Table::new(&["case", "scalar ms", "simd ms", "scalar GF/s", "simd GF/s", "speedup"]);
+    let mut jr = JsonReport::new("gemm");
+    jr.meta_bool("quick", quick);
+    jr.meta_str("simd_kernel", simd_label);
+    jr.meta_num("iters", iters as f64);
+    jr.meta_num("batch_rows", m as f64);
+
+    let mut rng = Rng::new(0x6E77);
+    let mut speedup_min = f64::INFINITY;
+    for bits in [2u32, 3, 4] {
+        for &(din, dout, gs) in shapes {
+            let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+            let pl = PackedLinear::from_quantized(&rtn_quantize(&w, gs, bits))?;
+            let x = Tensor::new(&[m, din], rng.normal_vec(m * din, 1.0));
+
+            // the honesty pin: a timed kernel must be the *same function*
+            // bit-for-bit, or the comparison measures nothing
+            let scalar_y = matmul_packed_opts(&x, &pl, GemmKernel::Scalar, Some(1));
+            let simd_y = matmul_packed_opts(&x, &pl, GemmKernel::Simd, Some(1));
+            assert_eq!(
+                simd_y, scalar_y,
+                "kernel outputs diverged (bits={bits} din={din} dout={dout} gs={gs})"
+            );
+
+            let case = format!("w{bits} {m}x{din}x{dout} gs{gs}");
+            let rs = bench(&format!("gemm {case} scalar"), 1, iters, || {
+                matmul_packed_opts(&x, &pl, GemmKernel::Scalar, Some(1));
+            });
+            let rv = bench(&format!("gemm {case} simd"), 1, iters, || {
+                matmul_packed_opts(&x, &pl, GemmKernel::Simd, Some(1));
+            });
+            jr.push(&rs);
+            jr.push(&rv);
+            let flops = 2.0 * m as f64 * (din * dout) as f64;
+            let speedup = rs.mean_secs / rv.mean_secs;
+            speedup_min = speedup_min.min(speedup);
+            table.row(&[
+                case,
+                f(rs.mean_secs * 1e3, 3),
+                f(rv.mean_secs * 1e3, 3),
+                f(flops / rs.mean_secs / 1e9, 2),
+                f(flops / rv.mean_secs / 1e9, 2),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+    jr.meta_num("speedup_min", speedup_min);
+
+    println!("## Packed-GEMM kernel micro-bench (simd = {simd_label}, quick = {quick}, 1 thread)");
+    table.print();
+    let path = JsonReport::default_path("gemm");
+    jr.write(&path)?;
+    println!("min speedup {speedup_min:.2}x; wrote {}", path.display());
+    Ok(())
+}

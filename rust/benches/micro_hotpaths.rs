@@ -7,13 +7,19 @@
 //! per-token scaling), PJRT forward latency per batch bucket, and the
 //! full training-step latency per method.
 //!
-//! Env knobs: LOTA_MICRO_ITERS (10).
+//! Env knobs: LOTA_MICRO_ITERS (10), LOTA_BENCH_JSON_DIR (".").
+//!
+//! Alongside the markdown table, every timing lands in
+//! `BENCH_micro_hotpaths.json` (the `bench_harness::JsonReport` schema) —
+//! flushed once before the PJRT sections (which need `make artifacts` and
+//! abort the run without them) and again at the end, so the host/engine
+//! rows always reach the JSON even on an artifact-less machine.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use lota_qaf::adapter::{lota_merge, TernaryAdapter};
-use lota_qaf::bench_harness::{bench, Table};
+use lota_qaf::bench_harness::{bench, JsonReport, Table};
 use lota_qaf::config::{preset, step_batch, Method};
 use lota_qaf::coordinator;
 use lota_qaf::data::{corpus, lm_batch, sft_batch, Example};
@@ -32,6 +38,10 @@ fn env_usize(key: &str, default: usize) -> usize {
 fn main() -> anyhow::Result<()> {
     let iters = env_usize("LOTA_MICRO_ITERS", 10);
     let mut results = Table::new(&["path", "mean ms", "p50 ms", "p95 ms", "throughput"]);
+    let mut jr = JsonReport::new("micro_hotpaths");
+    jr.meta_num("iters", iters as f64);
+    jr.meta_str("gemm_kernel", lota_qaf::engine::simd::resolve(Default::default()).label());
+    let json_path = JsonReport::default_path("micro_hotpaths");
     let mut rng = Rng::new(1);
 
     // ---- host: GPTQ sweep on a small-model slot (256×1024, gs=32) ----
@@ -44,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     let r = bench("gptq 256x1024", 1, iters.min(5), || {
         gptq_quantize(&w, &h, &cfg4).unwrap();
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -57,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         let mut h2 = Tensor::zeros(&[din, din]);
         accumulate_hessian(&mut h2, &x);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -79,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     let r = bench("lota_merge 256x1024", 1, iters, || {
         lota_merge(&ql, &ta, 12.0);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -93,6 +106,7 @@ fn main() -> anyhow::Result<()> {
         let p = pack_ints(&codes, 4).unwrap();
         unpack_ints(&p, codes.len(), 4).unwrap();
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -107,6 +121,7 @@ fn main() -> anyhow::Result<()> {
     let r = bench("host matmul 256^3", 1, iters, || {
         linalg::matmul(&a, &b);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -135,6 +150,7 @@ fn main() -> anyhow::Result<()> {
     let r = bench("quant_matmul_packed 128x256x1024", 1, iters, || {
         engine::matmul_packed(&xa, &pl);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -148,6 +164,7 @@ fn main() -> anyhow::Result<()> {
         let w_f32 = lota_qaf::quant::dequant(&grid, &ql.scales, &ql.zeros, gs);
         linalg::matmul(&xa, &w_f32);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.2}", r.mean_secs * 1e3),
@@ -175,6 +192,7 @@ fn main() -> anyhow::Result<()> {
             let r = bench(&format!("decode step recompute T={prefix}"), 1, iters, || {
                 eng.forward(&full).unwrap();
             });
+            jr.push(&r);
             results.row(&[
                 r.name.clone(),
                 format!("{:.2}", r.mean_secs * 1e3),
@@ -193,6 +211,7 @@ fn main() -> anyhow::Result<()> {
                 cache.truncate_row(0, prefix - 1);
                 eng.forward_incremental(&step_tok, &mut cache, &[0]).unwrap();
             });
+            jr.push(&r);
             results.row(&[
                 r.name.clone(),
                 format!("{:.2}", r.mean_secs * 1e3),
@@ -202,6 +221,11 @@ fn main() -> anyhow::Result<()> {
             ]);
         }
     }
+
+    // flush the host/engine rows before touching artifacts —
+    // Runtime::new errors out on artifact-less machines and would
+    // otherwise drop everything timed so far from the JSON
+    jr.write(&json_path)?;
 
     // ---- PJRT: forward latency per bucket ----
     let rt = Runtime::new(Path::new("artifacts"))?;
@@ -224,6 +248,7 @@ fn main() -> anyhow::Result<()> {
         let r = bench(&format!("pjrt fwd b{bucket}"), 2, iters, || {
             coordinator::run_forward(&rt, &exe, &store, &tokens, None).unwrap();
         });
+        jr.push(&r);
         results.row(&[
             r.name.clone(),
             format!("{:.2}", r.mean_secs * 1e3),
@@ -290,6 +315,7 @@ fn main() -> anyhow::Result<()> {
             )
             .unwrap();
         });
+        jr.push(&r);
         results.row(&[
             r.name.clone(),
             format!("{:.2}", r.mean_secs * 1e3),
@@ -308,6 +334,7 @@ fn main() -> anyhow::Result<()> {
         let docs: Vec<String> = (0..8).map(|_| corpus::sample_document(&mut drng)).collect();
         lm_batch(&docs, 8, cfg.seq_len);
     });
+    jr.push(&r);
     results.row(&[
         r.name.clone(),
         format!("{:.3}", r.mean_secs * 1e3),
@@ -318,5 +345,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("## §Perf micro-benchmarks (hot paths, 1 CPU core)");
     results.print();
+    jr.write(&json_path)?;
+    println!("wrote {}", json_path.display());
     Ok(())
 }

@@ -1,8 +1,13 @@
 //! Hand-rolled benchmark harness (no criterion offline): warmup + timed
 //! iterations with mean/p50/p95, plus the table printer every paper-figure
-//! bench uses to emit its rows.
+//! bench uses to emit its rows — and [`JsonReport`], the machine-readable
+//! twin of those tables (`BENCH_<name>.json`) that the CI perf gate
+//! parses and future trajectory tracking reads.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::config::JsonWriter;
 
 /// Timing summary for one benchmark case.
 #[derive(Clone, Debug)]
@@ -100,6 +105,125 @@ pub fn f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// One metadata value in a [`JsonReport`] header.
+enum MetaVal {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+/// Machine-readable bench output, emitted alongside the markdown tables.
+///
+/// Schema (parsed by the CI `perf-gate` job and by trajectory tooling):
+///
+/// ```json
+/// {
+///   "bench": "<name>",
+///   "meta": { "<key>": <num|str|bool>, ... },
+///   "results": [
+///     { "name": "...", "iters": N, "mean_secs": ..., "p50_secs": ...,
+///       "p95_secs": ..., "min_secs": ... },
+///     ...
+///   ]
+/// }
+/// ```
+///
+/// Results keep insertion order; meta keys keep insertion order too (the
+/// streaming writer never re-sorts), and re-setting a key appends rather
+/// than replaces — set each key once.
+pub struct JsonReport {
+    bench: String,
+    meta: Vec<(String, MetaVal)>,
+    results: Vec<BenchResult>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), meta: Vec::new(), results: Vec::new() }
+    }
+
+    /// Where a bench's JSON lands: `$LOTA_BENCH_JSON_DIR/BENCH_<name>.json`
+    /// (or the current directory when the env var is unset — the repo
+    /// root under `cargo bench`, which is where CI picks it up).
+    pub fn default_path(bench: &str) -> PathBuf {
+        let dir = std::env::var("LOTA_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        PathBuf::from(dir).join(format!("BENCH_{bench}.json"))
+    }
+
+    pub fn meta_num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.meta.push((key.to_string(), MetaVal::Num(v)));
+        self
+    }
+
+    pub fn meta_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.meta.push((key.to_string(), MetaVal::Str(v.to_string())));
+        self
+    }
+
+    pub fn meta_bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.meta.push((key.to_string(), MetaVal::Bool(v)));
+        self
+    }
+
+    /// Record one timing summary (called right after [`bench`]).
+    pub fn push(&mut self, r: &BenchResult) -> &mut Self {
+        self.results.push(r.clone());
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// Serialize to the schema above.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("bench").str(&self.bench);
+        w.key("meta").begin_obj();
+        for (k, v) in &self.meta {
+            w.key(k);
+            match v {
+                MetaVal::Num(n) => w.num(*n),
+                MetaVal::Str(s) => w.str(s),
+                MetaVal::Bool(b) => w.bool(*b),
+            };
+        }
+        w.end_obj();
+        w.key("results").begin_arr();
+        for r in &self.results {
+            w.begin_obj();
+            w.key("name").str(&r.name);
+            w.key("iters").num(r.iters as f64);
+            w.key("mean_secs").num(r.mean_secs);
+            w.key("p50_secs").num(r.p50_secs);
+            w.key("p95_secs").num(r.p95_secs);
+            w.key("min_secs").num(r.min_secs);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Write the JSON to `path` (creating parent directories). Callers
+    /// may write mid-run and again at the end — the file is replaced
+    /// wholesale, so a bench that later fails still leaves the rows it
+    /// completed.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +252,52 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new(&["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_the_parser() {
+        use crate::config::Json;
+        let r1 = bench("fast", 0, 3, || {});
+        let r2 = bench("slow", 0, 3, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        let mut jr = JsonReport::new("unit");
+        assert!(jr.is_empty());
+        jr.meta_bool("quick", true);
+        jr.meta_str("kernel", "avx2");
+        jr.meta_num("speedup_min", 1.75);
+        jr.push(&r1);
+        jr.push(&r2);
+        assert_eq!(jr.len(), 2);
+        let parsed = Json::parse(&jr.to_json()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "unit");
+        let meta = parsed.get("meta").unwrap();
+        assert_eq!(meta.get("kernel").unwrap().as_str().unwrap(), "avx2");
+        assert!((meta.get("speedup_min").unwrap().as_f64().unwrap() - 1.75).abs() < 1e-12);
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "fast");
+        assert_eq!(results[1].get("iters").unwrap().as_usize().unwrap(), 3);
+        for r in results {
+            let mean = r.get("mean_secs").unwrap().as_f64().unwrap();
+            let p50 = r.get("p50_secs").unwrap().as_f64().unwrap();
+            let p95 = r.get("p95_secs").unwrap().as_f64().unwrap();
+            assert!(mean >= 0.0 && p50 <= p95 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn json_report_writes_where_told() {
+        let dir = std::env::temp_dir().join(format!("lota_bench_json_{}", std::process::id()));
+        let path = dir.join("BENCH_unit.json");
+        let mut jr = JsonReport::new("unit");
+        jr.push(&bench("x", 0, 1, || {}));
+        jr.write(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\":\"unit\""));
+        // overwrite-in-place (the mid-run flush pattern) keeps it parseable
+        jr.push(&bench("y", 0, 1, || {}));
+        jr.write(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        crate::config::Json::parse(&body).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

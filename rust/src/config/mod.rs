@@ -174,6 +174,43 @@ impl DecodeMode {
     }
 }
 
+/// Which packed-GEMM inner kernel the native engine runs. Every choice is
+/// **bit-identical** (the kernels share one lane-ordered accumulation
+/// contract — see `engine::simd`); this selects instructions, not
+/// results, so it is safe to flip in production and in CI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum GemmKernel {
+    /// `LOTA_GEMM_KERNEL` env override if set, else the best detected
+    /// vector path (AVX2 → portable lanes)
+    #[default]
+    Auto,
+    /// force the vector path (AVX2 where detected, portable lanes
+    /// otherwise — never the scalar reference)
+    Simd,
+    /// force the scalar reference kernel (the CI fallback leg, and the
+    /// baseline the perf gate measures against)
+    Scalar,
+}
+
+impl GemmKernel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GemmKernel::Auto => "auto",
+            GemmKernel::Simd => "simd",
+            GemmKernel::Scalar => "scalar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<GemmKernel> {
+        Ok(match s {
+            "auto" => GemmKernel::Auto,
+            "simd" => GemmKernel::Simd,
+            "scalar" => GemmKernel::Scalar,
+            _ => bail!("unknown gemm kernel '{s}' (auto|simd|scalar)"),
+        })
+    }
+}
+
 /// Continuous-batching scheduler knobs (the `[sched]` TOML table and the
 /// `lota serve --sched` flags). Presence of the table — or `--sched true`
 /// — routes native serving through `sched::Scheduler` instead of the
@@ -301,6 +338,10 @@ pub struct ExperimentConfig {
     /// how the native engine decodes (`decode_mode` in TOML): KV-cached
     /// incremental steps or full-prefix recompute
     pub decode: DecodeMode,
+    /// which packed-GEMM inner kernel the native engine runs
+    /// (`gemm_kernel` in TOML): auto-detected SIMD, forced SIMD, or the
+    /// scalar reference — bit-identical either way
+    pub gemm_kernel: GemmKernel,
     /// continuous-batching scheduler config (the `[sched]` TOML table);
     /// None serves one-shot
     pub sched: Option<SchedConfig>,
@@ -322,6 +363,7 @@ impl Default for ExperimentConfig {
             checkpoint_dir: None,
             backend: Backend::Pjrt,
             decode: DecodeMode::Cached,
+            gemm_kernel: GemmKernel::Auto,
             sched: None,
         }
     }
@@ -368,6 +410,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("decode_mode") {
             c.decode = DecodeMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("gemm_kernel") {
+            c.gemm_kernel = GemmKernel::parse(v)?;
         }
         c.sched = SchedConfig::from_toml(doc)?;
         if !(2..=4).contains(&c.n_bits) {
@@ -452,6 +497,20 @@ mod tests {
         assert_eq!(DecodeMode::default(), DecodeMode::Cached);
         let doc = TomlDoc::parse("decode_mode = \"recompute\"\n").unwrap();
         assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().decode, DecodeMode::Recompute);
+    }
+
+    #[test]
+    fn gemm_kernel_parse_roundtrip() {
+        for k in [GemmKernel::Auto, GemmKernel::Simd, GemmKernel::Scalar] {
+            assert_eq!(GemmKernel::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(GemmKernel::parse("avx512").is_err());
+        assert_eq!(GemmKernel::default(), GemmKernel::Auto);
+        let doc = TomlDoc::parse("gemm_kernel = \"scalar\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().gemm_kernel, GemmKernel::Scalar);
+        // absent key keeps the auto default
+        let doc = TomlDoc::parse("model = \"tiny\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().gemm_kernel, GemmKernel::Auto);
     }
 
     #[test]

@@ -27,13 +27,14 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::ModelConfig;
+use crate::config::{GemmKernel, ModelConfig};
 use crate::model::{self, ParamStore, SLOTS};
 use crate::tensor::{linalg, Tensor};
 
 use super::cache::KvCache;
-use super::gemm::matmul_packed;
+use super::gemm::matmul_packed_dispatch;
 use super::packed::PackedLinear;
+use super::simd;
 
 /// Slot indices within [`Layer::slots`], in [`SLOTS`] order.
 const WQ: usize = 0;
@@ -66,6 +67,10 @@ pub struct Engine {
     lnf_w: Vec<f32>,
     lnf_b: Vec<f32>,
     layers: Vec<Layer>,
+    /// resolved packed-GEMM kernel, fixed at construction (or via
+    /// [`Engine::set_gemm_kernel`]) so the hot path never re-detects —
+    /// all choices are bit-identical, this is purely a speed/debug knob
+    gemm: simd::Dispatch,
 }
 
 impl Engine {
@@ -97,7 +102,23 @@ impl Engine {
             lnf_w: store.get("lnf_w")?.data().to_vec(),
             lnf_b: store.get("lnf_b")?.data().to_vec(),
             layers,
+            gemm: simd::resolve(GemmKernel::Auto),
         })
+    }
+
+    /// Re-resolve the packed-GEMM kernel for this engine (`auto` honors
+    /// `LOTA_GEMM_KERNEL`, then hardware detection). Outputs are
+    /// bit-identical across kernels — this selects instructions, not
+    /// results.
+    pub fn set_gemm_kernel(&mut self, kernel: GemmKernel) {
+        self.gemm = simd::resolve(kernel);
+    }
+
+    /// Which kernel this engine's forwards actually run
+    /// (`avx2` / `portable` / `scalar`) — surfaced in serving reports
+    /// and the bench JSON.
+    pub fn gemm_kernel_label(&self) -> &'static str {
+        self.gemm.label()
     }
 
     /// Build from a merged checkpoint on disk. `n_bits` falls back to the
@@ -442,7 +463,7 @@ impl Engine {
     /// One quantized linear, with the optional LoRA contribution
     /// (`α/r = 2`, matching the graphs) riding on top.
     fn linear(&self, x: &Tensor, layer: &Layer, slot: usize) -> Tensor {
-        let mut y = matmul_packed(x, &layer.slots[slot]);
+        let mut y = matmul_packed_dispatch(x, &layer.slots[slot], self.gemm, None);
         if let Some(lora) = &layer.lora {
             let (a, b) = &lora[slot];
             let contrib = linalg::matmul(&linalg::matmul(x, a), b).scale(2.0);

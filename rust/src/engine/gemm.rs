@@ -17,10 +17,29 @@
 //! and fanned out over `std::thread::scope` threads; each thread owns its
 //! chunk's output block, so there is no sharing and no locking. The group
 //! loop doubles as the cache block along the reduction dimension.
+//!
+//! # Kernel dispatch and the lane-ordered contract
+//!
+//! The per-group dot product runs through one of three kernels —
+//! AVX2, a portable 8-lane fallback, or the scalar reference in
+//! this file — selected at runtime by [`crate::engine::simd::resolve`]
+//! (`auto|simd|scalar` via `ServeOptions::gemm_kernel`, the experiment
+//! TOML, `lota serve --gemm-kernel`, or `LOTA_GEMM_KERNEL`). All three
+//! accumulate in the **same fixed 8-lane order** (see the contract in
+//! [`crate::engine::simd`]), so kernel choice never changes a bit of the
+//! output: `tests/gemm_simd.rs` pins them `assert_eq!`-identical, which
+//! is what lets every engine/sched/paged parity suite keep holding
+//! bitwise whatever hardware runs it.
+//!
+//! **Do not "simplify" [`gemm_block_scalar`] or [`group_sums`] back to
+//! sequential accumulation** — their lane structure *is* the contract the
+//! vector kernels are pinned against, not a stylistic choice.
 
+use crate::config::GemmKernel;
 use crate::tensor::Tensor;
 
 use super::packed::PackedLinear;
+use super::simd::{self, Dispatch};
 
 /// Work threshold (multiply-accumulates) below which threading costs more
 /// than it saves — decode-sized calls stay on the caller's thread.
@@ -33,27 +52,66 @@ use super::packed::PackedLinear;
 /// is what lets the cached decode path promise bit-equal generations.
 const PAR_THRESHOLD: usize = 1 << 20;
 
-/// Fused packed GEMM: `x` is (M, Din), returns (M, Dout).
+/// Fused packed GEMM: `x` is (M, Din), returns (M, Dout). Kernel and
+/// thread count both auto-selected.
 pub fn matmul_packed(x: &Tensor, w: &PackedLinear) -> Tensor {
-    let work = x.rows() * x.cols() * w.dout();
-    let threads = if work < PAR_THRESHOLD {
-        1
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    };
-    matmul_packed_with_threads(x, w, threads)
+    matmul_packed_dispatch(x, w, simd::resolve(GemmKernel::Auto), None)
 }
 
 /// [`matmul_packed`] with an explicit thread budget (bench / test knob).
 pub fn matmul_packed_with_threads(x: &Tensor, w: &PackedLinear, threads: usize) -> Tensor {
+    matmul_packed_dispatch(x, w, simd::resolve(GemmKernel::Auto), Some(threads))
+}
+
+/// [`matmul_packed`] with an explicit kernel request — what the serving
+/// plumbing and the GEMM bench drive. `threads = None` auto-sizes.
+pub fn matmul_packed_opts(
+    x: &Tensor,
+    w: &PackedLinear,
+    kernel: GemmKernel,
+    threads: Option<usize>,
+) -> Tensor {
+    matmul_packed_dispatch(x, w, simd::resolve(kernel), threads)
+}
+
+/// Innermost entry: run with an already-resolved [`Dispatch`] (the engine
+/// resolves once at construction and reuses it every forward).
+pub fn matmul_packed_dispatch(
+    x: &Tensor,
+    w: &PackedLinear,
+    dispatch: Dispatch,
+    threads: Option<usize>,
+) -> Tensor {
     let (m, din) = (x.rows(), x.cols());
     assert_eq!(din, w.din(), "packed matmul inner dims {din} vs {}", w.din());
+    // Explicit invariant, checked once per call: the group decomposition
+    // (and the `chunks_exact` in `group_sums`) silently drops a trailing
+    // partial group if this ever breaks, which would corrupt outputs
+    // instead of failing loud.
+    assert_eq!(
+        din % w.group_size,
+        0,
+        "packed GEMM requires group_size ({}) to divide Din ({din}); \
+         a trailing partial group would be silently dropped",
+        w.group_size
+    );
     let dout = w.dout();
+    let threads = match threads {
+        Some(t) => t,
+        None => {
+            let work = m * din * dout;
+            if work < PAR_THRESHOLD {
+                1
+            } else {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+        }
+    };
     let xg = group_sums(x, w.group_size, w.n_groups());
 
     let threads = threads.clamp(1, dout.max(1));
     if threads == 1 {
-        let block = gemm_block(x, &xg, w, 0, dout);
+        let block = simd::run_block(dispatch, x, &xg, w, 0, dout);
         return Tensor::new(&[m, dout], block);
     }
 
@@ -67,7 +125,9 @@ pub fn matmul_packed_with_threads(x: &Tensor, w: &PackedLinear, threads: usize) 
         while j0 < dout {
             let j1 = (j0 + chunk).min(dout);
             let xg_ref = &xg;
-            handles.push(scope.spawn(move || (j0, j1, gemm_block(x, xg_ref, w, j0, j1))));
+            handles.push(
+                scope.spawn(move || (j0, j1, simd::run_block(dispatch, x, xg_ref, w, j0, j1))),
+            );
             j0 = j1;
         }
         handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
@@ -85,6 +145,12 @@ pub fn matmul_packed_with_threads(x: &Tensor, w: &PackedLinear, threads: usize) 
 }
 
 /// Per-row group sums of the activations: `xg[m,g] = Σ_{i∈g} x[m,i]`.
+///
+/// Summed in the same 8-lane order as the dot-product kernels
+/// ([`simd::lane_sum`]), so the activation side of `z[g,j] · Σ x` can
+/// never diverge from the kernel's accumulation order. The caller
+/// (`matmul_packed_dispatch`) has already asserted that `group_size`
+/// divides Din, so `chunks_exact` covers every element.
 fn group_sums(x: &Tensor, group_size: usize, n_groups: usize) -> Vec<f32> {
     let m = x.rows();
     let mut xg = vec![0.0f32; m * n_groups];
@@ -92,15 +158,27 @@ fn group_sums(x: &Tensor, group_size: usize, n_groups: usize) -> Vec<f32> {
         let xrow = x.row(mi);
         let grow = &mut xg[mi * n_groups..(mi + 1) * n_groups];
         for (g, chunk) in xrow.chunks_exact(group_size).enumerate() {
-            grow[g] = chunk.iter().sum();
+            grow[g] = simd::lane_sum(chunk);
         }
     }
     xg
 }
 
-/// Serial kernel for output columns `[j0, j1)`: returns the (M × width)
-/// block in chunk-local row-major order.
-fn gemm_block(x: &Tensor, xg: &[f32], w: &PackedLinear, j0: usize, j1: usize) -> Vec<f32> {
+/// The scalar reference kernel for output columns `[j0, j1)`: returns the
+/// (M × width) block in chunk-local row-major order.
+///
+/// "Scalar" means no explicit vector code — the accumulation itself runs
+/// in the contract's 8-lane order via [`simd::lane_dot`], which is what
+/// makes this the *reference* the AVX2/portable kernels are bitwise-pinned
+/// against rather than a merely-close baseline. Reachable in production
+/// via `--gemm-kernel scalar` / `LOTA_GEMM_KERNEL=scalar`.
+pub(crate) fn gemm_block_scalar(
+    x: &Tensor,
+    xg: &[f32],
+    w: &PackedLinear,
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
     let (m, din) = (x.rows(), x.cols());
     let gs = w.group_size;
     let g = w.n_groups();
@@ -110,21 +188,24 @@ fn gemm_block(x: &Tensor, xg: &[f32], w: &PackedLinear, j0: usize, j1: usize) ->
     let mut out = vec![0.0f32; m * width];
     // one column of integer codes — the only decoded weight storage
     let mut codes = vec![0.0f32; din];
+    // per-column scale/zero gathers, hoisted out of the m × g inner loops
+    // (the strided `[gi * dout + j]` loads used to re-run per row)
+    let mut sbuf = vec![0.0f32; g];
+    let mut zbuf = vec![0.0f32; g];
     for j in j0..j1 {
         w.decode_col_into(j, &mut codes);
+        for (gi, (s, z)) in sbuf.iter_mut().zip(zbuf.iter_mut()).enumerate() {
+            *s = scales[gi * dout + j];
+            *z = zeros[gi * dout + j];
+        }
         for mi in 0..m {
             let xrow = x.row(mi);
             let xgrow = &xg[mi * g..(mi + 1) * g];
             let mut acc = 0.0f32;
             for gi in 0..g {
-                let s = scales[gi * dout + j];
-                let z = zeros[gi * dout + j];
-                let mut dot = 0.0f32;
                 let base = gi * gs;
-                for i in 0..gs {
-                    dot += xrow[base + i] * codes[base + i];
-                }
-                acc += s * dot + z * xgrow[gi];
+                let dot = simd::lane_dot(&xrow[base..base + gs], &codes[base..base + gs]);
+                acc += sbuf[gi] * dot + zbuf[gi] * xgrow[gi];
             }
             out[mi * width + (j - j0)] = acc;
         }
@@ -174,6 +255,28 @@ mod tests {
     }
 
     #[test]
+    fn kernels_agree_bitwise() {
+        // the dispatch contract at unit scale; tests/gemm_simd.rs sweeps
+        // it across bit widths, tails, and thread counts
+        let (x, pl, _) = setup(31, 5, 64, 40, 16, 4);
+        let scalar = matmul_packed_opts(&x, &pl, GemmKernel::Scalar, Some(1));
+        let simd = matmul_packed_opts(&x, &pl, GemmKernel::Simd, Some(1));
+        let auto = matmul_packed_opts(&x, &pl, GemmKernel::Auto, Some(1));
+        assert_eq!(simd, scalar);
+        assert_eq!(auto, scalar);
+    }
+
+    #[test]
+    fn group_tail_is_lane_ordered_not_dropped() {
+        // gs = 20 : two full 8-lanes plus a 4-element tail per group —
+        // compare against a hand dequantized dense matmul to prove the
+        // tail contributes
+        let (x, pl, dense) = setup(41, 3, 40, 12, 20, 4);
+        let y = matmul_packed(&x, &pl);
+        assert!(y.allclose(&dense, 1e-3, 1e-4), "max diff {}", y.max_abs_diff(&dense));
+    }
+
+    #[test]
     fn row_slices_match_batched_call_bitwise() {
         // the incremental-decode contract: feeding any subset of rows
         // produces exactly the bits the full-batch call produces for them
@@ -201,5 +304,12 @@ mod tests {
         let (_, pl, _) = setup(5, 2, 32, 8, 8, 4);
         let x = Tensor::zeros(&[2, 16]);
         matmul_packed(&x, &pl);
+    }
+
+    #[test]
+    fn lane_width_is_the_documented_contract() {
+        // the contract's width is load-bearing for every bitwise pin;
+        // changing it is a breaking change to all recorded parity
+        assert_eq!(simd::LANES, 8);
     }
 }

@@ -10,9 +10,16 @@
 //! * [`packed::PackedLinear`] — column-packed `u32` grid + per-group
 //!   scale/zero tables, built once from a [`crate::quant::QuantizedLinear`];
 //! * [`gemm::matmul_packed`] — the fused group-dequant × matmul kernel:
-//!   codes decoded in-register, affine factors applied per group, output
-//!   columns fanned out over `std::thread::scope`, and no dense f32 weight
-//!   matrix ever materialized;
+//!   codes decoded in-register (a whole `u32` word at a time), affine
+//!   factors applied per group, output columns fanned out over
+//!   `std::thread::scope`, and no dense f32 weight matrix ever
+//!   materialized. The inner loop is runtime-dispatched through
+//!   [`simd`]: AVX2 when detected, a portable 8-lane fallback
+//!   otherwise, and the scalar reference behind `--gemm-kernel scalar` /
+//!   `LOTA_GEMM_KERNEL=scalar` — all three accumulate in the same fixed
+//!   lane order, so kernel choice is bit-invisible in the outputs
+//!   (`tests/gemm_simd.rs` pins it, and the CI perf gate keeps the
+//!   SIMD path ≥ 1.5× the reference);
 //! * [`forward::Engine`] — the full transformer forward (embedding, layer
 //!   norms, causal attention, GELU MLP, logits) mirroring the lowered
 //!   graphs operation-for-operation, with an optional LoRA adapter path
@@ -56,10 +63,14 @@ pub mod decode;
 pub mod forward;
 pub mod gemm;
 pub mod packed;
+pub mod simd;
 
 pub use blocks::BlockAllocator;
 pub use cache::KvCache;
 pub use decode::{greedy_decode, greedy_decode_paged, greedy_decode_with, DecodeStats, Generation};
 pub use forward::Engine;
-pub use gemm::{matmul_packed, matmul_packed_with_threads};
+pub use gemm::{
+    matmul_packed, matmul_packed_dispatch, matmul_packed_opts, matmul_packed_with_threads,
+};
 pub use packed::PackedLinear;
+pub use simd::{Dispatch as GemmDispatch, LANES as GEMM_LANES};

@@ -94,23 +94,31 @@ impl PackedLinear {
     /// Decode column `j`'s integer codes into `out` (length `din`), as f32
     /// values. This is the only unpacking the engine ever does: a single
     /// column-sized working buffer, never the full weight matrix.
+    ///
+    /// Fed straight into the GEMM inner loop, so it unpacks a whole `u32`
+    /// word at a time (8 codes for 4-bit, 16 for 2-bit, a streamed bit
+    /// buffer for 3-bit) instead of recomputing a bit cursor per element.
+    /// The per-element cursor survives as [`Self::decode_col_reference`],
+    /// the reference the fast paths are pinned against in the tests below.
     #[inline]
     pub fn decode_col_into(&self, j: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.din);
-        let bits = self.n_bits as usize;
-        let mask = (1u64 << bits) - 1;
         let col = &self.words[j * self.words_per_col..(j + 1) * self.words_per_col];
-        let mut bitpos = 0usize;
-        for slot in out.iter_mut() {
-            let word = bitpos / 32;
-            let off = bitpos % 32;
-            let mut code = (col[word] as u64) >> off;
-            if off + bits > 32 {
-                code |= (col[word + 1] as u64) << (32 - off);
-            }
-            *slot = (code & mask) as f32;
-            bitpos += bits;
+        match self.n_bits {
+            2 => decode_col_w2(col, out),
+            4 => decode_col_w4(col, out),
+            3 => decode_col_w3(col, out),
+            bits => decode_col_bitwise(col, out, bits),
         }
+    }
+
+    /// Reference column decode: the original per-element bit cursor.
+    /// Tests / diagnostics only — the hot path takes the word-at-a-time
+    /// lanes above, which must produce identical codes.
+    pub fn decode_col_reference(&self, j: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.din);
+        let col = &self.words[j * self.words_per_col..(j + 1) * self.words_per_col];
+        decode_col_bitwise(col, out, self.n_bits);
     }
 
     /// Reconstruct the f32-coded integer grid (tests / diagnostics only —
@@ -147,6 +155,84 @@ impl PackedLinear {
             scales: Tensor::new(&[self.n_groups(), self.dout], self.scales.clone()),
             zeros: Tensor::new(&[self.n_groups(), self.dout], self.zeros.clone()),
         })
+    }
+}
+
+/// 2-bit fast path: 16 codes per word, shifted out low-to-high (the
+/// little-endian-within-word layout `quant::pack_ints` writes).
+fn decode_col_w2(col: &[u32], out: &mut [f32]) {
+    let mut chunks = out.chunks_exact_mut(16);
+    let mut wi = 0;
+    for chunk in &mut chunks {
+        let word = col[wi];
+        wi += 1;
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = ((word >> (2 * k)) & 0x3) as f32;
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let word = col[wi];
+        for (k, slot) in rem.iter_mut().enumerate() {
+            *slot = ((word >> (2 * k)) & 0x3) as f32;
+        }
+    }
+}
+
+/// 4-bit fast path: 8 codes per word.
+fn decode_col_w4(col: &[u32], out: &mut [f32]) {
+    let mut chunks = out.chunks_exact_mut(8);
+    let mut wi = 0;
+    for chunk in &mut chunks {
+        let word = col[wi];
+        wi += 1;
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = ((word >> (4 * k)) & 0xF) as f32;
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let word = col[wi];
+        for (k, slot) in rem.iter_mut().enumerate() {
+            *slot = ((word >> (4 * k)) & 0xF) as f32;
+        }
+    }
+}
+
+/// 3-bit fast path: codes straddle word boundaries, so stream words
+/// through a u64 bit buffer — one shift/mask per code, one word load per
+/// 32 bits, no per-element cursor arithmetic.
+fn decode_col_w3(col: &[u32], out: &mut [f32]) {
+    let mut buf: u64 = 0;
+    let mut have: u32 = 0;
+    let mut wi = 0;
+    for slot in out.iter_mut() {
+        if have < 3 {
+            buf |= (col[wi] as u64) << have;
+            wi += 1;
+            have += 32;
+        }
+        *slot = (buf & 0x7) as f32;
+        buf >>= 3;
+        have -= 3;
+    }
+}
+
+/// Generic per-element bit cursor — the reference implementation (and the
+/// fallback for any width without a fast path).
+fn decode_col_bitwise(col: &[u32], out: &mut [f32], n_bits: u32) {
+    let bits = n_bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let mut bitpos = 0usize;
+    for slot in out.iter_mut() {
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        let mut code = (col[word] as u64) >> off;
+        if off + bits > 32 {
+            code |= (col[word + 1] as u64) << (32 - off);
+        }
+        *slot = (code & mask) as f32;
+        bitpos += bits;
     }
 }
 
@@ -199,6 +285,26 @@ mod tests {
         let pl = PackedLinear::from_quantized(&ql).unwrap();
         assert_eq!(pl.words_per_col, 2);
         assert_eq!(pl.unpack_grid(), ql.w_int);
+    }
+
+    #[test]
+    fn word_decode_matches_bitwise_reference() {
+        // din deliberately not a multiple of the codes-per-word counts
+        // (16 for 2-bit, 8 for 4-bit) so the remainder paths run, and
+        // odd group sizes so 3-bit codes straddle words mid-column
+        for bits in [2u32, 3, 4] {
+            for (din, dout, gs) in [(44, 7, 11), (52, 5, 13), (64, 9, 16)] {
+                let ql = sample(bits as u64 * 100 + din as u64, din, dout, gs, bits);
+                let pl = PackedLinear::from_quantized(&ql).unwrap();
+                let mut fast = vec![0.0f32; din];
+                let mut reference = vec![0.0f32; din];
+                for j in 0..dout {
+                    pl.decode_col_into(j, &mut fast);
+                    pl.decode_col_reference(j, &mut reference);
+                    assert_eq!(fast, reference, "bits={bits} din={din} col={j}");
+                }
+            }
+        }
     }
 
     #[test]

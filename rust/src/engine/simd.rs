@@ -1,0 +1,416 @@
+//! SIMD-accelerated packed-GEMM inner kernels, runtime-dispatched —
+//! and the **lane-ordered accumulation contract** that keeps every one of
+//! them bit-identical to the scalar reference.
+//!
+//! # The contract
+//!
+//! Floating-point addition is not associative, so "vectorize the dot
+//! product" normally means "change the bits of the output". This repo's
+//! parity discipline (cached vs recompute, paged vs contiguous, scheduled
+//! vs one-shot — all pinned with `assert_eq!`, see `tests/engine_parity.rs`)
+//! only survives a SIMD kernel if the scalar reference and the vector
+//! kernels agree on an **exact** accumulation order. That order is:
+//!
+//! For a group of `gs` elements at offset `base`, with `LANES = 8`:
+//!
+//! 1. eight lane accumulators start at `0.0`;
+//! 2. for each full 8-wide chunk `k`, lane `l` absorbs element
+//!    `base + 8k + l` as a plain multiply **then** add —
+//!    `lane[l] += x * c`, two IEEE roundings (`vmulps` + `vaddps`
+//!    lane-wise). Deliberately *not* `f32::mul_add`: baseline x86-64
+//!    carries no FMA instruction, so a fused contract would lower the
+//!    scalar reference and any non-AVX2 build to one `fmaf` libcall per
+//!    element — wrecking the fallback's throughput and inflating the
+//!    perf gate's "SIMD vs scalar" ratio with call overhead;
+//! 3. the tail (`gs % 8` elements) lands in lanes `0..gs % 8` the same
+//!    way (an AVX2 masked load feeds `0.0` into the disabled lanes, and
+//!    `lane + 0.0·0.0 = lane` bit-for-bit — a lane accumulator can
+//!    never be `-0.0`, since round-to-nearest zero-sums produce `+0.0`
+//!    and the lanes start there);
+//! 4. lanes reduce in the fixed tree
+//!    `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the order an
+//!    `extractf128 / movehl / shuffle` horizontal reduction performs.
+//!
+//! [`lane_dot`] is the executable statement of that contract: plain
+//! scalar Rust, no intrinsics, no `unsafe`. The scalar reference kernel
+//! in [`super::gemm`] accumulates through it (its lane-array inner loop
+//! is exactly the shape autovectorizers eat, which is all a separate
+//! "portable" kernel could be — so the Portable dispatch runs the same
+//! body and only the AVX2 kernel is a distinct translation, instruction
+//! for instruction). Change the contract in one place and both kernels
+//! plus `tests/gemm_simd.rs` will tell you.
+//!
+//! # Dispatch
+//!
+//! [`resolve`] maps a requested [`GemmKernel`] (`auto|simd|scalar` — from
+//! `ServeOptions`, the experiment TOML, `lota serve --gemm-kernel`, or
+//! the `LOTA_GEMM_KERNEL` env var) to a concrete [`Dispatch`]:
+//!
+//! * `Avx2` — AVX2 intrinsics, 8 lanes per step, selected when
+//!   `is_x86_feature_detected!` confirms the feature;
+//! * `Portable` — the lane-array path on any architecture: same body as
+//!   the reference (the contract loop is already the shape optimizers
+//!   auto-vectorize), kept as a distinct dispatch so "best vector path"
+//!   and "forced reference" stay separately addressable;
+//! * `Scalar` — the reference kernel in `gemm.rs`, reachable via
+//!   `--gemm-kernel scalar` / `LOTA_GEMM_KERNEL=scalar` so CI exercises
+//!   the non-SIMD path on every PR.
+//!
+//! Because all three obey the contract, dispatch is a pure performance
+//! choice: `assert_eq!` holds across kernels, thread counts, and batch
+//! shapes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::config::GemmKernel;
+use crate::tensor::Tensor;
+
+use super::packed::PackedLinear;
+
+/// Fixed vector width of the accumulation contract. Everything —
+/// including the scalar reference — accumulates in 8 lanes, whatever the
+/// hardware underneath.
+pub const LANES: usize = 8;
+
+/// A resolved kernel choice: which code path [`run_block`] executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// AVX2 intrinsics (x86-64 with the feature detected)
+    Avx2,
+    /// lane-array contract loop on any architecture (shares the
+    /// reference body — the loop shape is what autovectorizers want)
+    Portable,
+    /// the reference kernel in `gemm.rs`, forced (never auto-selected)
+    Scalar,
+}
+
+impl Dispatch {
+    /// Short name surfaced in `ThroughputReport` / bench JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dispatch::Avx2 => "avx2",
+            Dispatch::Portable => "portable",
+            Dispatch::Scalar => "scalar",
+        }
+    }
+
+    /// True for the vectorized paths (everything but the scalar reference).
+    pub fn is_simd(&self) -> bool {
+        !matches!(self, Dispatch::Scalar)
+    }
+}
+
+/// Best vector kernel this host supports.
+fn detect() -> Dispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Dispatch::Avx2;
+        }
+    }
+    Dispatch::Portable
+}
+
+/// `LOTA_GEMM_KERNEL` env override, parsed once per process. An invalid
+/// value is ignored (with a warning) rather than crashing serving.
+fn env_override() -> Option<GemmKernel> {
+    static ENV: OnceLock<Option<GemmKernel>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LOTA_GEMM_KERNEL") {
+        Ok(v) => match GemmKernel::parse(&v) {
+            Ok(k) => Some(k),
+            Err(_) => {
+                log::warn!("ignoring invalid LOTA_GEMM_KERNEL='{v}' (auto|simd|scalar)");
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+/// Resolve a requested kernel to the path that will actually run.
+///
+/// An explicit `simd`/`scalar` request wins outright; `auto` defers to
+/// `LOTA_GEMM_KERNEL` if set (the CI scalar-fallback leg), else hardware
+/// detection. `simd` on hardware without AVX2 degrades to the portable
+/// lane path — same bits, still autovectorizable.
+pub fn resolve(requested: GemmKernel) -> Dispatch {
+    match requested {
+        GemmKernel::Scalar => Dispatch::Scalar,
+        GemmKernel::Simd => detect(),
+        GemmKernel::Auto => match env_override() {
+            Some(GemmKernel::Scalar) => Dispatch::Scalar,
+            Some(GemmKernel::Simd) => detect(),
+            Some(GemmKernel::Auto) | None => detect(),
+        },
+    }
+}
+
+/// Blocks executed by a SIMD path (AVX2 or portable) since process start.
+/// `tests/gemm_simd.rs` uses this to prove a forced-`scalar` override
+/// really bypasses the vector kernels rather than merely matching their
+/// bits (which it would anyway, by the contract).
+static SIMD_BLOCKS: AtomicUsize = AtomicUsize::new(0);
+
+/// Monotonic count of SIMD block-kernel invocations (test observability).
+pub fn simd_blocks_run() -> usize {
+    SIMD_BLOCKS.load(Ordering::Relaxed)
+}
+
+/// The contract's dot product: `Σ x[i]·c[i]` over equal-length slices in
+/// lane order. This is the *definition* the AVX2 kernel implements —
+/// scalar Rust, safe, plain multiply-then-add per element (see the
+/// module docs for why the contract is deliberately unfused).
+#[inline]
+pub fn lane_dot(x: &[f32], c: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), c.len());
+    let mut lanes = [0.0f32; LANES];
+    let full = x.len() / LANES * LANES;
+    let mut k = 0;
+    while k < full {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += x[k + l] * c[k + l];
+        }
+        k += LANES;
+    }
+    for (l, lane) in lanes.iter_mut().enumerate().take(x.len() - full) {
+        *lane += x[full + l] * c[full + l];
+    }
+    reduce_lanes(lanes)
+}
+
+/// The contract's plain sum (used by the activation group-sums): same
+/// lane assignment and reduction tree as [`lane_dot`], additions only.
+#[inline]
+pub fn lane_sum(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let full = x.len() / LANES * LANES;
+    let mut k = 0;
+    while k < full {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += x[k + l];
+        }
+        k += LANES;
+    }
+    for (l, lane) in lanes.iter_mut().enumerate().take(x.len() - full) {
+        *lane += x[full + l];
+    }
+    reduce_lanes(lanes)
+}
+
+/// The fixed horizontal reduction: `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`
+/// — the add order of an `extractf128` + `movehl` + `shuffle` tree.
+#[inline]
+pub fn reduce_lanes(l: [f32; LANES]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Run the block kernel the dispatch selects over output columns
+/// `[j0, j1)`. All three paths return bit-identical results; only the
+/// instructions differ.
+pub(crate) fn run_block(
+    dispatch: Dispatch,
+    x: &Tensor,
+    xg: &[f32],
+    w: &PackedLinear,
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
+    match dispatch {
+        Dispatch::Scalar => super::gemm::gemm_block_scalar(x, xg, w, j0, j1),
+        // the portable vector path *is* the reference body — its lane
+        // loop is already the autovectorizable shape, and a duplicated
+        // copy would only be a place for the contract to silently fork.
+        // What distinguishes this arm is dispatch semantics (it counts
+        // as a SIMD path and is what `simd` degrades to without AVX2).
+        Dispatch::Portable => {
+            SIMD_BLOCKS.fetch_add(1, Ordering::Relaxed);
+            super::gemm::gemm_block_scalar(x, xg, w, j0, j1)
+        }
+        Dispatch::Avx2 => {
+            SIMD_BLOCKS.fetch_add(1, Ordering::Relaxed);
+            // SAFETY: `resolve` only hands out Avx2 after
+            // `is_x86_feature_detected!` confirmed it (and the non-x86
+            // stub below is plain safe code).
+            unsafe { gemm_block_avx2(x, xg, w, j0, j1) }
+        }
+    }
+}
+
+/// Per-tail-length masks for `_mm256_maskload_ps`: index `r` enables
+/// lanes `0..r` (sign bit set = load, clear = zero). `r = 0` is unused —
+/// full groups never take the tail load.
+#[cfg(target_arch = "x86_64")]
+const TAIL_MASKS: [[i32; 8]; 8] = [
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [-1, 0, 0, 0, 0, 0, 0, 0],
+    [-1, -1, 0, 0, 0, 0, 0, 0],
+    [-1, -1, -1, 0, 0, 0, 0, 0],
+    [-1, -1, -1, -1, 0, 0, 0, 0],
+    [-1, -1, -1, -1, -1, 0, 0, 0],
+    [-1, -1, -1, -1, -1, -1, 0, 0],
+    [-1, -1, -1, -1, -1, -1, -1, 0],
+];
+
+/// AVX2 kernel: the contract, instruction for instruction. Unaligned
+/// 8-wide loads of activations and decoded codes, `vmulps` + `vaddps`
+/// into the lane accumulator (unfused, matching the contract's two
+/// roundings), a masked load for the group tail, and the
+/// `extractf128`/`movehl`/`shuffle` reduction whose add order
+/// [`reduce_lanes`] mirrors.
+///
+/// # Safety
+/// Caller must have verified `avx2` via `is_x86_feature_detected!`
+/// (as [`resolve`] does).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_block_avx2(
+    x: &Tensor,
+    xg: &[f32],
+    w: &PackedLinear,
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
+    use std::arch::x86_64::*;
+
+    let (m, din) = (x.rows(), x.cols());
+    let gs = w.group_size;
+    let g = w.n_groups();
+    let dout = w.dout();
+    let (scales, zeros) = (w.scales(), w.zeros());
+    let width = j1 - j0;
+    let full = gs / LANES * LANES;
+    let tail = gs - full;
+    let tail_mask = _mm256_loadu_si256(TAIL_MASKS[tail].as_ptr() as *const __m256i);
+    let mut out = vec![0.0f32; m * width];
+    let mut codes = vec![0.0f32; din];
+    let mut sbuf = vec![0.0f32; g];
+    let mut zbuf = vec![0.0f32; g];
+    for j in j0..j1 {
+        w.decode_col_into(j, &mut codes);
+        for (gi, (s, z)) in sbuf.iter_mut().zip(zbuf.iter_mut()).enumerate() {
+            *s = scales[gi * dout + j];
+            *z = zeros[gi * dout + j];
+        }
+        let cptr = codes.as_ptr();
+        for mi in 0..m {
+            let xrow = x.row(mi);
+            let xptr = xrow.as_ptr();
+            let xgrow = &xg[mi * g..(mi + 1) * g];
+            let mut acc = 0.0f32;
+            for gi in 0..g {
+                let base = gi * gs;
+                let mut lanes = _mm256_setzero_ps();
+                let mut k = 0;
+                while k < full {
+                    let xv = _mm256_loadu_ps(xptr.add(base + k));
+                    let cv = _mm256_loadu_ps(cptr.add(base + k));
+                    lanes = _mm256_add_ps(lanes, _mm256_mul_ps(xv, cv));
+                    k += LANES;
+                }
+                if tail != 0 {
+                    // masked lanes load +0.0 on both sides: adding the
+                    // +0.0 product leaves those accumulators untouched
+                    // bit-for-bit (a lane can never hold -0.0 — see the
+                    // module docs), matching the scalar contract's
+                    // "tail goes into lanes 0..tail"
+                    let xv = _mm256_maskload_ps(xptr.add(base + full), tail_mask);
+                    let cv = _mm256_maskload_ps(cptr.add(base + full), tail_mask);
+                    lanes = _mm256_add_ps(lanes, _mm256_mul_ps(xv, cv));
+                }
+                // horizontal reduction in the contract's tree order
+                let lo = _mm256_castps256_ps128(lanes);
+                let hi = _mm256_extractf128_ps(lanes, 1);
+                let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+                let t = _mm_add_ps(s, _mm_movehl_ps(s, s)); // [s0+s2, s1+s3, ..]
+                let d = _mm_add_ss(t, _mm_shuffle_ps(t, t, 0b01)); // t0 + t1
+                let dot = _mm_cvtss_f32(d);
+                acc += sbuf[gi] * dot + zbuf[gi] * xgrow[gi];
+            }
+            out[mi * width + (j - j0)] = acc;
+        }
+    }
+    out
+}
+
+/// Off x86-64 the Avx2 dispatch is unreachable by construction
+/// ([`detect`] never returns it there) — degrade to the reference body
+/// rather than fail to compile or invoke UB.
+#[cfg(not(target_arch = "x86_64"))]
+unsafe fn gemm_block_avx2(
+    x: &Tensor,
+    xg: &[f32],
+    w: &PackedLinear,
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
+    super::gemm::gemm_block_scalar(x, xg, w, j0, j1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_dot_matches_naive_within_tolerance_and_is_exact_on_integers() {
+        // tolerance against the naive order (the orders differ)...
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin()).collect();
+        let c: Vec<f32> = (0..37).map(|i| (i % 5) as f32).collect();
+        let naive: f32 = x.iter().zip(&c).map(|(a, b)| a * b).sum();
+        let laned = lane_dot(&x, &c);
+        assert!((laned - naive).abs() < 1e-4, "{laned} vs {naive}");
+        // ...but exact where every partial sum is representable
+        let xi: Vec<f32> = (0..19).map(|i| (i % 7) as f32).collect();
+        let ci: Vec<f32> = (0..19).map(|i| (i % 3) as f32).collect();
+        let exact: f32 = xi.iter().zip(&ci).map(|(a, b)| a * b).sum();
+        assert_eq!(lane_dot(&xi, &ci), exact);
+    }
+
+    #[test]
+    fn lane_sum_handles_all_tail_lengths() {
+        for n in 0..=24usize {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let expect = (n * n.saturating_sub(1) / 2) as f32;
+            assert_eq!(lane_sum(&x), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn reduce_tree_is_the_documented_order() {
+        // distinguishable values: any other association changes the bits
+        let l = [1e8f32, 1.0, -1e8, 3.0, 5.0, 7.0, 11.0, 13.0];
+        let expect = ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]));
+        assert_eq!(reduce_lanes(l), expect);
+    }
+
+    #[test]
+    fn resolve_honors_explicit_requests() {
+        assert_eq!(resolve(GemmKernel::Scalar), Dispatch::Scalar);
+        let simd = resolve(GemmKernel::Simd);
+        assert!(simd.is_simd(), "explicit simd may degrade to portable, never scalar");
+        assert_ne!(simd.label(), "scalar");
+    }
+
+    #[test]
+    fn dispatch_labels_are_stable() {
+        assert_eq!(Dispatch::Avx2.label(), "avx2");
+        assert_eq!(Dispatch::Portable.label(), "portable");
+        assert_eq!(Dispatch::Scalar.label(), "scalar");
+        assert!(Dispatch::Avx2.is_simd() && Dispatch::Portable.is_simd());
+        assert!(!Dispatch::Scalar.is_simd());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn tail_masks_enable_exactly_the_first_r_lanes() {
+        for (r, mask) in TAIL_MASKS.iter().enumerate() {
+            for (l, v) in mask.iter().enumerate() {
+                assert_eq!(*v == -1, l < r, "r={r} lane={l}");
+            }
+        }
+    }
+}

@@ -143,7 +143,8 @@ COMMANDS
             [--base <ckpt>] [--out <ckpt>] [--merge true]
   eval      --model tiny --ckpt <ckpt> --suite mmlu|arith|sql|datatotext [--n 64]
   serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--backend pjrt|native]
-            [--decode cached|recompute] [--bits 4] [--config <exp.toml>]
+            [--decode cached|recompute] [--gemm-kernel auto|simd|scalar]
+            [--bits 4] [--config <exp.toml>]
             [--requests 32] [--max-new 12]
             [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
             [--kv-paged true|false] [--kv-block-size 16]
@@ -155,6 +156,10 @@ COMMANDS
             --kv-paged (default true) serves over paged KV blocks — the
             budget admits by tokens actually cached, not full-context
             rows; false selects the contiguous reference layout.
+            --gemm-kernel picks the native engine's packed-GEMM inner
+            loop: auto (detect AVX2, honoring LOTA_GEMM_KERNEL),
+            simd (vector path), scalar (the reference) — outputs are
+            bit-identical, only the speed differs.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -351,6 +356,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(s) => lota_qaf::config::DecodeMode::parse(s)?,
         None => exp.decode,
     };
+    // packed-GEMM kernel for the native engine: flag wins, else the
+    // experiment TOML's `gemm_kernel`, else auto-detect
+    let gemm_kernel = match args.opt("gemm-kernel") {
+        Some(s) => lota_qaf::config::GemmKernel::parse(s)?,
+        None => exp.gemm_kernel,
+    };
     let path = match args.get("path", "merged").as_str() {
         "merged" => ServePath::Merged,
         "lora" => ServePath::LoraAdapter,
@@ -388,8 +399,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lota_qaf::config::Backend::Pjrt => Some(Runtime::new(&artifacts_dir(args))?),
         lota_qaf::config::Backend::Native => None,
     };
-    let mut opts =
-        ServeOptions::new(path, max_new).backend(backend).bits(bits).decode_mode(decode);
+    let mut opts = ServeOptions::new(path, max_new)
+        .backend(backend)
+        .bits(bits)
+        .decode_mode(decode)
+        .kernel(gemm_kernel);
     if let Some(sc) = &sched_cfg {
         opts = opts.scheduled(sc.clone());
     }
@@ -411,10 +425,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let load = generate_load(&spec)?;
         let (_responses, report) = serve_open_loop(&cfg, &store, &opts, &load)?;
         println!(
-            "served {} requests [native:sched, open loop {rate} req/s] in {:.2}s: \
+            "served {} requests [native:sched gemm={}, open loop {rate} req/s] in {:.2}s: \
              {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s, \
              ttft p50 {:.1}ms p95 {:.1}ms, queue wait {:.1}ms",
             report.requests,
+            report.gemm_kernel.unwrap_or("?"),
             report.wall_secs,
             report.tokens_per_sec,
             report.requests_per_sec,
@@ -434,8 +449,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let report = serve_batch(rt.as_ref(), &cfg, &store, &opts, &prompts)?;
     let backend_tag = match backend {
-        lota_qaf::config::Backend::Native if sched_cfg.is_some() => "native:sched".to_string(),
-        lota_qaf::config::Backend::Native => format!("native:{}", decode.as_str()),
+        lota_qaf::config::Backend::Native => {
+            let mode = if sched_cfg.is_some() { "sched" } else { decode.as_str() };
+            format!("native:{mode} gemm={}", report.gemm_kernel.unwrap_or("?"))
+        }
         lota_qaf::config::Backend::Pjrt => "pjrt".to_string(),
     };
     println!(

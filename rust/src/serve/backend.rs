@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{DecodeMode, ModelConfig, SchedConfig};
+use crate::config::{DecodeMode, GemmKernel, ModelConfig, SchedConfig};
 use crate::coordinator;
 use crate::engine::{self, Engine};
 use crate::model::ParamStore;
@@ -41,8 +41,10 @@ pub(crate) fn build_engine(
     store: &ParamStore,
     path: ServePath,
     n_bits: u32,
+    kernel: GemmKernel,
 ) -> Result<Engine> {
     let mut engine = Engine::from_store(cfg, store, n_bits)?;
+    engine.set_gemm_kernel(kernel);
     if path == ServePath::LoraAdapter {
         engine.attach_lora(store)?;
     }
@@ -77,6 +79,14 @@ pub trait ServeBackend {
     /// `Server` drain reports each run exactly once; one-shot backends
     /// return None.
     fn take_sched_stats(&self) -> Option<SchedStats> {
+        None
+    }
+
+    /// Which packed-GEMM kernel this backend's forwards run
+    /// (`avx2` / `portable` / `scalar`) — surfaced in the drain's
+    /// [`super::ThroughputReport`]. None for backends without the native
+    /// engine (PJRT computes through its lowered graphs instead).
+    fn gemm_kernel(&self) -> Option<&'static str> {
         None
     }
 }
@@ -181,15 +191,17 @@ impl NativeBackend {
         store: &ParamStore,
         path: ServePath,
         n_bits: u32,
+        kernel: GemmKernel,
     ) -> Result<NativeBackend> {
-        let engine = build_engine(cfg, store, path, n_bits)?;
+        let engine = build_engine(cfg, store, path, n_bits, kernel)?;
         log::info!(
-            "native backend[{}] {}-bit, {} packed weight bytes{}, {} KiB KV per cached row",
+            "native backend[{}] {}-bit, {} packed weight bytes{}, {} KiB KV per cached row, {} gemm",
             cfg.name,
             n_bits,
             engine.deployed_weight_bytes(),
             if engine.has_lora() { " + lora adapters" } else { "" },
-            engine.cache_row_bytes() / 1024
+            engine.cache_row_bytes() / 1024,
+            engine.gemm_kernel_label()
         );
         Ok(NativeBackend { engine, mode: DecodeMode::Cached })
     }
@@ -236,6 +248,10 @@ impl ServeBackend for NativeBackend {
     ) -> Result<(Vec<Generation>, DecodeStats)> {
         engine::greedy_decode_with(&self.engine, prompts, max_new, self.mode)
     }
+
+    fn gemm_kernel(&self) -> Option<&'static str> {
+        Some(self.engine.gemm_kernel_label())
+    }
 }
 
 /// The scheduled native path: one-shot serving as a thin wrapper over the
@@ -261,11 +277,12 @@ impl ScheduledBackend {
         path: ServePath,
         n_bits: u32,
         sched: &SchedConfig,
+        kernel: GemmKernel,
     ) -> Result<ScheduledBackend> {
-        let engine = build_engine(cfg, store, path, n_bits)?;
+        let engine = build_engine(cfg, store, path, n_bits, kernel)?;
         let opts = SchedOptions::from_config(sched);
         log::info!(
-            "scheduled backend[{}] {}-bit, max_batch {}, {} MiB KV budget, {} cache",
+            "scheduled backend[{}] {}-bit, max_batch {}, {} MiB KV budget, {} cache, {} gemm",
             cfg.name,
             n_bits,
             opts.max_batch,
@@ -274,7 +291,8 @@ impl ScheduledBackend {
                 format!("paged ({}-token blocks)", opts.kv_block_size)
             } else {
                 "contiguous".to_string()
-            }
+            },
+            engine.gemm_kernel_label()
         );
         Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None) })
     }
@@ -326,6 +344,10 @@ impl ServeBackend for ScheduledBackend {
     fn take_sched_stats(&self) -> Option<SchedStats> {
         self.last_sched.borrow_mut().take()
     }
+
+    fn gemm_kernel(&self) -> Option<&'static str> {
+        Some(self.engine.gemm_kernel_label())
+    }
 }
 
 #[cfg(test)]
@@ -350,7 +372,8 @@ mod tests {
     #[test]
     fn native_backend_serves_without_artifacts() {
         let (cfg, store) = tiny_store(1);
-        let be = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let be =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
         assert_eq!(be.label(), "native");
         let prompts: Vec<String> = (0..5).map(|i| format!("{i} + 1 =")).collect();
         let gens = be.decode(&prompts, 4).unwrap();
@@ -363,16 +386,19 @@ mod tests {
         let (cfg, mut store) = tiny_store(2);
         let mut rng = Rng::new(3);
         model::init_adapters(&cfg, crate::config::Method::Lora, &mut rng, &mut store);
-        let be = NativeBackend::new(&cfg, &store, ServePath::LoraAdapter, 4).unwrap();
+        let be =
+            NativeBackend::new(&cfg, &store, ServePath::LoraAdapter, 4, GemmKernel::Auto).unwrap();
         assert!(be.engine().has_lora());
-        let merged = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let merged =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
         assert!(!merged.engine().has_lora());
     }
 
     #[test]
     fn native_policy_is_adaptive() {
         let (cfg, store) = tiny_store(4);
-        let be = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let be =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
         assert_eq!(be.bucket_policy().pick(17), Some(17));
         // tiny rows are ~128 KiB of K/V, so the 1 GiB budget caps far
         // above any test batch — but the cap exists
@@ -385,9 +411,17 @@ mod tests {
     #[test]
     fn scheduled_backend_matches_one_shot_native() {
         let (cfg, store) = tiny_store(6);
-        let native = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let native =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
         let sched =
-            ScheduledBackend::new(&cfg, &store, ServePath::Merged, 4, &SchedConfig::default())
+            ScheduledBackend::new(
+                &cfg,
+                &store,
+                ServePath::Merged,
+                4,
+                &SchedConfig::default(),
+                GemmKernel::Auto,
+            )
                 .unwrap();
         assert_eq!(sched.label(), "native-sched");
         let prompts: Vec<String> = (0..5).map(|i| format!("{i} + 2 =")).collect();
@@ -407,12 +441,45 @@ mod tests {
     }
 
     #[test]
+    fn kernel_override_reaches_the_engine_and_the_generations_agree() {
+        let (cfg, store) = tiny_store(7);
+        let auto =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
+        let scalar =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Scalar).unwrap();
+        assert_eq!(scalar.gemm_kernel(), Some("scalar"));
+        // auto resolves to *some* kernel (which one depends on the host
+        // and LOTA_GEMM_KERNEL — never assert a specific label here)
+        assert!(auto.gemm_kernel().is_some());
+        // kernels are bit-identical by contract, so generations agree
+        let prompts: Vec<String> = (0..3).map(|i| format!("{i} + 1 =")).collect();
+        let a = auto.decode(&prompts, 3).unwrap();
+        let s = scalar.decode(&prompts, 3).unwrap();
+        for (x, y) in a.iter().zip(&s) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.tokens, y.tokens);
+        }
+        // the scheduled wrapper honors the same selection
+        let sched = ScheduledBackend::new(
+            &cfg,
+            &store,
+            ServePath::Merged,
+            4,
+            &SchedConfig::default(),
+            GemmKernel::Scalar,
+        )
+        .unwrap();
+        assert_eq!(sched.gemm_kernel(), Some("scalar"));
+    }
+
+    #[test]
     fn decode_modes_agree_and_report_work() {
         let (cfg, store) = tiny_store(5);
         let prompts: Vec<String> = (0..3).map(|i| format!("{i} + 3 =")).collect();
-        let cached = NativeBackend::new(&cfg, &store, ServePath::Merged, 4).unwrap();
+        let cached =
+            NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto).unwrap();
         assert_eq!(cached.mode(), DecodeMode::Cached);
-        let recomp = NativeBackend::new(&cfg, &store, ServePath::Merged, 4)
+        let recomp = NativeBackend::new(&cfg, &store, ServePath::Merged, 4, GemmKernel::Auto)
             .unwrap()
             .with_mode(DecodeMode::Recompute);
         let (cg, cs) = cached.decode_with_stats(&prompts, 5).unwrap();

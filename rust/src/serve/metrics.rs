@@ -146,6 +146,11 @@ pub struct ThroughputReport {
     /// full scheduler measurements when the run went through
     /// `crate::sched` (None for one-shot backends)
     pub sched: Option<SchedStats>,
+    /// which packed-GEMM kernel the native engine ran
+    /// (`avx2` / `portable` / `scalar`; None for PJRT serving) — keeps
+    /// every reported throughput number attributable to the code path
+    /// that produced it
+    pub gemm_kernel: Option<&'static str>,
 }
 
 impl ThroughputReport {
@@ -164,6 +169,7 @@ impl ThroughputReport {
             ttft_ms_p95: 0.0,
             queue_wait_ms: 0.0,
             sched: None,
+            gemm_kernel: None,
         }
     }
 
@@ -191,6 +197,13 @@ impl ThroughputReport {
             Some(s) => self.with_sched(s),
             None => self,
         }
+    }
+
+    /// Attach the packed-GEMM kernel label (builder style; None for
+    /// backends that don't run the native engine).
+    pub fn with_gemm_kernel(mut self, kernel: Option<&'static str>) -> ThroughputReport {
+        self.gemm_kernel = kernel;
+        self
     }
 
     /// Positions the backend fed per token it generated — 1.0 is the
@@ -350,6 +363,16 @@ mod tests {
         let plain = ThroughputReport::from_responses(&[], 0, 1.0).with_sched_opt(None);
         assert_eq!(plain.ttft_ms_p50, 0.0);
         assert!(plain.sched.is_none());
+    }
+
+    #[test]
+    fn gemm_kernel_rides_along() {
+        let r = ThroughputReport::from_responses(&[], 0, 1.0);
+        assert_eq!(r.gemm_kernel, None);
+        let r = r.with_gemm_kernel(Some("avx2"));
+        assert_eq!(r.gemm_kernel, Some("avx2"));
+        let r = r.with_gemm_kernel(None);
+        assert_eq!(r.gemm_kernel, None);
     }
 
     #[test]

@@ -47,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::config::{Backend, DecodeMode, Method, ModelConfig, SchedConfig};
+use crate::config::{Backend, DecodeMode, GemmKernel, Method, ModelConfig, SchedConfig};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
 use crate::sched::{LoadRequest, SchedOptions, SchedResponse, Scheduler};
@@ -88,6 +88,10 @@ pub struct ServeOptions {
     /// decode strategy (native backend only): KV-cached incremental steps
     /// or the full-prefix recompute reference
     pub decode: DecodeMode,
+    /// packed-GEMM inner kernel (native backend only): auto-detected
+    /// SIMD, forced SIMD, or the scalar reference — bit-identical either
+    /// way, so this is a speed/debug knob, never a correctness one
+    pub gemm_kernel: GemmKernel,
     /// route native serving through the continuous-batching scheduler
     /// (`crate::sched`); None serves one-shot
     pub sched: Option<SchedConfig>,
@@ -101,6 +105,7 @@ impl ServeOptions {
             n_bits: 4,
             max_new,
             decode: DecodeMode::Cached,
+            gemm_kernel: GemmKernel::Auto,
             sched: None,
         }
     }
@@ -117,6 +122,11 @@ impl ServeOptions {
 
     pub fn decode_mode(mut self, decode: DecodeMode) -> ServeOptions {
         self.decode = decode;
+        self
+    }
+
+    pub fn kernel(mut self, gemm_kernel: GemmKernel) -> ServeOptions {
+        self.gemm_kernel = gemm_kernel;
         self
     }
 
@@ -167,7 +177,8 @@ impl<'a> Server<'a> {
         mode: DecodeMode,
         max_new: usize,
     ) -> Result<Server<'a>> {
-        let backend = NativeBackend::new(cfg, store, path, n_bits)?.with_mode(mode);
+        let backend =
+            NativeBackend::new(cfg, store, path, n_bits, GemmKernel::Auto)?.with_mode(mode);
         Ok(Server::with_backend(Box::new(backend), max_new))
     }
 
@@ -199,12 +210,21 @@ impl<'a> Server<'a> {
                     if opts.decode == DecodeMode::Recompute {
                         bail!("the scheduler decodes KV-cached; drop decode=recompute");
                     }
-                    let backend =
-                        ScheduledBackend::new(cfg, store, opts.path, opts.n_bits, sched)?;
+                    let backend = ScheduledBackend::new(
+                        cfg,
+                        store,
+                        opts.path,
+                        opts.n_bits,
+                        sched,
+                        opts.gemm_kernel,
+                    )?;
                     Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
                 None => {
-                    Server::native(cfg, store, opts.path, opts.n_bits, opts.decode, opts.max_new)
+                    let backend =
+                        NativeBackend::new(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?
+                            .with_mode(opts.decode);
+                    Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
             },
         }
@@ -255,7 +275,8 @@ impl<'a> Server<'a> {
         let wall = t0.elapsed().as_secs_f64();
         let report = ThroughputReport::from_responses(&responses, total_tokens, wall)
             .with_decode(decode_stats)
-            .with_sched_opt(sched_stats);
+            .with_sched_opt(sched_stats)
+            .with_gemm_kernel(self.backend.gemm_kernel());
         Ok((responses, report))
     }
 }
@@ -313,7 +334,7 @@ pub fn serve_open_loop(
     let Some(sched_cfg) = opts.sched.clone() else {
         bail!("open-loop serving needs a scheduler config (ServeOptions::scheduled)");
     };
-    let engine = backend::build_engine(cfg, store, opts.path, opts.n_bits)?;
+    let engine = backend::build_engine(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?;
     let mut sched = Scheduler::new(&engine, &SchedOptions::from_config(&sched_cfg))?;
 
     let mut order: Vec<&LoadRequest> = load.iter().collect();
@@ -382,7 +403,8 @@ pub fn serve_open_loop(
     }
     let report = ThroughputReport::from_responses(&shim, tokens, wall)
         .with_decode(sched.decode_stats())
-        .with_sched(stats);
+        .with_sched(stats)
+        .with_gemm_kernel(Some(engine.gemm_kernel_label()));
     Ok((responses, report))
 }
 
@@ -470,6 +492,23 @@ mod tests {
         assert!(rep_s.sched.is_some(), "scheduled drain lost its measurements");
         assert!(rep_p.sched.is_none());
         assert_eq!(rep_s.sched.as_ref().unwrap().queue_wait_ms.len(), 6);
+    }
+
+    #[test]
+    fn reports_surface_the_gemm_kernel() {
+        let (cfg, store) = tiny_store();
+        let prompts: Vec<String> = (0..2).map(|i| format!("{i} + 1 =")).collect();
+        let auto = ServeOptions::new(ServePath::Merged, 2).backend(Backend::Native);
+        let scalar = ServeOptions::new(ServePath::Merged, 2)
+            .backend(Backend::Native)
+            .kernel(GemmKernel::Scalar);
+        let rep_a = serve_batch(None, &cfg, &store, &auto, &prompts).unwrap();
+        let rep_s = serve_batch(None, &cfg, &store, &scalar, &prompts).unwrap();
+        assert_eq!(rep_s.gemm_kernel, Some("scalar"));
+        // auto resolves host-dependently; it must report *something*
+        assert!(rep_a.gemm_kernel.is_some());
+        // and the kernels cannot disagree on what they generate
+        assert_eq!(rep_a.tokens, rep_s.tokens);
     }
 
     #[test]

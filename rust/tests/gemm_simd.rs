@@ -1,0 +1,186 @@
+//! SIMD/scalar packed-GEMM parity, pinned **bit-identical** — the
+//! integration-level statement of the lane-ordered accumulation contract
+//! in `engine::simd`.
+//!
+//! Every kernel the dispatcher can select (AVX2 where the host has it,
+//! the portable 8-lane fallback, the scalar reference) must produce the
+//! same `f32` bits on the same inputs, across bit widths, group sizes
+//! with 8-lane remainder tails, batch shapes, and thread counts — that
+//! bitwise agreement is what lets the engine/sched/paged parity suites
+//! keep holding `assert_eq!` whatever hardware CI lands on. Artifact-free;
+//! runs in the CI `build` job on every PR (and the whole `engine_parity`
+//! suite re-runs under `LOTA_GEMM_KERNEL=scalar` as the fallback leg).
+//!
+//! Tests in this binary run under one mutex: the dispatch-bypass test
+//! watches a process-global counter of SIMD block executions, which would
+//! race against concurrently running matmuls from sibling tests.
+
+use std::sync::Mutex;
+
+use lota_qaf::config::GemmKernel;
+use lota_qaf::engine::{
+    matmul_packed_dispatch, matmul_packed_opts, simd, Engine, GemmDispatch, PackedLinear,
+};
+use lota_qaf::model;
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::tensor::{Rng, Tensor};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(
+    seed: u64,
+    m: usize,
+    din: usize,
+    dout: usize,
+    gs: usize,
+    bits: u32,
+) -> (Tensor, PackedLinear) {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+    let ql = rtn_quantize(&w, gs, bits);
+    let x = Tensor::new(&[m, din], rng.normal_vec(m * din, 1.0));
+    (x, PackedLinear::from_quantized(&ql).unwrap())
+}
+
+/// All dispatches this host can actually run (AVX2 only where detected).
+fn available_dispatches() -> Vec<GemmDispatch> {
+    let mut d = vec![GemmDispatch::Scalar, GemmDispatch::Portable];
+    if simd::resolve(GemmKernel::Simd) == GemmDispatch::Avx2 {
+        d.push(GemmDispatch::Avx2);
+    }
+    d
+}
+
+#[test]
+fn kernels_bitwise_identical_across_bit_widths_and_group_tails() {
+    let _g = locked();
+    // group sizes chosen so the 8-lane split sees: no tail (gs = 16, 32),
+    // tails of 4 (gs = 12, 20), and an all-tail group (gs = 6 < lanes)
+    for bits in [2u32, 3, 4] {
+        for (m, din, dout, gs) in [
+            (1, 48, 20, 16),
+            (5, 96, 33, 32),
+            (3, 60, 24, 12),
+            (4, 80, 17, 20),
+            (2, 36, 9, 6),
+        ] {
+            let (x, pl) = setup(bits as u64 * 1000 + gs as u64, m, din, dout, gs, bits);
+            let scalar = matmul_packed_dispatch(&x, &pl, GemmDispatch::Scalar, Some(1));
+            for d in available_dispatches() {
+                let y = matmul_packed_dispatch(&x, &pl, d, Some(1));
+                assert_eq!(
+                    y, scalar,
+                    "kernel {} diverged from scalar (bits={bits} m={m} din={din} \
+                     dout={dout} gs={gs})",
+                    d.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_row_calls_match_batched_rows_under_every_kernel() {
+    let _g = locked();
+    // the cached-decode contract, per kernel: any row subset reproduces
+    // the full batch's bits exactly
+    let (x, pl) = setup(7, 6, 64, 40, 16, 4);
+    let dout = pl.dout();
+    for d in available_dispatches() {
+        let full = matmul_packed_dispatch(&x, &pl, d, Some(1));
+        for mi in 0..x.rows() {
+            let one = Tensor::new(&[1, x.cols()], x.row(mi).to_vec());
+            let y = matmul_packed_dispatch(&one, &pl, d, Some(1));
+            assert_eq!(
+                y.data(),
+                &full.data()[mi * dout..(mi + 1) * dout],
+                "kernel {} row {mi}",
+                d.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_fanout_never_changes_bits_under_any_kernel() {
+    let _g = locked();
+    let (x, pl) = setup(9, 11, 64, 50, 20, 3);
+    for d in available_dispatches() {
+        let serial = matmul_packed_dispatch(&x, &pl, d, Some(1));
+        for threads in [2usize, 3, 8, 64] {
+            let par = matmul_packed_dispatch(&x, &pl, d, Some(threads));
+            assert_eq!(par, serial, "kernel {} threads {threads}", d.label());
+        }
+    }
+}
+
+#[test]
+fn requested_kernels_resolve_and_agree() {
+    let _g = locked();
+    let (x, pl) = setup(13, 4, 48, 24, 12, 2);
+    let scalar = matmul_packed_opts(&x, &pl, GemmKernel::Scalar, Some(1));
+    let simd_y = matmul_packed_opts(&x, &pl, GemmKernel::Simd, Some(1));
+    let auto_y = matmul_packed_opts(&x, &pl, GemmKernel::Auto, Some(1));
+    assert_eq!(simd_y, scalar);
+    assert_eq!(auto_y, scalar);
+    // an explicit simd request never resolves to the scalar reference
+    assert!(simd::resolve(GemmKernel::Simd).is_simd());
+    assert_eq!(simd::resolve(GemmKernel::Scalar), GemmDispatch::Scalar);
+}
+
+#[test]
+fn forced_scalar_override_bypasses_the_simd_path() {
+    let _g = locked();
+    let (x, pl) = setup(17, 3, 64, 32, 16, 4);
+    // forced scalar: the SIMD block counter must not move — identical
+    // *bits* alone wouldn't prove the override reached the dispatcher
+    let before = simd::simd_blocks_run();
+    for threads in [1usize, 4] {
+        matmul_packed_opts(&x, &pl, GemmKernel::Scalar, Some(threads));
+    }
+    assert_eq!(
+        simd::simd_blocks_run(),
+        before,
+        "a scalar-forced matmul executed a SIMD block"
+    );
+    // forced simd: the counter must advance (portable counts as SIMD —
+    // the point is which code path ran, not which ISA)
+    let before = simd::simd_blocks_run();
+    matmul_packed_opts(&x, &pl, GemmKernel::Simd, Some(1));
+    assert!(simd::simd_blocks_run() > before, "a simd-forced matmul never ran a SIMD block");
+}
+
+#[test]
+fn engine_level_override_switches_the_whole_forward() {
+    let _g = locked();
+    let cfg = lota_qaf::config::preset("tiny").unwrap();
+    let mut rng = Rng::new(23);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+        Ok(rtn_quantize(w, cfg.group_size, 4))
+    })
+    .unwrap();
+    let mut scalar_eng = Engine::from_store(&cfg, &store, 4).unwrap();
+    scalar_eng.set_gemm_kernel(GemmKernel::Scalar);
+    assert_eq!(scalar_eng.gemm_kernel_label(), "scalar");
+    let mut simd_eng = Engine::from_store(&cfg, &store, 4).unwrap();
+    simd_eng.set_gemm_kernel(GemmKernel::Simd);
+    assert_ne!(simd_eng.gemm_kernel_label(), "scalar");
+
+    let tokens = Tensor::new(&[2, 9], (0..18).map(|i| (i % cfg.vocab) as f32).collect());
+    let ls = scalar_eng.forward(&tokens).unwrap();
+    let lv = simd_eng.forward(&tokens).unwrap();
+    // a full transformer forward, layer norms and attention included,
+    // bit-identical across kernels — the property every serving parity
+    // pin in this repo stands on
+    assert_eq!(ls, lv);
+
+    // and the scalar engine really avoids SIMD blocks end to end
+    let before = simd::simd_blocks_run();
+    scalar_eng.forward(&tokens).unwrap();
+    assert_eq!(simd::simd_blocks_run(), before);
+}
