@@ -34,13 +34,13 @@
 
 use std::time::{Duration, Instant};
 
-use lota_qaf::bench_harness::Table;
+use lota_qaf::bench_harness::{BenchResult, JsonReport, Table};
 use lota_qaf::config::{preset, Backend, SchedConfig};
 use lota_qaf::engine::Engine;
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
 use lota_qaf::sched::{generate_load, LoadSpec, SchedOptions, Scheduler};
-use lota_qaf::serve::{serve_open_loop, LatencyStats, ServeOptions, ServePath};
+use lota_qaf::serve::{serve_open_loop, Histogram, LatencyStats, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -49,6 +49,22 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One scheduler histogram as a `BENCH_serve.json` result row. The row
+/// reuses the harness's timing-quad field names, but the values are in
+/// the histogram's own unit (ms for the latency rows, a 0..1 ratio for
+/// occupancy/utilization) — the row name carries the unit.
+fn hist_row(name: &str, h: &Histogram) -> BenchResult {
+    let s = h.stats();
+    BenchResult {
+        name: name.to_string(),
+        iters: h.len(),
+        mean_secs: s.mean,
+        p50_secs: s.p50,
+        p95_secs: s.p95,
+        min_secs: h.min(),
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -305,5 +321,39 @@ fn main() -> anyhow::Result<()> {
              (paged peak {paged_peak})"
         );
     }
+
+    // machine-readable twin of the tables above: scheduler histograms as
+    // result rows (TTFT, inter-token gaps, queue wait, occupancy, block
+    // utilization) plus the headline throughput numbers as meta
+    let mut jr = JsonReport::new("serve");
+    jr.meta_str("model", &model)
+        .meta_num("n_requests", n_reqs as f64)
+        .meta_num("rate_per_sec", rate)
+        .meta_num("max_batch", max_batch as f64)
+        .meta_num("kv_budget_mb", budget_mb as f64)
+        .meta_str("gemm_kernel", cont.gemm_kernel.unwrap_or("?"))
+        .meta_num("tokens_per_sec", cont.tokens_per_sec)
+        .meta_num("requests_per_sec", cont.requests_per_sec)
+        .meta_num("static_tokens_per_sec", stat_tokens as f64 / stat_wall.max(1e-12))
+        .meta_num("speedup_continuous_over_static", speedup)
+        .meta_num("paged_peak_active", paged_peak as f64)
+        .meta_num("contiguous_peak_active", contig_peak as f64)
+        .meta_str("units", "latency rows in ms; occupancy/util rows are 0..1 ratios");
+    if let Some(s) = cont.sched.as_ref() {
+        jr.meta_num("peak_active", s.peak_active as f64)
+            .meta_num("admission_denied", s.admission_denied as f64);
+        jr.push(&hist_row("ttft_ms", &s.ttft_ms))
+            .push(&hist_row("inter_token_ms", &s.inter_token_ms))
+            .push(&hist_row("queue_wait_ms", &s.queue_wait_ms))
+            .push(&hist_row("batch_occupancy", &s.batch_occupancy));
+    }
+    if let Some(s) = paged_rep.sched.as_ref() {
+        if !s.block_util.is_empty() {
+            jr.push(&hist_row("block_util", &s.block_util));
+        }
+    }
+    let json_path = JsonReport::default_path("serve");
+    jr.write(&json_path)?;
+    println!("wrote {}", json_path.display());
     Ok(())
 }

@@ -345,6 +345,12 @@ pub struct ExperimentConfig {
     /// continuous-batching scheduler config (the `[sched]` TOML table);
     /// None serves one-shot
     pub sched: Option<SchedConfig>,
+    /// write a Chrome-trace JSON span timeline of the scheduled serving
+    /// run here (`trace_out` in TOML; requires the scheduler)
+    pub trace_out: Option<String>,
+    /// write a metrics snapshot of the final serving report here
+    /// (`metrics_out` in TOML; `.json` → JSON, else Prometheus text)
+    pub metrics_out: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -365,6 +371,8 @@ impl Default for ExperimentConfig {
             decode: DecodeMode::Cached,
             gemm_kernel: GemmKernel::Auto,
             sched: None,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -413,6 +421,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("gemm_kernel") {
             c.gemm_kernel = GemmKernel::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("trace_out") {
+            c.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("metrics_out") {
+            c.metrics_out = Some(v.to_string());
         }
         c.sched = SchedConfig::from_toml(doc)?;
         if !(2..=4).contains(&c.n_bits) {
@@ -475,6 +489,20 @@ mod tests {
         assert_eq!(c.n_bits, 3);
         assert_eq!(c.steps, 42);
         assert!((c.omega(16) - 14.0).abs() < 1e-6);
+        // observability outputs default off
+        assert_eq!(c.trace_out, None);
+        assert_eq!(c.metrics_out, None);
+    }
+
+    #[test]
+    fn observability_outputs_parse() {
+        let doc = TomlDoc::parse(
+            "trace_out = \"out/trace.json\"\nmetrics_out = \"out/metrics.prom\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.prom"));
     }
 
     #[test]

@@ -14,6 +14,20 @@
 //! external ones (no block owned by two rows, free + live == pool size)
 //! are pinned by the property harness in `tests/kv_paged.rs`.
 
+/// Cumulative allocator traffic — what the observability layer
+/// ([`crate::obs`]) snapshots as counters each scheduler step. All
+/// fields are monotone over the pool's lifetime (releases never
+/// decrement `allocs`), so consecutive snapshots difference cleanly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockCounters {
+    /// blocks ever granted
+    pub allocs: u64,
+    /// blocks ever returned
+    pub frees: u64,
+    /// most blocks simultaneously granted out
+    pub peak_in_use: usize,
+}
+
 /// A fixed pool of KV blocks with a LIFO free list.
 #[derive(Clone, Debug)]
 pub struct BlockAllocator {
@@ -22,6 +36,7 @@ pub struct BlockAllocator {
     /// `is_free[id]` — double-release / double-grant detection
     is_free: Vec<bool>,
     total: usize,
+    counters: BlockCounters,
 }
 
 impl BlockAllocator {
@@ -32,6 +47,7 @@ impl BlockAllocator {
             free: (0..total).rev().collect(),
             is_free: vec![true; total],
             total,
+            counters: BlockCounters::default(),
         }
     }
 
@@ -41,6 +57,8 @@ impl BlockAllocator {
         let id = self.free.pop()?;
         debug_assert!(self.is_free[id]);
         self.is_free[id] = false;
+        self.counters.allocs += 1;
+        self.counters.peak_in_use = self.counters.peak_in_use.max(self.in_use());
         Some(id)
     }
 
@@ -52,6 +70,12 @@ impl BlockAllocator {
         assert!(!self.is_free[id], "double release of block {id}");
         self.is_free[id] = true;
         self.free.push(id);
+        self.counters.frees += 1;
+    }
+
+    /// Cumulative traffic counters (see [`BlockCounters`]).
+    pub fn counters(&self) -> BlockCounters {
+        self.counters
     }
 
     /// Blocks currently available.
@@ -126,5 +150,28 @@ mod tests {
         let mut a = BlockAllocator::new(0);
         assert_eq!(a.alloc(), None);
         assert_eq!(a.total_blocks(), 0);
+        assert_eq!(a.counters(), BlockCounters::default(), "a dry alloc is not traffic");
+    }
+
+    #[test]
+    fn counters_accumulate_and_peak_holds() {
+        let mut a = BlockAllocator::new(3);
+        let x = a.alloc().unwrap();
+        let y = a.alloc().unwrap();
+        assert_eq!(a.counters(), BlockCounters { allocs: 2, frees: 0, peak_in_use: 2 });
+        a.release(x);
+        // the peak survives the release; frees tick up
+        assert_eq!(a.counters(), BlockCounters { allocs: 2, frees: 1, peak_in_use: 2 });
+        let z = a.alloc().unwrap();
+        a.release(y);
+        a.release(z);
+        let c = a.counters();
+        assert_eq!((c.allocs, c.frees), (3, 3));
+        assert_eq!(c.peak_in_use, 2, "in-use never exceeded 2");
+        // exhaustion attempts don't count as allocs
+        let mut b = BlockAllocator::new(1);
+        b.alloc().unwrap();
+        assert_eq!(b.alloc(), None);
+        assert_eq!(b.counters().allocs, 1);
     }
 }

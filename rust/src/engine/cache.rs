@@ -35,7 +35,7 @@
 
 use anyhow::{bail, Result};
 
-use super::blocks::BlockAllocator;
+use super::blocks::{BlockAllocator, BlockCounters};
 
 /// The paged layout's bookkeeping: the shared pool plus one page table
 /// per request row.
@@ -69,6 +69,10 @@ pub struct KvCache {
     len: Vec<usize>,
     /// block pool + page tables; None selects the contiguous layout
     paged: Option<Paged>,
+    /// cumulative wall time the forward spent growing page tables
+    /// ([`KvCache::ensure_blocks`]), seconds — observability only, always
+    /// 0.0 for the contiguous layout
+    alloc_wall_secs: f64,
 }
 
 impl KvCache {
@@ -84,6 +88,7 @@ impl KvCache {
             v: (0..n_layers).map(|_| vec![0.0f32; slab]).collect(),
             len: vec![0; batch],
             paged: None,
+            alloc_wall_secs: 0.0,
         }
     }
 
@@ -119,6 +124,7 @@ impl KvCache {
                 alloc: BlockAllocator::new(pool_blocks),
                 tables: vec![Vec::new(); batch],
             }),
+            alloc_wall_secs: 0.0,
         })
     }
 
@@ -152,6 +158,22 @@ impl KvCache {
     /// Pool size in blocks (None for the contiguous layout).
     pub fn total_blocks(&self) -> Option<usize> {
         self.paged.as_ref().map(|p| p.alloc.total_blocks())
+    }
+
+    /// Cumulative pool traffic counters (None for the contiguous layout).
+    pub fn block_counters(&self) -> Option<BlockCounters> {
+        self.paged.as_ref().map(|p| p.alloc.counters())
+    }
+
+    /// Add `secs` of block-allocation wall time (the forward times its
+    /// [`KvCache::ensure_blocks`] call when the layout is paged).
+    pub(crate) fn note_alloc_wall(&mut self, secs: f64) {
+        self.alloc_wall_secs += secs;
+    }
+
+    /// Cumulative wall time spent growing page tables, milliseconds.
+    pub fn alloc_wall_ms(&self) -> f64 {
+        self.alloc_wall_secs * 1e3
     }
 
     /// The physical block ids backing `row`, in logical order (empty for

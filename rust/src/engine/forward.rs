@@ -330,8 +330,17 @@ impl Engine {
 
         // paged layout: grab any blocks the new positions need now that
         // every input is validated — a dry pool fails clean with the page
-        // tables rolled back and nothing written (no-op when contiguous)
-        cache.ensure_blocks(rows, t_new)?;
+        // tables rolled back and nothing written (no-op when contiguous).
+        // Timed into the cache's alloc-wall accumulator so the tracer can
+        // attribute step time to block allocation; the contiguous layout
+        // skips even the clock reads.
+        if cache.is_paged() {
+            let t_alloc = std::time::Instant::now();
+            cache.ensure_blocks(rows, t_new)?;
+            cache.note_alloc_wall(t_alloc.elapsed().as_secs_f64());
+        } else {
+            cache.ensure_blocks(rows, t_new)?;
+        }
         // layout-resolved addressing, identical for every layer: where
         // each new position's K/V row lands, and the storage runs backing
         // each request's prefix + new positions in logical order

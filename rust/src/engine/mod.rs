@@ -65,7 +65,7 @@ pub mod gemm;
 pub mod packed;
 pub mod simd;
 
-pub use blocks::BlockAllocator;
+pub use blocks::{BlockAllocator, BlockCounters};
 pub use cache::KvCache;
 pub use decode::{greedy_decode, greedy_decode_paged, greedy_decode_with, DecodeStats, Generation};
 pub use forward::Engine;

@@ -54,6 +54,14 @@
 //! waiting requests the moment they finish — with TTFT / queue-wait /
 //! occupancy metrics and streaming token sinks. Scheduled greedy output
 //! stays bit-identical to the one-shot cached decode.
+//!
+//! The serving path is observable end to end through [`obs`]: the
+//! scheduler emits per-request lifecycle spans and per-step phase spans
+//! into an [`obs::Tracer`] (`--trace-out` exports them as a
+//! Perfetto-loadable Chrome trace), and [`obs::MetricsRegistry`]
+//! snapshots a run's [`serve::ThroughputReport`] to Prometheus text or
+//! JSON (`--metrics-out`). Tracing is opt-in and provably inert when
+//! disabled — the parity pins above hold with it on or off.
 
 pub mod adapter;
 pub mod bench_harness;
@@ -62,6 +70,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod quant;
 pub mod runtime;

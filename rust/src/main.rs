@@ -144,11 +144,12 @@ COMMANDS
   eval      --model tiny --ckpt <ckpt> --suite mmlu|arith|sql|datatotext [--n 64]
   serve     --model tiny --ckpt <ckpt> [--path merged|lora] [--backend pjrt|native]
             [--decode cached|recompute] [--gemm-kernel auto|simd|scalar]
-            [--bits 4] [--config <exp.toml>]
+            [--bits 4] [--config <exp.toml>] [--synthetic true|false]
             [--requests 32] [--max-new 12]
             [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
             [--kv-paged true|false] [--kv-block-size 16]
             [--arrival-rate <req/s>] [--load-seed 123]
+            [--trace-out <trace.json>] [--metrics-out <metrics.json|.prom>]
             --sched routes the native backend through the continuous-batching
             scheduler (defaults from the [sched] TOML table; see
             examples/serve_sched.toml). With --arrival-rate the request
@@ -160,6 +161,13 @@ COMMANDS
             loop: auto (detect AVX2, honoring LOTA_GEMM_KERNEL),
             simd (vector path), scalar (the reference) — outputs are
             bit-identical, only the speed differs.
+            --synthetic true serves an in-process RTN-quantized random
+            store (no --ckpt, no artifacts) — smoke runs and CI.
+            --trace-out writes a Chrome-trace/Perfetto JSON span timeline
+            of the scheduled run (needs --sched true; load the file at
+            ui.perfetto.dev). --metrics-out snapshots the final report's
+            metrics registry (.json → JSON, else Prometheus text). Both
+            also honor the trace_out / metrics_out TOML keys.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
   info      [--artifacts artifacts]
 
@@ -343,9 +351,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let model_name = args.get("model", &exp.model);
     let cfg = preset(&model_name)?;
-    let store = checkpoint::load(Path::new(
-        args.opt("ckpt").context("--ckpt <path> required")?,
-    ))?;
+    // --synthetic true builds an in-process RTN-quantized store from
+    // random weights: no checkpoint, no artifacts — enough to exercise
+    // the whole serving path (the CI trace-smoke leg runs this)
+    let synthetic = match args.opt("synthetic") {
+        Some("true") | Some("on") => true,
+        Some("false") | Some("off") | None => false,
+        Some(other) => bail!("--synthetic wants true|false (got '{other}')"),
+    };
+    let store = if synthetic {
+        let bits = args.get_usize("bits", exp.n_bits as usize)? as u32;
+        let mut rng = Rng::new(args.get_usize("seed", 11)? as u64);
+        let fp = model::init_fp(&cfg, &mut rng);
+        model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(lota_qaf::quant::rtn_quantize(w, cfg.group_size, bits))
+        })?
+    } else {
+        checkpoint::load(Path::new(
+            args.opt("ckpt").context("--ckpt <path> required (or --synthetic true)")?,
+        ))?
+    };
     let backend = match args.opt("backend") {
         Some(s) => lota_qaf::config::Backend::parse(s)?,
         None => exp.backend,
@@ -407,6 +432,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(sc) = &sched_cfg {
         opts = opts.scheduled(sc.clone());
     }
+    // observability outputs: flags win over the experiment TOML's
+    // trace_out / metrics_out keys
+    let trace_out = args
+        .opt("trace-out")
+        .map(PathBuf::from)
+        .or_else(|| exp.trace_out.as_ref().map(PathBuf::from));
+    let metrics_out = args
+        .opt("metrics-out")
+        .map(PathBuf::from)
+        .or_else(|| exp.metrics_out.as_ref().map(PathBuf::from));
+    if trace_out.is_some() && sched_cfg.is_none() {
+        bail!("--trace-out records scheduler span timelines: pass --sched true");
+    }
+    if let Some(p) = &trace_out {
+        opts = opts.trace_out(p.clone());
+    }
 
     // open-loop mode: requests arrive over time (Poisson) instead of all
     // at t = 0 — the workload shape the scheduler exists for
@@ -439,6 +480,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.ttft_ms_p95,
             report.queue_wait_ms
         );
+        if let Some(p) = &metrics_out {
+            lota_qaf::obs::MetricsRegistry::from_report(&report).write(p)?;
+            println!("metrics snapshot written to {}", p.display());
+        }
         return Ok(());
     }
 
@@ -470,6 +515,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "  scheduler: ttft p50 {:.1}ms p95 {:.1}ms, mean queue wait {:.1}ms",
             report.ttft_ms_p50, report.ttft_ms_p95, report.queue_wait_ms
         );
+    }
+    if let Some(p) = &metrics_out {
+        lota_qaf::obs::MetricsRegistry::from_report(&report).write(p)?;
+        println!("metrics snapshot written to {}", p.display());
     }
     Ok(())
 }

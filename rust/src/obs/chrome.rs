@@ -1,0 +1,219 @@
+//! Chrome-trace-event JSON export of a recorded run.
+//!
+//! Output follows the Trace Event Format's "JSON object" flavor —
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}` — which both
+//! Perfetto (<https://ui.perfetto.dev>, drag-and-drop the file) and the
+//! legacy `chrome://tracing` UI load directly. Mapping:
+//!
+//! * [`Track::Scheduler`] → pid 1 / tid 0, process name `scheduler`:
+//!   the per-step phase spans (`step`, `admission`, `prefill_forward`,
+//!   `decode_forward`, `kv_release`) and counter tracks.
+//! * [`Track::Request`]`(id)` → pid 2 / tid = id, process name
+//!   `requests`, thread name `req <id>`: that request's lifecycle chain
+//!   (`request` enclosing `queued`, `prefill`, `decode_step`…).
+//! * [`EventKind::Begin`]/[`EventKind::End`] → `ph: "B"` / `"E"`
+//!   duration events, [`EventKind::Counter`] → `ph: "C"` with
+//!   `args.value`; timestamps (`ts`) are microseconds from the
+//!   recording tracer's construction.
+//! * [`crate::obs::Tracer::meta`] facts (e.g. `gemm_kernel`) land in a top-level
+//!   `"meta"` object — viewers ignore unknown top-level keys, while the
+//!   CI trace-smoke check and tests read them back.
+//!
+//! Written with the crate's own streaming [`JsonWriter`] (the offline
+//! build has no serde), and parseable back with [`crate::config::Json`],
+//! which is how the golden tests validate a written file.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::JsonWriter;
+use crate::obs::tracer::{EventKind, RecordingTracer, Track};
+
+/// (pid, tid) for a track, per the module-doc mapping.
+fn track_ids(track: Track) -> (f64, f64) {
+    match track {
+        Track::Scheduler => (1.0, 0.0),
+        Track::Request(id) => (2.0, id as f64),
+    }
+}
+
+fn event_common(w: &mut JsonWriter, ph: &str, track: Track, name: &str, ts_us: f64) {
+    let (pid, tid) = track_ids(track);
+    w.begin_obj()
+        .key("ph")
+        .str(ph)
+        .key("pid")
+        .num(pid)
+        .key("tid")
+        .num(tid)
+        .key("name")
+        .str(name)
+        .key("ts")
+        .num(ts_us)
+        .key("cat")
+        .str(match track {
+            Track::Scheduler => "sched",
+            Track::Request(_) => "request",
+        });
+}
+
+fn metadata_event(w: &mut JsonWriter, pid: f64, tid: f64, kind: &str, value: &str) {
+    w.begin_obj()
+        .key("ph")
+        .str("M")
+        .key("pid")
+        .num(pid)
+        .key("tid")
+        .num(tid)
+        .key("name")
+        .str(kind)
+        .key("args")
+        .begin_obj()
+        .key("name")
+        .str(value)
+        .end_obj()
+        .end_obj();
+}
+
+/// Render a recorded run as a Chrome-trace JSON string.
+pub fn chrome_trace_json(rec: &RecordingTracer) -> String {
+    let events = rec.events();
+    let mut w = JsonWriter::new();
+    w.begin_obj().key("displayTimeUnit").str("ms");
+
+    w.key("traceEvents").begin_arr();
+    // name the tracks first so viewers label them even for empty runs
+    metadata_event(&mut w, 1.0, 0.0, "process_name", "scheduler");
+    metadata_event(&mut w, 1.0, 0.0, "thread_name", "steps");
+    metadata_event(&mut w, 2.0, 0.0, "process_name", "requests");
+    let mut req_ids: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e.track {
+            Track::Request(id) => Some(id),
+            Track::Scheduler => None,
+        })
+        .collect();
+    req_ids.sort_unstable();
+    req_ids.dedup();
+    for id in req_ids {
+        metadata_event(&mut w, 2.0, id as f64, "thread_name", &format!("req {id}"));
+    }
+    for e in &events {
+        match e.kind {
+            EventKind::Begin => {
+                event_common(&mut w, "B", e.track, e.name, e.ts_us);
+                w.end_obj();
+            }
+            EventKind::End => {
+                event_common(&mut w, "E", e.track, e.name, e.ts_us);
+                w.end_obj();
+            }
+            EventKind::Counter(v) => {
+                event_common(&mut w, "C", e.track, e.name, e.ts_us);
+                w.key("args").begin_obj().key("value").num(v).end_obj().end_obj();
+            }
+        }
+    }
+    w.end_arr();
+
+    w.key("meta").begin_obj();
+    for (k, v) in rec.meta_entries() {
+        w.key(k).str(&v);
+    }
+    w.end_obj();
+
+    w.end_obj();
+    w.finish()
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &Path, rec: &RecordingTracer) -> Result<()> {
+    fs::write(path, chrome_trace_json(rec))
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    use super::*;
+    use crate::config::Json;
+    use crate::obs::tracer::Tracer;
+
+    fn sample_trace() -> RecordingTracer {
+        let mut tr = RecordingTracer::new();
+        let t = Instant::now();
+        tr.meta("gemm_kernel", "scalar");
+        tr.begin(Track::Request(0), "request", t);
+        tr.begin(Track::Request(0), "queued", t);
+        tr.begin(Track::Scheduler, "step", t);
+        tr.counter(Track::Scheduler, "queue_depth", 1.0, t);
+        tr.end(Track::Request(0), "queued", t);
+        tr.end(Track::Scheduler, "step", t);
+        tr.end(Track::Request(0), "request", t);
+        tr
+    }
+
+    #[test]
+    fn exported_json_parses_and_keeps_every_event() {
+        let tr = sample_trace();
+        let doc = Json::parse(&chrome_trace_json(&tr)).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 7 recorded events + 3 fixed metadata + 1 per-request thread name
+        assert_eq!(events.len(), tr.len() + 4);
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+        let meta = doc.get("meta").unwrap();
+        assert_eq!(meta.get("gemm_kernel").unwrap().as_str().unwrap(), "scalar");
+    }
+
+    #[test]
+    fn begin_end_counter_phases_round_trip() {
+        let doc = Json::parse(&chrome_trace_json(&sample_trace())).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let phs: Vec<String> = events
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(phs.iter().filter(|p| *p == "M").count(), 4);
+        assert_eq!(phs.iter().filter(|p| *p == "B").count(), 3);
+        assert_eq!(phs.iter().filter(|p| *p == "E").count(), 3);
+        assert_eq!(phs.iter().filter(|p| *p == "C").count(), 1);
+        // counters carry args.value; request events land on pid 2 with
+        // tid = request id, scheduler events on pid 1
+        for e in events {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "C" => {
+                    assert_eq!(e.get("args").unwrap().get("value").unwrap().as_f64().unwrap(), 1.0);
+                    assert_eq!(e.get("pid").unwrap().as_f64().unwrap(), 1.0);
+                }
+                "B" | "E" => {
+                    let pid = e.get("pid").unwrap().as_f64().unwrap();
+                    let cat = e.get("cat").unwrap().as_str().unwrap();
+                    assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+                    match e.get("name").unwrap().as_str().unwrap() {
+                        "step" => assert_eq!((pid, cat), (1.0, "sched")),
+                        _ => {
+                            assert_eq!((pid, cat), (2.0, "request"));
+                            assert_eq!(e.get("tid").unwrap().as_f64().unwrap(), 0.0);
+                        }
+                    }
+                }
+                "M" => {}
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn write_round_trips_through_a_file() {
+        let dir = std::env::temp_dir().join("lota_obs_chrome_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &sample_trace()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

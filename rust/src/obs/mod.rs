@@ -1,0 +1,42 @@
+//! Serving-path observability: tracing spans + a metrics registry.
+//!
+//! PRs 1–5 built the fast serving path (native packed-integer engine,
+//! KV-cached decode, continuous batching, paged KV, SIMD GEMM) but left
+//! only aggregate `ThroughputReport` numbers as a window into it. This
+//! module adds the per-request view: *where did this request's time go,
+//! step by step* — without perturbing the path it observes.
+//!
+//! Three pieces:
+//!
+//! * [`Tracer`] — the event-sink trait the scheduler emits lifecycle and
+//!   phase spans into. [`NoopTracer`] discards everything;
+//!   [`RecordingTracer`] buffers events (shared, clonable handle) for
+//!   export. The scheduler holds `Option<Box<dyn Tracer>>` defaulting to
+//!   None, so the disabled path costs one branch per emission site and
+//!   allocates nothing per step; all bitwise parity pins hold with
+//!   tracing on or off, since instrumentation only observes
+//!   (`tests/obs.rs`).
+//! * [`write_chrome_trace`] / [`chrome_trace_json`] — export a recorded
+//!   run as Chrome-trace-event JSON, loadable in Perfetto
+//!   (<https://ui.perfetto.dev>) or `chrome://tracing`. Requests map to
+//!   one track each (pid `requests`, tid = request id) carrying their
+//!   `request { queued, prefill, decode_step… }` span chain; the
+//!   scheduler's per-step phases (`step { admission, prefill_forward,
+//!   decode_forward, kv_release }`) and counters (queue depth,
+//!   occupancy, KV pool traffic) live on a second track.
+//! * [`MetricsRegistry`] — counters / gauges / histograms (reusing
+//!   [`crate::serve::Histogram`]) snapshotted from a
+//!   [`crate::serve::ThroughputReport`] and written as Prometheus-style
+//!   text or JSON (`lota serve --metrics-out`).
+//!
+//! Span and metric naming, the trace schema, and how the exported
+//! timings reconcile with `SchedStats` are documented in
+//! `docs/observability.md`.
+
+pub mod chrome;
+pub mod registry;
+pub mod tracer;
+
+pub use chrome::{chrome_trace_json, write_chrome_trace};
+pub use registry::MetricsRegistry;
+pub use tracer::{EventKind, NoopTracer, RecordingTracer, TraceEvent, Tracer, Track};

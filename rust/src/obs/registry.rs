@@ -1,0 +1,325 @@
+//! Machine-readable metrics snapshot of a serving run.
+//!
+//! A [`MetricsRegistry`] is the flat counters/gauges/histograms view of
+//! a [`ThroughputReport`] — the shape scrapers and dashboards want,
+//! versus the nested report struct the code wants. It renders two ways:
+//!
+//! * [`MetricsRegistry::to_prometheus`] — Prometheus text exposition
+//!   (`# TYPE` headers, `{quantile="…"}` summary lines).
+//! * [`MetricsRegistry::to_json`] — one JSON object with `counters` /
+//!   `gauges` / `histograms` / `info` sections, each histogram
+//!   summarized as count/mean/min/p50/p95/p99/max.
+//!
+//! [`MetricsRegistry::write`] picks the format from the path extension
+//! (`.json` → JSON, anything else → Prometheus text), which is what
+//! `lota serve --metrics-out` calls. All metric names carry the `lota_`
+//! prefix; the full key list is tabulated in `docs/observability.md`.
+//!
+//! Histograms reuse [`crate::serve::Histogram`] (exact percentiles, no
+//! binning), and every value is finite by construction — the report's
+//! ratio accessors return 0.0 instead of NaN on empty runs precisely so
+//! this snapshot never emits `null`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::JsonWriter;
+use crate::serve::{Histogram, ThroughputReport};
+
+/// Counters, gauges, histograms, and string facts, keyed by metric name.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    info: BTreeMap<String, String>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `delta` to counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, delta: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    /// Set gauge `name` to `value`.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one sample into histogram `name`.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(value);
+    }
+
+    /// Attach a string fact (rendered as a `lota_info` label / `info`
+    /// JSON entry).
+    pub fn set_info(&mut self, key: &str, value: &str) {
+        self.info.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn counter(&self, name: &str) -> Option<f64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Flatten a serving report into the registry. Scheduler-only
+    /// sections (TTFT, queue depth, …) appear only when the run actually
+    /// went through `crate::sched`.
+    pub fn from_report(report: &ThroughputReport) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.inc("lota_requests_total", report.requests as f64);
+        r.inc("lota_generated_tokens_total", report.tokens as f64);
+        r.inc("lota_decode_forwards_total", report.decode.forwards as f64);
+        r.inc("lota_decode_rows_total", report.decode.forwarded_rows as f64);
+        r.inc("lota_decode_positions_total", report.decode.forwarded_positions as f64);
+        r.set_gauge("lota_wall_seconds", report.wall_secs);
+        r.set_gauge("lota_tokens_per_sec", report.tokens_per_sec);
+        r.set_gauge("lota_requests_per_sec", report.requests_per_sec);
+        r.set_gauge("lota_positions_per_token", report.positions_per_token());
+        // the report only keeps the latency summary, not raw samples;
+        // expose it as gauges instead of a lossy fake histogram
+        r.set_gauge("lota_request_latency_secs_mean", report.latency.mean);
+        r.set_gauge("lota_request_latency_secs_p50", report.latency.p50);
+        r.set_gauge("lota_request_latency_secs_p95", report.latency.p95);
+        r.set_gauge("lota_request_latency_secs_p99", report.latency.p99);
+        r.set_gauge("lota_request_latency_secs_max", report.latency.max);
+        if let Some(k) = report.gemm_kernel {
+            r.set_info("gemm_kernel", k);
+        }
+        if let Some(sched) = &report.sched {
+            r.inc("lota_sched_steps_total", sched.steps as f64);
+            r.inc("lota_admission_denied_total", sched.admission_denied as f64);
+            r.set_gauge("lota_peak_active_requests", sched.peak_active as f64);
+            r.observe_all("lota_ttft_ms", &sched.ttft_ms);
+            r.observe_all("lota_inter_token_ms", &sched.inter_token_ms);
+            r.observe_all("lota_queue_wait_ms", &sched.queue_wait_ms);
+            r.observe_all("lota_queue_depth", &sched.queue_depth);
+            r.observe_all("lota_batch_occupancy", &sched.batch_occupancy);
+            r.observe_all("lota_block_util", &sched.block_util);
+        }
+        r
+    }
+
+    /// Merge a whole histogram under `name` (empty histograms are
+    /// skipped — absent means "this run never measured that").
+    pub fn observe_all(&mut self, name: &str, h: &Histogram) {
+        if h.is_empty() {
+            return;
+        }
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            writeln!(out, "# TYPE {name} counter").unwrap();
+            writeln!(out, "{name} {v}").unwrap();
+        }
+        for (name, v) in &self.gauges {
+            writeln!(out, "# TYPE {name} gauge").unwrap();
+            writeln!(out, "{name} {v}").unwrap();
+        }
+        for (name, h) in &self.histograms {
+            let s = h.stats();
+            writeln!(out, "# TYPE {name} summary").unwrap();
+            writeln!(out, "{name}{{quantile=\"0.5\"}} {}", s.p50).unwrap();
+            writeln!(out, "{name}{{quantile=\"0.95\"}} {}", s.p95).unwrap();
+            writeln!(out, "{name}{{quantile=\"0.99\"}} {}", s.p99).unwrap();
+            writeln!(out, "{name}_sum {}", s.mean * h.len() as f64).unwrap();
+            writeln!(out, "{name}_count {}", h.len()).unwrap();
+        }
+        if !self.info.is_empty() {
+            let labels: Vec<String> =
+                self.info.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            writeln!(out, "# TYPE lota_info gauge").unwrap();
+            writeln!(out, "lota_info{{{}}} 1", labels.join(",")).unwrap();
+        }
+        out
+    }
+
+    /// One JSON object: `{"counters": …, "gauges": …, "histograms": …,
+    /// "info": …}`, histograms summarized.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("counters").begin_obj();
+        for (name, v) in &self.counters {
+            w.key(name).num(*v);
+        }
+        w.end_obj();
+        w.key("gauges").begin_obj();
+        for (name, v) in &self.gauges {
+            w.key(name).num(*v);
+        }
+        w.end_obj();
+        w.key("histograms").begin_obj();
+        for (name, h) in &self.histograms {
+            let s = h.stats();
+            w.key(name)
+                .begin_obj()
+                .key("count")
+                .num(h.len() as f64)
+                .key("mean")
+                .num(s.mean)
+                .key("min")
+                .num(h.min())
+                .key("p50")
+                .num(s.p50)
+                .key("p95")
+                .num(s.p95)
+                .key("p99")
+                .num(s.p99)
+                .key("max")
+                .num(s.max)
+                .end_obj();
+        }
+        w.end_obj();
+        w.key("info").begin_obj();
+        for (k, v) in &self.info {
+            w.key(k).str(v);
+        }
+        w.end_obj();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Write the snapshot to `path`: JSON when the extension is `.json`,
+    /// Prometheus text otherwise.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let body = match path.extension().and_then(|e| e.to_str()) {
+            Some("json") => self.to_json(),
+            _ => self.to_prometheus(),
+        };
+        fs::write(path, body)
+            .with_context(|| format!("writing metrics snapshot to {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Json;
+    use crate::engine::DecodeStats;
+    use crate::serve::SchedStats;
+
+    fn sample_report() -> ThroughputReport {
+        let mut sched = SchedStats::default();
+        for v in [10.0, 20.0, 30.0] {
+            sched.ttft_ms.record(v);
+        }
+        sched.inter_token_ms.record(5.0);
+        sched.queue_wait_ms.record(2.0);
+        sched.queue_depth.record(1.0);
+        sched.batch_occupancy.record(0.5);
+        sched.admission_denied = 2;
+        sched.peak_active = 3;
+        sched.steps = 9;
+        let mut r = ThroughputReport::default();
+        r.requests = 4;
+        r.tokens = 12;
+        r.wall_secs = 2.0;
+        r.tokens_per_sec = 6.0;
+        r.requests_per_sec = 2.0;
+        r.decode = DecodeStats { forwards: 7, forwarded_rows: 14, forwarded_positions: 28 };
+        r.with_sched(sched).with_gemm_kernel(Some("scalar"))
+    }
+
+    #[test]
+    fn report_flattens_into_lota_keys() {
+        let reg = MetricsRegistry::from_report(&sample_report());
+        assert_eq!(reg.counter("lota_requests_total"), Some(4.0));
+        assert_eq!(reg.counter("lota_generated_tokens_total"), Some(12.0));
+        assert_eq!(reg.counter("lota_sched_steps_total"), Some(9.0));
+        assert_eq!(reg.counter("lota_admission_denied_total"), Some(2.0));
+        assert_eq!(reg.gauge("lota_tokens_per_sec"), Some(6.0));
+        assert_eq!(reg.gauge("lota_peak_active_requests"), Some(3.0));
+        // positions/token = 28 / 12
+        assert!((reg.gauge("lota_positions_per_token").unwrap() - 28.0 / 12.0).abs() < 1e-12);
+        assert_eq!(reg.histogram("lota_ttft_ms").unwrap().len(), 3);
+        // empty histograms stay absent rather than appearing as zeros
+        assert!(reg.histogram("lota_block_util").is_none());
+    }
+
+    #[test]
+    fn one_shot_reports_skip_sched_sections() {
+        let reg = MetricsRegistry::from_report(&ThroughputReport::default());
+        assert_eq!(reg.counter("lota_requests_total"), Some(0.0));
+        assert_eq!(reg.counter("lota_sched_steps_total"), None);
+        assert!(reg.histogram("lota_ttft_ms").is_none());
+        // and every emitted value is finite
+        let doc = Json::parse(&reg.to_json()).unwrap();
+        for section in ["counters", "gauges"] {
+            if let Json::Obj(m) = doc.get(section).unwrap() {
+                for (k, v) in m {
+                    assert!(v.as_f64().unwrap().is_finite(), "{section}.{k} not finite");
+                }
+            } else {
+                panic!("{section} is not an object");
+            }
+        }
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let reg = MetricsRegistry::from_report(&sample_report());
+        let doc = Json::parse(&reg.to_json()).unwrap();
+        let counters = doc.get("counters").unwrap();
+        assert_eq!(counters.get("lota_requests_total").unwrap().as_f64().unwrap(), 4.0);
+        let ttft = doc.get("histograms").unwrap().get("lota_ttft_ms").unwrap();
+        assert_eq!(ttft.get("count").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(ttft.get("p50").unwrap().as_f64().unwrap(), 20.0);
+        assert_eq!(ttft.get("min").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(ttft.get("max").unwrap().as_f64().unwrap(), 30.0);
+        assert_eq!(doc.get("info").unwrap().get("gemm_kernel").unwrap().as_str().unwrap(), "scalar");
+    }
+
+    #[test]
+    fn prometheus_text_has_types_quantiles_and_info() {
+        let text = MetricsRegistry::from_report(&sample_report()).to_prometheus();
+        assert!(text.contains("# TYPE lota_requests_total counter"));
+        assert!(text.contains("lota_requests_total 4"));
+        assert!(text.contains("# TYPE lota_ttft_ms summary"));
+        assert!(text.contains("lota_ttft_ms{quantile=\"0.5\"} 20"));
+        assert!(text.contains("lota_ttft_ms{quantile=\"0.99\"} 30"));
+        assert!(text.contains("lota_ttft_ms_count 3"));
+        assert!(text.contains("lota_info{gemm_kernel=\"scalar\"} 1"));
+        // every non-comment line is "name[{labels}] value"
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            assert!(parts.next().is_some(), "no metric name in {line:?}");
+        }
+    }
+
+    #[test]
+    fn write_picks_format_from_extension() {
+        let dir = std::env::temp_dir().join("lota_obs_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = MetricsRegistry::from_report(&sample_report());
+        let json_path = dir.join("metrics.json");
+        let prom_path = dir.join("metrics.prom");
+        reg.write(&json_path).unwrap();
+        reg.write(&prom_path).unwrap();
+        assert!(Json::parse(&std::fs::read_to_string(&json_path).unwrap()).is_ok());
+        let prom = std::fs::read_to_string(&prom_path).unwrap();
+        assert!(prom.starts_with("# TYPE"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

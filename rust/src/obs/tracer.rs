@@ -1,0 +1,230 @@
+//! The event-sink trait the serving path emits into, and its two
+//! implementations: discard everything ([`NoopTracer`]) or buffer
+//! everything ([`RecordingTracer`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Inert when disabled.** The scheduler stores
+//!    `Option<Box<dyn Tracer>>` defaulting to `None`; every emission
+//!    site is one `if let` branch, and no event struct is even built on
+//!    the disabled path. Attaching a [`NoopTracer`] must be
+//!    indistinguishable (bitwise, on scheduler outputs) from attaching
+//!    nothing — pinned in `tests/obs.rs`.
+//! 2. **Timestamps are the scheduler's own `Instant`s.** Emission sites
+//!    pass the *same* `Instant` the scheduler uses for its
+//!    `SchedStats` histograms (arrival, admission `now`, pick `now`,
+//!    release `now`), so span durations in a trace reconcile exactly
+//!    with the TTFT / inter-token stats for the same run instead of
+//!    being a second, slightly-off clock.
+//! 3. **Static names.** Span and counter names are `&'static str` so
+//!    recording a span costs a Vec push, not a format/allocation.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Where an event belongs in the trace: the scheduler's own step/phase
+/// timeline, or one request's lifecycle timeline. The Chrome exporter
+/// maps these to (pid, tid) pairs so each request gets its own row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Track {
+    /// per-step phases and counters (one shared timeline)
+    Scheduler,
+    /// one request's queued → prefill → decode_step… → finished chain,
+    /// keyed by the id `Scheduler::submit` returned
+    Request(u64),
+}
+
+/// What an event is: a span opening, a span closing, or a counter
+/// sample (Chrome phases `B` / `E` / `C`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    Begin,
+    End,
+    Counter(f64),
+}
+
+/// One recorded event. `ts_us` is microseconds since the recording
+/// tracer's construction (its `t0`), matching Chrome's `ts` convention.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub track: Track,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub ts_us: f64,
+}
+
+/// Event sink the scheduler and serving layer emit into.
+///
+/// Implementations must not panic and must not observe or mutate
+/// anything that feeds back into scheduling — a tracer is a write-only
+/// window. `begin`/`end` pairs nest per track (the exporter and tests
+/// treat each track as a span stack).
+pub trait Tracer {
+    /// Open span `name` on `track` at time `at`.
+    fn begin(&mut self, track: Track, name: &'static str, at: Instant);
+    /// Close the innermost open span named `name` on `track`.
+    fn end(&mut self, track: Track, name: &'static str, at: Instant);
+    /// Sample counter `name` (its own timeline per name) at `value`.
+    fn counter(&mut self, track: Track, name: &'static str, value: f64, at: Instant);
+    /// Attach a run-level string fact (e.g. the resolved GEMM kernel).
+    fn meta(&mut self, _key: &'static str, _value: &str) {}
+}
+
+/// Discards every event. Exists so "tracing enabled but pointed
+/// nowhere" can be tested against "tracing absent" — the two must be
+/// bitwise identical on scheduler outputs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopTracer;
+
+impl Tracer for NoopTracer {
+    fn begin(&mut self, _track: Track, _name: &'static str, _at: Instant) {}
+    fn end(&mut self, _track: Track, _name: &'static str, _at: Instant) {}
+    fn counter(&mut self, _track: Track, _name: &'static str, _value: f64, _at: Instant) {}
+}
+
+#[derive(Debug)]
+struct TraceBuffer {
+    /// all timestamps are offsets from here
+    t0: Instant,
+    events: Vec<TraceEvent>,
+    /// run-level string facts, in emission order
+    meta: Vec<(&'static str, String)>,
+}
+
+/// Buffers events in memory behind a shared, clonable handle.
+///
+/// The scheduler takes a boxed clone (`with_tracer(Box::new(rec.clone()))`)
+/// while the caller keeps `rec` to export from afterwards — the same
+/// `Rc<RefCell<…>>` idiom the `TokenSink` tests use. Single-threaded by
+/// construction, like the scheduler itself.
+#[derive(Clone, Debug)]
+pub struct RecordingTracer {
+    buf: Rc<RefCell<TraceBuffer>>,
+}
+
+impl Default for RecordingTracer {
+    fn default() -> RecordingTracer {
+        RecordingTracer::new()
+    }
+}
+
+impl RecordingTracer {
+    /// An empty buffer whose `t0` (the trace's time origin) is *now*.
+    /// Construct the tracer before submitting work so every emitted
+    /// `Instant` lands at a non-negative offset.
+    pub fn new() -> RecordingTracer {
+        RecordingTracer {
+            buf: Rc::new(RefCell::new(TraceBuffer {
+                t0: Instant::now(),
+                events: Vec::new(),
+                meta: Vec::new(),
+            })),
+        }
+    }
+
+    fn ts_us(&self, at: Instant) -> f64 {
+        // `at` can only precede t0 if the caller constructed the tracer
+        // after stamping work; clamp rather than panic on that misuse
+        let buf = self.buf.borrow();
+        match at.checked_duration_since(buf.t0) {
+            Some(d) => d.as_secs_f64() * 1e6,
+            None => 0.0,
+        }
+    }
+
+    fn push(&self, track: Track, kind: EventKind, name: &'static str, at: Instant) {
+        let ts_us = self.ts_us(at);
+        self.buf.borrow_mut().events.push(TraceEvent { track, kind, name, ts_us });
+    }
+
+    /// Snapshot of all events recorded so far, in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.buf.borrow().events.clone()
+    }
+
+    /// Run-level string facts recorded via [`Tracer::meta`].
+    pub fn meta_entries(&self) -> Vec<(&'static str, String)> {
+        self.buf.borrow().meta.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.borrow().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.borrow().events.is_empty()
+    }
+}
+
+impl Tracer for RecordingTracer {
+    fn begin(&mut self, track: Track, name: &'static str, at: Instant) {
+        self.push(track, EventKind::Begin, name, at);
+    }
+
+    fn end(&mut self, track: Track, name: &'static str, at: Instant) {
+        self.push(track, EventKind::End, name, at);
+    }
+
+    fn counter(&mut self, track: Track, name: &'static str, value: f64, at: Instant) {
+        self.push(track, EventKind::Counter(value), name, at);
+    }
+
+    fn meta(&mut self, key: &'static str, value: &str) {
+        self.buf.borrow_mut().meta.push((key, value.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_preserves_order_and_monotone_offsets() {
+        let mut tr = RecordingTracer::new();
+        let a = Instant::now();
+        tr.begin(Track::Scheduler, "step", a);
+        tr.counter(Track::Scheduler, "queue_depth", 3.0, a);
+        let b = Instant::now();
+        tr.end(Track::Scheduler, "step", b);
+        let ev = tr.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, EventKind::Begin);
+        assert_eq!(ev[1].kind, EventKind::Counter(3.0));
+        assert_eq!(ev[2].kind, EventKind::End);
+        assert_eq!(ev[0].name, "step");
+        assert!(ev[0].ts_us >= 0.0);
+        // same Instant → same offset; later Instant → ≥ offset
+        assert_eq!(ev[0].ts_us, ev[1].ts_us);
+        assert!(ev[2].ts_us >= ev[0].ts_us);
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let mut a = RecordingTracer::new();
+        let b = a.clone();
+        a.begin(Track::Request(4), "request", Instant::now());
+        a.meta("gemm_kernel", "scalar");
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.events()[0].track, Track::Request(4));
+        assert_eq!(b.meta_entries(), vec![("gemm_kernel", "scalar".to_string())]);
+    }
+
+    #[test]
+    fn instants_before_t0_clamp_to_zero() {
+        let before = Instant::now();
+        let mut tr = RecordingTracer::new();
+        tr.begin(Track::Scheduler, "step", before);
+        assert_eq!(tr.events()[0].ts_us, 0.0);
+    }
+
+    #[test]
+    fn noop_tracer_records_nothing_and_is_zero_sized() {
+        let mut t = NoopTracer;
+        t.begin(Track::Scheduler, "step", Instant::now());
+        t.end(Track::Scheduler, "step", Instant::now());
+        t.counter(Track::Scheduler, "queue_depth", 1.0, Instant::now());
+        t.meta("k", "v");
+        assert_eq!(std::mem::size_of::<NoopTracer>(), 0);
+    }
+}

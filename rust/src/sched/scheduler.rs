@@ -49,6 +49,7 @@ use crate::config::SchedConfig;
 use crate::data::tokenizer::{self, EOS};
 use crate::engine::decode::{self, DecodeStats};
 use crate::engine::{Engine, KvCache};
+use crate::obs::{Tracer, Track};
 use crate::serve::metrics::SchedStats;
 use crate::serve::BucketPolicy;
 
@@ -141,6 +142,16 @@ pub struct StepReport {
     /// 1 if this step stopped admitting because the KV block pool could
     /// not cover the next candidate (paged backpressure), else 0
     pub admission_denied: usize,
+    /// wall time of the whole step, milliseconds (0.0 for idle no-ops)
+    pub step_ms: f64,
+    /// wall time of the admission phase, milliseconds
+    pub admission_ms: f64,
+    /// wall time of the padded prefill phase (forward + first picks),
+    /// milliseconds; 0.0 when nothing was admitted
+    pub prefill_ms: f64,
+    /// wall time of the decode phase (forward + pick application),
+    /// milliseconds; 0.0 when nothing decoded
+    pub decode_ms: f64,
 }
 
 /// The request-level serving loop over one engine and one shared cache.
@@ -153,6 +164,9 @@ pub struct Scheduler<'a> {
     step_no: u64,
     finished: Vec<SchedResponse>,
     sink: Option<Box<dyn TokenSink + 'a>>,
+    /// observability sink; None (the default) makes every emission site a
+    /// single never-taken branch — no event is built, nothing allocates
+    tracer: Option<Box<dyn Tracer + 'a>>,
     decode_stats: DecodeStats,
     stats: SchedStats,
     /// paged layout: token positions per block (None when contiguous)
@@ -230,6 +244,7 @@ impl<'a> Scheduler<'a> {
             step_no: 0,
             finished: Vec::new(),
             sink: None,
+            tracer: None,
             decode_stats: DecodeStats::default(),
             stats: SchedStats::default(),
             block_size,
@@ -241,6 +256,21 @@ impl<'a> Scheduler<'a> {
     /// Attach a streaming observer (builder style).
     pub fn with_sink(mut self, sink: Box<dyn TokenSink + 'a>) -> Scheduler<'a> {
         self.sink = Some(sink);
+        self
+    }
+
+    /// Attach a tracing sink (builder style). The tracer only observes —
+    /// every span timestamp is an `Instant` the scheduler already takes
+    /// for its stats, so scheduling decisions and token streams are
+    /// bitwise unchanged by attaching one (`tests/obs.rs` pins this).
+    pub fn with_tracer(mut self, mut tracer: Box<dyn Tracer + 'a>) -> Scheduler<'a> {
+        tracer.meta("gemm_kernel", self.engine.gemm_kernel_label());
+        tracer.meta("slots", &self.slots.len().to_string());
+        tracer.meta(
+            "kv_layout",
+            if self.block_size.is_some() { "paged" } else { "contiguous" },
+        );
+        self.tracer = Some(tracer);
         self
     }
 
@@ -321,6 +351,12 @@ impl<'a> Scheduler<'a> {
         let id = self.next_id;
         self.next_id += 1;
         if max_new == 0 {
+            if let Some(tr) = self.tracer.as_mut() {
+                // a zero-length span: the request existed but never queued
+                let now = Instant::now();
+                tr.begin(Track::Request(id), "request", now);
+                tr.end(Track::Request(id), "request", now);
+            }
             let resp = SchedResponse {
                 id,
                 text: String::new(),
@@ -333,7 +369,12 @@ impl<'a> Scheduler<'a> {
             self.emit_finish(resp);
             return Ok(id);
         }
-        self.queue.push_back(Queued { id, frame, max_new, arrival: Instant::now() });
+        let arrival = Instant::now();
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.begin(Track::Request(id), "request", arrival);
+            tr.begin(Track::Request(id), "queued", arrival);
+        }
+        self.queue.push_back(Queued { id, frame, max_new, arrival });
         Ok(id)
     }
 
@@ -345,6 +386,10 @@ impl<'a> Scheduler<'a> {
         if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
             let q = self.queue.remove(pos).expect("position came from the queue");
             let now = Instant::now();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.end(Track::Request(id), "queued", now);
+                tr.end(Track::Request(id), "request", now);
+            }
             let wait = secs(q.arrival, now);
             let resp = SchedResponse {
                 id,
@@ -364,7 +409,14 @@ impl<'a> Scheduler<'a> {
                 a.reason = Some(FinishReason::Cancelled);
                 self.cache.reset_row(si);
                 self.reserved_blocks -= a.reserved_blocks;
-                let resp = Self::respond(a, Instant::now());
+                let now = Instant::now();
+                if let Some(tr) = self.tracer.as_mut() {
+                    // between steps the only open span on an in-flight
+                    // request's track is "request" — phase spans close
+                    // inside the step that opened them
+                    tr.end(Track::Request(id), "request", now);
+                }
+                let resp = Self::respond(a, now);
                 self.emit_finish(resp);
                 return true;
             }
@@ -380,6 +432,11 @@ impl<'a> Scheduler<'a> {
             return Ok(report);
         }
         self.step_no += 1;
+        let t_step = Instant::now();
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.begin(Track::Scheduler, "step", t_step);
+            tr.begin(Track::Scheduler, "admission", t_step);
+        }
 
         // 1. admission: FIFO into free slots. Slots freed by last step's
         // finishes (or a cancel since) are handed out here, mid-batch.
@@ -429,6 +486,12 @@ impl<'a> Scheduler<'a> {
             };
             let q = self.queue.pop_front().expect("front() checked");
             let now = Instant::now();
+            if let Some(tr) = self.tracer.as_mut() {
+                // the queued→prefill handoff shares one Instant with the
+                // queue-wait stat, so the trace and SchedStats agree
+                tr.end(Track::Request(q.id), "queued", now);
+                tr.begin(Track::Request(q.id), "prefill", now);
+            }
             self.stats.queue_wait_ms.record(1e3 * secs(q.arrival, now));
             self.reserved_blocks += reserve;
             report.admitted.push(q.id);
@@ -449,6 +512,11 @@ impl<'a> Scheduler<'a> {
                 last_token_at: now,
             });
         }
+        let t_admit = Instant::now();
+        report.admission_ms = 1e3 * secs(t_step, t_admit);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.end(Track::Scheduler, "admission", t_admit);
+        }
         let busy = self.active_count();
         self.stats.steps += 1;
         self.stats.queue_depth.record(self.queue.len() as f64);
@@ -459,6 +527,10 @@ impl<'a> Scheduler<'a> {
 
         // 2. prefill everything admitted this step in one padded batch
         if !admitted_rows.is_empty() {
+            let t_pre = Instant::now();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.begin(Track::Scheduler, "prefill_forward", t_pre);
+            }
             let frames: Vec<Vec<f32>> = admitted_rows
                 .iter()
                 .map(|&si| self.slots[si].as_ref().expect("just admitted").frame.clone())
@@ -473,20 +545,34 @@ impl<'a> Scheduler<'a> {
             for (i, &si) in admitted_rows.iter().enumerate() {
                 self.apply_pick(si, picks[i]);
             }
+            let t_pre_end = Instant::now();
+            report.prefill_ms = 1e3 * secs(t_pre, t_pre_end);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.end(Track::Scheduler, "prefill_forward", t_pre_end);
+            }
         }
 
         // 3. one decode token for every request admitted in earlier steps
         let mut rows: Vec<usize> = Vec::new();
+        let mut row_ids: Vec<u64> = Vec::new();
         let mut last: Vec<f32> = Vec::new();
         for (si, slot) in self.slots.iter().enumerate() {
             if let Some(a) = slot {
                 if a.state == RequestState::Decoding && a.admitted_step < self.step_no {
                     rows.push(si);
+                    row_ids.push(a.id);
                     last.push(*a.frame.last().expect("frames are never empty"));
                 }
             }
         }
         if !rows.is_empty() {
+            let t_dec = Instant::now();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.begin(Track::Scheduler, "decode_forward", t_dec);
+                for &id in &row_ids {
+                    tr.begin(Track::Request(id), "decode_step", t_dec);
+                }
+            }
             let picks = decode::decode_step_rows(
                 self.engine,
                 &mut self.cache,
@@ -498,12 +584,18 @@ impl<'a> Scheduler<'a> {
             for (i, &si) in rows.iter().enumerate() {
                 self.apply_pick(si, picks[i]);
             }
+            let t_dec_end = Instant::now();
+            report.decode_ms = 1e3 * secs(t_dec, t_dec_end);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.end(Track::Scheduler, "decode_forward", t_dec_end);
+            }
         }
 
         // 4. release finished slots — their cache rows (and, paged, their
         // blocks and reservations) are reclaimed right now, so the next
         // step's admission can reuse them
         let mut released: Vec<Active> = Vec::new();
+        let t_rel = Instant::now();
         for (si, slot) in self.slots.iter_mut().enumerate() {
             let done = slot.as_ref().is_some_and(|a| {
                 matches!(a.state, RequestState::Finished | RequestState::Cancelled)
@@ -514,8 +606,19 @@ impl<'a> Scheduler<'a> {
             }
         }
         let now = Instant::now();
+        if !released.is_empty() {
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.begin(Track::Scheduler, "kv_release", t_rel);
+                tr.end(Track::Scheduler, "kv_release", now);
+            }
+        }
         for a in released {
             self.reserved_blocks -= a.reserved_blocks;
+            if let Some(tr) = self.tracer.as_mut() {
+                // the request span closes on the same Instant respond()
+                // stamps latency_secs with
+                tr.end(Track::Request(a.id), "request", now);
+            }
             let resp = Self::respond(a, now);
             report.finished.push(resp.id);
             self.emit_finish(resp);
@@ -524,6 +627,31 @@ impl<'a> Scheduler<'a> {
         // benches chart against the admission-denied counter
         if let Some((free, total)) = self.block_pool() {
             self.stats.block_util.record((total - free) as f64 / total.max(1) as f64);
+        }
+        let pool = self.block_pool();
+        let block_counters = self.cache.block_counters();
+        let alloc_wall_ms = self.cache.alloc_wall_ms();
+        let t_end = Instant::now();
+        report.step_ms = 1e3 * secs(t_step, t_end);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.counter(Track::Scheduler, "queue_depth", report.queue_depth as f64, t_end);
+            tr.counter(Track::Scheduler, "occupancy", report.occupancy, t_end);
+            tr.counter(Track::Scheduler, "decoded_rows", report.decoded_rows as f64, t_end);
+            tr.counter(
+                Track::Scheduler,
+                "admission_denied_total",
+                self.stats.admission_denied as f64,
+                t_end,
+            );
+            if let Some((free, total)) = pool {
+                tr.counter(Track::Scheduler, "kv_blocks_in_use", (total - free) as f64, t_end);
+            }
+            if let Some(c) = block_counters {
+                tr.counter(Track::Scheduler, "kv_allocs_total", c.allocs as f64, t_end);
+                tr.counter(Track::Scheduler, "kv_frees_total", c.frees as f64, t_end);
+                tr.counter(Track::Scheduler, "kv_alloc_ms_total", alloc_wall_ms, t_end);
+            }
+            tr.end(Track::Scheduler, "step", t_end);
         }
         Ok(report)
     }
@@ -560,6 +688,15 @@ impl<'a> Scheduler<'a> {
         let t_cap = self.engine.config().seq_len;
         let now = Instant::now();
         let a = self.slots[si].as_mut().expect("apply_pick on an empty slot");
+        if let Some(tr) = self.tracer.as_mut() {
+            // close this row's open phase span — opened at admission
+            // ("prefill") or at the decode fan-out ("decode_step") — on
+            // the same Instant the ttft/inter-token stats record below,
+            // so trace durations and histograms agree exactly. Closing
+            // before the finish check keeps EOS/cap picks paired too.
+            let span = if a.state == RequestState::Prefilling { "prefill" } else { "decode_step" };
+            tr.end(Track::Request(a.id), span, now);
+        }
         let done = decode::step_row(pick, t_cap, &mut a.frame, &mut a.cursor, &mut a.generated);
         if done {
             a.state = RequestState::Finished;

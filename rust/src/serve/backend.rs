@@ -268,6 +268,9 @@ pub struct ScheduledBackend {
     /// measurements of the most recent decode, handed to the Server
     /// drain via [`ServeBackend::take_sched_stats`]
     last_sched: RefCell<Option<SchedStats>>,
+    /// when set, every decode records a span timeline and writes it here
+    /// as a Chrome-trace JSON (the last decode wins the file)
+    trace_out: Option<std::path::PathBuf>,
 }
 
 impl ScheduledBackend {
@@ -294,7 +297,14 @@ impl ScheduledBackend {
             },
             engine.gemm_kernel_label()
         );
-        Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None) })
+        Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None), trace_out: None })
+    }
+
+    /// Record a span timeline per decode and write it to `path` as
+    /// Chrome-trace JSON (builder style; `None` keeps tracing off).
+    pub fn with_trace_out(mut self, path: Option<std::path::PathBuf>) -> ScheduledBackend {
+        self.trace_out = path;
+        self
     }
 
     pub fn engine(&self) -> &Engine {
@@ -319,11 +329,19 @@ impl ServeBackend for ScheduledBackend {
         max_new: usize,
     ) -> Result<(Vec<Generation>, DecodeStats)> {
         let mut sched = Scheduler::new(&self.engine, &self.opts)?;
+        let trace = self.trace_out.as_ref().map(|_| crate::obs::RecordingTracer::new());
+        if let Some(rec) = &trace {
+            sched = sched.with_tracer(Box::new(rec.clone()));
+        }
         let mut ids = Vec::with_capacity(prompts.len());
         for p in prompts {
             ids.push(sched.submit(p, max_new)?);
         }
         sched.run_until_idle()?;
+        if let (Some(path), Some(rec)) = (&self.trace_out, &trace) {
+            crate::obs::write_chrome_trace(path, rec)?;
+            log::info!("serving trace written to {}", path.display());
+        }
         let mut by_id: BTreeMap<u64, Generation> = sched
             .take_finished()
             .into_iter()

@@ -23,6 +23,9 @@ pub struct LatencyStats {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    /// tail percentile — heavy-traffic serving work is judged on p99,
+    /// which p95 understates once queues form
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -37,6 +40,7 @@ impl LatencyStats {
             mean: sorted.iter().sum::<f64>() / n as f64,
             p50: pct(0.50),
             p95: pct(0.95),
+            p99: pct(0.99),
             max: sorted[n - 1],
         }
     }
@@ -69,6 +73,15 @@ impl Histogram {
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         LatencyStats::from_sorted(&sorted)
+    }
+
+    /// Smallest recorded sample (0.0 when empty, matching the zeroed
+    /// summaries of [`Histogram::stats`]).
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
     /// Fold another histogram's samples into this one.
@@ -141,6 +154,8 @@ pub struct ThroughputReport {
     pub ttft_ms_p50: f64,
     /// time-to-first-token p95, milliseconds
     pub ttft_ms_p95: f64,
+    /// time-to-first-token p99, milliseconds
+    pub ttft_ms_p99: f64,
     /// mean submit → admission wait, milliseconds
     pub queue_wait_ms: f64,
     /// full scheduler measurements when the run went through
@@ -167,6 +182,7 @@ impl ThroughputReport {
             decode: DecodeStats::default(),
             ttft_ms_p50: 0.0,
             ttft_ms_p95: 0.0,
+            ttft_ms_p99: 0.0,
             queue_wait_ms: 0.0,
             sched: None,
             gemm_kernel: None,
@@ -185,6 +201,7 @@ impl ThroughputReport {
         let ttft = sched.ttft_ms.stats();
         self.ttft_ms_p50 = ttft.p50;
         self.ttft_ms_p95 = ttft.p95;
+        self.ttft_ms_p99 = ttft.p99;
         self.queue_wait_ms = sched.queue_wait_ms.stats().mean;
         self.sched = Some(sched);
         self
@@ -208,21 +225,25 @@ impl ThroughputReport {
 
     /// Positions the backend fed per token it generated — 1.0 is the
     /// cached-decode ideal (each token paid for once, ignoring prefill);
-    /// recompute grows linearly with generation length.
+    /// recompute grows linearly with generation length. 0.0 when no
+    /// tokens were generated: the ratio feeds the JSON metrics snapshot,
+    /// where a NaN would serialize as `null` and poison downstream math.
     pub fn positions_per_token(&self) -> f64 {
         if self.tokens > 0 {
             self.decode.forwarded_positions as f64 / self.tokens as f64
         } else {
-            f64::NAN
+            0.0
         }
     }
 
-    /// Speedup of `self` over `other` in token throughput.
+    /// Speedup of `self` over `other` in token throughput. 0.0 when
+    /// `other` has no throughput to compare against (same snapshot-safety
+    /// rationale as [`ThroughputReport::positions_per_token`]).
     pub fn speedup_over(&self, other: &ThroughputReport) -> f64 {
         if other.tokens_per_sec > 0.0 {
             self.tokens_per_sec / other.tokens_per_sec
         } else {
-            f64::NAN
+            0.0
         }
     }
 }
@@ -247,8 +268,14 @@ mod tests {
         let s = LatencyStats::from_sorted(&sorted);
         assert_eq!(s.p50, 51.0); // (0.5·99).round() = 50 → value 51
         assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0); // (0.99·99).round() = 98 → value 99
         assert_eq!(s.max, 100.0);
         assert!((s.mean - 50.5).abs() < 1e-9);
+        // small samples: p99 collapses toward max, never past it
+        let three = LatencyStats::from_sorted(&[1.0, 2.0, 3.0]);
+        assert_eq!(three.p99, 3.0);
+        let one = LatencyStats::from_sorted(&[4.0]);
+        assert_eq!((one.p50, one.p95, one.p99, one.max), (4.0, 4.0, 4.0, 4.0));
     }
 
     #[test]
@@ -268,10 +295,12 @@ mod tests {
         let r = ThroughputReport::from_responses(&responses, 20, 1.0).with_decode(stats);
         assert_eq!(r.decode, stats);
         assert!((r.positions_per_token() - 6.0).abs() < 1e-9);
-        // zeroed by default, NaN ratio on an empty report
+        // zeroed by default; an empty report yields 0.0, not NaN — the
+        // ratio lands in the JSON metrics snapshot, which must stay
+        // finite
         let empty = ThroughputReport::from_responses(&[], 0, 0.0);
         assert_eq!(empty.decode, DecodeStats::default());
-        assert!(empty.positions_per_token().is_nan());
+        assert_eq!(empty.positions_per_token(), 0.0);
     }
 
     #[test]
@@ -357,6 +386,7 @@ mod tests {
         let r = ThroughputReport::from_responses(&[], 0, 1.0).with_sched(sched);
         assert_eq!(r.ttft_ms_p50, 20.0);
         assert_eq!(r.ttft_ms_p95, 30.0);
+        assert_eq!(r.ttft_ms_p99, 30.0);
         assert!((r.queue_wait_ms - 5.0).abs() < 1e-9);
         assert!(r.sched.is_some());
         // one-shot paths leave the scalar fields zeroed
@@ -380,6 +410,22 @@ mod tests {
         let fast = ThroughputReport { tokens_per_sec: 20.0, ..Default::default() };
         let slow = ThroughputReport { tokens_per_sec: 10.0, ..Default::default() };
         assert_eq!(fast.speedup_over(&slow), 2.0);
+        // zero and negative baselines yield 0.0, never NaN/inf
+        let idle = ThroughputReport::default();
+        assert_eq!(fast.speedup_over(&idle), 0.0);
+        let broken = ThroughputReport { tokens_per_sec: -1.0, ..Default::default() };
+        assert_eq!(fast.speedup_over(&broken), 0.0);
+        assert_eq!(idle.speedup_over(&idle), 0.0);
+    }
+
+    #[test]
+    fn histogram_min_tracks_smallest_sample() {
+        let mut h = Histogram::default();
+        assert_eq!(h.min(), 0.0, "empty histogram min is zero, like its stats");
+        for v in [3.0, 0.5, 2.0] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0.5);
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub use batcher::{BucketPolicy, DynamicBatcher, Request};
 pub use metrics::{Histogram, LatencyStats, SchedStats, ThroughputReport};
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -95,6 +96,10 @@ pub struct ServeOptions {
     /// route native serving through the continuous-batching scheduler
     /// (`crate::sched`); None serves one-shot
     pub sched: Option<SchedConfig>,
+    /// write a Chrome-trace-event/Perfetto JSON of the serving run here
+    /// (scheduled native serving only — one-shot paths have no spans to
+    /// record); None disables tracing entirely
+    pub trace_out: Option<PathBuf>,
 }
 
 impl ServeOptions {
@@ -107,6 +112,7 @@ impl ServeOptions {
             decode: DecodeMode::Cached,
             gemm_kernel: GemmKernel::Auto,
             sched: None,
+            trace_out: None,
         }
     }
 
@@ -132,6 +138,11 @@ impl ServeOptions {
 
     pub fn scheduled(mut self, sched: SchedConfig) -> ServeOptions {
         self.sched = Some(sched);
+        self
+    }
+
+    pub fn trace_out(mut self, path: PathBuf) -> ServeOptions {
+        self.trace_out = Some(path);
         self
     }
 }
@@ -217,7 +228,8 @@ impl<'a> Server<'a> {
                         opts.n_bits,
                         sched,
                         opts.gemm_kernel,
-                    )?;
+                    )?
+                    .with_trace_out(opts.trace_out.clone());
                     Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
                 None => {
@@ -336,6 +348,13 @@ pub fn serve_open_loop(
     };
     let engine = backend::build_engine(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?;
     let mut sched = Scheduler::new(&engine, &SchedOptions::from_config(&sched_cfg))?;
+    // recorder constructed before any submit so every span lands at a
+    // non-negative trace offset; we keep a handle, the scheduler gets a
+    // boxed clone of the same buffer
+    let trace = opts.trace_out.as_ref().map(|_| crate::obs::RecordingTracer::new());
+    if let Some(rec) = &trace {
+        sched = sched.with_tracer(Box::new(rec.clone()));
+    }
 
     let mut order: Vec<&LoadRequest> = load.iter().collect();
     order.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
@@ -400,6 +419,10 @@ pub fn serve_open_loop(
         if let Some(t) = r.ttft_secs {
             stats.ttft_ms.record(1e3 * t);
         }
+    }
+    if let (Some(path), Some(rec)) = (&opts.trace_out, &trace) {
+        crate::obs::write_chrome_trace(path, rec)?;
+        log::info!("serving trace written to {}", path.display());
     }
     let report = ThroughputReport::from_responses(&shim, tokens, wall)
         .with_decode(sched.decode_stats())

@@ -1,0 +1,390 @@
+//! Observability suite — artifact-free, runs in CI next to `sched`.
+//!
+//! Pins the three contracts `src/obs/` makes:
+//!
+//! 1. **Inert when disabled** — a scheduler with no tracer, a
+//!    `NoopTracer`, and a `RecordingTracer` produce bitwise-identical
+//!    generations and decode accounting, and an idle step records no
+//!    events at all.
+//! 2. **Complete span chains** — every `begin` has a matching `end` in
+//!    strict per-track LIFO order, whatever the lifecycle throws at it
+//!    (cancellation while queued, cancellation mid-decode, paged
+//!    admission denial, slot reuse). The single-request step sequence is
+//!    pinned event-for-event as a golden list.
+//! 3. **One clock** — span durations reconcile exactly with the
+//!    `SchedStats` histograms for the same run, because emission sites
+//!    share the scheduler's `Instant`s; and the Chrome-trace JSON export
+//!    round-trips through the crate's own parser with balanced B/E
+//!    stacks per (pid, tid).
+
+use std::collections::HashMap;
+
+use lota_qaf::config::Json;
+use lota_qaf::engine::Engine;
+use lota_qaf::model;
+use lota_qaf::obs::{
+    chrome_trace_json, write_chrome_trace, EventKind, NoopTracer, RecordingTracer, TraceEvent,
+    Track,
+};
+use lota_qaf::quant::rtn_quantize;
+use lota_qaf::sched::{RequestState, SchedOptions, Scheduler};
+use lota_qaf::tensor::Rng;
+
+fn plain_engine(seed: u64) -> Engine {
+    let cfg = lota_qaf::config::preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    let fp = model::init_fp(&cfg, &mut rng);
+    let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+        Ok(rtn_quantize(w, cfg.group_size, 4))
+    })
+    .unwrap();
+    Engine::from_store(&cfg, &store, 4).unwrap()
+}
+
+fn opts(max_batch: usize) -> SchedOptions {
+    // default (paged) layout — tracing covers what serving actually ships
+    SchedOptions { max_batch, ..SchedOptions::default() }
+}
+
+/// Collapse events to the comparable part: track, phase letter, name.
+/// Timestamps and counter values are run-dependent; the *sequence* is
+/// what determinism and the golden test pin.
+fn sig(events: &[TraceEvent]) -> Vec<(Track, char, &'static str)> {
+    events
+        .iter()
+        .map(|e| {
+            let ph = match e.kind {
+                EventKind::Begin => 'B',
+                EventKind::End => 'E',
+                EventKind::Counter(_) => 'C',
+            };
+            (e.track, ph, e.name)
+        })
+        .collect()
+}
+
+/// Every `end` must close the innermost open span of the same name on
+/// its track, and every track must end with its stack empty.
+fn assert_balanced(events: &[TraceEvent]) {
+    let mut stacks: HashMap<Track, Vec<&'static str>> = HashMap::new();
+    for e in events {
+        match e.kind {
+            EventKind::Begin => stacks.entry(e.track).or_default().push(e.name),
+            EventKind::End => {
+                let top = stacks.get_mut(&e.track).and_then(|s| s.pop());
+                assert_eq!(
+                    top,
+                    Some(e.name),
+                    "end of {:?} on {:?} did not match the innermost open span",
+                    e.name,
+                    e.track
+                );
+            }
+            EventKind::Counter(_) => {}
+        }
+    }
+    for (track, stack) in stacks {
+        assert!(stack.is_empty(), "track {track:?} left spans open: {stack:?}");
+    }
+}
+
+/// A single one-token request admits, prefills, finishes, and releases
+/// in one step — the exact event sequence is the subsystem's golden
+/// contract. Counter values the step determines exactly are pinned too.
+#[test]
+fn golden_span_sequence_for_a_one_token_request() {
+    let engine = plain_engine(17);
+    let rec = RecordingTracer::new();
+    let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
+    let id = s.submit("1 + 2 =", 1).unwrap();
+    s.step().unwrap();
+    assert!(s.is_idle());
+
+    let r = Track::Request(id);
+    let sc = Track::Scheduler;
+    // max_new = 1 finishes on its admission step whether the first pick
+    // is a token or EOS (apply_pick closes the phase span before the
+    // finish check), so this sequence is seed-independent
+    let want = vec![
+        (r, 'B', "request"),
+        (r, 'B', "queued"),
+        (sc, 'B', "step"),
+        (sc, 'B', "admission"),
+        (r, 'E', "queued"),
+        (r, 'B', "prefill"),
+        (sc, 'E', "admission"),
+        (sc, 'B', "prefill_forward"),
+        (r, 'E', "prefill"),
+        (sc, 'E', "prefill_forward"),
+        (sc, 'B', "kv_release"),
+        (sc, 'E', "kv_release"),
+        (r, 'E', "request"),
+        (sc, 'C', "queue_depth"),
+        (sc, 'C', "occupancy"),
+        (sc, 'C', "decoded_rows"),
+        (sc, 'C', "admission_denied_total"),
+        (sc, 'C', "kv_blocks_in_use"),
+        (sc, 'C', "kv_allocs_total"),
+        (sc, 'C', "kv_frees_total"),
+        (sc, 'C', "kv_alloc_ms_total"),
+        (sc, 'E', "step"),
+    ];
+    let events = rec.events();
+    assert_eq!(sig(&events), want);
+    assert_balanced(&events);
+    // emission order is timestamp order
+    assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+
+    let val = |name: &str| {
+        events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::Counter(v) if e.name == name => Some(v),
+                _ => None,
+            })
+            .unwrap()
+    };
+    assert_eq!(val("queue_depth"), 0.0);
+    assert_eq!(val("occupancy"), 0.5, "1 busy slot of 2");
+    assert_eq!(val("decoded_rows"), 0.0, "admission-step requests must not decode-step");
+    assert_eq!(val("admission_denied_total"), 0.0);
+    assert_eq!(val("kv_blocks_in_use"), 0.0, "release must return the blocks");
+    assert!(val("kv_allocs_total") >= 1.0);
+
+    // run facts land as meta, in emission order
+    let meta = rec.meta_entries();
+    assert_eq!(meta[0].0, "gemm_kernel");
+    assert_eq!(meta[1], ("slots", "2".to_string()));
+    assert_eq!(meta[2], ("kv_layout", "paged".to_string()));
+}
+
+/// A request submitted with `max_new = 0` completes without queueing;
+/// its trace is a zero-length `request` span and nothing else.
+#[test]
+fn zero_max_new_emits_a_degenerate_request_span() {
+    let engine = plain_engine(19);
+    let rec = RecordingTracer::new();
+    let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
+    let id = s.submit("1 + 1 =", 0).unwrap();
+    assert!(s.is_idle());
+    let events = rec.events();
+    assert_eq!(
+        sig(&events),
+        vec![(Track::Request(id), 'B', "request"), (Track::Request(id), 'E', "request")]
+    );
+    assert_eq!(events[0].ts_us, events[1].ts_us);
+}
+
+/// Span chains stay balanced through every lifecycle edge at once: a
+/// paged pool too small for the batch (admission denial + slot reuse),
+/// a cancellation while queued, and a cancellation mid-decode. Each
+/// request track carries exactly one `request` begin/end pair.
+#[test]
+fn spans_balance_under_denial_and_cancellation() {
+    let engine = plain_engine(8);
+    // 2 blocks × 16 tokens: short requests need 1 block each, so at most
+    // 2 in flight even though 4 slots exist — every extra request rides
+    // the denial/reuse path
+    let tight = SchedOptions {
+        max_batch: 4,
+        kv_budget_bytes: 2 * engine.kv_block_bytes(16),
+        kv_paged: true,
+        kv_block_size: 16,
+    };
+    let rec = RecordingTracer::new();
+    let mut s = Scheduler::new(&engine, &tight).unwrap().with_tracer(Box::new(rec.clone()));
+    let mut ids = Vec::new();
+    for i in 0..5 {
+        ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+    }
+    // cancel the last while it is still queued: its queued + request
+    // spans must close right here
+    assert!(s.cancel(ids[4]));
+    let report = s.step().unwrap();
+    assert!(report.admission_denied >= 1, "pool was meant to deny: {report:?}");
+    // best effort mid-decode cancel — whether the victim is still in
+    // flight is weight luck, and both outcomes must leave spans balanced
+    if let Some(&victim) = report.admitted.first() {
+        if s.state_of(victim) == Some(RequestState::Decoding) {
+            assert!(s.cancel(victim));
+        }
+    }
+    s.run_until_idle().unwrap();
+    assert_eq!(s.take_finished().len(), 5, "a request was lost, not delayed");
+
+    let events = rec.events();
+    assert_balanced(&events);
+    assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    for id in ids {
+        for (kind, what) in [(EventKind::Begin, "opened"), (EventKind::End, "closed")] {
+            let n = events
+                .iter()
+                .filter(|e| e.track == Track::Request(id) && e.kind == kind && e.name == "request")
+                .count();
+            assert_eq!(n, 1, "request {id} {what} its lifecycle span {n} times");
+        }
+    }
+    // the denial the report saw is on the counter track too
+    let denied = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Counter(v) if e.name == "admission_denied_total" => Some(v),
+            _ => None,
+        })
+        .fold(0.0f64, f64::max);
+    assert!(denied >= 1.0);
+}
+
+/// Attaching a tracer must not move a single bit of scheduler output:
+/// no tracer, `NoopTracer`, and `RecordingTracer` run the same workload
+/// to identical generations, decode accounting, and step counts — and
+/// an idle step records nothing at all.
+#[test]
+fn tracing_is_bitwise_inert_on_scheduler_outputs() {
+    let run = |tracer: Option<Box<dyn lota_qaf::obs::Tracer>>| {
+        let engine = plain_engine(23);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        if let Some(t) = tracer {
+            s = s.with_tracer(t);
+        }
+        for i in 0..5 {
+            s.submit(&format!("{i} + 3 ="), [2usize, 6, 4][i % 3]).unwrap();
+        }
+        s.run_until_idle().unwrap();
+        let mut done = s.take_finished();
+        done.sort_by_key(|r| r.id);
+        let out: Vec<(u64, String, usize)> =
+            done.into_iter().map(|r| (r.id, r.text, r.tokens)).collect();
+        (out, s.decode_stats(), s.sched_stats().steps)
+    };
+    let rec = RecordingTracer::new();
+    let bare = run(None);
+    let noop = run(Some(Box::new(NoopTracer)));
+    let recorded = run(Some(Box::new(rec.clone())));
+    assert_eq!(bare, noop, "a NoopTracer changed scheduler output");
+    assert_eq!(bare, recorded, "a RecordingTracer changed scheduler output");
+    assert!(!rec.is_empty(), "the recording run recorded nothing");
+
+    // idle steps emit no events — the no-op path stays a no-op traced
+    let idle_rec = RecordingTracer::new();
+    let engine = plain_engine(23);
+    let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(idle_rec.clone()));
+    s.step().unwrap();
+    assert!(idle_rec.is_empty(), "an idle step emitted {} events", idle_rec.len());
+}
+
+/// Span durations and `SchedStats` histograms are the same measurements:
+/// emission sites reuse the scheduler's `Instant`s, so the queued span
+/// equals the queue-wait sample and request-begin → prefill-end equals
+/// the TTFT sample, to float rounding.
+#[test]
+fn trace_durations_reconcile_with_sched_stats() {
+    for seed in 0..16u64 {
+        let engine = plain_engine(300 + seed);
+        let rec = RecordingTracer::new();
+        let mut s = Scheduler::new(&engine, &opts(1)).unwrap().with_tracer(Box::new(rec.clone()));
+        let id = s.submit("2 + 2 =", 3).unwrap();
+        s.run_until_idle().unwrap();
+        let stats = s.sched_stats();
+        if stats.ttft_ms.len() != 1 {
+            continue; // first pick was EOS — no first token, next seed
+        }
+        let events = rec.events();
+        let ts = |kind: EventKind, name: &str| {
+            events
+                .iter()
+                .find(|e| e.track == Track::Request(id) && e.kind == kind && e.name == name)
+                .unwrap()
+                .ts_us
+        };
+        let queued_ms = (ts(EventKind::End, "queued") - ts(EventKind::Begin, "queued")) / 1e3;
+        assert!(
+            (queued_ms - stats.queue_wait_ms.stats().mean).abs() < 1e-3,
+            "queued span {queued_ms} ms vs queue_wait stat {} ms",
+            stats.queue_wait_ms.stats().mean
+        );
+        let ttft_ms = (ts(EventKind::End, "prefill") - ts(EventKind::Begin, "request")) / 1e3;
+        assert!(
+            (ttft_ms - stats.ttft_ms.stats().mean).abs() < 1e-3,
+            "ttft span {ttft_ms} ms vs ttft stat {} ms",
+            stats.ttft_ms.stats().mean
+        );
+        return;
+    }
+    panic!("no seed produced a first token in 16 tries");
+}
+
+/// The same seeded workload traces to the same event sequence every
+/// time (timestamps aside), and the exported Chrome JSON parses back
+/// with balanced per-(pid, tid) B/E stacks, labeled tracks, and the run
+/// meta — the file-level contract the CI trace-smoke leg checks on the
+/// real binary.
+#[test]
+fn chrome_export_is_deterministic_and_well_formed() {
+    let run = || {
+        let engine = plain_engine(21);
+        let rec = RecordingTracer::new();
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
+        for (i, max_new) in [1usize, 3, 2].into_iter().enumerate() {
+            s.submit(&format!("{i} + 2 ="), max_new).unwrap();
+        }
+        s.run_until_idle().unwrap();
+        rec
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(sig(&a.events()), sig(&b.events()), "same workload, different trace");
+
+    let dir = std::env::temp_dir().join("lota_obs_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    write_chrome_trace(&path, &a).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, chrome_trace_json(&a), "file and string render diverged");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let meta = doc.get("meta").unwrap();
+    assert!(!meta.get("gemm_kernel").unwrap().as_str().unwrap().is_empty());
+    assert_eq!(meta.get("kv_layout").unwrap().as_str().unwrap(), "paged");
+    assert_eq!(meta.get("slots").unwrap().as_str().unwrap(), "2");
+
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut stacks: HashMap<(i64, i64), Vec<String>> = HashMap::new();
+    let mut req_threads = 0usize;
+    let mut last_ts = 0.0f64;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        if ph == "M" {
+            if name == "thread_name" {
+                let label = e.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+                if label.starts_with("req ") {
+                    req_threads += 1;
+                }
+            }
+            continue;
+        }
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "trace timestamps went backwards");
+        last_ts = ts;
+        let pid = e.get("pid").unwrap().as_f64().unwrap() as i64;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as i64;
+        match ph {
+            "B" => stacks.entry((pid, tid)).or_default().push(name),
+            "E" => {
+                let top = stacks.get_mut(&(pid, tid)).and_then(|s| s.pop());
+                assert_eq!(top, Some(name), "unbalanced span on ({pid}, {tid})");
+            }
+            "C" => {
+                e.get("args").unwrap().get("value").unwrap().as_f64().unwrap();
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    for (track, stack) in stacks {
+        assert!(stack.is_empty(), "track {track:?} left spans open in the file: {stack:?}");
+    }
+    // one labeled thread per request
+    assert_eq!(req_threads, 3);
+}

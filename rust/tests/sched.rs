@@ -144,6 +144,40 @@ fn finish_on_admission_step_hands_the_slot_over() {
     }
 }
 
+/// Step wall-time accounting ([`StepReport`]'s `*_ms` fields): every
+/// phase duration is non-negative, skipped phases report exactly 0.0,
+/// the phases are disjoint sub-intervals that never sum past the whole
+/// step, and an idle no-op step costs nothing at all.
+#[test]
+fn step_reports_account_phase_wall_time() {
+    let engine = plain_engine(15);
+    let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+    for i in 0..4 {
+        s.submit(&format!("{i} + 5 ="), 3).unwrap();
+    }
+    while !s.is_idle() {
+        let r = s.step().unwrap();
+        assert!(r.step_ms > 0.0, "a non-idle step took no wall time: {r:?}");
+        assert!(r.admission_ms >= 0.0 && r.prefill_ms >= 0.0 && r.decode_ms >= 0.0);
+        assert!(
+            r.admission_ms + r.prefill_ms + r.decode_ms <= r.step_ms + 1e-6,
+            "phase times overflowed the step: {r:?}"
+        );
+        if r.admitted.is_empty() {
+            assert_eq!(r.prefill_ms, 0.0, "prefill billed with nothing admitted: {r:?}");
+        }
+        if r.decoded_rows == 0 {
+            assert_eq!(r.decode_ms, 0.0, "decode billed with no rows fed: {r:?}");
+        }
+    }
+    let r = s.step().unwrap();
+    assert_eq!(
+        (r.step_ms, r.admission_ms, r.prefill_ms, r.decode_ms),
+        (0.0, 0.0, 0.0, 0.0),
+        "an idle step billed wall time"
+    );
+}
+
 /// Under a persistently full batch, admission is FIFO: concatenating the
 /// admitted ids across steps reproduces submission order exactly, and
 /// nobody is starved.
