@@ -351,6 +351,12 @@ pub struct ExperimentConfig {
     /// write a metrics snapshot of the final serving report here
     /// (`metrics_out` in TOML; `.json` → JSON, else Prometheus text)
     pub metrics_out: Option<String>,
+    /// named ternary adapter sets to serve alongside the base (the
+    /// `[adapters]` TOML table: `name = "source"` per entry, where source
+    /// is a checkpoint path or `synthetic:<seed>`). Registration order —
+    /// and therefore adapter id order — is the table's alphabetical key
+    /// order, which is how the subset parser stores keys.
+    pub adapters: Vec<(String, String)>,
 }
 
 impl Default for ExperimentConfig {
@@ -373,6 +379,7 @@ impl Default for ExperimentConfig {
             sched: None,
             trace_out: None,
             metrics_out: None,
+            adapters: Vec::new(),
         }
     }
 }
@@ -429,6 +436,16 @@ impl ExperimentConfig {
             c.metrics_out = Some(v.to_string());
         }
         c.sched = SchedConfig::from_toml(doc)?;
+        for key in doc.keys() {
+            if let Some(name) = key.strip_prefix("adapters.") {
+                match doc.get_str(key) {
+                    Some(source) => c.adapters.push((name.to_string(), source.to_string())),
+                    None => bail!(
+                        "[adapters] {name} must be a string source (path or synthetic:<seed>)"
+                    ),
+                }
+            }
+        }
         if !(2..=4).contains(&c.n_bits) {
             bail!("n_bits must be 2, 3 or 4 (got {})", c.n_bits);
         }
@@ -503,6 +520,25 @@ mod tests {
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
         assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.prom"));
+    }
+
+    #[test]
+    fn adapters_table_parses_in_key_order() {
+        let doc =
+            TomlDoc::parse("[adapters]\nfr = \"synthetic:3\"\nde = \"ckpt/de.ckpt\"\n").unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        // the subset parser stores keys sorted, so "de" registers first
+        assert_eq!(
+            c.adapters,
+            vec![
+                ("de".to_string(), "ckpt/de.ckpt".to_string()),
+                ("fr".to_string(), "synthetic:3".to_string()),
+            ]
+        );
+        // default is no adapters; non-string sources are refused
+        assert!(ExperimentConfig::default().adapters.is_empty());
+        let bad = TomlDoc::parse("[adapters]\nfr = 3\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 
     #[test]

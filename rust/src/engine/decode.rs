@@ -182,6 +182,7 @@ pub(crate) fn prefill_rows(
     cache: &mut KvCache,
     rows: &[usize],
     frames: &[Vec<f32>],
+    adapters: &[u32],
     stats: &mut DecodeStats,
 ) -> Result<Vec<u32>> {
     debug_assert_eq!(rows.len(), frames.len());
@@ -192,7 +193,12 @@ pub(crate) fn prefill_rows(
     for (i, f) in frames.iter().enumerate() {
         tokens[i * t0..i * t0 + f.len()].copy_from_slice(f);
     }
-    let logits = engine.forward_incremental(&Tensor::new(&[r, t0], tokens), cache, rows)?;
+    let logits = engine.forward_incremental_tagged(
+        &Tensor::new(&[r, t0], tokens),
+        cache,
+        rows,
+        adapters,
+    )?;
     stats.forwards += 1;
     stats.forwarded_rows += r;
     stats.forwarded_positions += r * t0;
@@ -214,13 +220,18 @@ pub(crate) fn decode_step_rows(
     cache: &mut KvCache,
     rows: &[usize],
     last: &[f32],
+    adapters: &[u32],
     stats: &mut DecodeStats,
 ) -> Result<Vec<u32>> {
     debug_assert_eq!(rows.len(), last.len());
     let v = engine.config().vocab;
     let r = rows.len();
-    let logits =
-        engine.forward_incremental(&Tensor::new(&[r, 1], last.to_vec()), cache, rows)?;
+    let logits = engine.forward_incremental_tagged(
+        &Tensor::new(&[r, 1], last.to_vec()),
+        cache,
+        rows,
+        adapters,
+    )?;
     stats.forwards += 1;
     stats.forwarded_rows += r;
     stats.forwarded_positions += r;
@@ -289,7 +300,7 @@ fn decode_cached_layout(
         None => engine.new_cache_for(b, t0 + max_new),
     };
     let all: Vec<usize> = (0..b).collect();
-    let picks = prefill_rows(engine, &mut cache, &all, &rows, &mut stats)?;
+    let picks = prefill_rows(engine, &mut cache, &all, &rows, &[], &mut stats)?;
     for (ri, next) in picks.into_iter().enumerate() {
         done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
     }
@@ -302,7 +313,7 @@ fn decode_cached_layout(
             break;
         }
         let step: Vec<f32> = active.iter().map(|ri| *rows[*ri].last().unwrap()).collect();
-        let picks = decode_step_rows(engine, &mut cache, &active, &step, &mut stats)?;
+        let picks = decode_step_rows(engine, &mut cache, &active, &step, &[], &mut stats)?;
         for (i, &ri) in active.iter().enumerate() {
             done[ri] =
                 step_row(picks[i], t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);

@@ -1,0 +1,363 @@
+//! In-kernel ternary adapter deltas on the packed grid — the multi-adapter
+//! serving representation.
+//!
+//! LoTA's merge (paper Eqs. 3–5, [`crate::adapter::lota::lota_merge`])
+//! moves every integer code by at most ±1 and rewrites only the per-group
+//! zero table; scales are untouched. That makes an adapter representable
+//! *against* a shared packed base as:
+//!
+//! * a column-major 2-bit grid of `(merged_code − base_code) + 1 ∈ {0,1,2}`
+//!   — [`TernaryDelta`], one per (layer, slot);
+//! * the merged zero table, carried verbatim.
+//!
+//! [`PackedView`] overlays a delta on a [`PackedLinear`] and exposes the
+//! exact weight surface the GEMM kernels consume (`decode_col_into`,
+//! `scales`, `zeros`, dims). Applying the delta is an exact f32 operation:
+//! base codes are small non-negative integers, and adding `-1.0`, `0.0`,
+//! or `+1.0` to such a value is a single exactly-representable step. A
+//! delta-applied column therefore decodes **bit-identically** to decoding
+//! the adapter's individually merged checkpoint — which, with the
+//! lane-ordered accumulation contract ([`super::simd`]) fixing every
+//! downstream add, is what makes mixed-adapter batches bit-equal to
+//! solo-merged serving (`tests/adapters.rs` pins it).
+//!
+//! The deltas are built *through* `lota_merge` itself
+//! ([`TernaryDelta::from_adapter`] merges, then diffs), so there is one
+//! implementation of the merge math in the repo and serving cannot drift
+//! from it.
+
+use anyhow::{bail, Result};
+
+use crate::adapter::lota::{lota_merge, TernaryAdapter};
+use crate::quant::QuantizedLinear;
+
+use super::packed::PackedLinear;
+
+/// Codes per packed `u32` word (2 bits each).
+const CODES_PER_WORD: usize = 16;
+
+/// The 2-bit pattern of an all-zero-delta word: every field holds
+/// `0 + 1 = 1` (`0b01` repeated). Columns are mostly identity — ternary
+/// adapters are sparse and ω prunes further — so [`TernaryDelta::apply_col`]
+/// skips whole words that match this pattern.
+const IDENTITY_WORD: u32 = 0x5555_5555;
+
+/// One (layer, slot) ternary adapter in serving form: the grid moves
+/// against a shared [`PackedLinear`] base, packed 2 bits per element, plus
+/// the merged zero table.
+#[derive(Clone, Debug)]
+pub struct TernaryDelta {
+    din: usize,
+    dout: usize,
+    group_size: usize,
+    /// words per packed column: `ceil(din / 16)`
+    words_per_col: usize,
+    /// column-major packed `(delta + 1)` codes; column `j` is
+    /// `words[j·words_per_col .. (j+1)·words_per_col]`
+    words: Vec<u32>,
+    /// (G, Dout) row-major merged zero table (replaces the base's)
+    zeros: Vec<f32>,
+    /// grid entries actually moved (|delta| = 1) — diagnostics
+    adjustments: usize,
+}
+
+impl TernaryDelta {
+    /// Build the serving delta for `adapter` against `base`: run the
+    /// lossless merge on the base's integer grid, then record what moved.
+    /// This is the only constructor serving uses — the merge math lives in
+    /// [`lota_merge`] alone.
+    pub fn from_adapter(
+        base: &PackedLinear,
+        adapter: &TernaryAdapter,
+        omega: f32,
+    ) -> Result<TernaryDelta> {
+        if adapter.a.rows() != base.din() || adapter.b.cols() != base.dout() {
+            bail!(
+                "adapter shape ({}, r, {}) does not fit base ({}, {})",
+                adapter.a.rows(),
+                adapter.b.cols(),
+                base.din(),
+                base.dout()
+            );
+        }
+        let merged = lota_merge(&base.to_quantized()?, adapter, omega);
+        TernaryDelta::from_merged(base, &merged)
+    }
+
+    /// Diff an already-merged checkpoint layer against its base. Validates
+    /// the lossless-merge contract: same shape/grouping/bit width,
+    /// bit-identical scales, and every grid move in {-1, 0, +1}.
+    pub fn from_merged(base: &PackedLinear, merged: &QuantizedLinear) -> Result<TernaryDelta> {
+        if merged.din() != base.din()
+            || merged.dout() != base.dout()
+            || merged.group_size != base.group_size
+            || merged.n_bits != base.n_bits
+        {
+            bail!(
+                "merged layer ({}, {}, gs {}, {} bits) does not match base ({}, {}, gs {}, {} bits)",
+                merged.din(),
+                merged.dout(),
+                merged.group_size,
+                merged.n_bits,
+                base.din(),
+                base.dout(),
+                base.group_size,
+                base.n_bits
+            );
+        }
+        if merged.scales.data() != base.scales() {
+            bail!("merged scales differ from base — not a lossless ternary merge");
+        }
+        let (din, dout) = (base.din(), base.dout());
+        let wpc = din.div_ceil(CODES_PER_WORD);
+        let mut words = vec![0u32; wpc * dout];
+        let mut col = vec![0.0f32; din];
+        let mut adjustments = 0usize;
+        for j in 0..dout {
+            base.decode_col_into(j, &mut col);
+            for (i, &basecode) in col.iter().enumerate() {
+                let d = merged.w_int.at2(i, j) - basecode;
+                if d != -1.0 && d != 0.0 && d != 1.0 {
+                    bail!("grid move {d} at ({i},{j}) outside ternary range");
+                }
+                if d != 0.0 {
+                    adjustments += 1;
+                }
+                let code = (d + 1.0) as u32;
+                words[j * wpc + i / CODES_PER_WORD] |= code << (2 * (i % CODES_PER_WORD));
+            }
+        }
+        Ok(TernaryDelta {
+            din,
+            dout,
+            group_size: base.group_size,
+            words_per_col: wpc,
+            words,
+            zeros: merged.zeros.data().to_vec(),
+            adjustments,
+        })
+    }
+
+    pub fn din(&self) -> usize {
+        self.din
+    }
+
+    pub fn dout(&self) -> usize {
+        self.dout
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// (G, Dout) row-major merged zero table.
+    pub fn zeros(&self) -> &[f32] {
+        &self.zeros
+    }
+
+    /// Grid entries this delta moves (serving diagnostics — the paper's
+    /// "adjustment budget" at deployment).
+    pub fn adjustments(&self) -> usize {
+        self.adjustments
+    }
+
+    /// Bytes this delta holds resident (packed grid + zero table) — the
+    /// per-adapter serving footprint, far below a merged checkpoint copy.
+    pub fn deployed_bytes(&self) -> usize {
+        (self.words.len() + self.zeros.len()) * 4
+    }
+
+    /// Apply column `j`'s grid moves to already-decoded base codes:
+    /// `out[i] += delta[i,j]`. Each add is `±1.0` or skipped, so the
+    /// result bit-equals decoding the merged checkpoint's column.
+    #[inline]
+    pub fn apply_col(&self, j: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.din);
+        let col = &self.words[j * self.words_per_col..(j + 1) * self.words_per_col];
+        for (chunk, &word) in out.chunks_mut(CODES_PER_WORD).zip(col) {
+            let ident = IDENTITY_WORD >> (2 * (CODES_PER_WORD - chunk.len()));
+            if word == ident {
+                continue; // whole word unmoved — the common sparse case
+            }
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot += ((word >> (2 * k)) & 0x3) as f32 - 1.0;
+            }
+        }
+    }
+}
+
+/// The weight surface a GEMM kernel reads: a packed base, optionally
+/// overlaid with one adapter's [`TernaryDelta`]. `Copy` — two word-sized
+/// refs — so the column-chunk threads share it freely.
+///
+/// The kernels consume weights *only* through this surface (column
+/// decode + affine tables + dims); the delta changes input values, never
+/// the accumulation order, so the lane-ordered contract is untouched.
+#[derive(Clone, Copy)]
+pub struct PackedView<'a> {
+    base: &'a PackedLinear,
+    delta: Option<&'a TernaryDelta>,
+}
+
+impl<'a> PackedView<'a> {
+    /// The base weights alone — what every pre-adapter call site wraps.
+    pub fn base_only(base: &'a PackedLinear) -> PackedView<'a> {
+        PackedView { base, delta: None }
+    }
+
+    /// Base plus one adapter's grid moves and zero table.
+    pub fn with_delta(base: &'a PackedLinear, delta: &'a TernaryDelta) -> PackedView<'a> {
+        debug_assert_eq!(base.din(), delta.din());
+        debug_assert_eq!(base.dout(), delta.dout());
+        debug_assert_eq!(base.group_size, delta.group_size());
+        PackedView { base, delta: Some(delta) }
+    }
+
+    pub fn din(&self) -> usize {
+        self.base.din()
+    }
+
+    pub fn dout(&self) -> usize {
+        self.base.dout()
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.base.group_size
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.base.n_groups()
+    }
+
+    /// Scale table — always the base's: the lossless merge never moves it.
+    pub fn scales(&self) -> &'a [f32] {
+        self.base.scales()
+    }
+
+    /// Zero table — the adapter's merged table when a delta is overlaid.
+    pub fn zeros(&self) -> &'a [f32] {
+        match self.delta {
+            Some(d) => d.zeros(),
+            None => self.base.zeros(),
+        }
+    }
+
+    /// Decode column `j` through the overlay: base codes, then the exact
+    /// ±1 grid moves. Bit-equals the merged checkpoint's column decode.
+    #[inline]
+    pub fn decode_col_into(&self, j: usize, out: &mut [f32]) {
+        self.base.decode_col_into(j, out);
+        if let Some(d) = self.delta {
+            d.apply_col(j, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::{Rng, Tensor};
+
+    fn setup(seed: u64, bits: u32) -> (PackedLinear, TernaryAdapter) {
+        let mut rng = Rng::new(seed);
+        let (din, dout, gs, r) = (48, 20, 8, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let ql = rtn_quantize(&w, gs, bits);
+        let mut ta = TernaryAdapter::init(din, dout, r, &mut rng);
+        let bd: Vec<f32> = (0..r * dout).map(|_| (rng.below(3) as f32) - 1.0).collect();
+        ta.b = Tensor::new(&[r, dout], bd);
+        (PackedLinear::from_quantized(&ql).unwrap(), ta)
+    }
+
+    #[test]
+    fn view_decode_bit_equals_merged_checkpoint_all_bit_widths() {
+        // the in-kernel losslessness claim at its root: overlay decode vs
+        // packing the merged checkpoint and decoding that
+        for bits in [2u32, 3, 4] {
+            let (base, ta) = setup(bits as u64, bits);
+            let omega = 0.5 * ta.rank as f32;
+            let merged = lota_merge(&base.to_quantized().unwrap(), &ta, omega);
+            let merged_packed = PackedLinear::from_quantized(&merged).unwrap();
+            let delta = TernaryDelta::from_adapter(&base, &ta, omega).unwrap();
+            let view = PackedView::with_delta(&base, &delta);
+            assert_eq!(view.zeros(), merged_packed.zeros(), "bits={bits} zeros");
+            assert_eq!(view.scales(), merged_packed.scales(), "bits={bits} scales");
+            let mut got = vec![0.0f32; base.din()];
+            let mut want = vec![0.0f32; base.din()];
+            for j in 0..base.dout() {
+                view.decode_col_into(j, &mut got);
+                merged_packed.decode_col_into(j, &mut want);
+                assert_eq!(got, want, "bits={bits} col {j}");
+            }
+            assert!(delta.adjustments() > 0, "bits={bits}: test adapter moved nothing");
+        }
+    }
+
+    #[test]
+    fn identity_adapter_is_a_no_op_overlay() {
+        let (base, _) = setup(9, 4);
+        let mut rng = Rng::new(10);
+        // fresh init has B = 0 ⇒ ΔW = 0 ⇒ identity merge
+        let ta = TernaryAdapter::init(base.din(), base.dout(), 4, &mut rng);
+        let delta = TernaryDelta::from_adapter(&base, &ta, 2.0).unwrap();
+        assert_eq!(delta.adjustments(), 0);
+        assert_eq!(delta.zeros(), base.zeros());
+        let view = PackedView::with_delta(&base, &delta);
+        let mut got = vec![0.0f32; base.din()];
+        let mut want = vec![0.0f32; base.din()];
+        for j in 0..base.dout() {
+            view.decode_col_into(j, &mut got);
+            base.decode_col_into(j, &mut want);
+            assert_eq!(got, want, "col {j}");
+        }
+    }
+
+    #[test]
+    fn tail_words_apply_their_partial_codes() {
+        // din = 20: one full 16-code word plus a 4-code tail per column
+        let mut rng = Rng::new(11);
+        let (din, dout, gs, r) = (20, 6, 4, 4);
+        let w = Tensor::new(&[din, dout], rng.normal_vec(din * dout, 0.1));
+        let base = PackedLinear::from_quantized(&rtn_quantize(&w, gs, 4)).unwrap();
+        let mut ta = TernaryAdapter::init(din, dout, r, &mut rng);
+        let bd: Vec<f32> = (0..r * dout).map(|_| (rng.below(3) as f32) - 1.0).collect();
+        ta.b = Tensor::new(&[r, dout], bd);
+        let omega = 0.25 * r as f32;
+        let merged = lota_merge(&base.to_quantized().unwrap(), &ta, omega);
+        let delta = TernaryDelta::from_merged(&base, &merged).unwrap();
+        let view = PackedView::with_delta(&base, &delta);
+        let mut got = vec![0.0f32; din];
+        for j in 0..dout {
+            view.decode_col_into(j, &mut got);
+            for i in 0..din {
+                assert_eq!(got[i], merged.w_int.at2(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_shape_and_scale_drift() {
+        let (base, ta) = setup(13, 4);
+        // wrong-shaped adapter
+        let mut rng = Rng::new(14);
+        let small = TernaryAdapter::init(16, 8, 2, &mut rng);
+        assert!(TernaryDelta::from_adapter(&base, &small, 1.0).is_err());
+        // a "merged" layer whose scales moved is not a lossless merge
+        let mut merged = lota_merge(&base.to_quantized().unwrap(), &ta, 2.0);
+        merged.scales.data_mut()[0] += 1.0;
+        assert!(TernaryDelta::from_merged(&base, &merged).is_err());
+        // and one whose grid moved more than ±1
+        let mut merged = base.to_quantized().unwrap();
+        merged.w_int.data_mut()[0] += 2.0;
+        assert!(TernaryDelta::from_merged(&base, &merged).is_err());
+    }
+
+    #[test]
+    fn delta_footprint_is_far_below_a_merged_copy() {
+        let (base, ta) = setup(15, 4);
+        let delta = TernaryDelta::from_adapter(&base, &ta, 2.0).unwrap();
+        // 2-bit grid + one zero table vs 4-bit grid + two tables
+        assert!(delta.deployed_bytes() < base.deployed_bytes());
+    }
+}

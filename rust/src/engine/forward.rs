@@ -27,12 +27,14 @@
 
 use anyhow::{bail, Result};
 
+use crate::adapter::lota::TernaryAdapter;
 use crate::config::{GemmKernel, ModelConfig};
 use crate::model::{self, ParamStore, SLOTS};
 use crate::tensor::{linalg, Tensor};
 
 use super::cache::KvCache;
-use super::gemm::matmul_packed_dispatch;
+use super::delta::{PackedView, TernaryDelta};
+use super::gemm::matmul_packed_view;
 use super::packed::PackedLinear;
 use super::simd;
 
@@ -54,6 +56,9 @@ struct Layer {
     slots: Vec<PackedLinear>,
     /// optional f32 LoRA factors `(A, B)` per slot, same order
     lora: Option<Vec<(Tensor, Tensor)>>,
+    /// registered ternary adapters: `adapters[a][slot]` is adapter id
+    /// `a + 1`'s grid delta for this layer (id 0 is the bare base)
+    adapters: Vec<Vec<TernaryDelta>>,
 }
 
 /// The native inference engine: a merged quantized checkpoint held in
@@ -71,6 +76,9 @@ pub struct Engine {
     /// [`Engine::set_gemm_kernel`]) so the hot path never re-detects —
     /// all choices are bit-identical, this is purely a speed/debug knob
     gemm: simd::Dispatch,
+    /// names of registered ternary adapter sets, in registration order;
+    /// adapter id `i + 1` is `adapter_names[i]`, id 0 the bare base
+    adapter_names: Vec<String>,
 }
 
 impl Engine {
@@ -91,6 +99,7 @@ impl Engine {
                 ln2_b: store.get("ln2_b")?.row(li).to_vec(),
                 slots,
                 lora: None,
+                adapters: Vec::new(),
             });
         }
         Ok(Engine {
@@ -103,6 +112,7 @@ impl Engine {
             lnf_b: store.get("lnf_b")?.data().to_vec(),
             layers,
             gemm: simd::resolve(GemmKernel::Auto),
+            adapter_names: Vec::new(),
         })
     }
 
@@ -139,6 +149,9 @@ impl Engine {
     /// runs the quantized base **plus** the adapter matmuls — the
     /// unmergeable baseline path of the Fig. 4 comparison.
     pub fn attach_lora(&mut self, store: &ParamStore) -> Result<()> {
+        if !self.adapter_names.is_empty() {
+            bail!("cannot attach LoRA to an engine serving ternary adapters");
+        }
         for (li, layer) in self.layers.iter_mut().enumerate() {
             let mut mats = Vec::with_capacity(SLOTS.len());
             for slot in SLOTS {
@@ -149,6 +162,79 @@ impl Engine {
             layer.lora = Some(mats);
         }
         Ok(())
+    }
+
+    /// Register one named ternary adapter set (the `ta_{slot}_a/_b`
+    /// layer-stacked layout every LoTA training path produces) against
+    /// this engine's packed base, returning its adapter id (≥ 1; id 0 is
+    /// always the bare base). The adapter is merged losslessly per
+    /// (layer, slot) via [`crate::adapter::lota::lota_merge`] and stored
+    /// as in-kernel [`TernaryDelta`]s — requests tagged with the returned
+    /// id decode bit-identically to serving the merged checkpoint alone.
+    ///
+    /// `omega` is the ternarization threshold the adapter was trained
+    /// with (`omega_frac · rank`); a wrong value changes which grid moves
+    /// survive, so it must match training.
+    pub fn register_adapter(
+        &mut self,
+        name: &str,
+        store: &ParamStore,
+        omega: f32,
+    ) -> Result<u32> {
+        if self.has_lora() {
+            bail!("cannot register ternary adapters on an engine serving LoRA");
+        }
+        if name.is_empty() || name == "base" {
+            bail!("adapter name {name:?} is reserved");
+        }
+        if self.adapter_names.iter().any(|n| n == name) {
+            bail!("adapter {name:?} already registered");
+        }
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            let mut deltas = Vec::with_capacity(SLOTS.len());
+            for (si, slot) in SLOTS.iter().enumerate() {
+                let a = store.get(&format!("ta_{slot}_a"))?.layer(li);
+                let b = store.get(&format!("ta_{slot}_b"))?.layer(li);
+                let ta = TernaryAdapter::from_parts(a, b)?;
+                deltas.push(TernaryDelta::from_adapter(&layer.slots[si], &ta, omega)?);
+            }
+            layer.adapters.push(deltas);
+        }
+        self.adapter_names.push(name.to_string());
+        Ok(self.adapter_names.len() as u32)
+    }
+
+    /// Number of registered adapter sets (excluding the implicit base).
+    /// Valid request tags are `0..=adapter_count()`.
+    pub fn adapter_count(&self) -> usize {
+        self.adapter_names.len()
+    }
+
+    /// Human-readable name for an adapter id (`"base"` for 0) — what the
+    /// per-adapter serving stats are keyed by.
+    pub fn adapter_label(&self, id: u32) -> &str {
+        match id {
+            0 => "base",
+            i => &self.adapter_names[(i - 1) as usize],
+        }
+    }
+
+    /// Registered adapter names, in id order (id = index + 1).
+    pub fn adapter_names(&self) -> &[String] {
+        &self.adapter_names
+    }
+
+    /// Bytes held resident by all registered adapter deltas.
+    pub fn adapter_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.adapters
+                    .iter()
+                    .flat_map(|set| set.iter().map(|d| d.deployed_bytes()))
+                    .sum::<usize>()
+            })
+            .sum()
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -200,7 +286,7 @@ impl Engine {
         let mut x = Tensor::new(&[b * t, d], x);
 
         for layer in &self.layers {
-            x = self.block(&x, layer, b, t)?;
+            x = self.block(&x, layer, b, t, &[])?;
         }
         let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
         let logits = linalg::matmul(&x, &self.head);
@@ -274,6 +360,23 @@ impl Engine {
         cache: &mut KvCache,
         rows: &[usize],
     ) -> Result<Tensor> {
+        self.forward_incremental_tagged(tokens, cache, rows, &[])
+    }
+
+    /// [`Engine::forward_incremental`] with a per-request adapter tag:
+    /// `adapters[i]` selects the weight surface request row `i` runs
+    /// through (0 = bare base, `k ≥ 1` = the k-th registered ternary
+    /// adapter). An empty slice means all-base. Rows with different tags
+    /// may share one call — every kernel is per-row independent, so each
+    /// row's logits bit-equal a solo call under its own adapter
+    /// (`tests/adapters.rs` pins the end-to-end claim).
+    pub fn forward_incremental_tagged(
+        &self,
+        tokens: &Tensor,
+        cache: &mut KvCache,
+        rows: &[usize],
+        adapters: &[u32],
+    ) -> Result<Tensor> {
         let cfg = &self.cfg;
         if tokens.shape().len() != 2 {
             bail!("incremental forward wants (R, T_new) tokens, got {:?}", tokens.shape());
@@ -284,6 +387,12 @@ impl Engine {
         }
         if r != rows.len() {
             bail!("{r} token rows for {} cache rows", rows.len());
+        }
+        if !adapters.is_empty() && adapters.len() != rows.len() {
+            bail!("{} adapter tags for {} rows", adapters.len(), rows.len());
+        }
+        if let Some(&bad) = adapters.iter().find(|&&a| a as usize > self.adapter_names.len()) {
+            bail!("adapter id {bad} outside registered range 0..={}", self.adapter_names.len());
         }
         cache.check(self.layers.len(), cfg.d_model, cfg.seq_len)?;
         for w in rows.windows(2) {
@@ -353,8 +462,17 @@ impl Engine {
             segs.push(cache.segments(row, bases[i] + t_new));
         }
 
+        // expand per-request tags to activation rows (row i owns
+        // activation rows i·t_new .. (i+1)·t_new); all-base collapses to
+        // the empty tag slice so the pre-adapter fast path stays intact
+        let tags: Vec<u32> = if adapters.iter().all(|&a| a == 0) {
+            Vec::new()
+        } else {
+            adapters.iter().flat_map(|&a| std::iter::repeat(a).take(t_new)).collect()
+        };
+
         for (li, layer) in self.layers.iter().enumerate() {
-            x = self.block_incremental(&x, layer, li, cache, &bases, t_new, &dsts, &segs)?;
+            x = self.block_incremental(&x, layer, li, cache, &bases, t_new, &dsts, &segs, &tags)?;
         }
         let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
         let logits = linalg::matmul(&x, &self.head);
@@ -381,6 +499,7 @@ impl Engine {
         t_new: usize,
         dsts: &[usize],
         segs: &[Vec<(usize, usize, usize)>],
+        tags: &[u32],
     ) -> Result<Tensor> {
         let cfg = &self.cfg;
         let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
@@ -388,9 +507,9 @@ impl Engine {
         let cap = cache.capacity();
 
         let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
-        let q = self.linear(&xn, layer, WQ);
-        let k = self.linear(&xn, layer, WK);
-        let v = self.linear(&xn, layer, WV);
+        let q = self.linear(&xn, layer, WQ, tags);
+        let k = self.linear(&xn, layer, WK, tags);
+        let v = self.linear(&xn, layer, WV, tags);
 
         // append phase: the new K/V rows join the cached prefix — these are
         // exactly the values the full forward computes at these positions
@@ -462,17 +581,35 @@ impl Engine {
             }
         }
         let attn = Tensor::new(&[r * t_new, d], attn);
-        let x = x.add(&self.linear(&attn, layer, WO));
+        let x = x.add(&self.linear(&attn, layer, WO, tags));
 
         let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
-        let hmid = self.linear(&xn, layer, W_UP).map(gelu_tanh);
-        Ok(x.add(&self.linear(&hmid, layer, W_DOWN)))
+        let hmid = self.linear(&xn, layer, W_UP, tags).map(gelu_tanh);
+        Ok(x.add(&self.linear(&hmid, layer, W_DOWN, tags)))
+    }
+
+    /// The weight surface activation rows tagged `tag` read in this
+    /// (layer, slot): the bare base for 0, base + that adapter's ternary
+    /// delta otherwise.
+    fn slot_view<'a>(&self, layer: &'a Layer, slot: usize, tag: u32) -> PackedView<'a> {
+        let base = &layer.slots[slot];
+        match tag {
+            0 => PackedView::base_only(base),
+            t => PackedView::with_delta(base, &layer.adapters[(t - 1) as usize][slot]),
+        }
     }
 
     /// One quantized linear, with the optional LoRA contribution
-    /// (`α/r = 2`, matching the graphs) riding on top.
-    fn linear(&self, x: &Tensor, layer: &Layer, slot: usize) -> Tensor {
-        let mut y = matmul_packed_dispatch(x, &layer.slots[slot], self.gemm, None);
+    /// (`α/r = 2`, matching the graphs) riding on top. `tags` gives each
+    /// activation row's adapter id (empty = all base): a uniform batch
+    /// runs one fused GEMM through that adapter's [`PackedView`]; a mixed
+    /// batch is partitioned by adapter — gather rows, one GEMM per
+    /// adapter present, scatter back. Per-row kernel independence
+    /// (`row_slices_match_batched_call_bitwise` in `gemm.rs`) makes the
+    /// partition bit-invisible: every row gets exactly the bits a
+    /// solo call under its adapter would produce.
+    fn linear(&self, x: &Tensor, layer: &Layer, slot: usize, tags: &[u32]) -> Tensor {
+        let mut y = self.linear_quant(x, layer, slot, tags);
         if let Some(lora) = &layer.lora {
             let (a, b) = &lora[slot];
             let contrib = linalg::matmul(&linalg::matmul(x, a), b).scale(2.0);
@@ -481,14 +618,41 @@ impl Engine {
         y
     }
 
-    fn block(&self, x: &Tensor, layer: &Layer, b: usize, t: usize) -> Result<Tensor> {
+    fn linear_quant(&self, x: &Tensor, layer: &Layer, slot: usize, tags: &[u32]) -> Tensor {
+        let first = tags.first().copied().unwrap_or(0);
+        if tags.iter().all(|&t| t == first) {
+            return matmul_packed_view(x, self.slot_view(layer, slot, first), self.gemm, None);
+        }
+        debug_assert_eq!(tags.len(), x.rows());
+        let (m, din) = (x.rows(), x.cols());
+        let dout = layer.slots[slot].dout();
+        let mut out = vec![0.0f32; m * dout];
+        let mut present: Vec<u32> = tags.to_vec();
+        present.sort_unstable();
+        present.dedup();
+        for tag in present {
+            let picked: Vec<usize> = (0..m).filter(|&i| tags[i] == tag).collect();
+            let mut sub = vec![0.0f32; picked.len() * din];
+            for (k, &i) in picked.iter().enumerate() {
+                sub[k * din..(k + 1) * din].copy_from_slice(x.row(i));
+            }
+            let sub = Tensor::new(&[picked.len(), din], sub);
+            let y = matmul_packed_view(&sub, self.slot_view(layer, slot, tag), self.gemm, None);
+            for (k, &i) in picked.iter().enumerate() {
+                out[i * dout..(i + 1) * dout].copy_from_slice(&y.data()[k * dout..(k + 1) * dout]);
+            }
+        }
+        Tensor::new(&[m, dout], out)
+    }
+
+    fn block(&self, x: &Tensor, layer: &Layer, b: usize, t: usize, tags: &[u32]) -> Result<Tensor> {
         let cfg = &self.cfg;
         let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
 
         let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
-        let q = self.linear(&xn, layer, WQ);
-        let k = self.linear(&xn, layer, WK);
-        let v = self.linear(&xn, layer, WV);
+        let q = self.linear(&xn, layer, WQ, tags);
+        let k = self.linear(&xn, layer, WK, tags);
+        let v = self.linear(&xn, layer, WV, tags);
 
         // causal multi-head attention over the (B·T, D) activations
         let scale = 1.0 / (hd as f32).sqrt();
@@ -531,11 +695,11 @@ impl Engine {
             }
         }
         let attn = Tensor::new(&[b * t, d], attn);
-        let x = x.add(&self.linear(&attn, layer, WO));
+        let x = x.add(&self.linear(&attn, layer, WO, tags));
 
         let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
-        let hmid = self.linear(&xn, layer, W_UP).map(gelu_tanh);
-        Ok(x.add(&self.linear(&hmid, layer, W_DOWN)))
+        let hmid = self.linear(&xn, layer, W_UP, tags).map(gelu_tanh);
+        Ok(x.add(&self.linear(&hmid, layer, W_DOWN, tags)))
     }
 }
 

@@ -38,6 +38,7 @@
 use crate::config::GemmKernel;
 use crate::tensor::Tensor;
 
+use super::delta::PackedView;
 use super::packed::PackedLinear;
 use super::simd::{self, Dispatch};
 
@@ -74,11 +75,25 @@ pub fn matmul_packed_opts(
     matmul_packed_dispatch(x, w, simd::resolve(kernel), threads)
 }
 
-/// Innermost entry: run with an already-resolved [`Dispatch`] (the engine
-/// resolves once at construction and reuses it every forward).
+/// Run with an already-resolved [`Dispatch`] (the engine resolves once at
+/// construction and reuses it every forward). Base weights only — the
+/// adapter-aware entry is [`matmul_packed_view`].
 pub fn matmul_packed_dispatch(
     x: &Tensor,
     w: &PackedLinear,
+    dispatch: Dispatch,
+    threads: Option<usize>,
+) -> Tensor {
+    matmul_packed_view(x, PackedView::base_only(w), dispatch, threads)
+}
+
+/// Innermost entry: fused packed GEMM over any weight surface — the bare
+/// base or a base overlaid with one adapter's ternary delta
+/// ([`PackedView`]). The view changes which codes and zeros the kernels
+/// read, never the accumulation order, so every bitwise pin carries over.
+pub fn matmul_packed_view(
+    x: &Tensor,
+    w: PackedView,
     dispatch: Dispatch,
     threads: Option<usize>,
 ) -> Tensor {
@@ -89,11 +104,11 @@ pub fn matmul_packed_dispatch(
     // partial group if this ever breaks, which would corrupt outputs
     // instead of failing loud.
     assert_eq!(
-        din % w.group_size,
+        din % w.group_size(),
         0,
         "packed GEMM requires group_size ({}) to divide Din ({din}); \
          a trailing partial group would be silently dropped",
-        w.group_size
+        w.group_size()
     );
     let dout = w.dout();
     let threads = match threads {
@@ -107,7 +122,7 @@ pub fn matmul_packed_dispatch(
             }
         }
     };
-    let xg = group_sums(x, w.group_size, w.n_groups());
+    let xg = group_sums(x, w.group_size(), w.n_groups());
 
     let threads = threads.clamp(1, dout.max(1));
     if threads == 1 {
@@ -175,12 +190,12 @@ fn group_sums(x: &Tensor, group_size: usize, n_groups: usize) -> Vec<f32> {
 pub(crate) fn gemm_block_scalar(
     x: &Tensor,
     xg: &[f32],
-    w: &PackedLinear,
+    w: PackedView,
     j0: usize,
     j1: usize,
 ) -> Vec<f32> {
     let (m, din) = (x.rows(), x.cols());
-    let gs = w.group_size;
+    let gs = w.group_size();
     let g = w.n_groups();
     let dout = w.dout();
     let (scales, zeros) = (w.scales(), w.zeros());

@@ -60,6 +60,7 @@
 pub mod blocks;
 pub mod cache;
 pub mod decode;
+pub mod delta;
 pub mod forward;
 pub mod gemm;
 pub mod packed;
@@ -68,9 +69,11 @@ pub mod simd;
 pub use blocks::{BlockAllocator, BlockCounters};
 pub use cache::KvCache;
 pub use decode::{greedy_decode, greedy_decode_paged, greedy_decode_with, DecodeStats, Generation};
+pub use delta::{PackedView, TernaryDelta};
 pub use forward::Engine;
 pub use gemm::{
-    matmul_packed, matmul_packed_dispatch, matmul_packed_opts, matmul_packed_with_threads,
+    matmul_packed, matmul_packed_dispatch, matmul_packed_opts, matmul_packed_view,
+    matmul_packed_with_threads,
 };
 pub use packed::PackedLinear;
 pub use simd::{Dispatch as GemmDispatch, LANES as GEMM_LANES};

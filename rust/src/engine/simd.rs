@@ -66,7 +66,7 @@ use std::sync::OnceLock;
 use crate::config::GemmKernel;
 use crate::tensor::Tensor;
 
-use super::packed::PackedLinear;
+use super::delta::PackedView;
 
 /// Fixed vector width of the accumulation contract. Everything —
 /// including the scalar reference — accumulates in 8 lanes, whatever the
@@ -216,7 +216,7 @@ pub(crate) fn run_block(
     dispatch: Dispatch,
     x: &Tensor,
     xg: &[f32],
-    w: &PackedLinear,
+    w: PackedView,
     j0: usize,
     j1: usize,
 ) -> Vec<f32> {
@@ -271,14 +271,14 @@ const TAIL_MASKS: [[i32; 8]; 8] = [
 unsafe fn gemm_block_avx2(
     x: &Tensor,
     xg: &[f32],
-    w: &PackedLinear,
+    w: PackedView,
     j0: usize,
     j1: usize,
 ) -> Vec<f32> {
     use std::arch::x86_64::*;
 
     let (m, din) = (x.rows(), x.cols());
-    let gs = w.group_size;
+    let gs = w.group_size();
     let g = w.n_groups();
     let dout = w.dout();
     let (scales, zeros) = (w.scales(), w.zeros());
@@ -344,7 +344,7 @@ unsafe fn gemm_block_avx2(
 unsafe fn gemm_block_avx2(
     x: &Tensor,
     xg: &[f32],
-    w: &PackedLinear,
+    w: PackedView,
     j0: usize,
     j1: usize,
 ) -> Vec<f32> {

@@ -9,6 +9,9 @@
 //! lota eval      --model tiny --ckpt <ckpt> --suite mmlu
 //! lota serve     --model tiny --ckpt <ckpt> --path merged --backend native --requests 32
 //! lota serve     --model tiny --ckpt <ckpt> --backend native --sched true --arrival-rate 64
+//! lota serve     --model tiny --synthetic true --backend native --sched true \
+//!                --adapter fr=synthetic:3,de=synthetic:4
+//! lota config-check examples/serve_sched.toml
 //! lota table1    --model tiny --steps 40      # regenerate the main table
 //! lota info                                    # artifact + config summary
 //! ```
@@ -31,8 +34,8 @@ use lota_qaf::coordinator::{
 use lota_qaf::data::{mmlu_like, tasks};
 use lota_qaf::model::{self, checkpoint};
 use lota_qaf::runtime::Runtime;
-use lota_qaf::sched::{generate_load, LoadSpec};
-use lota_qaf::serve::{serve_batch, serve_open_loop, ServeOptions, ServePath};
+use lota_qaf::sched::{generate_load, spread_adapters, LoadRequest, LoadSpec};
+use lota_qaf::serve::{serve_batch, serve_open_loop, AdapterRegistry, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
 /// `--key value` argument bag.
@@ -112,6 +115,10 @@ fn main() -> Result<()> {
         print_usage();
         return Ok(());
     };
+    // config-check takes positional file paths, not --flag pairs
+    if cmd == "config-check" {
+        return cmd_config_check(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "pretrain" => cmd_pretrain(&args),
@@ -149,6 +156,7 @@ COMMANDS
             [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
             [--kv-paged true|false] [--kv-block-size 16]
             [--arrival-rate <req/s>] [--load-seed 123]
+            [--adapter name=<ckpt|synthetic:seed>[,name=...]] [--omega-frac 0.75]
             [--trace-out <trace.json>] [--metrics-out <metrics.json|.prom>]
             --sched routes the native backend through the continuous-batching
             scheduler (defaults from the [sched] TOML table; see
@@ -163,12 +171,21 @@ COMMANDS
             bit-identical, only the speed differs.
             --synthetic true serves an in-process RTN-quantized random
             store (no --ckpt, no artifacts) — smoke runs and CI.
+            --adapter registers named ternary adapter sets against the
+            packed base (S-LoRA style; needs --sched true). Sources are
+            LoTA adapter checkpoints or synthetic:<seed>. Requests are
+            spread round-robin across the registered adapters, mixed
+            freely in each batch, and served bit-identically to each adapter's
+            individually merged checkpoint. The [adapters] TOML table
+            (name = \"source\") is the config-file form; --omega-frac must
+            match the threshold the adapters were trained with.
             --trace-out writes a Chrome-trace/Perfetto JSON span timeline
             of the scheduled run (needs --sched true; load the file at
             ui.perfetto.dev). --metrics-out snapshots the final report's
             metrics registry (.json → JSON, else Prometheus text). Both
             also honor the trace_out / metrics_out TOML keys.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
+  config-check <exp.toml>...   # parse + validate experiment TOMLs, run nothing
   info      [--artifacts artifacts]
 
 Artifacts come from `make artifacts`; all commands take --artifacts <dir>."
@@ -176,6 +193,40 @@ Artifacts come from `make artifacts`; all commands take --artifacts <dir>."
 }
 
 // ---------------------------------------------------------------------------
+
+/// Parse every given TOML file through [`ExperimentConfig`] (and its
+/// `[adapters]` table through [`AdapterRegistry`]) without running
+/// anything — the CI doc-sanity leg feeds every fenced TOML snippet in
+/// `docs/` and `examples/` through this.
+fn cmd_config_check(paths: &[String]) -> Result<()> {
+    if paths.is_empty() {
+        bail!("usage: lota config-check <exp.toml>...");
+    }
+    for p in paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        let doc = lota_qaf::config::TomlDoc::parse(&text)
+            .with_context(|| format!("parsing {p}"))?;
+        let exp = ExperimentConfig::from_toml(&doc)
+            .with_context(|| format!("validating {p}"))?;
+        let reg = AdapterRegistry::from_pairs(&exp.adapters)
+            .with_context(|| format!("validating [adapters] in {p}"))?;
+        preset(&exp.model).with_context(|| format!("unknown model in {p}"))?;
+        println!(
+            "{p}: ok (model {}, method {}, {}-bit{}{})",
+            exp.model,
+            exp.method.as_str(),
+            exp.n_bits,
+            if exp.sched.is_some() { ", sched" } else { "" },
+            if reg.is_empty() {
+                String::new()
+            } else {
+                format!(", {} adapters", reg.len())
+            }
+        );
+    }
+    Ok(())
+}
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let model_name = args.get("model", "tiny");
@@ -449,6 +500,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts = opts.trace_out(p.clone());
     }
 
+    // multi-adapter serving: --adapter (name=source,…) wins over the
+    // experiment TOML's [adapters] table; requests spread round-robin
+    // across the registered sets and mix freely per batch
+    let adapters = match args.opt("adapter") {
+        Some(s) => AdapterRegistry::parse_cli(s)?,
+        None => AdapterRegistry::from_pairs(&exp.adapters)?,
+    };
+    let n_adapters = adapters.len();
+    if n_adapters > 0 {
+        if backend != lota_qaf::config::Backend::Native {
+            bail!("--adapter serves on the native backend only");
+        }
+        if sched_cfg.is_none() {
+            bail!("multi-adapter serving routes through the scheduler: pass --sched true");
+        }
+        opts = opts
+            .with_adapters(adapters)
+            .omega_frac(args.get_f32("omega-frac", exp.omega_frac)?);
+    }
+
     // open-loop mode: requests arrive over time (Poisson) instead of all
     // at t = 0 — the workload shape the scheduler exists for
     let rate = args.get_f32("arrival-rate", 0.0)?;
@@ -463,7 +534,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             task: "arith".into(),
             max_new_mix: vec![max_new.max(1)],
         };
-        let load = generate_load(&spec)?;
+        let mut load = generate_load(&spec)?;
+        spread_adapters(&mut load, n_adapters);
         let (_responses, report) = serve_open_loop(&cfg, &store, &opts, &load)?;
         println!(
             "served {} requests [native:sched gemm={}, open loop {rate} req/s] in {:.2}s: \
@@ -480,6 +552,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.ttft_ms_p95,
             report.queue_wait_ms
         );
+        print_adapter_usage(&report);
         if let Some(p) = &metrics_out {
             lota_qaf::obs::MetricsRegistry::from_report(&report).write(p)?;
             println!("metrics snapshot written to {}", p.display());
@@ -492,6 +565,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompts: Vec<String> = (0..n)
         .map(|_| gen.sample(&mut rng, tasks::Split::Test).prompt)
         .collect();
+
+    // multi-adapter batch serving: the per-request adapter tag lives on
+    // the scheduler's submit path, so route through the open-loop driver
+    // with every arrival at t = 0 (identical admission behavior to the
+    // plain scheduled drain)
+    if n_adapters > 0 {
+        let mut load: Vec<LoadRequest> = prompts
+            .iter()
+            .map(|p| LoadRequest {
+                arrival_secs: 0.0,
+                prompt: p.clone(),
+                max_new,
+                adapter: 0,
+            })
+            .collect();
+        spread_adapters(&mut load, n_adapters);
+        let (_responses, report) = serve_open_loop(&cfg, &store, &opts, &load)?;
+        println!(
+            "served {} requests [native:sched gemm={}, {n_adapters} adapters] in {:.2}s: \
+             {:.1} tok/s, {:.2} req/s, p50 {:.3}s p95 {:.3}s, \
+             ttft p50 {:.1}ms p95 {:.1}ms, queue wait {:.1}ms",
+            report.requests,
+            report.gemm_kernel.unwrap_or("?"),
+            report.wall_secs,
+            report.tokens_per_sec,
+            report.requests_per_sec,
+            report.latency.p50,
+            report.latency.p95,
+            report.ttft_ms_p50,
+            report.ttft_ms_p95,
+            report.queue_wait_ms
+        );
+        print_adapter_usage(&report);
+        if let Some(p) = &metrics_out {
+            lota_qaf::obs::MetricsRegistry::from_report(&report).write(p)?;
+            println!("metrics snapshot written to {}", p.display());
+        }
+        return Ok(());
+    }
+
     let report = serve_batch(rt.as_ref(), &cfg, &store, &opts, &prompts)?;
     let backend_tag = match backend {
         lota_qaf::config::Backend::Native => {
@@ -521,6 +634,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("metrics snapshot written to {}", p.display());
     }
     Ok(())
+}
+
+/// Per-adapter serving usage from a scheduled run's report (no-op for
+/// untagged runs — the map only carries labels that served requests).
+fn print_adapter_usage(report: &lota_qaf::serve::ThroughputReport) {
+    if let Some(sched) = &report.sched {
+        for (label, usage) in &sched.adapter_usage {
+            println!("  adapter {label}: {} requests, {} tokens", usage.requests, usage.tokens);
+        }
+    }
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {

@@ -111,6 +111,19 @@ impl MetricsRegistry {
             r.observe_all("lota_queue_depth", &sched.queue_depth);
             r.observe_all("lota_batch_occupancy", &sched.batch_occupancy);
             r.observe_all("lota_block_util", &sched.block_util);
+            // per-adapter serving usage, labeled Prometheus-style; absent
+            // entirely when the run never tagged a request (pre-adapter
+            // snapshots keep their exact key set)
+            for (label, usage) in &sched.adapter_usage {
+                r.inc(
+                    &format!("lota_adapter_requests_total{{adapter=\"{label}\"}}"),
+                    usage.requests as f64,
+                );
+                r.inc(
+                    &format!("lota_adapter_tokens_total{{adapter=\"{label}\"}}"),
+                    usage.tokens as f64,
+                );
+            }
         }
         r
     }
@@ -127,8 +140,16 @@ impl MetricsRegistry {
     /// Prometheus text exposition format.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
+        // keys may carry a `{label="…"}` suffix (per-adapter counters);
+        // the TYPE header names the bare metric, once per run of equal
+        // bare names (BTreeMap order keeps labeled variants adjacent)
+        let mut last_type: &str = "";
         for (name, v) in &self.counters {
-            writeln!(out, "# TYPE {name} counter").unwrap();
+            let base = name.split('{').next().unwrap_or(name);
+            if base != last_type {
+                writeln!(out, "# TYPE {base} counter").unwrap();
+                last_type = base;
+            }
             writeln!(out, "{name} {v}").unwrap();
         }
         for (name, v) in &self.gauges {
@@ -216,7 +237,7 @@ mod tests {
     use super::*;
     use crate::config::Json;
     use crate::engine::DecodeStats;
-    use crate::serve::SchedStats;
+    use crate::serve::{AdapterUsage, SchedStats};
 
     fn sample_report() -> ThroughputReport {
         let mut sched = SchedStats::default();
@@ -230,6 +251,8 @@ mod tests {
         sched.admission_denied = 2;
         sched.peak_active = 3;
         sched.steps = 9;
+        sched.adapter_usage.insert("base".to_string(), AdapterUsage { requests: 3, tokens: 9 });
+        sched.adapter_usage.insert("fr".to_string(), AdapterUsage { requests: 1, tokens: 3 });
         let mut r = ThroughputReport::default();
         r.requests = 4;
         r.tokens = 12;
@@ -254,6 +277,22 @@ mod tests {
         assert_eq!(reg.histogram("lota_ttft_ms").unwrap().len(), 3);
         // empty histograms stay absent rather than appearing as zeros
         assert!(reg.histogram("lota_block_util").is_none());
+    }
+
+    #[test]
+    fn per_adapter_usage_flattens_into_labeled_counters() {
+        let reg = MetricsRegistry::from_report(&sample_report());
+        assert_eq!(reg.counter("lota_adapter_requests_total{adapter=\"base\"}"), Some(3.0));
+        assert_eq!(reg.counter("lota_adapter_tokens_total{adapter=\"fr\"}"), Some(3.0));
+        let text = reg.to_prometheus();
+        // one TYPE header per bare metric, however many adapters
+        assert_eq!(text.matches("# TYPE lota_adapter_requests_total counter").count(), 1);
+        assert!(text.contains("lota_adapter_requests_total{adapter=\"base\"} 3"));
+        assert!(text.contains("lota_adapter_requests_total{adapter=\"fr\"} 1"));
+        assert!(text.contains("lota_adapter_tokens_total{adapter=\"base\"} 9"));
+        // untagged runs carry no adapter keys at all
+        let bare = MetricsRegistry::from_report(&ThroughputReport::default());
+        assert_eq!(bare.counter("lota_adapter_requests_total{adapter=\"base\"}"), None);
     }
 
     #[test]

@@ -52,6 +52,24 @@ pub struct LoadRequest {
     pub arrival_secs: f64,
     pub prompt: String,
     pub max_new: usize,
+    /// adapter id to serve with (0 = bare base). [`generate_load`] always
+    /// emits 0 — the golden replay test pins its exact RNG draw order, so
+    /// multi-adapter workloads re-tag requests *after* generation (see
+    /// [`spread_adapters`]) instead of drawing inside the generator.
+    pub adapter: u32,
+}
+
+/// Re-tag a generated workload across `n_adapters` registered adapters,
+/// round-robin in arrival order (request i gets id `i % n_adapters + 1`).
+/// With `n_adapters == 0` every request keeps the bare base. Deterministic
+/// and draw-free by construction, so workload shape is untouched.
+pub fn spread_adapters(reqs: &mut [LoadRequest], n_adapters: usize) {
+    if n_adapters == 0 {
+        return;
+    }
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.adapter = (i % n_adapters) as u32 + 1;
+    }
 }
 
 /// Generate the workload: `n_requests` arrivals with Exp(λ) gaps, sorted
@@ -76,6 +94,7 @@ pub fn generate_load(spec: &LoadSpec) -> Result<Vec<LoadRequest>> {
             arrival_secs: t,
             prompt: task.sample(&mut rng, Split::Test).prompt,
             max_new: *rng.choose(&spec.max_new_mix),
+            adapter: 0,
         });
     }
     Ok(out)
@@ -156,6 +175,27 @@ mod tests {
             assert_eq!(req.prompt, prompt, "request {i}: prompt sequence drifted");
             assert_eq!(req.max_new, max_new, "request {i}: length sequence drifted");
         }
+    }
+
+    #[test]
+    fn spread_adapters_round_robins_without_touching_the_workload() {
+        let spec = LoadSpec { n_requests: 7, ..LoadSpec::default() };
+        let mut reqs = generate_load(&spec).unwrap();
+        assert!(reqs.iter().all(|r| r.adapter == 0), "the generator never tags");
+        let before: Vec<(f64, String, usize)> = reqs
+            .iter()
+            .map(|r| (r.arrival_secs, r.prompt.clone(), r.max_new))
+            .collect();
+        spread_adapters(&mut reqs, 3);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.adapter, (i % 3) as u32 + 1);
+        }
+        for (r, b) in reqs.iter().zip(&before) {
+            assert_eq!((r.arrival_secs, r.prompt.clone(), r.max_new), *b);
+        }
+        // zero adapters is the identity, not a panic
+        spread_adapters(&mut reqs, 0);
+        assert_eq!(reqs[0].adapter, 1);
     }
 
     #[test]

@@ -45,6 +45,6 @@ pub mod loadgen;
 pub mod request;
 pub mod scheduler;
 
-pub use loadgen::{generate_load, LoadRequest, LoadSpec};
+pub use loadgen::{generate_load, spread_adapters, LoadRequest, LoadSpec};
 pub use request::{ChannelSink, FinishReason, RequestState, SchedResponse, StreamEvent, TokenSink};
 pub use scheduler::{SchedOptions, Scheduler, StepReport};

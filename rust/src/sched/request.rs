@@ -42,6 +42,8 @@ pub enum FinishReason {
 #[derive(Clone, Debug)]
 pub struct SchedResponse {
     pub id: u64,
+    /// adapter id this request was served with (0 = bare base)
+    pub adapter: u32,
     pub text: String,
     /// tokens actually generated (the honest tokens/s unit)
     pub tokens: usize,
@@ -105,6 +107,7 @@ mod tests {
         sink.on_token(3, 17);
         let resp = SchedResponse {
             id: 3,
+            adapter: 0,
             text: "x".into(),
             tokens: 1,
             reason: FinishReason::Eos,

@@ -98,12 +98,16 @@ struct Queued {
     id: u64,
     frame: Vec<f32>,
     max_new: usize,
+    /// adapter id to serve with (0 = bare base)
+    adapter: u32,
     arrival: Instant,
 }
 
 /// A request occupying a decode slot. `slots[i]` owns cache row `i`.
 struct Active {
     id: u64,
+    /// adapter id this request is served with (0 = bare base)
+    adapter: u32,
     /// BOS + prompt + SEP + generated-so-far, f32-coded
     frame: Vec<f32>,
     /// position whose logits pick the next token
@@ -270,6 +274,7 @@ impl<'a> Scheduler<'a> {
             "kv_layout",
             if self.block_size.is_some() { "paged" } else { "contiguous" },
         );
+        tracer.meta("adapters", &self.engine.adapter_count().to_string());
         self.tracer = Some(tracer);
         self
     }
@@ -334,6 +339,22 @@ impl<'a> Scheduler<'a> {
     /// immediately without consuming any forward — the same contract as
     /// the one-shot decode.
     pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
+        self.submit_for(prompt, max_new, 0)
+    }
+
+    /// [`Scheduler::submit`] against a named ternary adapter: `adapter`
+    /// is 0 for the bare base or the 1-based id
+    /// [`Engine::register_adapter`] returned. The scheduler freely mixes
+    /// requests for different adapters in one step — the per-row grid
+    /// deltas keep every mixed batch bit-identical to serving each
+    /// adapter's merged checkpoint alone (`tests/adapters.rs` pins it).
+    pub fn submit_for(&mut self, prompt: &str, max_new: usize, adapter: u32) -> Result<u64> {
+        if adapter as usize > self.engine.adapter_count() {
+            bail!(
+                "adapter id {adapter} is not registered (engine serves {} adapters)",
+                self.engine.adapter_count()
+            );
+        }
         let (frame, _cursor) = decode::frame_prompt(self.engine.config(), prompt, max_new)?;
         // zero-token requests complete below without ever touching the
         // cache, so only real generations are held to the pool bound
@@ -355,10 +376,14 @@ impl<'a> Scheduler<'a> {
                 // a zero-length span: the request existed but never queued
                 let now = Instant::now();
                 tr.begin(Track::Request(id), "request", now);
+                if adapter > 0 {
+                    tr.counter(Track::Request(id), "adapter_id", adapter as f64, now);
+                }
                 tr.end(Track::Request(id), "request", now);
             }
             let resp = SchedResponse {
                 id,
+                adapter,
                 text: String::new(),
                 tokens: 0,
                 reason: FinishReason::MaxTokens,
@@ -372,9 +397,15 @@ impl<'a> Scheduler<'a> {
         let arrival = Instant::now();
         if let Some(tr) = self.tracer.as_mut() {
             tr.begin(Track::Request(id), "request", arrival);
+            // adapter identity rides the request track as a counter —
+            // base requests (id 0) emit nothing, so the golden base-only
+            // trace sequence is untouched
+            if adapter > 0 {
+                tr.counter(Track::Request(id), "adapter_id", adapter as f64, arrival);
+            }
             tr.begin(Track::Request(id), "queued", arrival);
         }
-        self.queue.push_back(Queued { id, frame, max_new, arrival });
+        self.queue.push_back(Queued { id, frame, max_new, adapter, arrival });
         Ok(id)
     }
 
@@ -393,6 +424,7 @@ impl<'a> Scheduler<'a> {
             let wait = secs(q.arrival, now);
             let resp = SchedResponse {
                 id,
+                adapter: q.adapter,
                 text: String::new(),
                 tokens: 0,
                 reason: FinishReason::Cancelled,
@@ -498,6 +530,7 @@ impl<'a> Scheduler<'a> {
             admitted_rows.push(si);
             self.slots[si] = Some(Active {
                 id: q.id,
+                adapter: q.adapter,
                 cursor: q.frame.len() - 1,
                 frame: q.frame,
                 generated: Vec::new(),
@@ -535,11 +568,16 @@ impl<'a> Scheduler<'a> {
                 .iter()
                 .map(|&si| self.slots[si].as_ref().expect("just admitted").frame.clone())
                 .collect();
+            let adapters: Vec<u32> = admitted_rows
+                .iter()
+                .map(|&si| self.slots[si].as_ref().expect("just admitted").adapter)
+                .collect();
             let picks = decode::prefill_rows(
                 self.engine,
                 &mut self.cache,
                 &admitted_rows,
                 &frames,
+                &adapters,
                 &mut self.decode_stats,
             )?;
             for (i, &si) in admitted_rows.iter().enumerate() {
@@ -556,12 +594,14 @@ impl<'a> Scheduler<'a> {
         let mut rows: Vec<usize> = Vec::new();
         let mut row_ids: Vec<u64> = Vec::new();
         let mut last: Vec<f32> = Vec::new();
+        let mut row_adapters: Vec<u32> = Vec::new();
         for (si, slot) in self.slots.iter().enumerate() {
             if let Some(a) = slot {
                 if a.state == RequestState::Decoding && a.admitted_step < self.step_no {
                     rows.push(si);
                     row_ids.push(a.id);
                     last.push(*a.frame.last().expect("frames are never empty"));
+                    row_adapters.push(a.adapter);
                 }
             }
         }
@@ -578,6 +618,7 @@ impl<'a> Scheduler<'a> {
                 &mut self.cache,
                 &rows,
                 &last,
+                &row_adapters,
                 &mut self.decode_stats,
             )?;
             report.decoded_rows = rows.len();
@@ -732,6 +773,7 @@ impl<'a> Scheduler<'a> {
     fn respond(a: Active, now: Instant) -> SchedResponse {
         SchedResponse {
             id: a.id,
+            adapter: a.adapter,
             text: tokenizer::decode(&a.generated),
             tokens: a.generated.len(),
             reason: a.reason.expect("released requests always carry a reason"),
@@ -742,6 +784,12 @@ impl<'a> Scheduler<'a> {
     }
 
     fn emit_finish(&mut self, resp: SchedResponse) {
+        // per-adapter usage keyed by label ("base" for id 0), recorded on
+        // every completion path — finish, cancel, and zero-token alike
+        let label = self.engine.adapter_label(resp.adapter).to_string();
+        let usage = self.stats.adapter_usage.entry(label).or_default();
+        usage.requests += 1;
+        usage.tokens += resp.tokens;
         if let Some(sink) = self.sink.as_mut() {
             sink.on_finish(&resp);
         }

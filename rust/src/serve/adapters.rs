@@ -1,0 +1,300 @@
+//! Multi-adapter serving registry — S-LoRA's deployment shape on ternary
+//! adapters: one packed quantized base stays resident, N named ternary
+//! adapter sets register against it, and every request is tagged with the
+//! adapter it wants. The continuous-batching scheduler then mixes
+//! requests for different adapters in the *same* decode step; the engine
+//! applies each adapter's [`crate::engine::TernaryDelta`] in-kernel on
+//! the packed grid, so the mixed batch is bit-identical, token for token,
+//! to serving each adapter's individually merged checkpoint alone
+//! (`tests/adapters.rs` pins it).
+//!
+//! A registry is a named list of adapter *sources*. Each source is either
+//! a checkpoint path (a [`crate::model::checkpoint`] file carrying the
+//! `ta_{slot}_a/_b` layer-stacked tensors every LoTA training run saves)
+//! or the `synthetic:<seed>` sentinel, which fabricates a deterministic
+//! random ternary adapter set in-process — the demo/bench/test form that
+//! needs no training artifacts on disk.
+//!
+//! Registration order defines adapter ids: the first registered set is
+//! id 1, the second id 2, … (id 0 is always the bare base). CLI order is
+//! the `--adapter` list order; TOML order is the alphabetical key order
+//! of the `[adapters]` table (the subset parser stores keys sorted).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::engine::Engine;
+use crate::model::{checkpoint, ParamStore};
+use crate::tensor::{Rng, Tensor};
+
+/// Prefix marking an in-process fabricated adapter source: the remainder
+/// is the u64 RNG seed, e.g. `synthetic:41`.
+pub const SYNTHETIC_PREFIX: &str = "synthetic:";
+
+/// One named adapter and where its tensors come from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdapterSpec {
+    /// registry name — request tags, serving stats, and metric labels all
+    /// key on it ("base" and "" are reserved for id 0)
+    pub name: String,
+    /// checkpoint path, or `synthetic:<seed>`
+    pub source: String,
+}
+
+/// An ordered set of [`AdapterSpec`]s: what `lota serve` registers on the
+/// engine before taking requests. Order is id order (index + 1).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AdapterRegistry {
+    specs: Vec<AdapterSpec>,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> AdapterRegistry {
+        AdapterRegistry::default()
+    }
+
+    /// Append one adapter. Names must be unique and not reserved.
+    pub fn push(&mut self, name: &str, source: &str) -> Result<()> {
+        if name.is_empty() || name == "base" {
+            bail!("adapter name {name:?} is reserved for the bare base");
+        }
+        if self.specs.iter().any(|s| s.name == name) {
+            bail!("adapter {name:?} listed twice");
+        }
+        if source.is_empty() {
+            bail!("adapter {name:?} has an empty source");
+        }
+        self.specs.push(AdapterSpec { name: name.to_string(), source: source.to_string() });
+        Ok(())
+    }
+
+    /// Build from `(name, source)` pairs — the shape
+    /// [`crate::config::ExperimentConfig`] parses out of an `[adapters]`
+    /// TOML table.
+    pub fn from_pairs(pairs: &[(String, String)]) -> Result<AdapterRegistry> {
+        let mut reg = AdapterRegistry::new();
+        for (name, source) in pairs {
+            reg.push(name, source)?;
+        }
+        Ok(reg)
+    }
+
+    /// Parse the `--adapter` CLI form: `name=source[,name=source...]`.
+    pub fn parse_cli(arg: &str) -> Result<AdapterRegistry> {
+        let mut reg = AdapterRegistry::new();
+        for part in arg.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, source)) = part.split_once('=') else {
+                bail!("--adapter entry {part:?} is not name=source");
+            };
+            reg.push(name.trim(), source.trim())?;
+        }
+        if reg.is_empty() {
+            bail!("--adapter {arg:?} names no adapters");
+        }
+        Ok(reg)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn specs(&self) -> &[AdapterSpec] {
+        &self.specs
+    }
+
+    /// Register every adapter on `engine`, in order (so spec index i
+    /// becomes adapter id i + 1). `omega_frac` is the ternarization
+    /// threshold fraction the adapters were trained with; the merge uses
+    /// `omega = omega_frac · rank`, and a wrong value changes which grid
+    /// moves survive — it must match training.
+    pub fn register_all(&self, engine: &mut Engine, omega_frac: f32) -> Result<()> {
+        if !(0.0..1.0).contains(&omega_frac) || omega_frac <= 0.0 {
+            bail!("omega_frac must be in (0, 1), got {omega_frac}");
+        }
+        let cfg = engine.config().clone();
+        let omega = omega_frac * cfg.rank as f32;
+        for spec in &self.specs {
+            let store = load_adapter_store(spec, &cfg)
+                .with_context(|| format!("adapter {:?} (source {:?})", spec.name, spec.source))?;
+            let id = engine.register_adapter(&spec.name, &store, omega)?;
+            log::info!(
+                "registered adapter {:?} as id {id} ({} delta bytes resident)",
+                spec.name,
+                engine.adapter_bytes()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Materialize one adapter's `ta_{slot}_a/_b` tensors: load the
+/// checkpoint, or fabricate a deterministic random ternary set for
+/// `synthetic:<seed>` sources.
+pub fn load_adapter_store(spec: &AdapterSpec, cfg: &ModelConfig) -> Result<ParamStore> {
+    if let Some(seed_str) = spec.source.strip_prefix(SYNTHETIC_PREFIX) {
+        let seed: u64 = seed_str
+            .trim()
+            .parse()
+            .with_context(|| format!("synthetic adapter seed {seed_str:?} is not a u64"))?;
+        return Ok(synthetic_adapter_store(cfg, seed));
+    }
+    let store = checkpoint::load(Path::new(&spec.source))?;
+    // fail here, with the adapter's name attached, rather than deep in
+    // the per-layer merge loop
+    for (slot, _, _) in cfg.slots() {
+        for suffix in ["a", "b"] {
+            let name = format!("ta_{slot}_{suffix}");
+            if !store.contains(&name) {
+                bail!(
+                    "checkpoint {:?} has no {name} tensor — not a LoTA adapter checkpoint",
+                    spec.source
+                );
+            }
+        }
+    }
+    Ok(store)
+}
+
+/// A deterministic random ternary adapter set for `cfg`: every
+/// `ta_{slot}_a/_b` entry filled with values drawn uniformly from
+/// {−1, 0, +1}. Nontrivial by construction (unlike the B = 0 training
+/// init, which merges to the identity), so synthetic adapters visibly
+/// change generations — what the parity tests and demos need.
+pub fn synthetic_adapter_store(cfg: &ModelConfig, seed: u64) -> ParamStore {
+    let mut rng = Rng::new(seed);
+    let mut store = ParamStore::new();
+    let l = cfg.n_layers;
+    let mut ternary_vec = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.below(3) as f32) - 1.0).collect()
+    };
+    for (slot, din, dout) in cfg.slots() {
+        let a = Tensor::new(&[l, din, cfg.rank], ternary_vec(l * din * cfg.rank));
+        let b = Tensor::new(&[l, cfg.rank, dout], ternary_vec(l * cfg.rank * dout));
+        store.insert(&format!("ta_{slot}_a"), a);
+        store.insert(&format!("ta_{slot}_b"), b);
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::model;
+    use crate::quant::rtn_quantize;
+
+    fn tiny_engine(seed: u64) -> (ModelConfig, Engine) {
+        let cfg = preset("tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let fp = model::init_fp(&cfg, &mut rng);
+        let store = model::quantize_store(&cfg, &fp, |_, _, w| {
+            Ok(rtn_quantize(w, cfg.group_size, 4))
+        })
+        .unwrap();
+        let engine = Engine::from_store(&cfg, &store, 4).unwrap();
+        (cfg, engine)
+    }
+
+    #[test]
+    fn cli_parsing_accepts_lists_and_rejects_garbage() {
+        let reg = AdapterRegistry::parse_cli("fr=synthetic:3, de = synthetic:4").unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.specs()[0].name, "fr");
+        assert_eq!(reg.specs()[0].source, "synthetic:3");
+        assert_eq!(reg.specs()[1].name, "de");
+        assert!(AdapterRegistry::parse_cli("").is_err());
+        assert!(AdapterRegistry::parse_cli("no-equals-sign").is_err());
+        assert!(AdapterRegistry::parse_cli("base=synthetic:1").is_err());
+        assert!(AdapterRegistry::parse_cli("x=a.ckpt,x=b.ckpt").is_err());
+        assert!(AdapterRegistry::parse_cli("x=").is_err());
+    }
+
+    #[test]
+    fn pairs_build_in_order() {
+        let pairs = vec![
+            ("alpha".to_string(), "synthetic:1".to_string()),
+            ("beta".to_string(), "synthetic:2".to_string()),
+        ];
+        let reg = AdapterRegistry::from_pairs(&pairs).unwrap();
+        assert_eq!(reg.specs()[0].name, "alpha");
+        assert_eq!(reg.specs()[1].name, "beta");
+        // duplicates rejected through the same gate as the CLI
+        let dup = vec![("a".to_string(), "x".to_string()), ("a".to_string(), "y".to_string())];
+        assert!(AdapterRegistry::from_pairs(&dup).is_err());
+    }
+
+    #[test]
+    fn synthetic_stores_are_ternary_deterministic_and_seed_sensitive() {
+        let cfg = preset("tiny").unwrap();
+        let s1 = synthetic_adapter_store(&cfg, 9);
+        let s2 = synthetic_adapter_store(&cfg, 9);
+        let s3 = synthetic_adapter_store(&cfg, 10);
+        let a = s1.get("ta_wq_a").unwrap();
+        assert_eq!(a.shape(), &[cfg.n_layers, cfg.d_model, cfg.rank]);
+        assert!(a.data().iter().all(|v| *v == -1.0 || *v == 0.0 || *v == 1.0));
+        assert_eq!(a, s2.get("ta_wq_a").unwrap());
+        assert_ne!(a, s3.get("ta_wq_a").unwrap());
+        let b = s1.get("ta_w_down_b").unwrap();
+        assert_eq!(b.shape(), &[cfg.n_layers, cfg.rank, cfg.d_model]);
+        // nontrivial: a B of all zeros would merge to the identity
+        assert!(b.data().iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn register_all_assigns_ids_in_spec_order() {
+        let (_cfg, mut engine) = tiny_engine(21);
+        let reg = AdapterRegistry::parse_cli("fr=synthetic:5,de=synthetic:6").unwrap();
+        reg.register_all(&mut engine, 0.75).unwrap();
+        assert_eq!(engine.adapter_count(), 2);
+        assert_eq!(engine.adapter_label(1), "fr");
+        assert_eq!(engine.adapter_label(2), "de");
+        assert!(engine.adapter_bytes() > 0);
+        // re-registering the same names fails loudly
+        assert!(reg.register_all(&mut engine, 0.75).is_err());
+        // omega_frac outside (0, 1) is refused before any work
+        let (_cfg2, mut engine2) = tiny_engine(22);
+        assert!(reg.register_all(&mut engine2, 0.0).is_err());
+        assert!(reg.register_all(&mut engine2, 1.0).is_err());
+    }
+
+    #[test]
+    fn checkpoint_sources_roundtrip_and_bad_sources_fail_loud() {
+        let (cfg, mut engine) = tiny_engine(23);
+        let store = synthetic_adapter_store(&cfg, 7);
+        let mut path = std::env::temp_dir();
+        path.push(format!("lota_adapter_reg_test_{}.ckpt", std::process::id()));
+        checkpoint::save(&store, &path, None).unwrap();
+        let mut reg = AdapterRegistry::new();
+        reg.push("disk", path.to_str().unwrap()).unwrap();
+        reg.register_all(&mut engine, 0.75).unwrap();
+        assert_eq!(engine.adapter_label(1), "disk");
+        std::fs::remove_file(&path).ok();
+        // missing file and malformed seeds surface as errors, not panics
+        let mut missing = AdapterRegistry::new();
+        missing.push("gone", "/nonexistent/adapter.ckpt").unwrap();
+        assert!(missing.register_all(&mut engine, 0.75).is_err());
+        let mut bad_seed = AdapterRegistry::new();
+        bad_seed.push("bad", "synthetic:notanumber").unwrap();
+        assert!(bad_seed.register_all(&mut engine, 0.75).is_err());
+        // a non-adapter checkpoint is named in the error path, too
+        let mut base_path = std::env::temp_dir();
+        base_path.push(format!("lota_adapter_reg_base_{}.ckpt", std::process::id()));
+        let mut rng = Rng::new(1);
+        let fp = model::init_fp(&cfg, &mut rng);
+        checkpoint::save(&fp, &base_path, None).unwrap();
+        let mut not_adapter = AdapterRegistry::new();
+        not_adapter.push("fp", base_path.to_str().unwrap()).unwrap();
+        assert!(not_adapter.register_all(&mut engine, 0.75).is_err());
+        std::fs::remove_file(&base_path).ok();
+    }
+}

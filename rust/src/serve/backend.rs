@@ -212,6 +212,23 @@ impl NativeBackend {
         self
     }
 
+    /// Register a set of named ternary adapters against the packed base
+    /// (builder style; an empty registry is a no-op). One-shot native
+    /// decodes always serve the bare base — the registry matters for
+    /// callers that borrow the engine and tag requests — but registering
+    /// here keeps every serving mode constructible from one options
+    /// struct.
+    pub fn with_adapters(
+        mut self,
+        reg: &super::AdapterRegistry,
+        omega_frac: f32,
+    ) -> Result<NativeBackend> {
+        if !reg.is_empty() {
+            reg.register_all(&mut self.engine, omega_frac)?;
+        }
+        Ok(self)
+    }
+
     pub fn mode(&self) -> DecodeMode {
         self.mode
     }
@@ -305,6 +322,20 @@ impl ScheduledBackend {
     pub fn with_trace_out(mut self, path: Option<std::path::PathBuf>) -> ScheduledBackend {
         self.trace_out = path;
         self
+    }
+
+    /// Register a set of named ternary adapters against the packed base
+    /// (builder style; an empty registry is a no-op). Requests tagged with
+    /// an adapter id mix freely with base requests in the same batch.
+    pub fn with_adapters(
+        mut self,
+        reg: &super::AdapterRegistry,
+        omega_frac: f32,
+    ) -> Result<ScheduledBackend> {
+        if !reg.is_empty() {
+            reg.register_all(&mut self.engine, omega_frac)?;
+        }
+        Ok(self)
     }
 
     pub fn engine(&self) -> &Engine {

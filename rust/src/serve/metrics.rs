@@ -13,6 +13,8 @@
 //! decode (positions fed ~ tokens generated) from recompute (positions
 //! fed ~ prefix × steps). Backends that don't track it leave it zeroed.
 
+use std::collections::BTreeMap;
+
 use crate::engine::DecodeStats;
 
 use super::Response;
@@ -90,6 +92,16 @@ impl Histogram {
     }
 }
 
+/// Requests and generated tokens attributed to one adapter over a
+/// scheduled run — the per-tenant accounting of multi-adapter serving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdapterUsage {
+    /// completed (incl. cancelled) requests tagged with this adapter
+    pub requests: usize,
+    /// tokens generated for this adapter
+    pub tokens: usize,
+}
+
 /// What the continuous-batching scheduler (`crate::sched`) measured about
 /// a serving run, beyond raw decode work: request-level timing (TTFT,
 /// inter-token gaps, queue wait) and step-level pressure (queue depth,
@@ -118,6 +130,9 @@ pub struct SchedStats {
     pub peak_active: usize,
     /// scheduler iterations run
     pub steps: usize,
+    /// per-adapter request/token accounting, keyed by adapter label
+    /// ("base" for untagged requests); sorted keys keep reports stable
+    pub adapter_usage: BTreeMap<String, AdapterUsage>,
 }
 
 impl SchedStats {
@@ -133,6 +148,11 @@ impl SchedStats {
         self.admission_denied += other.admission_denied;
         self.peak_active = self.peak_active.max(other.peak_active);
         self.steps += other.steps;
+        for (label, usage) in &other.adapter_usage {
+            let mine = self.adapter_usage.entry(label.clone()).or_default();
+            mine.requests += usage.requests;
+            mine.tokens += usage.tokens;
+        }
     }
 }
 

@@ -25,21 +25,29 @@
 //!   workloads sustain more concurrency at the same budget than the
 //!   contiguous full-context-row reference (kept behind the flag,
 //!   bit-identical tokens either way);
+//! * multi-adapter serving ([`AdapterRegistry`], `docs/adapters.md`):
+//!   named ternary adapter sets registered against one packed base
+//!   (`[adapters]` TOML table / `lota serve --adapter`), requests tagged
+//!   per adapter and mixed freely in each scheduled batch — bit-identical
+//!   to serving each adapter's individually merged checkpoint alone
+//!   (`tests/adapters.rs` pins it);
 //! * [`ThroughputReport`] aggregation used by `examples/serve_merged.rs`
 //!   and the Fig. 4 efficiency bench. Token throughput counts **generated
 //!   tokens**, not decoded characters; scheduled runs additionally carry
 //!   TTFT, queue-wait, queue-depth and batch-occupancy measurements
 //!   ([`SchedStats`]).
 
+pub mod adapters;
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 
+pub use adapters::{synthetic_adapter_store, AdapterRegistry, AdapterSpec};
 pub use backend::{
     DecodeStats, Generation, NativeBackend, PjrtBackend, ScheduledBackend, ServeBackend,
 };
 pub use batcher::{BucketPolicy, DynamicBatcher, Request};
-pub use metrics::{Histogram, LatencyStats, SchedStats, ThroughputReport};
+pub use metrics::{AdapterUsage, Histogram, LatencyStats, SchedStats, ThroughputReport};
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -100,6 +108,12 @@ pub struct ServeOptions {
     /// (scheduled native serving only — one-shot paths have no spans to
     /// record); None disables tracing entirely
     pub trace_out: Option<PathBuf>,
+    /// named ternary adapter sets to register before serving (native
+    /// backend only, LoTA serve path; empty serves the bare base)
+    pub adapters: AdapterRegistry,
+    /// ternarization threshold fraction the adapters were trained with
+    /// (omega = omega_frac · rank); irrelevant when `adapters` is empty
+    pub omega_frac: f32,
 }
 
 impl ServeOptions {
@@ -113,6 +127,8 @@ impl ServeOptions {
             gemm_kernel: GemmKernel::Auto,
             sched: None,
             trace_out: None,
+            adapters: AdapterRegistry::new(),
+            omega_frac: 0.75,
         }
     }
 
@@ -143,6 +159,16 @@ impl ServeOptions {
 
     pub fn trace_out(mut self, path: PathBuf) -> ServeOptions {
         self.trace_out = Some(path);
+        self
+    }
+
+    pub fn with_adapters(mut self, adapters: AdapterRegistry) -> ServeOptions {
+        self.adapters = adapters;
+        self
+    }
+
+    pub fn omega_frac(mut self, omega_frac: f32) -> ServeOptions {
+        self.omega_frac = omega_frac;
         self
     }
 }
@@ -211,6 +237,9 @@ impl<'a> Server<'a> {
                 if opts.sched.is_some() {
                     bail!("the scheduler runs on the native backend only (got pjrt)");
                 }
+                if !opts.adapters.is_empty() {
+                    bail!("adapter registration runs on the native backend only (got pjrt)");
+                }
                 let Some(rt) = rt else {
                     bail!("pjrt backend needs a Runtime (artifacts dir)");
                 };
@@ -229,13 +258,15 @@ impl<'a> Server<'a> {
                         sched,
                         opts.gemm_kernel,
                     )?
-                    .with_trace_out(opts.trace_out.clone());
+                    .with_trace_out(opts.trace_out.clone())
+                    .with_adapters(&opts.adapters, opts.omega_frac)?;
                     Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
                 None => {
                     let backend =
                         NativeBackend::new(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?
-                            .with_mode(opts.decode);
+                            .with_mode(opts.decode)
+                            .with_adapters(&opts.adapters, opts.omega_frac)?;
                     Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
             },
@@ -346,7 +377,11 @@ pub fn serve_open_loop(
     let Some(sched_cfg) = opts.sched.clone() else {
         bail!("open-loop serving needs a scheduler config (ServeOptions::scheduled)");
     };
-    let engine = backend::build_engine(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?;
+    let mut engine = backend::build_engine(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?;
+    if !opts.adapters.is_empty() {
+        opts.adapters.register_all(&mut engine, opts.omega_frac)?;
+    }
+    let engine = engine;
     let mut sched = Scheduler::new(&engine, &SchedOptions::from_config(&sched_cfg))?;
     // recorder constructed before any submit so every span lands at a
     // non-negative trace offset; we keep a handle, the scheduler gets a
@@ -370,7 +405,8 @@ pub fn serve_open_loop(
         // submitted, whatever the batch is currently doing
         let elapsed = t0.elapsed().as_secs_f64();
         while next < order.len() && order[next].arrival_secs <= elapsed {
-            let id = sched.submit(&order[next].prompt, order[next].max_new)?;
+            let id =
+                sched.submit_for(&order[next].prompt, order[next].max_new, order[next].adapter)?;
             submit_lag.insert(id, (elapsed - order[next].arrival_secs).max(0.0));
             next += 1;
         }

@@ -1,0 +1,84 @@
+//! Example-config drift gate — artifact-free, runs in CI.
+//!
+//! Every TOML under `examples/` is documentation the parser is never
+//! asked about: a key rename in `ExperimentConfig::from_toml` (or a typo
+//! in an example) silently turns the shipped config into one that parses
+//! to defaults. This suite loads each example through the real parsing
+//! path — `TomlDoc` → `ExperimentConfig` → `AdapterRegistry` → model
+//! preset lookup — so any drift between the docs and the code fails the
+//! build instead of a user's first `lota serve`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use lota_qaf::config::{preset, Backend, ExperimentConfig, TomlDoc};
+use lota_qaf::serve::AdapterRegistry;
+
+fn examples_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("examples")
+}
+
+fn example_tomls() -> Vec<PathBuf> {
+    let mut found: Vec<PathBuf> = fs::read_dir(examples_dir())
+        .expect("examples/ directory missing")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    found.sort();
+    found
+}
+
+/// Every shipped example must travel the full config path without error,
+/// and must name a model preset that actually exists.
+#[test]
+fn every_example_toml_parses_through_the_real_config_path() {
+    let tomls = example_tomls();
+    assert!(tomls.len() >= 2, "examples/ lost its TOMLs: found {tomls:?}");
+    for path in &tomls {
+        let src = fs::read_to_string(path).unwrap();
+        let doc = TomlDoc::parse(&src)
+            .unwrap_or_else(|e| panic!("{}: TOML parse failed: {e:#}", path.display()));
+        let exp = ExperimentConfig::from_toml(&doc)
+            .unwrap_or_else(|e| panic!("{}: config rejected: {e:#}", path.display()));
+        AdapterRegistry::from_pairs(&exp.adapters)
+            .unwrap_or_else(|e| panic!("{}: [adapters] rejected: {e:#}", path.display()));
+        preset(&exp.model)
+            .unwrap_or_else(|e| panic!("{}: unknown model preset: {e:#}", path.display()));
+    }
+}
+
+/// The multi-adapter example must keep describing a runnable multi-adapter
+/// deployment: scheduler on, native backend, and an [adapters] table whose
+/// alphabetical key order (= adapter id order) is what its comments claim.
+#[test]
+fn serve_adapters_example_stays_a_runnable_adapter_deployment() {
+    let src = fs::read_to_string(examples_dir().join("serve_adapters.toml")).unwrap();
+    let exp = ExperimentConfig::from_toml(&TomlDoc::parse(&src).unwrap()).unwrap();
+    assert_eq!(exp.backend, Backend::Native, "adapters serve on the native backend only");
+    assert!(exp.sched.is_some(), "multi-adapter serving routes through the scheduler");
+    let reg = AdapterRegistry::from_pairs(&exp.adapters).unwrap();
+    assert!(reg.len() >= 2, "the example should demo an actual adapter mix");
+    // alphabetical [adapters] keys: "de" registers first -> adapter id 1
+    assert_eq!(reg.specs()[0].name, "de");
+    assert_eq!(reg.specs()[1].name, "fr");
+    for spec in reg.specs() {
+        assert!(
+            spec.source.starts_with("synthetic:"),
+            "example adapter {:?} points at {:?} — shipped examples must not \
+             depend on checkpoint files existing",
+            spec.name,
+            spec.source
+        );
+    }
+}
+
+/// The scheduled-serving example keeps its [sched] table parseable and
+/// non-default-shaped (it exists to show the knobs).
+#[test]
+fn serve_sched_example_keeps_its_sched_table() {
+    let src = fs::read_to_string(examples_dir().join("serve_sched.toml")).unwrap();
+    let exp = ExperimentConfig::from_toml(&TomlDoc::parse(&src).unwrap()).unwrap();
+    assert_eq!(exp.backend, Backend::Native);
+    assert!(exp.sched.is_some(), "serve_sched.toml stopped enabling the scheduler");
+}
