@@ -351,6 +351,10 @@ pub struct ExperimentConfig {
     /// write a metrics snapshot of the final serving report here
     /// (`metrics_out` in TOML; `.json` → JSON, else Prometheus text)
     pub metrics_out: Option<String>,
+    /// write the engine hot-path profile — per-(layer, kind)
+    /// `lota_engine_*` phase counters — here (`profile_out` in TOML;
+    /// `.json` → JSON, else Prometheus text; requires the scheduler)
+    pub profile_out: Option<String>,
     /// named ternary adapter sets to serve alongside the base (the
     /// `[adapters]` TOML table: `name = "source"` per entry, where source
     /// is a checkpoint path or `synthetic:<seed>`). Registration order —
@@ -379,6 +383,7 @@ impl Default for ExperimentConfig {
             sched: None,
             trace_out: None,
             metrics_out: None,
+            profile_out: None,
             adapters: Vec::new(),
         }
     }
@@ -434,6 +439,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("metrics_out") {
             c.metrics_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("profile_out") {
+            c.profile_out = Some(v.to_string());
         }
         c.sched = SchedConfig::from_toml(doc)?;
         for key in doc.keys() {
@@ -509,17 +517,20 @@ mod tests {
         // observability outputs default off
         assert_eq!(c.trace_out, None);
         assert_eq!(c.metrics_out, None);
+        assert_eq!(c.profile_out, None);
     }
 
     #[test]
     fn observability_outputs_parse() {
         let doc = TomlDoc::parse(
-            "trace_out = \"out/trace.json\"\nmetrics_out = \"out/metrics.prom\"\n",
+            "trace_out = \"out/trace.json\"\nmetrics_out = \"out/metrics.prom\"\n\
+             profile_out = \"out/profile.json\"\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
         assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.prom"));
+        assert_eq!(c.profile_out.as_deref(), Some("out/profile.json"));
     }
 
     #[test]

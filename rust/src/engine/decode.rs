@@ -26,6 +26,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{DecodeMode, ModelConfig};
 use crate::data::tokenizer::{self, BOS, EOS, PAD, SEP};
+use crate::obs::profiler::Profiler;
 use crate::tensor::Tensor;
 
 use super::cache::KvCache;
@@ -177,6 +178,7 @@ fn finish(generated: Vec<Vec<u32>>) -> Vec<Generation> {
 /// [`greedy_decode`] calls it with the whole batch at once, the
 /// continuous-batching scheduler (`crate::sched`) with whatever it
 /// admitted this step — bit-identical picks either way.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn prefill_rows(
     engine: &Engine,
     cache: &mut KvCache,
@@ -184,6 +186,7 @@ pub(crate) fn prefill_rows(
     frames: &[Vec<f32>],
     adapters: &[u32],
     stats: &mut DecodeStats,
+    prof: Option<&Profiler>,
 ) -> Result<Vec<u32>> {
     debug_assert_eq!(rows.len(), frames.len());
     let v = engine.config().vocab;
@@ -193,11 +196,12 @@ pub(crate) fn prefill_rows(
     for (i, f) in frames.iter().enumerate() {
         tokens[i * t0..i * t0 + f.len()].copy_from_slice(f);
     }
-    let logits = engine.forward_incremental_tagged(
+    let logits = engine.forward_incremental_profiled(
         &Tensor::new(&[r, t0], tokens),
         cache,
         rows,
         adapters,
+        prof,
     )?;
     stats.forwards += 1;
     stats.forwarded_rows += r;
@@ -222,15 +226,17 @@ pub(crate) fn decode_step_rows(
     last: &[f32],
     adapters: &[u32],
     stats: &mut DecodeStats,
+    prof: Option<&Profiler>,
 ) -> Result<Vec<u32>> {
     debug_assert_eq!(rows.len(), last.len());
     let v = engine.config().vocab;
     let r = rows.len();
-    let logits = engine.forward_incremental_tagged(
+    let logits = engine.forward_incremental_profiled(
         &Tensor::new(&[r, 1], last.to_vec()),
         cache,
         rows,
         adapters,
+        prof,
     )?;
     stats.forwards += 1;
     stats.forwarded_rows += r;
@@ -300,7 +306,7 @@ fn decode_cached_layout(
         None => engine.new_cache_for(b, t0 + max_new),
     };
     let all: Vec<usize> = (0..b).collect();
-    let picks = prefill_rows(engine, &mut cache, &all, &rows, &[], &mut stats)?;
+    let picks = prefill_rows(engine, &mut cache, &all, &rows, &[], &mut stats, None)?;
     for (ri, next) in picks.into_iter().enumerate() {
         done[ri] = step_row(next, t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);
     }
@@ -313,7 +319,7 @@ fn decode_cached_layout(
             break;
         }
         let step: Vec<f32> = active.iter().map(|ri| *rows[*ri].last().unwrap()).collect();
-        let picks = decode_step_rows(engine, &mut cache, &active, &step, &[], &mut stats)?;
+        let picks = decode_step_rows(engine, &mut cache, &active, &step, &[], &mut stats, None)?;
         for (i, &ri) in active.iter().enumerate() {
             done[ri] =
                 step_row(picks[i], t_cap, &mut rows[ri], &mut cursor[ri], &mut generated[ri]);

@@ -26,9 +26,12 @@
 //! implementation of the merge math in the repo and serving cannot drift
 //! from it.
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use crate::adapter::lota::{lota_merge, TernaryAdapter};
+use crate::obs::profiler::KernelProf;
 use crate::quant::QuantizedLinear;
 
 use super::packed::PackedLinear;
@@ -187,22 +190,27 @@ impl TernaryDelta {
 }
 
 /// The weight surface a GEMM kernel reads: a packed base, optionally
-/// overlaid with one adapter's [`TernaryDelta`]. `Copy` — two word-sized
-/// refs — so the column-chunk threads share it freely.
+/// overlaid with one adapter's [`TernaryDelta`]. `Copy` — a few
+/// word-sized refs — so the column-chunk threads share it freely.
 ///
 /// The kernels consume weights *only* through this surface (column
 /// decode + affine tables + dims); the delta changes input values, never
 /// the accumulation order, so the lane-ordered contract is untouched.
+/// An attached [`KernelProf`] times the two fused sub-kernels (base
+/// decode, delta overlay) into relaxed atomic accumulators — it observes
+/// values-in-flight timing only, never the values, so attaching one
+/// cannot move a bit of output.
 #[derive(Clone, Copy)]
 pub struct PackedView<'a> {
     base: &'a PackedLinear,
     delta: Option<&'a TernaryDelta>,
+    prof: Option<&'a KernelProf>,
 }
 
 impl<'a> PackedView<'a> {
     /// The base weights alone — what every pre-adapter call site wraps.
     pub fn base_only(base: &'a PackedLinear) -> PackedView<'a> {
-        PackedView { base, delta: None }
+        PackedView { base, delta: None, prof: None }
     }
 
     /// Base plus one adapter's grid moves and zero table.
@@ -210,7 +218,15 @@ impl<'a> PackedView<'a> {
         debug_assert_eq!(base.din(), delta.din());
         debug_assert_eq!(base.dout(), delta.dout());
         debug_assert_eq!(base.group_size, delta.group_size());
-        PackedView { base, delta: Some(delta) }
+        PackedView { base, delta: Some(delta), prof: None }
+    }
+
+    /// Attach (or detach) in-kernel sub-phase timing. Profiled GEMM
+    /// calls run single-threaded so the accumulated nanoseconds are
+    /// disjoint sub-intervals of the enclosing profiler segment.
+    pub fn with_prof(mut self, prof: Option<&'a KernelProf>) -> PackedView<'a> {
+        self.prof = prof;
+        self
     }
 
     pub fn din(&self) -> usize {
@@ -244,11 +260,27 @@ impl<'a> PackedView<'a> {
 
     /// Decode column `j` through the overlay: base codes, then the exact
     /// ±1 grid moves. Bit-equals the merged checkpoint's column decode.
+    /// With a [`KernelProf`] attached, each sub-kernel is clocked into
+    /// its accumulator; the unprofiled branch reads no clock at all.
     #[inline]
     pub fn decode_col_into(&self, j: usize, out: &mut [f32]) {
-        self.base.decode_col_into(j, out);
-        if let Some(d) = self.delta {
-            d.apply_col(j, out);
+        match self.prof {
+            None => {
+                self.base.decode_col_into(j, out);
+                if let Some(d) = self.delta {
+                    d.apply_col(j, out);
+                }
+            }
+            Some(p) => {
+                let t = Instant::now();
+                self.base.decode_col_into(j, out);
+                p.add_dequant_ns(t.elapsed().as_nanos() as u64);
+                if let Some(d) = self.delta {
+                    let t = Instant::now();
+                    d.apply_col(j, out);
+                    p.add_overlay_ns(t.elapsed().as_nanos() as u64);
+                }
+            }
         }
     }
 }
@@ -351,6 +383,34 @@ mod tests {
         let mut merged = base.to_quantized().unwrap();
         merged.w_int.data_mut()[0] += 2.0;
         assert!(TernaryDelta::from_merged(&base, &merged).is_err());
+    }
+
+    #[test]
+    fn profiled_view_decodes_bit_identically() {
+        // attaching a KernelProf times the fused sub-kernels but must not
+        // move a single bit of the decoded column
+        let (base, ta) = setup(17, 4);
+        let delta = TernaryDelta::from_adapter(&base, &ta, 2.0).unwrap();
+        let kp = KernelProf::default();
+        let plain = PackedView::with_delta(&base, &delta);
+        let profiled = PackedView::with_delta(&base, &delta).with_prof(Some(&kp));
+        let mut a = vec![0.0f32; base.din()];
+        let mut b = vec![0.0f32; base.din()];
+        for _ in 0..50 {
+            for j in 0..base.dout() {
+                plain.decode_col_into(j, &mut a);
+                profiled.decode_col_into(j, &mut b);
+                assert_eq!(a, b, "col {j}");
+            }
+        }
+        let (dq, ov) = kp.snapshot_ns();
+        assert!(dq > 0, "1000 timed decodes accumulated no dequant time");
+        assert!(ov > 0, "overlaid decodes accumulated no overlay time");
+        // an un-profiled view leaves the accumulators untouched
+        let kp2 = KernelProf::default();
+        let detached = profiled.with_prof(None);
+        detached.decode_col_into(0, &mut a);
+        assert_eq!(kp2.snapshot_ns(), (0, 0));
     }
 
     #[test]

@@ -25,11 +25,14 @@
 //!   forward at the same positions — `tests/engine_parity.rs` pins this
 //!   with `assert_eq`, not a tolerance.
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use crate::adapter::lota::TernaryAdapter;
 use crate::config::{GemmKernel, ModelConfig};
 use crate::model::{self, ParamStore, SLOTS};
+use crate::obs::profiler::{KernelProf, PhaseKind, Profiler, STEP_TID};
 use crate::tensor::{linalg, Tensor};
 
 use super::cache::KvCache;
@@ -377,6 +380,27 @@ impl Engine {
         rows: &[usize],
         adapters: &[u32],
     ) -> Result<Tensor> {
+        self.forward_incremental_profiled(tokens, cache, rows, adapters, None)
+    }
+
+    /// [`Engine::forward_incremental_tagged`] with an optional
+    /// [`Profiler`] marking kernel-phase boundaries as the forward runs.
+    /// `None` is the production default and costs one never-taken branch
+    /// per phase; `Some` is pinned bitwise invisible on outputs
+    /// (`tests/obs.rs`) — the profiler only reads clocks between phases
+    /// (and forces profiled GEMMs single-threaded, which never changes
+    /// bits). Phase boundaries land on the caller's open profiler window;
+    /// the scheduler opens/closes that window with the same `Instant`s it
+    /// stamps `StepReport` forward wall-times from, so the per-layer
+    /// segments tile those wall-times exactly.
+    pub fn forward_incremental_profiled(
+        &self,
+        tokens: &Tensor,
+        cache: &mut KvCache,
+        rows: &[usize],
+        adapters: &[u32],
+        prof: Option<&Profiler>,
+    ) -> Result<Tensor> {
         let cfg = &self.cfg;
         if tokens.shape().len() != 2 {
             bail!("incremental forward wants (R, T_new) tokens, got {:?}", tokens.shape());
@@ -436,6 +460,10 @@ impl Engine {
             }
         }
         let mut x = Tensor::new(&[r * t_new, d], x);
+        // validation + embedding lookup belong to no layer — step scope
+        if let Some(p) = prof {
+            p.mark(STEP_TID, PhaseKind::Other, Instant::now());
+        }
 
         // paged layout: grab any blocks the new positions need now that
         // every input is validated — a dry pool fails clean with the page
@@ -461,6 +489,11 @@ impl Engine {
             }
             segs.push(cache.segments(row, bases[i] + t_new));
         }
+        // block allocation + page-table address resolution — KV paging
+        // work at step scope, before any layer runs
+        if let Some(p) = prof {
+            p.mark(STEP_TID, PhaseKind::KvPage, Instant::now());
+        }
 
         // expand per-request tags to activation rows (row i owns
         // activation rows i·t_new .. (i+1)·t_new); all-base collapses to
@@ -472,11 +505,18 @@ impl Engine {
         };
 
         for (li, layer) in self.layers.iter().enumerate() {
-            x = self.block_incremental(&x, layer, li, cache, &bases, t_new, &dsts, &segs, &tags)?;
+            x = self
+                .block_incremental(&x, layer, li, cache, &bases, t_new, &dsts, &segs, &tags, prof)?;
         }
         let x = layernorm(&x, &self.lnf_w, &self.lnf_b);
         let logits = linalg::matmul(&x, &self.head);
         cache.advance(rows, t_new);
+        // final layernorm + vocab head + cache advance — step scope; the
+        // gap from here to the scheduler's window close (argmax, picks)
+        // lands in the same (STEP_TID, other) bucket at end_window
+        if let Some(p) = prof {
+            p.mark(STEP_TID, PhaseKind::Other, Instant::now());
+        }
         Ok(logits.reshape(&[r, t_new, cfg.vocab]))
     }
 
@@ -500,16 +540,24 @@ impl Engine {
         dsts: &[usize],
         segs: &[Vec<(usize, usize, usize)>],
         tags: &[u32],
+        prof: Option<&Profiler>,
     ) -> Result<Tensor> {
         let cfg = &self.cfg;
         let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
         let r = bases.len();
         let cap = cache.capacity();
+        let kprof = prof.map(|p| p.kernel());
+        let tid = li as u64;
 
         let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
-        let q = self.linear(&xn, layer, WQ, tags);
-        let k = self.linear(&xn, layer, WK, tags);
-        let v = self.linear(&xn, layer, WV, tags);
+        let q = self.linear(&xn, layer, WQ, tags, kprof);
+        let k = self.linear(&xn, layer, WK, tags, kprof);
+        let v = self.linear(&xn, layer, WV, tags, kprof);
+        // ln1 + the three projections; the profiler splits out the
+        // in-kernel dequant/overlay ns accumulated since the last mark
+        if let Some(p) = prof {
+            p.mark(tid, PhaseKind::GemmQkv, Instant::now());
+        }
 
         // append phase: the new K/V rows join the cached prefix — these are
         // exactly the values the full forward computes at these positions
@@ -523,6 +571,10 @@ impl Engine {
                     cv[dst..dst + d].copy_from_slice(&v.data()[src..src + d]);
                 }
             }
+        }
+        // K/V rows landing in their (possibly paged) cache slots
+        if let Some(p) = prof {
+            p.mark(tid, PhaseKind::KvPage, Instant::now());
         }
 
         // attention: each new position attends over the cached prefix plus
@@ -581,11 +633,24 @@ impl Engine {
             }
         }
         let attn = Tensor::new(&[r * t_new, d], attn);
-        let x = x.add(&self.linear(&attn, layer, WO, tags));
+        // the score/softmax/AXPY loops over the gathered prefix
+        if let Some(p) = prof {
+            p.mark(tid, PhaseKind::Attention, Instant::now());
+        }
+        let x = x.add(&self.linear(&attn, layer, WO, tags, kprof));
+        // output projection + residual add
+        if let Some(p) = prof {
+            p.mark(tid, PhaseKind::GemmO, Instant::now());
+        }
 
         let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
-        let hmid = self.linear(&xn, layer, W_UP, tags).map(gelu_tanh);
-        Ok(x.add(&self.linear(&hmid, layer, W_DOWN, tags)))
+        let hmid = self.linear(&xn, layer, W_UP, tags, kprof).map(gelu_tanh);
+        let out = x.add(&self.linear(&hmid, layer, W_DOWN, tags, kprof));
+        // ln2 + up-projection + GELU + down-projection + residual
+        if let Some(p) = prof {
+            p.mark(tid, PhaseKind::GemmMlp, Instant::now());
+        }
+        Ok(out)
     }
 
     /// The weight surface activation rows tagged `tag` read in this
@@ -608,8 +673,19 @@ impl Engine {
     /// (`row_slices_match_batched_call_bitwise` in `gemm.rs`) makes the
     /// partition bit-invisible: every row gets exactly the bits a
     /// solo call under its adapter would produce.
-    fn linear(&self, x: &Tensor, layer: &Layer, slot: usize, tags: &[u32]) -> Tensor {
-        let mut y = self.linear_quant(x, layer, slot, tags);
+    ///
+    /// `kprof` (profiled forwards only) attaches in-kernel sub-phase
+    /// timing to the GEMM's weight view and forces it single-threaded so
+    /// the timed sub-intervals stay disjoint — bitwise free either way.
+    fn linear(
+        &self,
+        x: &Tensor,
+        layer: &Layer,
+        slot: usize,
+        tags: &[u32],
+        kprof: Option<&KernelProf>,
+    ) -> Tensor {
+        let mut y = self.linear_quant(x, layer, slot, tags, kprof);
         if let Some(lora) = &layer.lora {
             let (a, b) = &lora[slot];
             let contrib = linalg::matmul(&linalg::matmul(x, a), b).scale(2.0);
@@ -618,10 +694,22 @@ impl Engine {
         y
     }
 
-    fn linear_quant(&self, x: &Tensor, layer: &Layer, slot: usize, tags: &[u32]) -> Tensor {
+    fn linear_quant(
+        &self,
+        x: &Tensor,
+        layer: &Layer,
+        slot: usize,
+        tags: &[u32],
+        kprof: Option<&KernelProf>,
+    ) -> Tensor {
+        // profiled runs pin the column-chunk thread count to 1: thread
+        // choice never changes output bits (gemm.rs pins it), and the
+        // KernelProf sub-intervals must not overlap in wall time
+        let threads = if kprof.is_some() { Some(1) } else { None };
         let first = tags.first().copied().unwrap_or(0);
         if tags.iter().all(|&t| t == first) {
-            return matmul_packed_view(x, self.slot_view(layer, slot, first), self.gemm, None);
+            let view = self.slot_view(layer, slot, first).with_prof(kprof);
+            return matmul_packed_view(x, view, self.gemm, threads);
         }
         debug_assert_eq!(tags.len(), x.rows());
         let (m, din) = (x.rows(), x.cols());
@@ -637,7 +725,8 @@ impl Engine {
                 sub[k * din..(k + 1) * din].copy_from_slice(x.row(i));
             }
             let sub = Tensor::new(&[picked.len(), din], sub);
-            let y = matmul_packed_view(&sub, self.slot_view(layer, slot, tag), self.gemm, None);
+            let view = self.slot_view(layer, slot, tag).with_prof(kprof);
+            let y = matmul_packed_view(&sub, view, self.gemm, threads);
             for (k, &i) in picked.iter().enumerate() {
                 out[i * dout..(i + 1) * dout].copy_from_slice(&y.data()[k * dout..(k + 1) * dout]);
             }
@@ -650,9 +739,9 @@ impl Engine {
         let (d, h, hd) = (cfg.d_model, cfg.n_heads, cfg.head_dim());
 
         let xn = layernorm(x, &layer.ln1_w, &layer.ln1_b);
-        let q = self.linear(&xn, layer, WQ, tags);
-        let k = self.linear(&xn, layer, WK, tags);
-        let v = self.linear(&xn, layer, WV, tags);
+        let q = self.linear(&xn, layer, WQ, tags, None);
+        let k = self.linear(&xn, layer, WK, tags, None);
+        let v = self.linear(&xn, layer, WV, tags, None);
 
         // causal multi-head attention over the (B·T, D) activations
         let scale = 1.0 / (hd as f32).sqrt();
@@ -695,11 +784,11 @@ impl Engine {
             }
         }
         let attn = Tensor::new(&[b * t, d], attn);
-        let x = x.add(&self.linear(&attn, layer, WO, tags));
+        let x = x.add(&self.linear(&attn, layer, WO, tags, None));
 
         let xn = layernorm(&x, &layer.ln2_w, &layer.ln2_b);
-        let hmid = self.linear(&xn, layer, W_UP, tags).map(gelu_tanh);
-        Ok(x.add(&self.linear(&hmid, layer, W_DOWN, tags)))
+        let hmid = self.linear(&xn, layer, W_UP, tags, None).map(gelu_tanh);
+        Ok(x.add(&self.linear(&hmid, layer, W_DOWN, tags, None)))
     }
 }
 
@@ -1133,6 +1222,48 @@ mod tests {
         assert_eq!(cache.pos_len(0), t);
         assert_eq!(cache.pos_len(1), t - 1);
         assert_eq!(cache.pos_len(2), t);
+    }
+
+    #[test]
+    fn profiled_incremental_forward_is_bitwise_identical_and_tiles() {
+        use crate::obs::profiler::ForwardPhase;
+        let (cfg, _, engine) = tiny_engine(30);
+        let tokens = rand_tokens(&cfg, 2, 6, 31);
+        let mut plain_cache = engine.new_cache(2);
+        let want = engine.forward_incremental(&tokens, &mut plain_cache, &[0, 1]).unwrap();
+
+        let prof = Profiler::new();
+        let mut cache = engine.new_cache(2);
+        prof.begin_window(ForwardPhase::Prefill, 0, Instant::now());
+        let got = engine
+            .forward_incremental_profiled(&tokens, &mut cache, &[0, 1], &[], Some(&prof))
+            .unwrap();
+        prof.end_window(Instant::now());
+        // the profiler only reads clocks — logits are bit-identical
+        assert_eq!(got, want);
+
+        let ws = prof.windows();
+        assert_eq!(ws.len(), 1);
+        let w = &ws[0];
+        // integer-duration segments tile the window exactly, and every
+        // layer contributed each of its phase kinds
+        assert_eq!(w.segments.values().sum::<std::time::Duration>(), w.total);
+        for li in 0..cfg.n_layers {
+            for kind in [
+                PhaseKind::GemmQkv,
+                PhaseKind::KvPage,
+                PhaseKind::Attention,
+                PhaseKind::GemmO,
+                PhaseKind::GemmMlp,
+            ] {
+                assert!(
+                    w.segments.contains_key(&(li as u64, kind)),
+                    "layer {li} missing {kind:?}"
+                );
+            }
+        }
+        assert!(w.segments.contains_key(&(STEP_TID, PhaseKind::Other)));
+        assert!(w.segments.contains_key(&(STEP_TID, PhaseKind::KvPage)));
     }
 
     #[test]

@@ -126,6 +126,7 @@ fn main() -> Result<()> {
         "finetune" => cmd_finetune(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "bench-report" => cmd_bench_report(&args),
         "table1" => cmd_table1(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -158,6 +159,7 @@ COMMANDS
             [--arrival-rate <req/s>] [--load-seed 123]
             [--adapter name=<ckpt|synthetic:seed>[,name=...]] [--omega-frac 0.75]
             [--trace-out <trace.json>] [--metrics-out <metrics.json|.prom>]
+            [--profile-out <profile.json|.prom>]
             --sched routes the native backend through the continuous-batching
             scheduler (defaults from the [sched] TOML table; see
             examples/serve_sched.toml). With --arrival-rate the request
@@ -182,9 +184,23 @@ COMMANDS
             --trace-out writes a Chrome-trace/Perfetto JSON span timeline
             of the scheduled run (needs --sched true; load the file at
             ui.perfetto.dev). --metrics-out snapshots the final report's
-            metrics registry (.json → JSON, else Prometheus text). Both
-            also honor the trace_out / metrics_out TOML keys.
+            metrics registry (.json → JSON, else Prometheus text).
+            --profile-out attaches the engine hot-path profiler (needs
+            --sched true) and writes the folded per-(layer, kind)
+            lota_engine_* phase counters (.json → JSON, else Prometheus
+            text); combined with --trace-out the engine spans appear as
+            pid-3 tracks nested inside the forward spans. All three also
+            honor the trace_out / metrics_out / profile_out TOML keys.
   table1    --model tiny [--steps 40] [--eval-n 32] [--pretrain-steps 150]
+  bench-report --dir <bench-history> [--out <ledger.json>] [--gate-metric min_secs]
+            [--max-regress 0.20] [--fail-on-regress true|false]
+            reads a directory of historical BENCH_*.json bench reports —
+            one subdirectory per run, lexicographic order = chronological —
+            and emits a machine-readable trend ledger: per metric, the
+            latest value, its delta vs the previous run, and its delta vs
+            the best run on record. --fail-on-regress true exits nonzero
+            when the gate metric of any case regressed past --max-regress
+            (the CI perf gate runs exactly that over its rolling history).
   config-check <exp.toml>...   # parse + validate experiment TOMLs, run nothing
   info      [--artifacts artifacts]
 
@@ -499,6 +515,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = &trace_out {
         opts = opts.trace_out(p.clone());
     }
+    let profile_out = args
+        .opt("profile-out")
+        .map(PathBuf::from)
+        .or_else(|| exp.profile_out.as_ref().map(PathBuf::from));
+    if profile_out.is_some() && sched_cfg.is_none() {
+        bail!("--profile-out profiles the scheduled engine hot path: pass --sched true");
+    }
+    if let Some(p) = &profile_out {
+        opts = opts.profile_out(p.clone());
+    }
 
     // multi-adapter serving: --adapter (name=source,…) wins over the
     // experiment TOML's [adapters] table; requests spread round-robin
@@ -644,6 +670,186 @@ fn print_adapter_usage(report: &lota_qaf::serve::ThroughputReport) {
             println!("  adapter {label}: {} requests, {} tokens", usage.requests, usage.tokens);
         }
     }
+}
+
+/// The timing metrics every `BenchResult` carries, in report order. All
+/// are durations — lower is better — so regressions are positive deltas.
+const LEDGER_METRICS: [&str; 4] = ["mean_secs", "p50_secs", "p95_secs", "min_secs"];
+
+/// One run snapshot: (bench, case) → the four metric values.
+type RunSnapshot = BTreeMap<(String, String), [f64; 4]>;
+
+/// Load every `BENCH_*.json` under `dir` into one snapshot map.
+fn load_bench_snapshot(dir: &Path) -> Result<RunSnapshot> {
+    let mut snap = RunSnapshot::new();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    files.sort();
+    for f in files {
+        let text =
+            std::fs::read_to_string(&f).with_context(|| format!("reading {}", f.display()))?;
+        let doc = lota_qaf::config::Json::parse(&text)
+            .with_context(|| format!("parsing {}", f.display()))?;
+        let bench = doc.get("bench")?.as_str()?.to_string();
+        for r in doc.get("results")?.as_arr()? {
+            let case = r.get("name")?.as_str()?.to_string();
+            let mut vals = [0.0; 4];
+            for (i, m) in LEDGER_METRICS.iter().enumerate() {
+                vals[i] = r.get(m)?.as_f64()?;
+            }
+            snap.insert((bench.clone(), case), vals);
+        }
+    }
+    Ok(snap)
+}
+
+/// `lota bench-report`: fold a directory of historical bench snapshots
+/// (one subdirectory per run, sorted lexicographically — CI names them
+/// by zero-padded run number) into a trend ledger of per-metric deltas
+/// vs the previous run and vs the best run on record.
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("dir", "bench-history"));
+    let gate_metric = args.get("gate-metric", "min_secs");
+    let gate_idx = LEDGER_METRICS
+        .iter()
+        .position(|m| *m == gate_metric)
+        .with_context(|| format!("--gate-metric must be one of {LEDGER_METRICS:?}"))?;
+    let max_regress = args.get_f32("max-regress", 0.20)? as f64;
+    let fail_on_regress = match args.opt("fail-on-regress") {
+        Some("true") | Some("on") => true,
+        Some("false") | Some("off") | None => false,
+        Some(other) => bail!("--fail-on-regress wants true|false (got '{other}')"),
+    };
+
+    // one subdirectory per run; a flat directory of BENCH_*.json is
+    // accepted as a single-run history (first CI run, local smoke)
+    let mut run_dirs: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_dir())
+        .collect();
+    run_dirs.sort();
+    let mut runs: Vec<(String, RunSnapshot)> = Vec::new();
+    for rd in &run_dirs {
+        let snap = load_bench_snapshot(rd)?;
+        if !snap.is_empty() {
+            let name = rd
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("run")
+                .to_string();
+            runs.push((name, snap));
+        }
+    }
+    if runs.is_empty() {
+        let snap = load_bench_snapshot(&dir)?;
+        if snap.is_empty() {
+            bail!("no BENCH_*.json reports under {}", dir.display());
+        }
+        runs.push((".".to_string(), snap));
+    }
+
+    let (latest_name, latest) = runs.last().expect("non-empty checked above");
+    let history = &runs[..runs.len() - 1];
+    let mut regressions: Vec<String> = Vec::new();
+    let mut w = lota_qaf::config::JsonWriter::new();
+    w.begin_obj();
+    w.key("runs").begin_arr();
+    for (name, _) in &runs {
+        w.str(name);
+    }
+    w.end_arr();
+    w.key("latest").str(latest_name);
+    w.key("gate_metric").str(&gate_metric);
+    w.key("max_regress_frac").num(max_regress);
+    let mut table = Table::new(&["bench", "case", &gate_metric, "vs prev", "vs best"]);
+    w.key("entries").begin_arr();
+    for ((bench, case), vals) in latest {
+        let prev = history.iter().rev().find_map(|(_, s)| s.get(&(bench.clone(), case.clone())));
+        for (i, metric) in LEDGER_METRICS.iter().enumerate() {
+            let value = vals[i];
+            // best on record, current run included — 0.0 means "this run
+            // is the best ever seen for this metric"
+            let best = runs
+                .iter()
+                .filter_map(|(_, s)| s.get(&(bench.clone(), case.clone())).map(|v| v[i]))
+                .fold(value, f64::min);
+            let d_best = if best > 0.0 { value / best - 1.0 } else { 0.0 };
+            w.begin_obj();
+            w.key("bench").str(bench);
+            w.key("case").str(case);
+            w.key("metric").str(metric);
+            w.key("value").num(value);
+            w.key("best").num(best);
+            w.key("delta_vs_best").num(d_best);
+            let mut d_prev = None;
+            if let Some(pv) = prev {
+                let p = pv[i];
+                w.key("prev").num(p);
+                if p > 0.0 {
+                    let d = value / p - 1.0;
+                    w.key("delta_vs_prev").num(d);
+                    d_prev = Some(d);
+                }
+            }
+            let regressed = i == gate_idx && d_prev.is_some_and(|d| d > max_regress);
+            w.key("regressed").bool(regressed);
+            w.end_obj();
+            if regressed {
+                regressions.push(format!(
+                    "{bench}/{case} {metric}: {value:.6}s is {:+.1}% vs previous run",
+                    1e2 * d_prev.expect("regressed implies a previous value")
+                ));
+            }
+            if i == gate_idx {
+                table.row(&[
+                    bench.clone(),
+                    case.clone(),
+                    format!("{value:.6}"),
+                    d_prev.map_or("-".to_string(), |d| format!("{:+.1}%", 1e2 * d)),
+                    format!("{:+.1}%", 1e2 * d_best),
+                ]);
+            }
+        }
+    }
+    w.end_arr();
+    w.key("regressions").num(regressions.len() as f64);
+    w.end_obj();
+    let ledger = w.finish();
+    println!(
+        "# bench trend over {} run(s), latest '{latest_name}', gate {gate_metric} @ {:.0}%",
+        runs.len(),
+        1e2 * max_regress
+    );
+    table.print();
+    if let Some(out) = args.opt("out") {
+        let out = PathBuf::from(out);
+        if let Some(parent) = out.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&out, &ledger)?;
+        println!("trend ledger written to {}", out.display());
+    } else {
+        println!("{ledger}");
+    }
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("regression: {r}");
+        }
+        if fail_on_regress {
+            bail!("{} bench regression(s) past the {:.0}% gate", regressions.len(), 1e2 * max_regress);
+        }
+    }
+    Ok(())
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {

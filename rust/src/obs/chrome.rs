@@ -11,6 +11,13 @@
 //! * [`Track::Request`]`(id)` → pid 2 / tid = id, process name
 //!   `requests`, thread name `req <id>`: that request's lifecycle chain
 //!   (`request` enclosing `queued`, `prefill`, `decode_step`…).
+//! * [`Track::Engine`]`(tid)` → pid 3 / tid = layer index, process name
+//!   `engine`, thread name `layer <tid>` (the reserved
+//!   [`crate::obs::profiler::STEP_TID`] row is `step scope`): the
+//!   profiler's per-layer kernel-phase spans, nested strictly inside the
+//!   scheduler's `prefill_forward`/`decode_forward` spans because both
+//!   are stamped from the same `Instant`s. The pid-3 metadata is emitted
+//!   only when engine events exist, so unprofiled traces are unchanged.
 //! * [`EventKind::Begin`]/[`EventKind::End`] → `ph: "B"` / `"E"`
 //!   duration events, [`EventKind::Counter`] → `ph: "C"` with
 //!   `args.value`; timestamps (`ts`) are microseconds from the
@@ -36,6 +43,7 @@ fn track_ids(track: Track) -> (f64, f64) {
     match track {
         Track::Scheduler => (1.0, 0.0),
         Track::Request(id) => (2.0, id as f64),
+        Track::Engine(layer) => (3.0, layer as f64),
     }
 }
 
@@ -56,6 +64,7 @@ fn event_common(w: &mut JsonWriter, ph: &str, track: Track, name: &str, ts_us: f
         .str(match track {
             Track::Scheduler => "sched",
             Track::Request(_) => "request",
+            Track::Engine(_) => "engine",
         });
 }
 
@@ -88,17 +97,34 @@ pub fn chrome_trace_json(rec: &RecordingTracer) -> String {
     metadata_event(&mut w, 1.0, 0.0, "process_name", "scheduler");
     metadata_event(&mut w, 1.0, 0.0, "thread_name", "steps");
     metadata_event(&mut w, 2.0, 0.0, "process_name", "requests");
-    let mut req_ids: Vec<u64> = events
-        .iter()
-        .filter_map(|e| match e.track {
-            Track::Request(id) => Some(id),
-            Track::Scheduler => None,
-        })
-        .collect();
+    let mut req_ids: Vec<u64> = Vec::new();
+    let mut engine_tids: Vec<u64> = Vec::new();
+    for e in &events {
+        match e.track {
+            Track::Request(id) => req_ids.push(id),
+            Track::Engine(tid) => engine_tids.push(tid),
+            Track::Scheduler => {}
+        }
+    }
     req_ids.sort_unstable();
     req_ids.dedup();
     for id in req_ids {
         metadata_event(&mut w, 2.0, id as f64, "thread_name", &format!("req {id}"));
+    }
+    // the engine process exists only when a profiler actually emitted —
+    // unprofiled traces keep their exact historical event counts
+    engine_tids.sort_unstable();
+    engine_tids.dedup();
+    if !engine_tids.is_empty() {
+        metadata_event(&mut w, 3.0, 0.0, "process_name", "engine");
+        for tid in engine_tids {
+            let label = if tid == crate::obs::profiler::STEP_TID {
+                "step scope".to_string()
+            } else {
+                format!("layer {tid}")
+            };
+            metadata_event(&mut w, 3.0, tid as f64, "thread_name", &label);
+        }
     }
     for e in &events {
         match e.kind {
@@ -122,6 +148,9 @@ pub fn chrome_trace_json(rec: &RecordingTracer) -> String {
     for (k, v) in rec.meta_entries() {
         w.key(k).str(&v);
     }
+    // buffer health: how many events the cap discarded (0 = trustworthy
+    // trace; > 0 = the timeline has holes and should be re-run capped up)
+    w.key("dropped_events").num(rec.dropped_events() as f64);
     w.end_obj();
 
     w.end_obj();
@@ -204,6 +233,46 @@ mod tests {
                 other => panic!("unexpected phase {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn engine_tracks_land_on_pid_3_with_layer_thread_names() {
+        let mut tr = RecordingTracer::new();
+        let t = Instant::now();
+        tr.begin(Track::Engine(1), "qkv_gemm", t);
+        tr.end(Track::Engine(1), "qkv_gemm", t);
+        tr.begin(Track::Engine(crate::obs::profiler::STEP_TID), "other", t);
+        tr.end(Track::Engine(crate::obs::profiler::STEP_TID), "other", t);
+        let doc = Json::parse(&chrome_trace_json(&tr)).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut names = Vec::new();
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() == "M" {
+                if e.get("pid").unwrap().as_f64().unwrap() == 3.0 {
+                    names.push(e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string());
+                }
+            } else {
+                assert_eq!(e.get("pid").unwrap().as_f64().unwrap(), 3.0);
+                assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "engine");
+            }
+        }
+        assert!(names.contains(&"engine".to_string()));
+        assert!(names.contains(&"layer 1".to_string()));
+        assert!(names.contains(&"step scope".to_string()));
+    }
+
+    #[test]
+    fn dropped_events_surface_in_meta() {
+        let mut tr = RecordingTracer::with_cap(1);
+        let t = Instant::now();
+        tr.begin(Track::Scheduler, "step", t);
+        tr.end(Track::Scheduler, "step", t);
+        let doc = Json::parse(&chrome_trace_json(&tr)).unwrap();
+        let meta = doc.get("meta").unwrap();
+        assert_eq!(meta.get("dropped_events").unwrap().as_f64().unwrap(), 1.0);
+        // an uncapped sample trace reports zero drops
+        let doc = Json::parse(&chrome_trace_json(&sample_trace())).unwrap();
+        assert_eq!(doc.get("meta").unwrap().get("dropped_events").unwrap().as_f64().unwrap(), 0.0);
     }
 
     #[test]

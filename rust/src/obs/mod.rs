@@ -28,15 +28,25 @@
 //!   [`crate::serve::Histogram`]) snapshotted from a
 //!   [`crate::serve::ThroughputReport`] and written as Prometheus-style
 //!   text or JSON (`lota serve --metrics-out`).
+//! * [`Profiler`] — the engine hot-path profiler. Where the tracer stops
+//!   at the scheduler's `prefill_forward` / `decode_forward` spans, the
+//!   profiler opens the engine below them: per-(layer, kind) kernel
+//!   phase timings (qkv/o/mlp GEMM, attention, dequant, delta overlay,
+//!   KV paging) that tile each forward window *exactly* — same
+//!   `Option`-gated, single-clock discipline, same bitwise-invisibility
+//!   pin. Surfaces as pid-3 Perfetto tracks ([`Track::Engine`]) and as
+//!   `lota_engine_*` registry keys (`lota serve --profile-out`).
 //!
 //! Span and metric naming, the trace schema, and how the exported
 //! timings reconcile with `SchedStats` are documented in
 //! `docs/observability.md`.
 
 pub mod chrome;
+pub mod profiler;
 pub mod registry;
 pub mod tracer;
 
 pub use chrome::{chrome_trace_json, write_chrome_trace};
+pub use profiler::{ForwardPhase, KernelProf, PhaseKind, Profiler, WindowProfile, STEP_TID};
 pub use registry::MetricsRegistry;
 pub use tracer::{EventKind, NoopTracer, RecordingTracer, TraceEvent, Tracer, Track};

@@ -1,0 +1,442 @@
+//! Engine hot-path profiler: scoped kernel-phase timings per (layer,
+//! kind) and per forward window, zero-cost when off.
+//!
+//! PR 6 made the *scheduler* observable; below `prefill_forward` /
+//! `decode_forward` the engine stayed a black box. [`Profiler`] opens it
+//! under the same two rules every observer in this repo obeys:
+//!
+//! 1. **Inert when off.** The scheduler holds `Option<Profiler>`
+//!    (default `None`) and the engine receives `Option<&Profiler>` —
+//!    every emission site is one never-taken branch, nothing allocates,
+//!    and attaching a profiler is pinned bitwise invisible on scheduler
+//!    outputs (`tests/obs.rs`).
+//! 2. **One clock.** The profiler never reads its own "window" clock:
+//!    the scheduler opens each window with the *same* `Instant` it
+//!    stamps `StepReport.prefill_ms` / `decode_ms` from, and the engine
+//!    marks phase boundaries by cursor-marching — each mark attributes
+//!    `at − cursor` (an integer-nanosecond `Duration`) to a phase and
+//!    advances the cursor. Segment durations therefore tile the window
+//!    **exactly**: their sum equals the window's `Duration`, so
+//!    `1e3 · sum.as_secs_f64()` bit-equals the enclosing `StepReport`
+//!    wall-time. No second timestamp source exists.
+//!
+//! Attribution inside a fused kernel needs one extra trick: dequant and
+//! delta-overlay work is interleaved per column *inside* the packed
+//! GEMM, so no cursor mark can separate them. [`KernelProf`] carries two
+//! relaxed `AtomicU64` nanosecond accumulators that
+//! `PackedView::decode_col_into` feeds when profiled; at each mark the
+//! profiler diffs the accumulators against its last snapshot and splits
+//! the elapsed segment into gemm / dequant / delta_overlay parts (the
+//! sub-parts are true sub-intervals — profiled GEMMs run single-threaded,
+//! which is bitwise safe because thread count never changes output bits).
+//!
+//! Surfaces:
+//! * Perfetto tracks — attach a [`RecordingTracer`] sink
+//!   ([`Profiler::with_sink`], ideally the same tracer the scheduler
+//!   writes to so one `t0` governs everything) and every segment becomes
+//!   a `B`/`E` span pair on pid 3 (`Track::Engine(layer)`), nested
+//!   inside the scheduler's forward spans by construction.
+//! * [`MetricsRegistry`] — [`Profiler::fill_registry`] folds all windows
+//!   into `lota_engine_phase_ms_total{layer="…",kind="…"}` counters
+//!   (`lota serve --profile-out`).
+//! * [`Profiler::windows`] — the raw per-window profiles, what the
+//!   reconciliation tests assert on.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::obs::registry::MetricsRegistry;
+use crate::obs::tracer::{RecordingTracer, Tracer, Track};
+
+/// Reserved [`Track::Engine`] tid for step-scope phases that belong to
+/// no single layer (embedding + validation, block allocation, the final
+/// layernorm + head matmul, the post-forward tail). Far above any real
+/// layer count, and exactly representable as f64 in the Chrome export.
+pub const STEP_TID: u64 = 1 << 20;
+
+/// What a profiled segment of engine time was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PhaseKind {
+    /// the Q/K/V projections (plus the ln1 they read), per layer
+    GemmQkv,
+    /// the attention-output projection WO (plus the residual add)
+    GemmO,
+    /// the MLP pair W_up · gelu · W_down (plus ln2)
+    GemmMlp,
+    /// the attention score/softmax/AXPY loops
+    Attention,
+    /// packed-code column decode inside the GEMM ([`KernelProf`])
+    Dequant,
+    /// ternary-delta overlay application inside the GEMM ([`KernelProf`])
+    DeltaOverlay,
+    /// KV traffic: appending K/V rows to the cache; on [`STEP_TID`],
+    /// paged block allocation (`ensure_blocks`)
+    KvPage,
+    /// everything else in the window: embedding/validation, final
+    /// layernorm + head matmul, and the post-forward tail up to the
+    /// scheduler's window end (argmax, `apply_pick`, …)
+    Other,
+}
+
+impl PhaseKind {
+    /// Stable label used for span names and metric `kind` label values.
+    pub fn label(self) -> &'static str {
+        match self {
+            PhaseKind::GemmQkv => "qkv_gemm",
+            PhaseKind::GemmO => "o_gemm",
+            PhaseKind::GemmMlp => "mlp_gemm",
+            PhaseKind::Attention => "attention",
+            PhaseKind::Dequant => "dequant",
+            PhaseKind::DeltaOverlay => "delta_overlay",
+            PhaseKind::KvPage => "kv_page",
+            PhaseKind::Other => "other",
+        }
+    }
+}
+
+/// Which scheduler forward a window encloses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardPhase {
+    Prefill,
+    Decode,
+}
+
+impl ForwardPhase {
+    pub fn label(self) -> &'static str {
+        match self {
+            ForwardPhase::Prefill => "prefill",
+            ForwardPhase::Decode => "decode",
+        }
+    }
+}
+
+/// Nanosecond accumulators fed from *inside* the fused GEMM kernel
+/// (column decode / delta overlay), where cursor marks cannot reach.
+/// Atomics keep `PackedView` `Copy + Send` for the threaded GEMM path —
+/// though profiled GEMMs force one thread so the accumulated intervals
+/// stay disjoint sub-intervals of the enclosing segment.
+#[derive(Debug, Default)]
+pub struct KernelProf {
+    dequant_ns: AtomicU64,
+    overlay_ns: AtomicU64,
+}
+
+impl KernelProf {
+    pub fn add_dequant_ns(&self, ns: u64) {
+        self.dequant_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn add_overlay_ns(&self, ns: u64) {
+        self.overlay_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Cumulative (dequant, overlay) nanoseconds since construction.
+    pub fn snapshot_ns(&self) -> (u64, u64) {
+        (self.dequant_ns.load(Ordering::Relaxed), self.overlay_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// One closed forward window: its exact wall `Duration` and the phase
+/// segments that tile it. `segments.values().sum() == total` holds by
+/// construction (integer-nanosecond arithmetic, no float rounding).
+#[derive(Clone, Debug)]
+pub struct WindowProfile {
+    pub phase: ForwardPhase,
+    /// scheduler step number the window belongs to
+    pub step: u64,
+    pub total: Duration,
+    /// (tid, kind) → time; tid is a layer index or [`STEP_TID`]
+    pub segments: BTreeMap<(u64, PhaseKind), Duration>,
+}
+
+#[derive(Debug)]
+struct Window {
+    phase: ForwardPhase,
+    step: u64,
+    start: Instant,
+    cursor: Instant,
+    dq_snap: u64,
+    ov_snap: u64,
+    segments: BTreeMap<(u64, PhaseKind), Duration>,
+}
+
+#[derive(Debug, Default)]
+struct ProfBuf {
+    window: Option<Window>,
+    windows: Vec<WindowProfile>,
+    sink: Option<RecordingTracer>,
+}
+
+/// The engine profiler handle: clonable, single-threaded, shared between
+/// the scheduler (opens/closes windows) and the engine (marks phases) —
+/// the same `Rc<RefCell<…>>` idiom as [`RecordingTracer`].
+#[derive(Clone, Debug)]
+pub struct Profiler {
+    buf: Rc<RefCell<ProfBuf>>,
+    kernel: Rc<KernelProf>,
+}
+
+impl Default for Profiler {
+    fn default() -> Profiler {
+        Profiler::new()
+    }
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler {
+            buf: Rc::new(RefCell::new(ProfBuf::default())),
+            kernel: Rc::new(KernelProf::default()),
+        }
+    }
+
+    /// Also emit every segment as a `B`/`E` span pair on
+    /// [`Track::Engine`] into `sink`. Pass the *same* `RecordingTracer`
+    /// the scheduler traces into: the engine spans then share its `t0`
+    /// and nest exactly inside `prefill_forward` / `decode_forward`.
+    pub fn with_sink(self, sink: RecordingTracer) -> Profiler {
+        self.buf.borrow_mut().sink = Some(sink);
+        self
+    }
+
+    /// The in-kernel accumulator views (`PackedView`) feed. Borrowed per
+    /// forward by the engine's profiled GEMM calls.
+    pub fn kernel(&self) -> &KernelProf {
+        &self.kernel
+    }
+
+    /// Open a forward window at `at` — the scheduler calls this with the
+    /// exact `Instant` it stamps the matching `StepReport` phase start
+    /// from. The cursor starts at `at`.
+    pub fn begin_window(&self, phase: ForwardPhase, step: u64, at: Instant) {
+        let (dq, ov) = self.kernel.snapshot_ns();
+        let mut b = self.buf.borrow_mut();
+        debug_assert!(b.window.is_none(), "profiler window already open");
+        b.window = Some(Window {
+            phase,
+            step,
+            start: at,
+            cursor: at,
+            dq_snap: dq,
+            ov_snap: ov,
+            segments: BTreeMap::new(),
+        });
+    }
+
+    /// Attribute the time since the last mark (or the window start) to
+    /// `(tid, kind)` and advance the cursor to `at`. Dequant/overlay
+    /// nanoseconds accumulated in [`KernelProf`] since the last mark are
+    /// split out into their own kinds under the same tid; the three
+    /// parts tile the elapsed segment exactly. No-op outside a window.
+    pub fn mark(&self, tid: u64, kind: PhaseKind, at: Instant) {
+        let (dq_now, ov_now) = self.kernel.snapshot_ns();
+        let mut b = self.buf.borrow_mut();
+        let ProfBuf { window, sink, .. } = &mut *b;
+        let Some(win) = window.as_mut() else { return };
+        let elapsed = at.checked_duration_since(win.cursor).unwrap_or(Duration::ZERO);
+        // the in-kernel intervals are true sub-intervals of `elapsed`
+        // (single-threaded profiled GEMMs); the clamp keeps the split
+        // tiling `elapsed` exactly even under clock pathology
+        let dq = Duration::from_nanos(dq_now - win.dq_snap).min(elapsed);
+        let ov = Duration::from_nanos(ov_now - win.ov_snap).min(elapsed - dq);
+        let main = elapsed - dq - ov;
+        let span_start = win.cursor;
+        win.cursor = at;
+        win.dq_snap = dq_now;
+        win.ov_snap = ov_now;
+        *win.segments.entry((tid, kind)).or_default() += main;
+        if dq > Duration::ZERO {
+            *win.segments.entry((tid, PhaseKind::Dequant)).or_default() += dq;
+        }
+        if ov > Duration::ZERO {
+            *win.segments.entry((tid, PhaseKind::DeltaOverlay)).or_default() += ov;
+        }
+        if let Some(tr) = sink.as_mut() {
+            // one span for the whole segment; the fused sub-kernel parts
+            // ride as counters (they interleave per column, so spans
+            // would be thousands of slivers)
+            tr.begin(Track::Engine(tid), kind.label(), span_start);
+            tr.end(Track::Engine(tid), kind.label(), at);
+            if dq > Duration::ZERO {
+                tr.counter(Track::Engine(tid), "dequant_ms", 1e3 * dq.as_secs_f64(), at);
+            }
+            if ov > Duration::ZERO {
+                tr.counter(Track::Engine(tid), "delta_overlay_ms", 1e3 * ov.as_secs_f64(), at);
+            }
+        }
+    }
+
+    /// Close the window at `at` — again the scheduler's own `Instant`
+    /// (the one `StepReport.prefill_ms`/`decode_ms` is computed from).
+    /// The trailing gap since the last mark lands in
+    /// `(STEP_TID, Other)`, so the segments tile `[start, at]` exactly.
+    pub fn end_window(&self, at: Instant) {
+        self.mark(STEP_TID, PhaseKind::Other, at);
+        let mut b = self.buf.borrow_mut();
+        let Some(win) = b.window.take() else { return };
+        let total = at.checked_duration_since(win.start).unwrap_or(Duration::ZERO);
+        debug_assert_eq!(
+            total,
+            win.segments.values().sum::<Duration>(),
+            "profiler segments failed to tile the window"
+        );
+        b.windows.push(WindowProfile {
+            phase: win.phase,
+            step: win.step,
+            total,
+            segments: win.segments,
+        });
+    }
+
+    /// All closed windows so far, in order.
+    pub fn windows(&self) -> Vec<WindowProfile> {
+        self.buf.borrow().windows.clone()
+    }
+
+    /// Fold every closed window into `reg` as labeled counters:
+    /// `lota_engine_phase_ms_total{layer="<i>|step",kind="<label>"}`
+    /// plus window counts and total forward wall-time per phase
+    /// (`lota_engine_{prefill,decode}_forward_ms_total`,
+    /// `lota_engine_{prefill,decode}_windows_total`).
+    pub fn fill_registry(&self, reg: &mut MetricsRegistry) {
+        let b = self.buf.borrow();
+        let mut totals: BTreeMap<(u64, PhaseKind), Duration> = BTreeMap::new();
+        let mut windows = [0u64; 2];
+        let mut wall = [Duration::ZERO; 2];
+        for w in &b.windows {
+            for (k, d) in &w.segments {
+                *totals.entry(*k).or_default() += *d;
+            }
+            let i = match w.phase {
+                ForwardPhase::Prefill => 0,
+                ForwardPhase::Decode => 1,
+            };
+            windows[i] += 1;
+            wall[i] += w.total;
+        }
+        for ((tid, kind), d) in totals {
+            let layer =
+                if tid == STEP_TID { "step".to_string() } else { tid.to_string() };
+            reg.inc(
+                &format!(
+                    "lota_engine_phase_ms_total{{layer=\"{layer}\",kind=\"{}\"}}",
+                    kind.label()
+                ),
+                1e3 * d.as_secs_f64(),
+            );
+        }
+        reg.inc("lota_engine_prefill_windows_total", windows[0] as f64);
+        reg.inc("lota_engine_decode_windows_total", windows[1] as f64);
+        reg.inc("lota_engine_prefill_forward_ms_total", 1e3 * wall[0].as_secs_f64());
+        reg.inc("lota_engine_decode_forward_ms_total", 1e3 * wall[1].as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn segments_tile_the_window_exactly() {
+        let t0 = Instant::now();
+        let p = Profiler::new();
+        p.begin_window(ForwardPhase::Prefill, 3, t0);
+        p.mark(0, PhaseKind::GemmQkv, t0 + ms(2));
+        p.mark(0, PhaseKind::Attention, t0 + ms(5));
+        p.mark(1, PhaseKind::GemmMlp, t0 + ms(6));
+        p.end_window(t0 + ms(8));
+        let ws = p.windows();
+        assert_eq!(ws.len(), 1);
+        let w = &ws[0];
+        assert_eq!(w.phase, ForwardPhase::Prefill);
+        assert_eq!(w.step, 3);
+        assert_eq!(w.total, ms(8));
+        assert_eq!(w.segments[&(0, PhaseKind::GemmQkv)], ms(2));
+        assert_eq!(w.segments[&(0, PhaseKind::Attention)], ms(3));
+        assert_eq!(w.segments[&(1, PhaseKind::GemmMlp)], ms(1));
+        // the trailing gap lands in (STEP_TID, Other)
+        assert_eq!(w.segments[&(STEP_TID, PhaseKind::Other)], ms(2));
+        // the exactness claim itself: integer-duration tiling
+        assert_eq!(w.segments.values().sum::<Duration>(), w.total);
+    }
+
+    #[test]
+    fn kernel_accumulators_split_out_of_the_enclosing_mark() {
+        let t0 = Instant::now();
+        let p = Profiler::new();
+        p.begin_window(ForwardPhase::Decode, 0, t0);
+        p.kernel().add_dequant_ns(1_000_000); // 1 ms of column decode
+        p.kernel().add_overlay_ns(500_000); // 0.5 ms of delta overlay
+        p.mark(2, PhaseKind::GemmQkv, t0 + ms(4));
+        p.end_window(t0 + ms(4));
+        let w = &p.windows()[0];
+        assert_eq!(w.segments[&(2, PhaseKind::Dequant)], ms(1));
+        assert_eq!(w.segments[&(2, PhaseKind::DeltaOverlay)], Duration::from_micros(500));
+        // gemm gets the remainder: 4 − 1 − 0.5 ms
+        assert_eq!(w.segments[&(2, PhaseKind::GemmQkv)], Duration::from_micros(2500));
+        assert_eq!(w.segments.values().sum::<Duration>(), w.total);
+    }
+
+    #[test]
+    fn marks_outside_a_window_are_ignored() {
+        let p = Profiler::new();
+        p.mark(0, PhaseKind::Attention, Instant::now());
+        p.end_window(Instant::now());
+        assert!(p.windows().is_empty());
+    }
+
+    #[test]
+    fn sink_receives_nested_engine_spans_on_the_shared_clock() {
+        let tr = RecordingTracer::new();
+        let p = Profiler::new().with_sink(tr.clone());
+        let t0 = Instant::now();
+        p.begin_window(ForwardPhase::Prefill, 0, t0);
+        p.kernel().add_dequant_ns(100_000);
+        p.mark(0, PhaseKind::GemmQkv, t0 + ms(1));
+        p.end_window(t0 + ms(2));
+        let ev = tr.events();
+        // qkv B/E + dequant counter + trailing other B/E
+        assert_eq!(ev.len(), 5);
+        assert_eq!(ev[0].track, Track::Engine(0));
+        assert_eq!(ev[0].name, "qkv_gemm");
+        assert!(matches!(ev[2].kind, crate::obs::tracer::EventKind::Counter(v) if v > 0.0));
+        assert_eq!(ev[3].track, Track::Engine(STEP_TID));
+        assert_eq!(ev[3].name, "other");
+        // span timestamps are monotone within the window
+        assert!(ev[0].ts_us <= ev[1].ts_us && ev[1].ts_us <= ev[4].ts_us);
+    }
+
+    #[test]
+    fn registry_fold_produces_labeled_engine_keys() {
+        let t0 = Instant::now();
+        let p = Profiler::new();
+        p.begin_window(ForwardPhase::Prefill, 0, t0);
+        p.mark(1, PhaseKind::GemmQkv, t0 + ms(2));
+        p.end_window(t0 + ms(2));
+        p.begin_window(ForwardPhase::Decode, 1, t0 + ms(3));
+        p.mark(1, PhaseKind::GemmQkv, t0 + ms(4));
+        p.mark(STEP_TID, PhaseKind::KvPage, t0 + ms(5));
+        p.end_window(t0 + ms(5));
+        let mut reg = MetricsRegistry::new();
+        p.fill_registry(&mut reg);
+        let qkv = reg
+            .counter("lota_engine_phase_ms_total{layer=\"1\",kind=\"qkv_gemm\"}")
+            .unwrap();
+        assert!((qkv - 3.0).abs() < 1e-9, "qkv ms {qkv}");
+        assert_eq!(
+            reg.counter("lota_engine_phase_ms_total{layer=\"step\",kind=\"kv_page\"}"),
+            Some(1.0)
+        );
+        assert_eq!(reg.counter("lota_engine_prefill_windows_total"), Some(1.0));
+        assert_eq!(reg.counter("lota_engine_decode_windows_total"), Some(1.0));
+        assert_eq!(reg.counter("lota_engine_prefill_forward_ms_total"), Some(2.0));
+        assert_eq!(reg.counter("lota_engine_decode_forward_ms_total"), Some(2.0));
+    }
+}

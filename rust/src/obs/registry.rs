@@ -5,7 +5,10 @@
 //! versus the nested report struct the code wants. It renders two ways:
 //!
 //! * [`MetricsRegistry::to_prometheus`] — Prometheus text exposition
-//!   (`# TYPE` headers, `{quantile="…"}` summary lines).
+//!   (`# TYPE` headers, real cumulative `histogram` types: `_bucket`
+//!   series over a fixed log-spaced millisecond `le` ladder plus
+//!   `_sum`/`_count`, so TTFT/inter-token histograms scrape and
+//!   aggregate correctly instead of posing as summaries).
 //! * [`MetricsRegistry::to_json`] — one JSON object with `counters` /
 //!   `gauges` / `histograms` / `info` sections, each histogram
 //!   summarized as count/mean/min/p50/p95/p99/max.
@@ -29,6 +32,15 @@ use anyhow::{Context, Result};
 
 use crate::config::JsonWriter;
 use crate::serve::{Histogram, ThroughputReport};
+
+/// Upper bounds (`le` labels) of the Prometheus histogram buckets: a
+/// fixed ×2 log-spaced millisecond ladder from 0.25 ms to ~4 s, plus the
+/// implicit `+Inf`. Fixed (not data-derived) so series from different
+/// runs aggregate; values in other units (ratios in [0, 1], depths) land
+/// in the low buckets, which still orders them correctly.
+pub const BUCKET_BOUNDS_MS: [f64; 15] = [
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
+];
 
 /// Counters, gauges, histograms, and string facts, keyed by metric name.
 #[derive(Clone, Debug, Default)]
@@ -157,12 +169,17 @@ impl MetricsRegistry {
             writeln!(out, "{name} {v}").unwrap();
         }
         for (name, h) in &self.histograms {
-            let s = h.stats();
-            writeln!(out, "# TYPE {name} summary").unwrap();
-            writeln!(out, "{name}{{quantile=\"0.5\"}} {}", s.p50).unwrap();
-            writeln!(out, "{name}{{quantile=\"0.95\"}} {}", s.p95).unwrap();
-            writeln!(out, "{name}{{quantile=\"0.99\"}} {}", s.p99).unwrap();
-            writeln!(out, "{name}_sum {}", s.mean * h.len() as f64).unwrap();
+            // cumulative le-bucket form — each bucket counts samples ≤
+            // its bound, +Inf counts everything, and _sum is the exact
+            // sample sum (not mean·count, which reintroduces rounding)
+            writeln!(out, "# TYPE {name} histogram").unwrap();
+            let samples = h.samples();
+            for le in BUCKET_BOUNDS_MS {
+                let cum = samples.iter().filter(|&&v| v <= le).count();
+                writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}").unwrap();
+            }
+            writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.len()).unwrap();
+            writeln!(out, "{name}_sum {}", h.sum()).unwrap();
             writeln!(out, "{name}_count {}", h.len()).unwrap();
         }
         if !self.info.is_empty() {
@@ -329,14 +346,22 @@ mod tests {
     }
 
     #[test]
-    fn prometheus_text_has_types_quantiles_and_info() {
+    fn prometheus_text_has_types_buckets_and_info() {
         let text = MetricsRegistry::from_report(&sample_report()).to_prometheus();
         assert!(text.contains("# TYPE lota_requests_total counter"));
         assert!(text.contains("lota_requests_total 4"));
-        assert!(text.contains("# TYPE lota_ttft_ms summary"));
-        assert!(text.contains("lota_ttft_ms{quantile=\"0.5\"} 20"));
-        assert!(text.contains("lota_ttft_ms{quantile=\"0.99\"} 30"));
+        // real cumulative histogram: samples 10/20/30 ms against the
+        // fixed ladder — nothing ≤ 8, one ≤ 16, all three ≤ 32 and up
+        assert!(text.contains("# TYPE lota_ttft_ms histogram"));
+        assert!(text.contains("lota_ttft_ms_bucket{le=\"8\"} 0"));
+        assert!(text.contains("lota_ttft_ms_bucket{le=\"16\"} 1"));
+        assert!(text.contains("lota_ttft_ms_bucket{le=\"32\"} 3"));
+        assert!(text.contains("lota_ttft_ms_bucket{le=\"4096\"} 3"));
+        assert!(text.contains("lota_ttft_ms_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("lota_ttft_ms_sum 60"));
         assert!(text.contains("lota_ttft_ms_count 3"));
+        // no summary-style quantile lines remain
+        assert!(!text.contains("quantile="));
         assert!(text.contains("lota_info{gemm_kernel=\"scalar\"} 1"));
         // every non-comment line is "name[{labels}] value"
         for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {

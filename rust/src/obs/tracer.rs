@@ -33,6 +33,10 @@ pub enum Track {
     /// one request's queued → prefill → decode_step… → finished chain,
     /// keyed by the id `Scheduler::submit` returned
     Request(u64),
+    /// one engine layer's kernel-phase timeline (profiler spans), keyed
+    /// by layer index; step-level phases (embedding, head, block alloc)
+    /// ride the layer-count tid
+    Engine(u64),
 }
 
 /// What an event is: a span opening, a span closing, or a counter
@@ -83,6 +87,11 @@ impl Tracer for NoopTracer {
     fn counter(&mut self, _track: Track, _name: &'static str, _value: f64, _at: Instant) {}
 }
 
+/// Default event-buffer cap: generous (a soak at ~10 events per step
+/// takes days to hit it) but finite, so a long open-loop run can't grow
+/// memory without bound.
+pub const DEFAULT_EVENT_CAP: usize = 1 << 20;
+
 #[derive(Debug)]
 struct TraceBuffer {
     /// all timestamps are offsets from here
@@ -90,6 +99,10 @@ struct TraceBuffer {
     events: Vec<TraceEvent>,
     /// run-level string facts, in emission order
     meta: Vec<(&'static str, String)>,
+    /// maximum buffered events; pushes past this are counted, not stored
+    cap: usize,
+    /// events discarded at the cap — surfaced in the Chrome export meta
+    dropped: u64,
 }
 
 /// Buffers events in memory behind a shared, clonable handle.
@@ -114,11 +127,21 @@ impl RecordingTracer {
     /// Construct the tracer before submitting work so every emitted
     /// `Instant` lands at a non-negative offset.
     pub fn new() -> RecordingTracer {
+        RecordingTracer::with_cap(DEFAULT_EVENT_CAP)
+    }
+
+    /// [`RecordingTracer::new`] with an explicit event-buffer cap. Once
+    /// `cap` events are buffered, further pushes are dropped and counted
+    /// ([`RecordingTracer::dropped_events`]) instead of growing memory —
+    /// meta facts are unaffected.
+    pub fn with_cap(cap: usize) -> RecordingTracer {
         RecordingTracer {
             buf: Rc::new(RefCell::new(TraceBuffer {
                 t0: Instant::now(),
                 events: Vec::new(),
                 meta: Vec::new(),
+                cap,
+                dropped: 0,
             })),
         }
     }
@@ -135,7 +158,12 @@ impl RecordingTracer {
 
     fn push(&self, track: Track, kind: EventKind, name: &'static str, at: Instant) {
         let ts_us = self.ts_us(at);
-        self.buf.borrow_mut().events.push(TraceEvent { track, kind, name, ts_us });
+        let mut buf = self.buf.borrow_mut();
+        if buf.events.len() >= buf.cap {
+            buf.dropped += 1;
+            return;
+        }
+        buf.events.push(TraceEvent { track, kind, name, ts_us });
     }
 
     /// Snapshot of all events recorded so far, in emission order.
@@ -154,6 +182,12 @@ impl RecordingTracer {
 
     pub fn is_empty(&self) -> bool {
         self.buf.borrow().events.is_empty()
+    }
+
+    /// Events discarded because the buffer hit its cap (0 in healthy
+    /// runs). The Chrome exporter surfaces this in the top-level meta.
+    pub fn dropped_events(&self) -> u64 {
+        self.buf.borrow().dropped
     }
 }
 
@@ -216,6 +250,24 @@ mod tests {
         let mut tr = RecordingTracer::new();
         tr.begin(Track::Scheduler, "step", before);
         assert_eq!(tr.events()[0].ts_us, 0.0);
+    }
+
+    #[test]
+    fn capped_buffer_drops_and_counts_instead_of_growing() {
+        let mut tr = RecordingTracer::with_cap(3);
+        let t = Instant::now();
+        for _ in 0..5 {
+            tr.begin(Track::Scheduler, "step", t);
+        }
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.dropped_events(), 2);
+        // meta facts are not subject to the event cap
+        tr.meta("gemm_kernel", "scalar");
+        assert_eq!(tr.meta_entries().len(), 1);
+        // the default construction is generously capped, drops nothing
+        let mut fresh = RecordingTracer::new();
+        fresh.begin(Track::Scheduler, "step", t);
+        assert_eq!(fresh.dropped_events(), 0);
     }
 
     #[test]

@@ -49,7 +49,7 @@ use crate::config::SchedConfig;
 use crate::data::tokenizer::{self, EOS};
 use crate::engine::decode::{self, DecodeStats};
 use crate::engine::{Engine, KvCache};
-use crate::obs::{Tracer, Track};
+use crate::obs::{ForwardPhase, Profiler, Tracer, Track};
 use crate::serve::metrics::SchedStats;
 use crate::serve::BucketPolicy;
 
@@ -171,6 +171,9 @@ pub struct Scheduler<'a> {
     /// observability sink; None (the default) makes every emission site a
     /// single never-taken branch — no event is built, nothing allocates
     tracer: Option<Box<dyn Tracer + 'a>>,
+    /// engine hot-path profiler; None (the default) keeps every forward
+    /// on the unprofiled path — no window opens, no kernel accounting
+    profiler: Option<Profiler>,
     decode_stats: DecodeStats,
     stats: SchedStats,
     /// paged layout: token positions per block (None when contiguous)
@@ -249,6 +252,7 @@ impl<'a> Scheduler<'a> {
             finished: Vec::new(),
             sink: None,
             tracer: None,
+            profiler: None,
             decode_stats: DecodeStats::default(),
             stats: SchedStats::default(),
             block_size,
@@ -277,6 +281,28 @@ impl<'a> Scheduler<'a> {
         tracer.meta("adapters", &self.engine.adapter_count().to_string());
         self.tracer = Some(tracer);
         self
+    }
+
+    /// Attach an engine hot-path profiler (builder style). Like the
+    /// tracer it only observes: profiled forwards read the same clocks
+    /// the scheduler already stamps its wall-time stats with, and the
+    /// profiled GEMM path runs single-threaded (bitwise-pinned against
+    /// the threaded kernel), so token streams and stats are bitwise
+    /// unchanged by attaching one (`tests/obs.rs` pins this). To land
+    /// the engine spans inside this scheduler's `prefill_forward` /
+    /// `decode_forward` trace spans, build the profiler with
+    /// [`Profiler::with_sink`] over a clone of the same
+    /// [`crate::obs::RecordingTracer`] passed to
+    /// [`Scheduler::with_tracer`] — one shared clock, one trace.
+    pub fn with_profiler(mut self, profiler: Profiler) -> Scheduler<'a> {
+        self.profiler = Some(profiler);
+        self
+    }
+
+    /// The attached profiler, if any — read it after a run to fold
+    /// windows into a registry or inspect [`crate::obs::WindowProfile`]s.
+    pub fn profiler(&self) -> Option<&Profiler> {
+        self.profiler.as_ref()
     }
 
     /// Concurrent decode slots this scheduler runs (KV-budget capped in
@@ -564,6 +590,13 @@ impl<'a> Scheduler<'a> {
             if let Some(tr) = self.tracer.as_mut() {
                 tr.begin(Track::Scheduler, "prefill_forward", t_pre);
             }
+            // the profiler window opens and closes on the very Instants
+            // prefill_ms is computed from, so the window's segment sum
+            // reconciles with the report wall-time exactly (not within a
+            // tolerance) — tests/obs.rs pins the f64 bit-equality
+            if let Some(p) = self.profiler.as_ref() {
+                p.begin_window(ForwardPhase::Prefill, self.step_no, t_pre);
+            }
             let frames: Vec<Vec<f32>> = admitted_rows
                 .iter()
                 .map(|&si| self.slots[si].as_ref().expect("just admitted").frame.clone())
@@ -579,12 +612,16 @@ impl<'a> Scheduler<'a> {
                 &frames,
                 &adapters,
                 &mut self.decode_stats,
+                self.profiler.as_ref(),
             )?;
             for (i, &si) in admitted_rows.iter().enumerate() {
                 self.apply_pick(si, picks[i]);
             }
             let t_pre_end = Instant::now();
             report.prefill_ms = 1e3 * secs(t_pre, t_pre_end);
+            if let Some(p) = self.profiler.as_ref() {
+                p.end_window(t_pre_end);
+            }
             if let Some(tr) = self.tracer.as_mut() {
                 tr.end(Track::Scheduler, "prefill_forward", t_pre_end);
             }
@@ -613,6 +650,9 @@ impl<'a> Scheduler<'a> {
                     tr.begin(Track::Request(id), "decode_step", t_dec);
                 }
             }
+            if let Some(p) = self.profiler.as_ref() {
+                p.begin_window(ForwardPhase::Decode, self.step_no, t_dec);
+            }
             let picks = decode::decode_step_rows(
                 self.engine,
                 &mut self.cache,
@@ -620,6 +660,7 @@ impl<'a> Scheduler<'a> {
                 &last,
                 &row_adapters,
                 &mut self.decode_stats,
+                self.profiler.as_ref(),
             )?;
             report.decoded_rows = rows.len();
             for (i, &si) in rows.iter().enumerate() {
@@ -627,6 +668,9 @@ impl<'a> Scheduler<'a> {
             }
             let t_dec_end = Instant::now();
             report.decode_ms = 1e3 * secs(t_dec, t_dec_end);
+            if let Some(p) = self.profiler.as_ref() {
+                p.end_window(t_dec_end);
+            }
             if let Some(tr) = self.tracer.as_mut() {
                 tr.end(Track::Scheduler, "decode_forward", t_dec_end);
             }

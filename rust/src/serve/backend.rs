@@ -288,6 +288,10 @@ pub struct ScheduledBackend {
     /// when set, every decode records a span timeline and writes it here
     /// as a Chrome-trace JSON (the last decode wins the file)
     trace_out: Option<std::path::PathBuf>,
+    /// when set, every decode runs with the engine hot-path profiler
+    /// attached and writes the folded `lota_engine_*` registry here
+    /// (`.json` or Prometheus text by extension; last decode wins)
+    profile_out: Option<std::path::PathBuf>,
 }
 
 impl ScheduledBackend {
@@ -314,13 +318,29 @@ impl ScheduledBackend {
             },
             engine.gemm_kernel_label()
         );
-        Ok(ScheduledBackend { engine, opts, last_sched: RefCell::new(None), trace_out: None })
+        Ok(ScheduledBackend {
+            engine,
+            opts,
+            last_sched: RefCell::new(None),
+            trace_out: None,
+            profile_out: None,
+        })
     }
 
     /// Record a span timeline per decode and write it to `path` as
     /// Chrome-trace JSON (builder style; `None` keeps tracing off).
     pub fn with_trace_out(mut self, path: Option<std::path::PathBuf>) -> ScheduledBackend {
         self.trace_out = path;
+        self
+    }
+
+    /// Profile the engine hot path per decode and write the folded
+    /// per-(layer, kind) registry to `path` (builder style; `None` keeps
+    /// profiling off). When tracing is also on, the profiler shares the
+    /// tracer's clock and its engine spans nest inside the scheduler's
+    /// forward spans in the same Chrome export.
+    pub fn with_profile_out(mut self, path: Option<std::path::PathBuf>) -> ScheduledBackend {
+        self.profile_out = path;
         self
     }
 
@@ -364,6 +384,19 @@ impl ServeBackend for ScheduledBackend {
         if let Some(rec) = &trace {
             sched = sched.with_tracer(Box::new(rec.clone()));
         }
+        let profiler = self.profile_out.as_ref().map(|_| {
+            let p = crate::obs::Profiler::new();
+            // when tracing too, the profiler emits its engine spans into
+            // the same recording — one clock, so they nest inside the
+            // scheduler's prefill_forward/decode_forward spans exactly
+            match &trace {
+                Some(rec) => p.with_sink(rec.clone()),
+                None => p,
+            }
+        });
+        if let Some(p) = &profiler {
+            sched = sched.with_profiler(p.clone());
+        }
         let mut ids = Vec::with_capacity(prompts.len());
         for p in prompts {
             ids.push(sched.submit(p, max_new)?);
@@ -372,6 +405,13 @@ impl ServeBackend for ScheduledBackend {
         if let (Some(path), Some(rec)) = (&self.trace_out, &trace) {
             crate::obs::write_chrome_trace(path, rec)?;
             log::info!("serving trace written to {}", path.display());
+        }
+        if let (Some(path), Some(p)) = (&self.profile_out, &profiler) {
+            let mut reg = crate::obs::MetricsRegistry::new();
+            reg.set_info("gemm_kernel", self.engine.gemm_kernel_label());
+            p.fill_registry(&mut reg);
+            reg.write(path)?;
+            log::info!("engine profile written to {}", path.display());
         }
         let mut by_id: BTreeMap<u64, Generation> = sched
             .take_finished()

@@ -32,6 +32,11 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// Nearest-rank percentiles over an already-sorted slice. Tiny
+    /// sample counts are well-defined, not interpolation artifacts
+    /// (pinned in tests): n = 0 → all zeros; n = 1 → every percentile is
+    /// the sample; n = 2 → p50/p95/p99 all land on the *larger* sample
+    /// (`(q · 1).round()` is 1 for q ≥ 0.5, round-half-away-from-zero).
     pub fn from_sorted(sorted: &[f64]) -> LatencyStats {
         if sorted.is_empty() {
             return LatencyStats::default();
@@ -84,6 +89,18 @@ impl Histogram {
             return 0.0;
         }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum of all recorded samples — the Prometheus `_sum` series.
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// The raw samples, in recording order. The metrics registry's
+    /// Prometheus renderer walks these to build cumulative `le` bucket
+    /// counts (the JSON form keeps using exact percentiles).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 
     /// Fold another histogram's samples into this one.
@@ -296,6 +313,23 @@ mod tests {
         assert_eq!(three.p99, 3.0);
         let one = LatencyStats::from_sorted(&[4.0]);
         assert_eq!((one.p50, one.p95, one.p99, one.max), (4.0, 4.0, 4.0, 4.0));
+    }
+
+    #[test]
+    fn tiny_sample_percentiles_are_pinned() {
+        // n = 0: all-zero summary, no NaN
+        let zero = LatencyStats::from_sorted(&[]);
+        assert_eq!((zero.mean, zero.p50, zero.p95, zero.p99, zero.max), (0.0, 0.0, 0.0, 0.0, 0.0));
+        // n = 1: every percentile is the lone sample
+        let one = LatencyStats::from_sorted(&[2.5]);
+        assert_eq!((one.mean, one.p50, one.p95, one.p99, one.max), (2.5, 2.5, 2.5, 2.5, 2.5));
+        // n = 2: nearest-rank rounds half away from zero, so p50 (and
+        // p95/p99) all land on the LARGER sample — bench-report deltas
+        // over two-sample smoke runs compare real samples, not
+        // interpolation artifacts
+        let two = LatencyStats::from_sorted(&[1.0, 9.0]);
+        assert_eq!(two.mean, 5.0);
+        assert_eq!((two.p50, two.p95, two.p99, two.max), (9.0, 9.0, 9.0, 9.0));
     }
 
     #[test]

@@ -108,6 +108,12 @@ pub struct ServeOptions {
     /// (scheduled native serving only — one-shot paths have no spans to
     /// record); None disables tracing entirely
     pub trace_out: Option<PathBuf>,
+    /// write the engine hot-path profile — `lota_engine_*` per-(layer,
+    /// kind) phase counters folded over every profiled forward — here as
+    /// a [`crate::obs::MetricsRegistry`] snapshot (`.json` or Prometheus
+    /// text by extension; scheduled native serving only); None keeps the
+    /// profiler detached and every forward on the unprofiled path
+    pub profile_out: Option<PathBuf>,
     /// named ternary adapter sets to register before serving (native
     /// backend only, LoTA serve path; empty serves the bare base)
     pub adapters: AdapterRegistry,
@@ -127,6 +133,7 @@ impl ServeOptions {
             gemm_kernel: GemmKernel::Auto,
             sched: None,
             trace_out: None,
+            profile_out: None,
             adapters: AdapterRegistry::new(),
             omega_frac: 0.75,
         }
@@ -159,6 +166,11 @@ impl ServeOptions {
 
     pub fn trace_out(mut self, path: PathBuf) -> ServeOptions {
         self.trace_out = Some(path);
+        self
+    }
+
+    pub fn profile_out(mut self, path: PathBuf) -> ServeOptions {
+        self.profile_out = Some(path);
         self
     }
 
@@ -259,6 +271,7 @@ impl<'a> Server<'a> {
                         opts.gemm_kernel,
                     )?
                     .with_trace_out(opts.trace_out.clone())
+                    .with_profile_out(opts.profile_out.clone())
                     .with_adapters(&opts.adapters, opts.omega_frac)?;
                     Ok(Server::with_backend(Box::new(backend), opts.max_new))
                 }
@@ -390,6 +403,19 @@ pub fn serve_open_loop(
     if let Some(rec) = &trace {
         sched = sched.with_tracer(Box::new(rec.clone()));
     }
+    let profiler = opts.profile_out.as_ref().map(|_| {
+        let p = crate::obs::Profiler::new();
+        // share the tracer's recording (and so its clock) when both are
+        // on: the engine spans nest inside the forward spans by
+        // construction
+        match &trace {
+            Some(rec) => p.with_sink(rec.clone()),
+            None => p,
+        }
+    });
+    if let Some(p) = &profiler {
+        sched = sched.with_profiler(p.clone());
+    }
 
     let mut order: Vec<&LoadRequest> = load.iter().collect();
     order.sort_by(|a, b| a.arrival_secs.partial_cmp(&b.arrival_secs).unwrap());
@@ -459,6 +485,13 @@ pub fn serve_open_loop(
     if let (Some(path), Some(rec)) = (&opts.trace_out, &trace) {
         crate::obs::write_chrome_trace(path, rec)?;
         log::info!("serving trace written to {}", path.display());
+    }
+    if let (Some(path), Some(p)) = (&opts.profile_out, &profiler) {
+        let mut reg = crate::obs::MetricsRegistry::new();
+        reg.set_info("gemm_kernel", engine.gemm_kernel_label());
+        p.fill_registry(&mut reg);
+        reg.write(path)?;
+        log::info!("engine profile written to {}", path.display());
     }
     let report = ThroughputReport::from_responses(&shim, tokens, wall)
         .with_decode(sched.decode_stats())

@@ -16,6 +16,13 @@
 //!    share the scheduler's `Instant`s; and the Chrome-trace JSON export
 //!    round-trips through the crate's own parser with balanced B/E
 //!    stacks per (pid, tid).
+//!
+//! The engine profiler is held to the same three, one notch harder:
+//! attaching a `Profiler` is bitwise inert on scheduler outputs, each
+//! window's phase segments tile it exactly and its wall-time *bit-equals*
+//! the `StepReport.prefill_ms`/`decode_ms` it encloses (`assert_eq!` on
+//! f64 — no tolerance), and its pid-3 engine spans nest inside the
+//! scheduler's forward spans in the shared Chrome export.
 
 use std::collections::HashMap;
 
@@ -23,8 +30,8 @@ use lota_qaf::config::Json;
 use lota_qaf::engine::Engine;
 use lota_qaf::model;
 use lota_qaf::obs::{
-    chrome_trace_json, write_chrome_trace, EventKind, NoopTracer, RecordingTracer, TraceEvent,
-    Track,
+    chrome_trace_json, write_chrome_trace, EventKind, ForwardPhase, NoopTracer, PhaseKind,
+    Profiler, RecordingTracer, TraceEvent, Track, STEP_TID,
 };
 use lota_qaf::quant::rtn_quantize;
 use lota_qaf::sched::{RequestState, SchedOptions, Scheduler};
@@ -271,6 +278,172 @@ fn tracing_is_bitwise_inert_on_scheduler_outputs() {
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(idle_rec.clone()));
     s.step().unwrap();
     assert!(idle_rec.is_empty(), "an idle step emitted {} events", idle_rec.len());
+}
+
+/// Attaching the engine profiler must not move a single bit either: the
+/// profiled GEMM path forces one thread, which is bitwise-pinned against
+/// the threaded kernel, and everything else only reads clocks. Same
+/// workload, same generations, same decode accounting, same step count.
+#[test]
+fn profiling_is_bitwise_inert_on_scheduler_outputs() {
+    let run = |profiler: Option<Profiler>| {
+        let engine = plain_engine(29);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        if let Some(p) = profiler {
+            s = s.with_profiler(p);
+        }
+        for i in 0..5 {
+            s.submit(&format!("{i} + 3 ="), [2usize, 6, 4][i % 3]).unwrap();
+        }
+        s.run_until_idle().unwrap();
+        let mut done = s.take_finished();
+        done.sort_by_key(|r| r.id);
+        let out: Vec<(u64, String, usize)> =
+            done.into_iter().map(|r| (r.id, r.text, r.tokens)).collect();
+        (out, s.decode_stats(), s.sched_stats().steps)
+    };
+    let prof = Profiler::new();
+    let bare = run(None);
+    let profiled = run(Some(prof.clone()));
+    assert_eq!(bare, profiled, "attaching a Profiler changed scheduler output");
+    assert!(!prof.windows().is_empty(), "the profiled run recorded no windows");
+}
+
+/// The tentpole's exactness claim: each window's segment durations tile
+/// the window, and `1e3 · total.as_secs_f64()` **bit-equals** the
+/// matching `StepReport.prefill_ms` / `decode_ms` — both sides are the
+/// same two `Instant`s through the same arithmetic, so `assert_eq!` on
+/// f64, no tolerance. Every layer shows its kernel phases.
+#[test]
+fn engine_phase_sums_reconcile_exactly_with_step_walltimes() {
+    let engine = plain_engine(31);
+    let prof = Profiler::new();
+    let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_profiler(prof.clone());
+    for (i, max_new) in [3usize, 1, 4, 2].into_iter().enumerate() {
+        s.submit(&format!("{i} + 1 ="), max_new).unwrap();
+    }
+    let mut reports = Vec::new();
+    while !s.is_idle() {
+        reports.push(s.step().unwrap());
+    }
+    let windows = prof.windows();
+    assert!(!windows.is_empty(), "no profiled forwards");
+    let n_layers = lota_qaf::config::preset("tiny").unwrap().n_layers as u64;
+    let (mut prefills, mut decodes) = (0, 0);
+    for w in &windows {
+        // step numbers are 1-based; every non-idle step reported in order
+        let rep = &reports[w.step as usize - 1];
+        let wall_ms = match w.phase {
+            ForwardPhase::Prefill => {
+                prefills += 1;
+                rep.prefill_ms
+            }
+            ForwardPhase::Decode => {
+                decodes += 1;
+                rep.decode_ms
+            }
+        };
+        assert_eq!(
+            1e3 * w.total.as_secs_f64(),
+            wall_ms,
+            "window wall-time diverged from the step report: {w:?}"
+        );
+        let sum: std::time::Duration = w.segments.values().copied().sum();
+        assert_eq!(sum, w.total, "segments must tile the window exactly: {w:?}");
+        for li in 0..n_layers {
+            for kind in [PhaseKind::GemmQkv, PhaseKind::Attention, PhaseKind::GemmO, PhaseKind::GemmMlp] {
+                assert!(
+                    w.segments.contains_key(&(li, kind)),
+                    "layer {li} missing {kind:?} in {:?} window of step {}",
+                    w.phase,
+                    w.step
+                );
+            }
+        }
+        // the step scope always closes the window
+        assert!(w.segments.keys().any(|&(tid, _)| tid == STEP_TID));
+    }
+    assert!(prefills >= 1, "workload never prefilled");
+    assert!(decodes >= 1, "workload never decode-stepped");
+}
+
+/// With the profiler sinking into the scheduler's own tracer, the Chrome
+/// export gains pid-3 engine tracks whose spans sit strictly inside the
+/// scheduler's `prefill_forward`/`decode_forward` spans — one clock, so
+/// nesting is containment of timestamps, checked on the exported file.
+#[test]
+fn profiled_chrome_export_nests_engine_tracks_inside_forward_spans() {
+    let engine = plain_engine(37);
+    let rec = RecordingTracer::new();
+    let prof = Profiler::new().with_sink(rec.clone());
+    let mut s = Scheduler::new(&engine, &opts(2))
+        .unwrap()
+        .with_tracer(Box::new(rec.clone()))
+        .with_profiler(prof);
+    for (i, max_new) in [2usize, 3, 1].into_iter().enumerate() {
+        s.submit(&format!("{i} + 4 ="), max_new).unwrap();
+    }
+    s.run_until_idle().unwrap();
+
+    let doc = Json::parse(&chrome_trace_json(&rec)).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    // collect the scheduler's forward-span intervals (pid 1)
+    let mut forwards: Vec<(f64, f64)> = Vec::new();
+    let mut open: Option<f64> = None;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let name = e.get("name").unwrap().as_str().unwrap();
+        if e.get("pid").unwrap().as_f64().unwrap() == 1.0
+            && (name == "prefill_forward" || name == "decode_forward")
+        {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            match ph {
+                "B" => open = Some(ts),
+                _ => forwards.push((open.take().expect("E without B"), ts)),
+            }
+        }
+    }
+    assert!(!forwards.is_empty(), "no forward spans in the trace");
+
+    // every pid-3 engine event must land inside one of those intervals
+    let mut engine_spans = 0usize;
+    let mut step_scope_seen = false;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" || e.get("pid").unwrap().as_f64().unwrap() != 3.0 {
+            continue;
+        }
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "engine");
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(
+            forwards.iter().any(|&(b, t)| b <= ts && ts <= t),
+            "engine event at ts {ts} outside every forward span"
+        );
+        if ph == "B" {
+            engine_spans += 1;
+            if e.get("tid").unwrap().as_f64().unwrap() == STEP_TID as f64 {
+                step_scope_seen = true;
+            }
+        }
+    }
+    assert!(engine_spans > 0, "profiler emitted no engine spans");
+    assert!(step_scope_seen, "no step-scope engine span in the export");
+
+    // and the pid-3 process is labeled for viewers
+    let labels: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").unwrap().as_str().unwrap() == "M"
+                && e.get("pid").unwrap().as_f64().unwrap() == 3.0
+        })
+        .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(labels.contains(&"engine".to_string()));
+    assert!(labels.contains(&"step scope".to_string()));
+    assert!(labels.iter().any(|l| l.starts_with("layer ")));
 }
 
 /// Span durations and `SchedStats` histograms are the same measurements:
