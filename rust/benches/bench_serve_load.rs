@@ -39,7 +39,9 @@ use lota_qaf::config::{preset, Backend, SchedConfig};
 use lota_qaf::engine::Engine;
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
-use lota_qaf::sched::{generate_load, LoadSpec, SchedOptions, Scheduler};
+use lota_qaf::sched::{
+    generate_load, LoadSpec, SchedOptions, SchedWorker, Scheduler, WorkerConfig,
+};
 use lota_qaf::serve::{serve_open_loop, Histogram, LatencyStats, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
 
@@ -49,6 +51,16 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (the
+/// submit-latency arm wants p90, which [`LatencyStats`] doesn't carry).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// One scheduler histogram as a `BENCH_serve.json` result row. The row
@@ -322,6 +334,69 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- async front end: submit→first-token latency through the worker
+    // command channel, per payload size, with the queue-handoff overhead
+    // isolated from compute. Each request runs alone (sequential
+    // submits), so the first-token latency decomposes into channel
+    // handoff (measured in-scheduler on the arrival clock —
+    // `SchedStats::handoff_ms`) + admission + prefill; the difference is
+    // pure compute. LOTA_LOAD_SUBMIT_ITERS (24) sets the sample count.
+    let submit_iters = env_usize("LOTA_LOAD_SUBMIT_ITERS", 24);
+    // payload = prompt length in chars (the toy tokenizer is 1 char =
+    // 1 token); prompt + specials + max_new stays inside seq_len 128
+    let payloads: [(&str, usize); 3] = [("short", 8), ("medium", 32), ("long", 96)];
+    println!(
+        "\n## async front end: submit→first-token latency over the worker channel \
+         ({submit_iters} sequential requests per payload, max_new 4)"
+    );
+    let mut submit_arms: Vec<(&str, usize, Histogram, Histogram)> = Vec::new();
+    for (name, chars) in payloads {
+        let prompt: String =
+            "1 + 2 = 3 ".chars().cycle().take(chars).collect();
+        let engine = Engine::from_store(&cfg, &store, 4)?;
+        let worker = SchedWorker::spawn(
+            engine,
+            SchedOptions::from_config(&sched_cfg),
+            WorkerConfig::default(),
+        )?;
+        let client = worker.client();
+        let mut first = Histogram::default();
+        for _ in 0..submit_iters {
+            let t = Instant::now();
+            let (_id, events) = client.submit_streaming(&prompt, 4, 0)?;
+            events.recv()?; // first generated token crosses back
+            first.record(1e3 * t.elapsed().as_secs_f64());
+            for _ in events {} // drain to idle before the next submit
+        }
+        let report = worker.shutdown()?;
+        submit_arms.push((name, chars, first, report.stats.handoff_ms));
+    }
+    let mut t = Table::new(&[
+        "payload",
+        "chars",
+        "first p50 ms",
+        "first p90 ms",
+        "first p99 ms",
+        "handoff p50 ms",
+        "handoff p99 ms",
+    ]);
+    for (name, chars, first, handoff) in &submit_arms {
+        let mut f = first.samples().to_vec();
+        f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut h = handoff.samples().to_vec();
+        h.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(&[
+            (*name).into(),
+            chars.to_string(),
+            format!("{:.3}", pct(&f, 0.50)),
+            format!("{:.3}", pct(&f, 0.90)),
+            format!("{:.3}", pct(&f, 0.99)),
+            format!("{:.4}", pct(&h, 0.50)),
+            format!("{:.4}", pct(&h, 0.99)),
+        ]);
+    }
+    t.print();
+
     // machine-readable twin of the tables above: scheduler histograms as
     // result rows (TTFT, inter-token gaps, queue wait, occupancy, block
     // utilization) plus the headline throughput numbers as meta
@@ -351,6 +426,24 @@ fn main() -> anyhow::Result<()> {
         if !s.block_util.is_empty() {
             jr.push(&hist_row("block_util", &s.block_util));
         }
+    }
+    // async-front-end arm: full timing quads as rows, the p50/p90/p99
+    // surface the issue asks for as meta keys (the ledger's fixed
+    // BenchResult schema has no p90/p99 slots)
+    for (name, chars, first, handoff) in &submit_arms {
+        let mut f = first.samples().to_vec();
+        f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut h = handoff.samples().to_vec();
+        h.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        jr.push(&hist_row(&format!("submit_first_ms_{name}"), first))
+            .push(&hist_row(&format!("handoff_ms_{name}"), handoff));
+        jr.meta_num(&format!("submit_first_{name}_chars"), *chars as f64)
+            .meta_num(&format!("submit_first_{name}_p50_ms"), pct(&f, 0.50))
+            .meta_num(&format!("submit_first_{name}_p90_ms"), pct(&f, 0.90))
+            .meta_num(&format!("submit_first_{name}_p99_ms"), pct(&f, 0.99))
+            .meta_num(&format!("handoff_{name}_p50_ms"), pct(&h, 0.50))
+            .meta_num(&format!("handoff_{name}_p90_ms"), pct(&h, 0.90))
+            .meta_num(&format!("handoff_{name}_p99_ms"), pct(&h, 0.99));
     }
     let json_path = JsonReport::default_path("serve");
     jr.write(&json_path)?;

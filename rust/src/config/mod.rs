@@ -355,6 +355,11 @@ pub struct ExperimentConfig {
     /// `lota_engine_*` phase counters — here (`profile_out` in TOML;
     /// `.json` → JSON, else Prometheus text; requires the scheduler)
     pub profile_out: Option<String>,
+    /// serve over the async HTTP/SSE front end bound to this address
+    /// (`listen` in TOML, e.g. `"127.0.0.1:8080"`; port 0 lets the OS
+    /// pick — the server prints the resolved address. Requires the
+    /// scheduler; the `lota serve --listen` flag overrides this key)
+    pub listen: Option<String>,
     /// named ternary adapter sets to serve alongside the base (the
     /// `[adapters]` TOML table: `name = "source"` per entry, where source
     /// is a checkpoint path or `synthetic:<seed>`). Registration order —
@@ -384,6 +389,7 @@ impl Default for ExperimentConfig {
             trace_out: None,
             metrics_out: None,
             profile_out: None,
+            listen: None,
             adapters: Vec::new(),
         }
     }
@@ -442,6 +448,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("profile_out") {
             c.profile_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("listen") {
+            c.listen = Some(v.to_string());
         }
         c.sched = SchedConfig::from_toml(doc)?;
         for key in doc.keys() {
@@ -518,19 +527,21 @@ mod tests {
         assert_eq!(c.trace_out, None);
         assert_eq!(c.metrics_out, None);
         assert_eq!(c.profile_out, None);
+        assert_eq!(c.listen, None);
     }
 
     #[test]
     fn observability_outputs_parse() {
         let doc = TomlDoc::parse(
             "trace_out = \"out/trace.json\"\nmetrics_out = \"out/metrics.prom\"\n\
-             profile_out = \"out/profile.json\"\n",
+             profile_out = \"out/profile.json\"\nlisten = \"127.0.0.1:8080\"\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
         assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.prom"));
         assert_eq!(c.profile_out.as_deref(), Some("out/profile.json"));
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:8080"));
     }
 
     #[test]

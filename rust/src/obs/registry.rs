@@ -42,6 +42,23 @@ pub const BUCKET_BOUNDS_MS: [f64; 15] = [
     0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
 ];
 
+/// Escape a label *value* for the Prometheus text exposition format:
+/// backslash, double quote, and line feed must be written as `\\`, `\"`
+/// and `\n` inside the quoted value. Adapter names come from user TOML,
+/// so a name like `fr"evil` would otherwise emit unparseable text.
+pub fn escape_label(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 /// Counters, gauges, histograms, and string facts, keyed by metric name.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsRegistry {
@@ -120,6 +137,9 @@ impl MetricsRegistry {
             r.observe_all("lota_ttft_ms", &sched.ttft_ms);
             r.observe_all("lota_inter_token_ms", &sched.inter_token_ms);
             r.observe_all("lota_queue_wait_ms", &sched.queue_wait_ms);
+            // empty unless requests crossed the worker-thread command
+            // channel — in-process runs keep their exact key set
+            r.observe_all("lota_handoff_ms", &sched.handoff_ms);
             r.observe_all("lota_queue_depth", &sched.queue_depth);
             r.observe_all("lota_batch_occupancy", &sched.batch_occupancy);
             r.observe_all("lota_block_util", &sched.block_util);
@@ -127,6 +147,7 @@ impl MetricsRegistry {
             // entirely when the run never tagged a request (pre-adapter
             // snapshots keep their exact key set)
             for (label, usage) in &sched.adapter_usage {
+                let label = escape_label(label);
                 r.inc(
                     &format!("lota_adapter_requests_total{{adapter=\"{label}\"}}"),
                     usage.requests as f64,
@@ -174,9 +195,15 @@ impl MetricsRegistry {
             // sample sum (not mean·count, which reintroduces rounding)
             writeln!(out, "# TYPE {name} histogram").unwrap();
             let samples = h.samples();
+            // retained samples may be a capped reservoir of a longer
+            // stream; scale the cumulative counts to the true count so
+            // the buckets stay consistent with `_count`/`+Inf` (scale is
+            // exactly 1 below the cap — counts unchanged)
+            let scale =
+                if samples.is_empty() { 0.0 } else { h.len() as f64 / samples.len() as f64 };
             for le in BUCKET_BOUNDS_MS {
-                let cum = samples.iter().filter(|&&v| v <= le).count();
-                writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}").unwrap();
+                let cum = samples.iter().filter(|&&v| v <= le).count() as f64 * scale;
+                writeln!(out, "{name}_bucket{{le=\"{le}\"}} {}", cum.round()).unwrap();
             }
             writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.len()).unwrap();
             writeln!(out, "{name}_sum {}", h.sum()).unwrap();
@@ -184,7 +211,7 @@ impl MetricsRegistry {
         }
         if !self.info.is_empty() {
             let labels: Vec<String> =
-                self.info.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+                self.info.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
             writeln!(out, "# TYPE lota_info gauge").unwrap();
             writeln!(out, "lota_info{{{}}} 1", labels.join(",")).unwrap();
         }
@@ -370,6 +397,55 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
             assert!(parts.next().is_some(), "no metric name in {line:?}");
         }
+    }
+
+    #[test]
+    fn hostile_labels_escape_and_round_trip() {
+        // the three characters the exposition format requires escaping
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+        // an adapter named with all three still emits parseable text
+        let mut report = sample_report();
+        let sched = report.sched.as_mut().unwrap();
+        sched.adapter_usage.clear();
+        sched
+            .adapter_usage
+            .insert("ev\"il\\ad\napter".to_string(), AdapterUsage { requests: 2, tokens: 5 });
+        let mut reg = MetricsRegistry::from_report(&report);
+        reg.set_info("hostile", "va\\lue\nhere");
+        let text = reg.to_prometheus();
+        assert!(text
+            .contains("lota_adapter_requests_total{adapter=\"ev\\\"il\\\\ad\\napter\"} 2"));
+        assert!(text.contains("lota_adapter_tokens_total{adapter=\"ev\\\"il\\\\ad\\napter\"} 5"));
+        assert!(text.contains("va\\\\lue\\nhere"));
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            // exactly one physical line per sample: "name[{labels}] value"
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            let name = parts.next().expect("no metric name");
+            // quoted label values never leak an unescaped quote: quotes
+            // inside {…} are either delimiters or preceded by a backslash
+            if let Some(labels) = name.split_once('{').map(|(_, l)| l) {
+                let inner = labels.strip_suffix('}').expect("unterminated label set");
+                let bytes = inner.as_bytes();
+                let mut in_value = false;
+                let mut i = 0;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' if in_value => i += 1, // skip the escaped char
+                        b'"' => in_value = !in_value,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                assert!(!in_value, "unbalanced quotes in {line:?}");
+            }
+        }
+        // and the JSON rendering stays parseable too (JsonWriter escapes)
+        assert!(Json::parse(&reg.to_json()).is_ok());
     }
 
     #[test]

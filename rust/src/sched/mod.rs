@@ -29,6 +29,12 @@
 //!   Prefilling → Decoding → Finished/Cancelled) with
 //!   [`request::TokenSink`] streaming: tokens are observable as they are
 //!   picked, not after the batch drains.
+//! * [`worker::SchedWorker`] — the scheduler on a dedicated worker
+//!   thread behind an MPSC command channel: submits return immediately
+//!   with a request id, tokens stream per request over channels, and
+//!   shutdown drains in-flight rows while rejecting new work. This is
+//!   the async front end `lota serve --listen` builds its HTTP/SSE
+//!   transport on ([`crate::serve::listen`]).
 //! * [`loadgen`] — deterministic open-loop Poisson workloads (arrival
 //!   times, prompt mix, output-length mix) shared by the
 //!   `bench_serve_load` bench and the integration tests.
@@ -44,7 +50,9 @@
 pub mod loadgen;
 pub mod request;
 pub mod scheduler;
+pub mod worker;
 
 pub use loadgen::{generate_load, spread_adapters, LoadRequest, LoadSpec};
 pub use request::{ChannelSink, FinishReason, RequestState, SchedResponse, StreamEvent, TokenSink};
 pub use scheduler::{SchedOptions, Scheduler, StepReport};
+pub use worker::{SchedWorker, WorkerClient, WorkerCommand, WorkerConfig, WorkerReport};

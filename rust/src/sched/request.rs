@@ -35,6 +35,19 @@ pub enum FinishReason {
     Cancelled,
 }
 
+impl FinishReason {
+    /// Stable lowercase wire name, used verbatim by the SSE transport
+    /// and pinned by its stream-parity tests.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::ContextCap => "context_cap",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
 /// One completed (or cancelled) request, with its request-level timing.
 /// Durations are measured on the scheduler's clock: `queue_wait_secs`
 /// is submit → admission, `ttft_secs` submit → first generated token

@@ -368,6 +368,33 @@ impl<'a> Scheduler<'a> {
         self.submit_for(prompt, max_new, 0)
     }
 
+    /// The id the next successful submit will return. Submission errors
+    /// (framing, unknown adapter, over-pool horizon) consume no id, so a
+    /// cross-thread front end can register a stream under this id
+    /// *before* submitting — a zero-`max_new` request finishes inside the
+    /// submit call itself, before any later registration could run.
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// [`Scheduler::submit_for`] for requests handed over from another
+    /// thread: `enqueued_at` is the instant the request entered the
+    /// command channel. The single `Instant::now()` taken here closes the
+    /// cross-thread "handoff" span *and* stamps the request's arrival —
+    /// one clock, so queue-wait/TTFT include the handoff exactly once and
+    /// trace spans butt against each other with no gap or overlap.
+    /// Handoff time lands in [`SchedStats::handoff_ms`], which isolates
+    /// channel overhead from compute in `bench_serve_load`.
+    pub fn submit_handoff(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        adapter: u32,
+        enqueued_at: Instant,
+    ) -> Result<u64> {
+        self.submit_inner(prompt, max_new, adapter, Some(enqueued_at))
+    }
+
     /// [`Scheduler::submit`] against a named ternary adapter: `adapter`
     /// is 0 for the bare base or the 1-based id
     /// [`Engine::register_adapter`] returned. The scheduler freely mixes
@@ -375,6 +402,16 @@ impl<'a> Scheduler<'a> {
     /// deltas keep every mixed batch bit-identical to serving each
     /// adapter's merged checkpoint alone (`tests/adapters.rs` pins it).
     pub fn submit_for(&mut self, prompt: &str, max_new: usize, adapter: u32) -> Result<u64> {
+        self.submit_inner(prompt, max_new, adapter, None)
+    }
+
+    fn submit_inner(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        adapter: u32,
+        enqueued_at: Option<Instant>,
+    ) -> Result<u64> {
         if adapter as usize > self.engine.adapter_count() {
             bail!(
                 "adapter id {adapter} is not registered (engine serves {} adapters)",
@@ -397,15 +434,25 @@ impl<'a> Scheduler<'a> {
         }
         let id = self.next_id;
         self.next_id += 1;
+        // ONE Instant for everything below: it ends the cross-thread
+        // handoff (span + stat) and starts the request's own clock —
+        // adding a second `now()` here would open a gap between the two
+        let arrival = Instant::now();
+        if let Some(from) = enqueued_at {
+            self.stats.handoff_ms.record(1e3 * secs(from, arrival));
+        }
         if max_new == 0 {
             if let Some(tr) = self.tracer.as_mut() {
                 // a zero-length span: the request existed but never queued
-                let now = Instant::now();
-                tr.begin(Track::Request(id), "request", now);
+                tr.begin(Track::Request(id), "request", arrival);
                 if adapter > 0 {
-                    tr.counter(Track::Request(id), "adapter_id", adapter as f64, now);
+                    tr.counter(Track::Request(id), "adapter_id", adapter as f64, arrival);
                 }
-                tr.end(Track::Request(id), "request", now);
+                if let Some(from) = enqueued_at {
+                    tr.begin(Track::Request(id), "handoff", from);
+                    tr.end(Track::Request(id), "handoff", arrival);
+                }
+                tr.end(Track::Request(id), "request", arrival);
             }
             let resp = SchedResponse {
                 id,
@@ -420,14 +467,19 @@ impl<'a> Scheduler<'a> {
             self.emit_finish(resp);
             return Ok(id);
         }
-        let arrival = Instant::now();
         if let Some(tr) = self.tracer.as_mut() {
-            tr.begin(Track::Request(id), "request", arrival);
+            // the request track opens at channel-entry time for handed-off
+            // requests, so the handoff span nests inside it
+            tr.begin(Track::Request(id), "request", enqueued_at.unwrap_or(arrival));
             // adapter identity rides the request track as a counter —
             // base requests (id 0) emit nothing, so the golden base-only
             // trace sequence is untouched
             if adapter > 0 {
                 tr.counter(Track::Request(id), "adapter_id", adapter as f64, arrival);
+            }
+            if let Some(from) = enqueued_at {
+                tr.begin(Track::Request(id), "handoff", from);
+                tr.end(Track::Request(id), "handoff", arrival);
             }
             tr.begin(Track::Request(id), "queued", arrival);
         }

@@ -1,0 +1,415 @@
+//! The scheduler's worker thread: an owned engine + [`Scheduler`] driven
+//! by an MPSC command channel, so submission is a non-blocking message
+//! send from any thread instead of a synchronous call into `step()`.
+//!
+//! This is the async serving front half the paper's deployment story
+//! needs: the merged low-bit model decodes on one dedicated thread while
+//! any number of producer threads (HTTP connections, benches, tests)
+//! submit, cancel, and stream tokens through channels.
+//!
+//! Shape:
+//!
+//! * [`SchedWorker::spawn`] moves an [`Engine`] onto a new thread, builds
+//!   the [`Scheduler`] there (construction errors surface synchronously
+//!   through a ready-channel), and returns a handle whose
+//!   [`WorkerClient`]s are cheap, cloneable, `Send` submit/cancel ports.
+//! * Every submit carries its channel-entry `Instant`; the scheduler
+//!   stamps arrival with the **same** `Instant::now()` that closes the
+//!   cross-thread handoff ([`Scheduler::submit_handoff`]) — one clock,
+//!   no gap, and the handoff cost lands in `SchedStats::handoff_ms`
+//!   isolated from compute.
+//! * Per-request streaming: a submit may attach an `mpsc::Sender`; the
+//!   worker routes that request's [`StreamEvent`]s (every token, then
+//!   the final [`SchedResponse`]) to it. The stream is registered under
+//!   [`Scheduler::next_request_id`] *before* the submit runs, so even a
+//!   zero-`max_new` request — which finishes inside the submit call —
+//!   still sees its finish event.
+//! * Graceful shutdown: [`WorkerCommand::Shutdown`] (or every client
+//!   hanging up) flips the worker into draining — new submits are
+//!   rejected with an error reply, cancels still work, and the step loop
+//!   runs until every in-flight row has finished before the thread
+//!   returns its [`WorkerReport`].
+//!
+//! Because the worker only ever calls the same `submit_*`/`cancel`/
+//! `step` methods a synchronous driver would, scheduled output through
+//! the channel is **bitwise identical** to the in-process step loop —
+//! `tests/sched_worker.rs` pins it per request against
+//! [`crate::engine::greedy_decode`]-parity workloads.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::{DecodeStats, Engine};
+use crate::serve::SchedStats;
+
+use super::request::{SchedResponse, StreamEvent, TokenSink};
+use super::scheduler::{SchedOptions, Scheduler};
+
+/// Observability outputs the worker writes at drain time. Tracer and
+/// profiler live on the worker thread (the recording tracer is not
+/// `Send`), so the files are written there too, right before the thread
+/// returns.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerConfig {
+    /// Chrome-trace JSON of the whole worker run (spans include the
+    /// per-request cross-thread "handoff" intervals)
+    pub trace_out: Option<PathBuf>,
+    /// engine hot-path profile registry snapshot (`.json` or Prometheus
+    /// text by extension)
+    pub profile_out: Option<PathBuf>,
+}
+
+/// What producer threads send the worker. Most callers use the
+/// [`WorkerClient`] wrappers instead of building these by hand; the raw
+/// enum is public so transports can own their reply plumbing.
+pub enum WorkerCommand {
+    Submit {
+        prompt: String,
+        max_new: usize,
+        /// adapter id (0 = bare base)
+        adapter: u32,
+        /// when the command entered the channel — the handoff clock start
+        enqueued_at: Instant,
+        /// per-request stream; every token of this request and its final
+        /// response are sent here (send errors ignored: a dead listener
+        /// never stalls the batch)
+        stream: Option<Sender<StreamEvent>>,
+        /// the assigned request id, or the submission error rendered to a
+        /// string (channel replies must be `Send`; `anyhow::Error` is,
+        /// but the string keeps the protocol trivially serializable)
+        reply: Sender<Result<u64, String>>,
+    },
+    Cancel {
+        id: u64,
+        /// same contract as [`Scheduler::cancel`]: false for unknown or
+        /// already-finished ids
+        reply: Sender<bool>,
+    },
+    /// Stop admitting, drain in-flight rows, then exit the thread.
+    Shutdown,
+}
+
+/// Everything the worker measured, returned when the thread drains.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    /// every completed (or cancelled) request, in completion order
+    pub responses: Vec<SchedResponse>,
+    /// request- and step-level scheduler measurements (including
+    /// `handoff_ms`, the isolated command-channel overhead)
+    pub stats: SchedStats,
+    /// aggregate decode-work accounting
+    pub decode: DecodeStats,
+}
+
+/// Routes per-request stream events to their registered channels. Shared
+/// (within the worker thread) between the scheduler's sink slot and the
+/// command loop, which registers senders before each submit.
+#[derive(Clone, Default)]
+struct StreamRouter {
+    streams: Rc<std::cell::RefCell<HashMap<u64, Sender<StreamEvent>>>>,
+}
+
+impl StreamRouter {
+    fn register(&self, id: u64, tx: Sender<StreamEvent>) {
+        self.streams.borrow_mut().insert(id, tx);
+    }
+
+    fn unregister(&self, id: u64) {
+        self.streams.borrow_mut().remove(&id);
+    }
+}
+
+impl TokenSink for StreamRouter {
+    fn on_token(&mut self, id: u64, token: u32) {
+        if let Some(tx) = self.streams.borrow().get(&id) {
+            let _ = tx.send(StreamEvent::Token { id, token });
+        }
+    }
+
+    fn on_finish(&mut self, resp: &SchedResponse) {
+        // the finish event closes the stream: remove-then-send keeps the
+        // router from holding dead senders for the life of the server
+        if let Some(tx) = self.streams.borrow_mut().remove(&resp.id) {
+            let _ = tx.send(StreamEvent::Finish(resp.clone()));
+        }
+    }
+}
+
+/// A cheap, cloneable, `Send` port for submitting work to a running
+/// [`SchedWorker`]. Every connection/producer thread gets its own clone;
+/// dropping them all (plus the owning worker handle) drains the worker.
+#[derive(Clone)]
+pub struct WorkerClient {
+    tx: Sender<WorkerCommand>,
+}
+
+impl WorkerClient {
+    /// Submit and wait for the id assignment (the request itself runs
+    /// asynchronously; this round-trip only covers the handoff).
+    pub fn submit(&self, prompt: &str, max_new: usize) -> Result<u64> {
+        self.submit_for(prompt, max_new, 0)
+    }
+
+    /// [`WorkerClient::submit`] against a named adapter id.
+    pub fn submit_for(&self, prompt: &str, max_new: usize, adapter: u32) -> Result<u64> {
+        self.submit_inner(prompt, max_new, adapter, None)
+    }
+
+    /// Submit with a per-request stream: the returned receiver yields one
+    /// [`StreamEvent::Token`] per generated token and ends with the
+    /// [`StreamEvent::Finish`] response (already delivered for requests
+    /// that complete inside the submit itself, e.g. `max_new = 0`).
+    pub fn submit_streaming(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        adapter: u32,
+    ) -> Result<(u64, Receiver<StreamEvent>)> {
+        let (stream_tx, stream_rx) = mpsc::channel();
+        let id = self.submit_inner(prompt, max_new, adapter, Some(stream_tx))?;
+        Ok((id, stream_rx))
+    }
+
+    fn submit_inner(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        adapter: u32,
+        stream: Option<Sender<StreamEvent>>,
+    ) -> Result<u64> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let cmd = WorkerCommand::Submit {
+            prompt: prompt.to_string(),
+            max_new,
+            adapter,
+            enqueued_at: Instant::now(),
+            stream,
+            reply: reply_tx,
+        };
+        self.tx
+            .send(cmd)
+            .map_err(|_| anyhow!("scheduler worker is gone (already shut down)"))?;
+        let assigned = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler worker dropped the submit reply"))?;
+        match assigned {
+            Ok(id) => Ok(id),
+            Err(msg) => bail!("submit rejected: {msg}"),
+        }
+    }
+
+    /// Cancel request `id` (queued or in-flight). False for unknown /
+    /// already-finished ids — and, unlike submit, still answered while
+    /// the worker drains, so shutdown can be hurried along.
+    pub fn cancel(&self, id: u64) -> Result<bool> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(WorkerCommand::Cancel { id, reply: reply_tx })
+            .map_err(|_| anyhow!("scheduler worker is gone (already shut down)"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler worker dropped the cancel reply"))
+    }
+
+    /// Ask the worker to drain and exit. Fire-and-forget; join through
+    /// [`SchedWorker::shutdown`] for the final report.
+    pub fn request_shutdown(&self) {
+        let _ = self.tx.send(WorkerCommand::Shutdown);
+    }
+}
+
+/// Handle to the scheduler worker thread. Dropping it without
+/// [`SchedWorker::shutdown`] still drains cleanly (the channel disconnect
+/// is a shutdown signal), discarding the report.
+pub struct SchedWorker {
+    tx: Sender<WorkerCommand>,
+    handle: Option<thread::JoinHandle<Result<WorkerReport>>>,
+}
+
+impl SchedWorker {
+    /// Move `engine` onto a dedicated worker thread and start the command
+    /// loop. Scheduler construction runs on the worker (it borrows the
+    /// engine the thread owns); its errors are relayed back and returned
+    /// here, so a bad config fails the spawn, not the first submit.
+    pub fn spawn(engine: Engine, opts: SchedOptions, cfg: WorkerConfig) -> Result<SchedWorker> {
+        let (tx, rx) = mpsc::channel::<WorkerCommand>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let handle = thread::Builder::new()
+            .name("lota-sched-worker".to_string())
+            .spawn(move || worker_main(engine, opts, cfg, rx, ready_tx))
+            .context("spawning the scheduler worker thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(SchedWorker { tx, handle: Some(handle) }),
+            Ok(Err(msg)) => {
+                let _ = handle.join();
+                bail!("scheduler worker failed to start: {msg}");
+            }
+            Err(_) => {
+                let _ = handle.join();
+                bail!("scheduler worker died before signalling readiness");
+            }
+        }
+    }
+
+    /// A new submit/cancel port. Clones are independent and `Send` —
+    /// hand one to every connection thread.
+    pub fn client(&self) -> WorkerClient {
+        WorkerClient { tx: self.tx.clone() }
+    }
+
+    /// Drain in-flight work, stop the thread, and return everything it
+    /// measured. Submits racing this call get error replies; cancels are
+    /// still honored during the drain.
+    pub fn shutdown(mut self) -> Result<WorkerReport> {
+        let _ = self.tx.send(WorkerCommand::Shutdown);
+        let handle = self.handle.take().expect("shutdown consumes the only handle");
+        match handle.join() {
+            Ok(report) => report,
+            Err(_) => bail!("scheduler worker thread panicked"),
+        }
+    }
+}
+
+impl Drop for SchedWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(WorkerCommand::Shutdown);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The worker thread body: build scheduler (+ tracer/profiler, which are
+/// thread-local by construction), then loop commands and steps until
+/// shutdown + drain.
+fn worker_main(
+    engine: Engine,
+    opts: SchedOptions,
+    cfg: WorkerConfig,
+    rx: Receiver<WorkerCommand>,
+    ready_tx: Sender<std::result::Result<(), String>>,
+) -> Result<WorkerReport> {
+    // nested fn (not a closure) so the scheduler's borrow lifetime stays
+    // concrete instead of higher-ranked
+    fn handle_cmd(
+        cmd: WorkerCommand,
+        sched: &mut Scheduler<'_>,
+        router: &StreamRouter,
+        draining: &mut bool,
+    ) {
+        match cmd {
+            WorkerCommand::Submit { prompt, max_new, adapter, enqueued_at, stream, reply } => {
+                if *draining {
+                    let _ = reply.send(Err("worker is shutting down".to_string()));
+                    return;
+                }
+                // register the stream under the id the submit *will*
+                // assign — zero-max_new requests finish inside the call
+                let predicted = sched.next_request_id();
+                if let Some(tx) = stream {
+                    router.register(predicted, tx);
+                }
+                match sched.submit_handoff(&prompt, max_new, adapter, enqueued_at) {
+                    Ok(id) => {
+                        debug_assert_eq!(id, predicted);
+                        let _ = reply.send(Ok(id));
+                    }
+                    Err(e) => {
+                        // failed submits consume no id: drop the
+                        // registration so the next request can claim it
+                        router.unregister(predicted);
+                        let _ = reply.send(Err(format!("{e:#}")));
+                    }
+                }
+            }
+            WorkerCommand::Cancel { id, reply } => {
+                let _ = reply.send(sched.cancel(id));
+            }
+            WorkerCommand::Shutdown => *draining = true,
+        }
+    }
+
+    let router = StreamRouter::default();
+    let mut sched = match Scheduler::new(&engine, &opts) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return Err(e);
+        }
+    };
+    sched = sched.with_sink(Box::new(router.clone()));
+    // same observability wiring as the synchronous open-loop driver: one
+    // recording buffer, profiler sharing its clock when both are on
+    let trace = cfg.trace_out.as_ref().map(|_| crate::obs::RecordingTracer::new());
+    if let Some(rec) = &trace {
+        sched = sched.with_tracer(Box::new(rec.clone()));
+    }
+    let profiler = cfg.profile_out.as_ref().map(|_| {
+        let p = crate::obs::Profiler::new();
+        match &trace {
+            Some(rec) => p.with_sink(rec.clone()),
+            None => p,
+        }
+    });
+    if let Some(p) = &profiler {
+        sched = sched.with_profiler(p.clone());
+    }
+    let _ = ready_tx.send(Ok(()));
+
+    let mut draining = false;
+    let mut responses: Vec<SchedResponse> = Vec::new();
+    loop {
+        // drain every pending command first: admission this step should
+        // see everything already in the channel
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => handle_cmd(cmd, &mut sched, &router, &mut draining),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    draining = true;
+                    break;
+                }
+            }
+        }
+        if sched.is_idle() {
+            if draining {
+                break;
+            }
+            // nothing to decode: block on the channel instead of spinning
+            match rx.recv() {
+                Ok(cmd) => handle_cmd(cmd, &mut sched, &router, &mut draining),
+                Err(_) => draining = true,
+            }
+            continue;
+        }
+        sched.step()?;
+        responses.extend(sched.take_finished());
+    }
+    responses.extend(sched.take_finished());
+
+    // observability files are written here, on the thread that owns the
+    // recording buffers — the handle side only ever sees the report
+    if let (Some(path), Some(rec)) = (&cfg.trace_out, &trace) {
+        crate::obs::write_chrome_trace(path, rec)?;
+        log::info!("worker trace written to {}", path.display());
+    }
+    if let (Some(path), Some(p)) = (&cfg.profile_out, &profiler) {
+        let mut reg = crate::obs::MetricsRegistry::new();
+        reg.set_info("gemm_kernel", engine.gemm_kernel_label());
+        p.fill_registry(&mut reg);
+        reg.write(path)?;
+        log::info!("worker engine profile written to {}", path.display());
+    }
+
+    Ok(WorkerReport {
+        responses,
+        stats: sched.sched_stats(),
+        decode: sched.decode_stats(),
+    })
+}

@@ -1,0 +1,466 @@
+//! Streaming HTTP front end for the scheduler worker — `lota serve
+//! --listen <addr>`.
+//!
+//! The offline crate set has no HTTP stack, so this is a deliberately
+//! small hand-rolled HTTP/1.1 server over `std::net`: enough protocol
+//! for curl, python, and browsers to drive the async scheduler, and not
+//! one line more. One accept thread hands each connection to a short-
+//! lived handler thread holding a [`WorkerClient`] clone; all decode
+//! compute stays on the single scheduler worker thread
+//! ([`crate::sched::SchedWorker`]), so concurrent connections cost a
+//! blocked thread each, never a second engine.
+//!
+//! Wire protocol (see `docs/serving.md` for the full reference):
+//!
+//! * `GET /healthz` → `200 ok` — liveness only, never touches the worker.
+//! * `POST /generate` with JSON `{"prompt": "...", "max_new": 16,
+//!   "adapter": 0}` → `text/event-stream`. The stream opens with a
+//!   `start` event carrying the assigned request id, then one `token`
+//!   event per generated token as the scheduler picks it, and closes
+//!   with a `finish` event that is the full [`SchedResponse`] (reason,
+//!   queue wait, TTFT, latency). Submit rejections are `400`; submits
+//!   racing shutdown are `503`.
+//! * `POST /cancel` with `{"id": N}` → `{"id": N, "cancelled": bool}`,
+//!   false for unknown or already-finished ids (same contract as
+//!   [`crate::sched::Scheduler::cancel`]).
+//!
+//! Event payloads are built by [`start_event_json`], [`token_event_json`]
+//! and [`finish_event_json`] — public precisely so `tests/sched_worker.rs`
+//! can pin the transport byte-for-byte against in-process
+//! [`StreamEvent`] streams.
+//!
+//! Shutdown is the worker's drain protocol surfaced to the socket:
+//! [`ListenServer::shutdown`] (SIGTERM/SIGINT in [`serve_listen`]) stops
+//! accepting, joins the open connections — their requests finish
+//! normally, streams included — then drains the worker and returns its
+//! [`WorkerReport`].
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Backend, DecodeMode, Json, JsonWriter, ModelConfig};
+use crate::model::ParamStore;
+use crate::sched::{
+    SchedOptions, SchedResponse, SchedWorker, StreamEvent, WorkerClient, WorkerConfig,
+};
+
+use super::{backend, ServeOptions};
+
+/// How long the accept loop sleeps between polls of a non-blocking
+/// listener (also bounds shutdown latency).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection socket read timeout: a client that connects and never
+/// sends a full request can delay shutdown by at most this long.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// JSON payload of the stream-opening SSE event: the assigned request id,
+/// so the client can `POST /cancel` mid-generation.
+pub fn start_event_json(id: u64) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("event").str("start");
+    w.key("id").num(id as f64);
+    w.end_obj();
+    w.finish()
+}
+
+/// JSON payload of one `token` SSE event. `piece` is the decoded text of
+/// the token (the toy tokenizer is one char per token), so a client can
+/// render the stream without a tokenizer of its own.
+pub fn token_event_json(id: u64, token: u32) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("event").str("token");
+    w.key("id").num(id as f64);
+    w.key("token").num(token as f64);
+    w.key("piece").str(&crate::data::tokenizer::decode(&[token]));
+    w.end_obj();
+    w.finish()
+}
+
+/// JSON payload of the final `finish` SSE event — the whole
+/// [`SchedResponse`]. `ttft_secs` is omitted (not null) when nothing was
+/// generated, matching the response struct's `Option`.
+pub fn finish_event_json(resp: &SchedResponse) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("event").str("finish");
+    w.key("id").num(resp.id as f64);
+    w.key("adapter").num(resp.adapter as f64);
+    w.key("text").str(&resp.text);
+    w.key("tokens").num(resp.tokens as f64);
+    w.key("reason").str(resp.reason.as_str());
+    w.key("queue_wait_secs").num(resp.queue_wait_secs);
+    if let Some(t) = resp.ttft_secs {
+        w.key("ttft_secs").num(t);
+    }
+    w.key("latency_secs").num(resp.latency_secs);
+    w.end_obj();
+    w.finish()
+}
+
+/// A running async serving front end: scheduler worker + accept loop.
+/// Tests drive it in-process (`start` → requests → `shutdown`); the CLI
+/// wraps it in [`serve_listen`] with signal handling.
+pub struct ListenServer {
+    worker: Option<SchedWorker>,
+    accept: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ListenServer {
+    /// Build the engine, spawn the scheduler worker, bind `addr` (use
+    /// port 0 to let the OS pick — [`ListenServer::local_addr`] reports
+    /// the result), and start accepting.
+    pub fn start(
+        cfg: &ModelConfig,
+        store: &ParamStore,
+        opts: &ServeOptions,
+        addr: &str,
+    ) -> Result<ListenServer> {
+        if opts.backend != Backend::Native {
+            bail!("--listen serves through the scheduler, which runs on the native backend only");
+        }
+        if opts.decode == DecodeMode::Recompute {
+            bail!("the scheduler decodes KV-cached; drop decode=recompute");
+        }
+        let Some(sched_cfg) = opts.sched.clone() else {
+            bail!("--listen needs a scheduler config (--sched true or a [sched] table)");
+        };
+        let mut engine =
+            backend::build_engine(cfg, store, opts.path, opts.n_bits, opts.gemm_kernel)?;
+        if !opts.adapters.is_empty() {
+            opts.adapters.register_all(&mut engine, opts.omega_frac)?;
+        }
+        let worker_cfg = WorkerConfig {
+            trace_out: opts.trace_out.clone(),
+            profile_out: opts.profile_out.clone(),
+        };
+        let worker =
+            SchedWorker::spawn(engine, SchedOptions::from_config(&sched_cfg), worker_cfg)?;
+
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("resolving the bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            let client = worker.client();
+            thread::Builder::new()
+                .name("lota-accept".to_string())
+                .spawn(move || accept_loop(listener, client, stop))
+                .context("spawning the accept thread")?
+        };
+        Ok(ListenServer { worker: Some(worker), accept: Some(accept), stop, addr: local })
+    }
+
+    /// The actually-bound address (resolves `:0` port requests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A direct submit/cancel port bypassing HTTP — used by tests to
+    /// compare in-process streams against the wire.
+    pub fn client(&self) -> WorkerClient {
+        self.worker.as_ref().expect("worker lives until shutdown").client()
+    }
+
+    /// Stop accepting, let open connections finish (their requests run to
+    /// completion — streams deliver every token and the finish event),
+    /// then drain the worker and return its report.
+    pub fn shutdown(mut self) -> Result<crate::sched::WorkerReport> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            if accept.join().is_err() {
+                bail!("the accept thread panicked");
+            }
+        }
+        self.worker
+            .take()
+            .expect("shutdown consumes the only worker handle")
+            .shutdown()
+    }
+}
+
+impl Drop for ListenServer {
+    fn drop(&mut self) {
+        // best-effort cleanup when `shutdown` was skipped (e.g. a test
+        // failed): stop the accept loop and drain the worker
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        // the worker's own Drop sends Shutdown and joins
+        self.worker.take();
+    }
+}
+
+fn accept_loop(listener: TcpListener, client: WorkerClient, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let client = client.clone();
+                let handle = thread::Builder::new()
+                    .name("lota-conn".to_string())
+                    .spawn(move || {
+                        if let Err(e) = handle_conn(stream, &client) {
+                            log::debug!("connection {peer}: {e:#}");
+                        }
+                    });
+                match handle {
+                    Ok(h) => conns.push(h),
+                    Err(e) => log::warn!("spawning a connection thread failed: {e}"),
+                }
+                // joining finished handlers keeps the vec from growing
+                // with the total connection count on long runs
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+    // shutdown: requests already past accept complete normally (the
+    // worker is still stepping until the drain that follows this join)
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Parse one HTTP/1.1 request: (method, path, body). Only what the three
+/// routes need — no chunked encoding, no keep-alive (every response sends
+/// `Connection: close`).
+fn read_request(stream: &TcpStream) -> Result<(String, String, Vec<u8>)> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning the stream handle")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading the request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).context("reading a header line")?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("parsing Content-Length")?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading the request body")?;
+    Ok((method, path, body))
+}
+
+fn write_response(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) {
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.flush();
+}
+
+fn error_json(msg: &str) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("error").str(msg);
+    w.end_obj();
+    w.finish()
+}
+
+fn handle_conn(mut stream: TcpStream, client: &WorkerClient) -> Result<()> {
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .context("setting the read timeout")?;
+    let (method, path, body) = read_request(&stream)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => {
+            write_response(&mut stream, "200 OK", "text/plain", "ok\n");
+            Ok(())
+        }
+        ("POST", "/generate") => handle_generate(stream, client, &body),
+        ("POST", "/cancel") => handle_cancel(stream, client, &body),
+        _ => {
+            write_response(
+                &mut stream,
+                "404 Not Found",
+                "application/json",
+                &error_json(&format!("no route {method} {path}")),
+            );
+            Ok(())
+        }
+    }
+}
+
+fn handle_generate(mut stream: TcpStream, client: &WorkerClient, body: &[u8]) -> Result<()> {
+    let parsed: Result<(String, usize, u32)> = (|| {
+        let text = std::str::from_utf8(body).context("request body is not UTF-8")?;
+        let json = Json::parse(text).context("parsing the request JSON")?;
+        let prompt = json.get("prompt")?.as_str()?.to_string();
+        let max_new = match json.opt("max_new") {
+            Some(v) => v.as_usize()?,
+            None => 16,
+        };
+        let adapter = match json.opt("adapter") {
+            Some(v) => v.as_usize()? as u32,
+            None => 0,
+        };
+        Ok((prompt, max_new, adapter))
+    })();
+    let (prompt, max_new, adapter) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            write_response(
+                &mut stream,
+                "400 Bad Request",
+                "application/json",
+                &error_json(&format!("{e:#}")),
+            );
+            return Ok(());
+        }
+    };
+    let (id, events) = match client.submit_streaming(&prompt, max_new, adapter) {
+        Ok(sub) => sub,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status = if msg.contains("shutting down") {
+                "503 Service Unavailable"
+            } else {
+                "400 Bad Request"
+            };
+            write_response(&mut stream, status, "application/json", &error_json(&msg));
+            return Ok(());
+        }
+    };
+    // SSE: close-delimited stream, one `data:` frame per event
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )
+    .context("writing the stream header")?;
+    write!(stream, "data: {}\n\n", start_event_json(id)).context("writing the start event")?;
+    stream.flush().ok();
+    // the loop ends when the worker sends Finish (router closes the
+    // stream) or the worker goes away entirely (recv error)
+    for event in events {
+        let frame = match &event {
+            StreamEvent::Token { id, token } => token_event_json(*id, *token),
+            StreamEvent::Finish(resp) => finish_event_json(resp),
+        };
+        // a client that hung up mid-stream is not an error worth logging;
+        // the scheduler finishes the request either way
+        if write!(stream, "data: {frame}\n\n").is_err() {
+            break;
+        }
+        stream.flush().ok();
+        if matches!(event, StreamEvent::Finish(_)) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_cancel(mut stream: TcpStream, client: &WorkerClient, body: &[u8]) -> Result<()> {
+    let id: Result<u64> = (|| {
+        let text = std::str::from_utf8(body).context("request body is not UTF-8")?;
+        let json = Json::parse(text).context("parsing the request JSON")?;
+        Ok(json.get("id")?.as_usize()? as u64)
+    })();
+    let id = match id {
+        Ok(id) => id,
+        Err(e) => {
+            write_response(
+                &mut stream,
+                "400 Bad Request",
+                "application/json",
+                &error_json(&format!("{e:#}")),
+            );
+            return Ok(());
+        }
+    };
+    match client.cancel(id) {
+        Ok(cancelled) => {
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.key("id").num(id as f64);
+            w.key("cancelled").bool(cancelled);
+            w.end_obj();
+            write_response(&mut stream, "200 OK", "application/json", &w.finish());
+        }
+        Err(e) => {
+            write_response(
+                &mut stream,
+                "503 Service Unavailable",
+                "application/json",
+                &error_json(&format!("{e:#}")),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// process-wide signal flag for the CLI entry (`lota serve --listen`)
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {
+    // no graceful-signal story off unix; the server runs until killed
+}
+
+/// The `lota serve --listen <addr>` entry: start the front end, print the
+/// bound address, run until SIGTERM/SIGINT, then drain and return the
+/// worker's report.
+pub fn serve_listen(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    opts: &ServeOptions,
+    addr: &str,
+) -> Result<crate::sched::WorkerReport> {
+    let server = ListenServer::start(cfg, store, opts, addr)?;
+    install_signal_handlers();
+    // the smoke test scrapes this line for the resolved port, so it goes
+    // to stdout (println! flushes on the newline), not the log
+    println!("listening on http://{}", server.local_addr());
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        thread::sleep(Duration::from_millis(50));
+    }
+    log::info!("shutdown signal received; draining in-flight requests");
+    server.shutdown()
+}

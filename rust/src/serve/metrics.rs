@@ -53,59 +53,156 @@ impl LatencyStats {
     }
 }
 
-/// A sample accumulator summarized on demand. Samples are kept raw (the
-/// scheduler records at most a few per request or per step) and sorted
-/// only when a summary is asked for — no binning error, exact
-/// percentiles via [`LatencyStats::from_sorted`].
-#[derive(Clone, Debug, Default)]
+/// How many raw samples a [`Histogram`] retains. Below this everything
+/// is kept and every summary is exact; past it the retained set becomes
+/// a uniform reservoir (Algorithm R), bounding memory for long-running
+/// servers (`lota serve --listen` records per-token samples forever)
+/// while count/sum/min/max — and therefore mean — stay exact.
+pub const HISTOGRAM_CAP: usize = 4096;
+
+/// A sample accumulator summarized on demand. Samples are kept raw up to
+/// [`HISTOGRAM_CAP`] (the scheduler records at most a few per request or
+/// per step, so short runs never hit it) and sorted only when a summary
+/// is asked for — no binning error, exact percentiles via
+/// [`LatencyStats::from_sorted`]. Past the cap, percentiles come from a
+/// uniform reservoir of the stream while the scalar aggregates (count,
+/// sum, mean, min, max) remain exact for every sample ever recorded.
+#[derive(Clone, Debug)]
 pub struct Histogram {
+    /// retained samples: everything below the cap, a reservoir above it
     samples: Vec<f64>,
+    /// samples ever recorded (≥ `samples.len()`)
+    count: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// xorshift64 state for reservoir replacement — seeded to a fixed
+    /// constant so runs are reproducible; never zero (xorshift fixpoint)
+    rng_state: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            samples: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            rng_state: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
 }
 
 impl Histogram {
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.sum += v;
+        self.push_sample(v);
     }
 
+    /// Count + reservoir maintenance (Algorithm R): item number `count`
+    /// replaces a uniformly chosen retained slot with probability
+    /// cap/count, keeping the retained set a uniform sample of the
+    /// stream.
+    fn push_sample(&mut self, v: f64) {
+        self.count += 1;
+        if self.samples.len() < HISTOGRAM_CAP {
+            self.samples.push(v);
+        } else {
+            let j = (self.next_u64() % self.count as u64) as usize;
+            if j < HISTOGRAM_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.rng_state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng_state = x;
+        x
+    }
+
+    /// Samples ever recorded (not the retained-sample count).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.count == 0
     }
 
-    /// Percentile/mean/max summary of everything recorded so far.
+    /// Percentile/mean/max summary of everything recorded so far. Exact
+    /// below [`HISTOGRAM_CAP`]; above it the percentiles are reservoir
+    /// estimates while mean and max stay exact.
     pub fn stats(&self) -> LatencyStats {
+        if self.count == 0 {
+            return LatencyStats::default();
+        }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        LatencyStats::from_sorted(&sorted)
+        let mut s = LatencyStats::from_sorted(&sorted);
+        // the exact aggregates always win over the reservoir's view
+        s.mean = self.sum / self.count as f64;
+        s.max = self.max;
+        s
     }
 
-    /// Smallest recorded sample (0.0 when empty, matching the zeroed
-    /// summaries of [`Histogram::stats`]).
+    /// Smallest recorded sample, exact over the whole stream (0.0 when
+    /// empty, matching the zeroed summaries of [`Histogram::stats`]).
     pub fn min(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
     /// Sum of all recorded samples — the Prometheus `_sum` series.
+    /// Exact over the whole stream, capped or not.
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 
-    /// The raw samples, in recording order. The metrics registry's
-    /// Prometheus renderer walks these to build cumulative `le` bucket
-    /// counts (the JSON form keeps using exact percentiles).
+    /// The retained samples, in recording order (all of them below
+    /// [`HISTOGRAM_CAP`], a uniform reservoir above). The metrics
+    /// registry's Prometheus renderer walks these to build cumulative
+    /// `le` bucket counts, scaled to [`Histogram::len`] when capped
+    /// (the JSON form keeps using exact percentiles).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
 
-    /// Fold another histogram's samples into this one.
+    /// Fold another histogram's samples into this one. Exact while the
+    /// combined retained sets fit the cap (a plain append); above it the
+    /// other side's retained samples feed this reservoir and dropped
+    /// samples still count toward the exact aggregates.
     pub fn merge(&mut self, other: &Histogram) {
-        self.samples.extend_from_slice(&other.samples);
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.sum += other.sum;
+        for &v in &other.samples {
+            self.push_sample(v);
+        }
+        // samples the other side had already dropped from its reservoir
+        // still count toward count/mean
+        self.count += other.count - other.samples.len();
     }
 }
 
@@ -131,6 +228,13 @@ pub struct SchedStats {
     pub inter_token_ms: Histogram,
     /// submit → admission wait per request, milliseconds
     pub queue_wait_ms: Histogram,
+    /// cross-thread command-channel handoff per request, milliseconds
+    /// (channel entry → scheduler pickup); empty unless requests were
+    /// submitted through `sched::SchedWorker` — in-process submits have
+    /// no handoff to measure. This is the queue-transport overhead
+    /// isolated from compute: TTFT minus handoff minus queue wait is
+    /// pure prefill work
+    pub handoff_ms: Histogram,
     /// waiting requests observed at each step (after admission)
     pub queue_depth: Histogram,
     /// fraction of decode slots busy at each step, in [0, 1]
@@ -159,6 +263,7 @@ impl SchedStats {
         self.ttft_ms.merge(&other.ttft_ms);
         self.inter_token_ms.merge(&other.inter_token_ms);
         self.queue_wait_ms.merge(&other.queue_wait_ms);
+        self.handoff_ms.merge(&other.handoff_ms);
         self.queue_depth.merge(&other.queue_depth);
         self.batch_occupancy.merge(&other.batch_occupancy);
         self.block_util.merge(&other.block_util);
@@ -480,6 +585,62 @@ mod tests {
             h.record(v);
         }
         assert_eq!(h.min(), 0.5);
+    }
+
+    #[test]
+    fn histogram_caps_retained_samples_with_exact_aggregates() {
+        let n = 3 * HISTOGRAM_CAP;
+        let mut h = Histogram::default();
+        for i in 0..n {
+            h.record(i as f64);
+        }
+        // memory is bounded, counting is not
+        assert_eq!(h.len(), n);
+        assert_eq!(h.samples().len(), HISTOGRAM_CAP);
+        // scalar aggregates stay exact past the cap
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.sum(), (n * (n - 1) / 2) as f64);
+        let s = h.stats();
+        assert_eq!(s.max, (n - 1) as f64);
+        assert!((s.mean - (n - 1) as f64 / 2.0).abs() < 1e-9);
+        // the reservoir keeps percentiles honest: the true p50 of
+        // 0..3·cap is ~1.5·cap, and a 4096-sample uniform reservoir
+        // estimates a uniform stream's median to a few percent
+        let p50_true = 1.5 * HISTOGRAM_CAP as f64;
+        assert!((s.p50 - p50_true).abs() < 0.15 * n as f64, "p50 {} vs {}", s.p50, p50_true);
+        // every retained sample really came from the stream
+        assert!(h.samples().iter().all(|&v| v >= 0.0 && v < n as f64));
+    }
+
+    #[test]
+    fn histogram_merge_is_exact_below_the_cap() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for v in [1.0, 2.0] {
+            a.record(v);
+        }
+        for v in [3.0, 0.5] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.samples(), &[1.0, 2.0, 3.0, 0.5]);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.sum(), 6.5);
+        assert_eq!(a.stats().max, 3.0);
+        // merging a capped histogram keeps aggregate accounting exact
+        let mut big = Histogram::default();
+        for i in 0..2 * HISTOGRAM_CAP {
+            big.record(i as f64);
+        }
+        let mut acc = Histogram::default();
+        acc.record(-5.0);
+        acc.merge(&big);
+        assert_eq!(acc.len(), 2 * HISTOGRAM_CAP + 1);
+        assert_eq!(acc.min(), -5.0);
+        assert_eq!(acc.stats().max, (2 * HISTOGRAM_CAP - 1) as f64);
+        assert_eq!(acc.sum(), big.sum() - 5.0);
+        assert_eq!(acc.samples().len(), HISTOGRAM_CAP);
     }
 
     #[test]

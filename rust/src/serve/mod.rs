@@ -31,6 +31,12 @@
 //!   per adapter and mixed freely in each scheduled batch — bit-identical
 //!   to serving each adapter's individually merged checkpoint alone
 //!   (`tests/adapters.rs` pins it);
+//! * an async streaming front end ([`listen`], `lota serve --listen`):
+//!   the scheduler moved onto a dedicated worker thread
+//!   ([`crate::sched::SchedWorker`]) behind an MPSC command channel, with
+//!   a minimal hand-rolled HTTP/1.1 + SSE transport streaming each
+//!   request's tokens as they are picked and draining in-flight rows on
+//!   SIGTERM (`docs/serving.md` documents the wire protocol);
 //! * [`ThroughputReport`] aggregation used by `examples/serve_merged.rs`
 //!   and the Fig. 4 efficiency bench. Token throughput counts **generated
 //!   tokens**, not decoded characters; scheduled runs additionally carry
@@ -40,14 +46,18 @@
 pub mod adapters;
 pub mod backend;
 pub mod batcher;
+pub mod listen;
 pub mod metrics;
 
 pub use adapters::{synthetic_adapter_store, AdapterRegistry, AdapterSpec};
+pub use listen::{serve_listen, ListenServer};
 pub use backend::{
     DecodeStats, Generation, NativeBackend, PjrtBackend, ScheduledBackend, ServeBackend,
 };
 pub use batcher::{BucketPolicy, DynamicBatcher, Request};
-pub use metrics::{AdapterUsage, Histogram, LatencyStats, SchedStats, ThroughputReport};
+pub use metrics::{
+    AdapterUsage, Histogram, LatencyStats, SchedStats, ThroughputReport, HISTOGRAM_CAP,
+};
 
 use std::collections::HashMap;
 use std::path::PathBuf;

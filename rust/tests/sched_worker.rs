@@ -1,0 +1,339 @@
+//! Async front-end integration suite: the scheduler worker thread
+//! (`sched::SchedWorker`) and the HTTP/SSE transport (`serve::listen`).
+//!
+//! The two contracts under test:
+//!
+//! 1. **Parity** — moving the scheduler onto a worker thread behind an
+//!    MPSC channel changes *when* work is admitted, never *what* is
+//!    decoded: per request, worker output is bit-identical to the
+//!    synchronous `step()` loop and to the one-shot
+//!    `engine::greedy_decode` (extending the `tests/engine_parity.rs` /
+//!    `tests/sched.rs` contracts across the thread boundary).
+//! 2. **Lifecycle edges** — double-cancel, cancel-after-finish,
+//!    submit-after-shutdown, zero-`max_new` streams, and byte-for-byte
+//!    agreement between what the SSE transport carries and what the
+//!    in-process stream events render to.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use lota_qaf::config::{Backend, SchedConfig};
+use lota_qaf::data::tokenizer;
+use lota_qaf::engine::{greedy_decode, Engine};
+use lota_qaf::sched::{
+    generate_load, FinishReason, LoadSpec, SchedOptions, SchedWorker, Scheduler, StreamEvent,
+    WorkerConfig,
+};
+use lota_qaf::serve::listen::{finish_event_json, start_event_json, token_event_json};
+use lota_qaf::serve::{ListenServer, ServeOptions, ServePath};
+
+mod common;
+use common::merged_tiny;
+
+fn opts(max_batch: usize) -> SchedOptions {
+    SchedOptions { max_batch, ..SchedOptions::default() }
+}
+
+/// RTN-only tiny engine — cheap enough for seed scans (no merge loop).
+fn plain_engine(seed: u64) -> Engine {
+    let cfg = lota_qaf::config::preset("tiny").unwrap();
+    let mut rng = lota_qaf::tensor::Rng::new(seed);
+    let fp = lota_qaf::model::init_fp(&cfg, &mut rng);
+    let store = lota_qaf::model::quantize_store(&cfg, &fp, |_, _, w| {
+        Ok(lota_qaf::quant::rtn_quantize(w, cfg.group_size, 4))
+    })
+    .unwrap();
+    Engine::from_store(&cfg, &store, 4).unwrap()
+}
+
+fn spawn_worker(engine: Engine, max_batch: usize) -> SchedWorker {
+    SchedWorker::spawn(engine, opts(max_batch), WorkerConfig::default()).unwrap()
+}
+
+/// The tentpole pin: requests submitted through the worker's command
+/// channel decode bit-identically to the same requests driven through a
+/// synchronous `step()` loop, and both match the one-shot decode. Batch
+/// composition differs across the three (the worker interleaves
+/// admission with channel drains), so equality here is exactly the
+/// "scheduling never leaks into tokens" invariant.
+#[test]
+fn worker_output_is_bit_identical_to_the_synchronous_loop() {
+    let (cfg, store) = merged_tiny(401);
+    let prompts: Vec<String> = (0..9).map(|i| format!("{i} + {} =", (i * 3) % 10)).collect();
+    let max_new = 8;
+
+    // worker-threaded run
+    let worker = spawn_worker(Engine::from_store(&cfg, &store, 4).unwrap(), 3);
+    let client = worker.client();
+    let mut worker_ids = Vec::new();
+    for p in &prompts {
+        worker_ids.push(client.submit(p, max_new).unwrap());
+    }
+    let report = worker.shutdown().unwrap();
+    assert_eq!(report.responses.len(), prompts.len());
+
+    // synchronous reference run on identical weights
+    let engine = Engine::from_store(&cfg, &store, 4).unwrap();
+    let mut sched = Scheduler::new(&engine, &opts(3)).unwrap();
+    let mut sync_ids = Vec::new();
+    for p in &prompts {
+        sync_ids.push(sched.submit(p, max_new).unwrap());
+    }
+    sched.run_until_idle().unwrap();
+    let sync_responses = sched.take_finished();
+
+    let one_shot = greedy_decode(&engine, &prompts, max_new).unwrap();
+    for (i, (wid, sid)) in worker_ids.iter().zip(&sync_ids).enumerate() {
+        let w = report.responses.iter().find(|r| r.id == *wid).unwrap();
+        let s = sync_responses.iter().find(|r| r.id == *sid).unwrap();
+        assert_eq!(w.text, s.text, "prompt {i}: worker diverged from the synchronous loop");
+        assert_eq!(w.tokens, s.tokens, "prompt {i}: token count diverged");
+        assert_eq!(w.reason, s.reason, "prompt {i}: finish reason diverged");
+        assert_eq!(w.text, one_shot[i].text, "prompt {i}: worker diverged from one-shot");
+        assert_eq!(w.tokens, one_shot[i].tokens);
+    }
+    // every submit crossed the channel exactly once, with a measured,
+    // finite handoff
+    assert_eq!(report.stats.handoff_ms.len(), prompts.len());
+    assert!(report.stats.handoff_ms.min() >= 0.0);
+    assert!(report.stats.handoff_ms.stats().max.is_finite());
+}
+
+/// Cancel twice: the first may land (scan seeds for one where the victim
+/// is still decoding — EOS is weight luck on a random tiny model), the
+/// second must report false, and so must a cancel after a natural finish.
+#[test]
+fn double_cancel_and_cancel_after_finish_report_false() {
+    for seed in 0..32u64 {
+        let worker = spawn_worker(plain_engine(600 + seed), 2);
+        let client = worker.client();
+        let (victim, events) = client.submit_streaming("1 + 2 =", 64, 0).unwrap();
+        let first = client.cancel(victim).unwrap();
+        // drain the stream to the finish event — after it, the request is
+        // definitively out of the scheduler
+        let mut reason = None;
+        for ev in events {
+            if let StreamEvent::Finish(resp) = ev {
+                reason = Some(resp.reason);
+                break;
+            }
+        }
+        let reason = reason.expect("stream ended without a finish event");
+        let second = client.cancel(victim).unwrap();
+        assert!(!second, "seed {seed}: second cancel of request {victim} reported true");
+
+        // cancel after a natural (max_new-bounded) finish
+        let (short, events) = client.submit_streaming("3 + 4 =", 1, 0).unwrap();
+        let finished = events.into_iter().any(|ev| matches!(ev, StreamEvent::Finish(_)));
+        assert!(finished, "seed {seed}: short request never finished");
+        assert!(
+            !client.cancel(short).unwrap(),
+            "seed {seed}: cancel after finish reported true"
+        );
+        worker.shutdown().unwrap();
+
+        if first && reason == FinishReason::Cancelled {
+            return; // the interesting path ran: first cancel landed mid-flight
+        }
+    }
+    panic!("no seed kept the victim in flight long enough to observe a landed cancel");
+}
+
+/// After a shutdown request, new submits are rejected (either explicitly
+/// while draining or because the worker is already gone), while the
+/// in-flight request still drains to a normal finish.
+#[test]
+fn submit_after_shutdown_is_rejected_and_in_flight_work_drains() {
+    let worker = spawn_worker(plain_engine(207), 2);
+    let client = worker.client();
+    let id = client.submit("5 + 6 =", 12).unwrap();
+    client.request_shutdown();
+    let err = client.submit("7 + 8 =", 4).unwrap_err().to_string();
+    assert!(
+        err.contains("shutting down") || err.contains("gone"),
+        "unexpected rejection message: {err}"
+    );
+    let report = worker.shutdown().unwrap();
+    assert_eq!(report.responses.len(), 1, "the in-flight request did not drain");
+    let r = &report.responses[0];
+    assert_eq!(r.id, id);
+    assert_ne!(r.reason, FinishReason::Cancelled, "drain cancelled in-flight work");
+    assert!(r.tokens >= 1);
+}
+
+/// A zero-`max_new` submit finishes inside the submit call itself; the
+/// stream must still deliver its finish event (the router registers the
+/// stream before the submit runs).
+#[test]
+fn zero_max_new_streams_deliver_their_finish_event() {
+    let worker = spawn_worker(plain_engine(19), 2);
+    let (id, events) = worker.client().submit_streaming("1 + 1 =", 0, 0).unwrap();
+    let events: Vec<StreamEvent> = events.into_iter().collect();
+    assert_eq!(events.len(), 1, "a zero-budget request streamed tokens");
+    match &events[0] {
+        StreamEvent::Finish(resp) => {
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.tokens, 0);
+        }
+        other => panic!("expected a finish event, got {other:?}"),
+    }
+    worker.shutdown().unwrap();
+}
+
+// --------------------------------------------------------------------------
+// transport: the wire against the in-process streams
+
+fn http_request(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// `data:` payloads of an SSE response, in order.
+fn sse_payloads(response: &str) -> Vec<String> {
+    response
+        .lines()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .map(str::to_string)
+        .collect()
+}
+
+fn generate_body(prompt: &str, max_new: usize) -> String {
+    let mut w = lota_qaf::config::JsonWriter::new();
+    w.begin_obj();
+    w.key("prompt").str(prompt);
+    w.key("max_new").num(max_new as f64);
+    w.end_obj();
+    w.finish()
+}
+
+fn serve_options() -> ServeOptions {
+    ServeOptions::new(ServePath::Merged, 16)
+        .backend(Backend::Native)
+        .bits(4)
+        .scheduled(SchedConfig::default())
+}
+
+/// Basic routes: liveness, unknown paths, cancel of an unknown id, and a
+/// malformed generate body.
+#[test]
+fn transport_routes_health_errors_and_unknown_cancel() {
+    let (cfg, store) = merged_tiny(23);
+    let server = ListenServer::start(&cfg, &store, &serve_options(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    let health = http_request(addr, "GET", "/healthz", "");
+    assert!(health.starts_with("HTTP/1.1 200 OK"), "healthz: {health}");
+    assert!(health.ends_with("ok\n"), "healthz body: {health}");
+
+    let missing = http_request(addr, "GET", "/nope", "");
+    assert!(missing.starts_with("HTTP/1.1 404"), "unknown route: {missing}");
+
+    let bad = http_request(addr, "POST", "/generate", "{\"max_new\": 4}");
+    assert!(bad.starts_with("HTTP/1.1 400"), "missing prompt: {bad}");
+    assert!(bad.contains("prompt"), "error should name the missing key: {bad}");
+
+    let cancel = http_request(addr, "POST", "/cancel", "{\"id\": 999}");
+    assert!(cancel.starts_with("HTTP/1.1 200"), "cancel: {cancel}");
+    assert!(cancel.contains("\"cancelled\":false"), "unknown id must not cancel: {cancel}");
+
+    server.shutdown().unwrap();
+}
+
+/// The wire test the satellite asks for: a seed-scanned staggered
+/// workload driven over concurrent HTTP connections, with every
+/// request's SSE stream asserted **byte-for-byte** against the
+/// in-process rendering — start/token frames rebuilt from a reference
+/// worker run on identical weights (decode is bit-identical, pinned
+/// above), the finish frame rebuilt from this very run's
+/// [`lota_qaf::sched::SchedResponse`] via the same `*_event_json`
+/// helpers the server uses.
+#[test]
+fn transport_streams_match_in_process_streams_byte_for_byte() {
+    for seed in 0..3u64 {
+        let (cfg, store) = merged_tiny(300 + seed);
+        let spec = LoadSpec {
+            n_requests: 5,
+            rate_per_sec: 50.0,
+            seed: 40 + seed,
+            task: "arith".into(),
+            max_new_mix: vec![2, 5, 9],
+        };
+        let load = generate_load(&spec).unwrap();
+
+        // reference run: capture each (prompt, max_new)'s exact token
+        // stream in-process
+        let reference = spawn_worker(Engine::from_store(&cfg, &store, 4).unwrap(), 3);
+        let ref_client = reference.client();
+        let mut ref_tokens: HashMap<(String, usize), Vec<u32>> = HashMap::new();
+        for req in &load {
+            let key = (req.prompt.clone(), req.max_new);
+            if ref_tokens.contains_key(&key) {
+                continue; // identical submissions decode identically
+            }
+            let (_, events) = ref_client.submit_streaming(&req.prompt, req.max_new, 0).unwrap();
+            let mut tokens = Vec::new();
+            for ev in events {
+                match ev {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Finish(_) => break,
+                }
+            }
+            ref_tokens.insert(key, tokens);
+        }
+        reference.shutdown().unwrap();
+
+        // transport run: same weights, staggered concurrent connections
+        let server = ListenServer::start(&cfg, &store, &serve_options(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let mut clients = Vec::new();
+        for (i, req) in load.iter().enumerate() {
+            let body = generate_body(&req.prompt, req.max_new);
+            let key = (req.prompt.clone(), req.max_new);
+            clients.push(thread::spawn(move || {
+                thread::sleep(Duration::from_millis(10 * i as u64));
+                (key, sse_payloads(&http_request(addr, "POST", "/generate", &body)))
+            }));
+        }
+        let streams: Vec<((String, usize), Vec<String>)> =
+            clients.into_iter().map(|h| h.join().unwrap()).collect();
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), load.len(), "seed {seed}: requests went missing");
+
+        for (key, frames) in streams {
+            assert!(frames.len() >= 2, "seed {seed}: stream too short: {frames:?}");
+            // the start frame carries the id; rebuild it and look up this
+            // run's response for the finish frame
+            let id_field = frames[0]
+                .split("\"id\":")
+                .nth(1)
+                .and_then(|s| s.trim_end_matches('}').parse::<u64>().ok())
+                .unwrap_or_else(|| panic!("seed {seed}: unparseable start frame {:?}", frames[0]));
+            assert_eq!(frames[0], start_event_json(id_field), "seed {seed}: start frame");
+            let tokens = &ref_tokens[&key];
+            let mut expected = vec![start_event_json(id_field)];
+            expected.extend(tokens.iter().map(|&t| token_event_json(id_field, t)));
+            let resp = report.responses.iter().find(|r| r.id == id_field).unwrap();
+            expected.push(finish_event_json(resp));
+            assert_eq!(
+                frames, expected,
+                "seed {seed}: transport bytes diverged from the in-process stream"
+            );
+            // the finish frame's text is consistent with the streamed
+            // tokens (dropping specials the text decoder filters)
+            assert_eq!(resp.tokens, tokens.len(), "seed {seed}: token count mismatch");
+            assert_eq!(resp.text, tokenizer::decode(tokens), "seed {seed}: text mismatch");
+        }
+    }
+}
