@@ -27,10 +27,17 @@
 //! in blocks, so the same bytes carry strictly more concurrent requests
 //! on a mixed-length workload — with bit-identical tokens (asserted).
 //!
+//! A final **overload** arm drives a saturating burst through the async
+//! worker with a tiny bounded submit queue and a default TTFT deadline:
+//! the reject/shed split and the p99 TTFT of the surviving requests land
+//! in `BENCH_serve.json` as `overload_*` meta keys.
+//!
 //! Env knobs: LOTA_LOAD_REQS (48), LOTA_LOAD_RATE (32 req/s),
 //! LOTA_LOAD_MODEL (tiny), LOTA_LOAD_SEED (7), LOTA_LOAD_MAXBATCH (4),
 //! LOTA_LOAD_BUDGET_MB (1024), LOTA_LOAD_PAGED_RATE (200 req/s — the
-//! paged-vs-contiguous arm saturates on purpose), LOTA_LOAD_BLOCK (16).
+//! paged-vs-contiguous arm saturates on purpose), LOTA_LOAD_BLOCK (16),
+//! LOTA_LOAD_SUBMIT_ITERS (24), LOTA_LOAD_OVERLOAD_RATE (400 req/s),
+//! LOTA_LOAD_OVERLOAD_CAP (4), LOTA_LOAD_OVERLOAD_DEADLINE_MS (150).
 
 use std::time::{Duration, Instant};
 
@@ -40,7 +47,8 @@ use lota_qaf::engine::Engine;
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
 use lota_qaf::sched::{
-    generate_load, LoadSpec, SchedOptions, SchedWorker, Scheduler, WorkerConfig,
+    generate_load, stripe_priorities, FinishReason, LoadSpec, RequestSpec, SchedOptions,
+    SchedWorker, Scheduler, WorkerConfig,
 };
 use lota_qaf::serve::{serve_open_loop, Histogram, LatencyStats, ServeOptions, ServePath};
 use lota_qaf::tensor::Rng;
@@ -158,7 +166,8 @@ fn main() -> anyhow::Result<()> {
         let mut s = Scheduler::new(&engine, &sched_opts)?;
         let mut submitted = Vec::with_capacity(batch.len());
         for &li in &batch {
-            submitted.push((s.submit(&load[li].prompt, load[li].max_new)?, li));
+            submitted
+                .push((s.submit(RequestSpec::new(load[li].prompt.as_str(), load[li].max_new))?, li));
         }
         stat_occ_sum += batch.len() as f64 / n_slots as f64;
         stat_batches += 1;
@@ -262,6 +271,7 @@ fn main() -> anyhow::Result<()> {
             kv_budget_mb: tight_mb,
             kv_paged,
             kv_block_size: block_size,
+            ..SchedConfig::default()
         };
         let opts = ServeOptions::new(ServePath::Merged, 32)
             .backend(Backend::Native)
@@ -363,7 +373,7 @@ fn main() -> anyhow::Result<()> {
         let mut first = Histogram::default();
         for _ in 0..submit_iters {
             let t = Instant::now();
-            let (_id, events) = client.submit_streaming(&prompt, 4, 0)?;
+            let (_id, events) = client.submit_streaming(RequestSpec::new(prompt.as_str(), 4))?;
             events.recv()?; // first generated token crosses back
             first.record(1e3 * t.elapsed().as_secs_f64());
             for _ in events {} // drain to idle before the next submit
@@ -396,6 +406,97 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    // --- overload control: bounded submit queue + TTFT deadlines under a
+    // deliberately saturating burst. Requests arrive striped across two
+    // priority classes and every one inherits the worker's default TTFT
+    // deadline; the queue cap rejects at the front door (typed
+    // `QueueFull`, the wire's 503 + Retry-After) and the deadline sweep
+    // sheds whatever waited past its SLO. The ledger records the
+    // reject/shed split and the TTFT tail of the survivors — the p99 a
+    // deadline-respecting client actually experiences under overload.
+    let over_rate = env_f64("LOTA_LOAD_OVERLOAD_RATE", 400.0);
+    let over_cap = env_usize("LOTA_LOAD_OVERLOAD_CAP", 4);
+    let over_deadline = env_usize("LOTA_LOAD_OVERLOAD_DEADLINE_MS", 150) as u64;
+    let mut over_load = generate_load(&LoadSpec { rate_per_sec: over_rate, ..spec.clone() })?;
+    stripe_priorities(&mut over_load, 2);
+    println!(
+        "\n## overload control: {} arrivals at λ={over_rate}/s, submit queue cap {over_cap}, \
+         {over_deadline} ms TTFT deadline, 2 priority classes",
+        over_load.len()
+    );
+    let engine = Engine::from_store(&cfg, &store, 4)?;
+    let over_opts = SchedOptions {
+        priority_classes: 2,
+        submit_queue_cap: over_cap,
+        default_deadline_ms: Some(over_deadline),
+        ..SchedOptions::from_config(&sched_cfg)
+    };
+    let worker = SchedWorker::spawn(engine, over_opts, WorkerConfig::default())?;
+    let client = worker.client();
+    let t0 = Instant::now();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    for r in &over_load {
+        let gap = r.arrival_secs - t0.elapsed().as_secs_f64();
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
+        let mut rs = RequestSpec::new(r.prompt.as_str(), r.max_new).priority(r.priority);
+        rs.deadline_ms = r.deadline_ms; // None → the worker default applies
+        match client.submit(rs) {
+            Ok(_) => accepted += 1,
+            Err(_) => rejected += 1, // bounded queue said 503
+        }
+    }
+    let report = worker.shutdown()?;
+    assert_eq!(
+        report.stats.queue_rejected, rejected,
+        "front-door rejections must reconcile with SchedStats"
+    );
+    assert_eq!(
+        report.responses.len(),
+        accepted,
+        "every accepted request must resolve (served or shed)"
+    );
+    let shed = report.stats.shed_at_submit + report.stats.shed_in_queue;
+    let served = accepted - shed;
+    let mut survivor_ttft = Histogram::default();
+    for resp in &report.responses {
+        if resp.reason != FinishReason::Shed {
+            if let Some(s) = resp.ttft_secs {
+                survivor_ttft.record(1e3 * s);
+            }
+        }
+    }
+    let mut sv = survivor_ttft.samples().to_vec();
+    sv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let shed_rate = shed as f64 / accepted.max(1) as f64;
+    let reject_rate = rejected as f64 / over_load.len().max(1) as f64;
+    let mut t = Table::new(&[
+        "offered",
+        "rejected (503)",
+        "accepted",
+        "shed",
+        "served",
+        "survivor ttft p50 ms",
+        "survivor ttft p99 ms",
+    ]);
+    t.row(&[
+        over_load.len().to_string(),
+        rejected.to_string(),
+        accepted.to_string(),
+        shed.to_string(),
+        served.to_string(),
+        format!("{:.1}", pct(&sv, 0.50)),
+        format!("{:.1}", pct(&sv, 0.99)),
+    ]);
+    t.print();
+    println!(
+        "shed rate {shed_rate:.2} over accepted ({} at submit, {} in queue), \
+         reject rate {reject_rate:.2} over offered",
+        report.stats.shed_at_submit, report.stats.shed_in_queue
+    );
 
     // machine-readable twin of the tables above: scheduler histograms as
     // result rows (TTFT, inter-token gaps, queue wait, occupancy, block
@@ -444,6 +545,21 @@ fn main() -> anyhow::Result<()> {
             .meta_num(&format!("handoff_{name}_p50_ms"), pct(&h, 0.50))
             .meta_num(&format!("handoff_{name}_p90_ms"), pct(&h, 0.90))
             .meta_num(&format!("handoff_{name}_p99_ms"), pct(&h, 0.99));
+    }
+    // overload arm: the shed/reject split plus the survivors' TTFT tail
+    jr.meta_num("overload_rate_per_sec", over_rate)
+        .meta_num("overload_queue_cap", over_cap as f64)
+        .meta_num("overload_deadline_ms", over_deadline as f64)
+        .meta_num("overload_offered", over_load.len() as f64)
+        .meta_num("overload_rejected", rejected as f64)
+        .meta_num("overload_accepted", accepted as f64)
+        .meta_num("overload_shed", shed as f64)
+        .meta_num("overload_shed_rate", shed_rate)
+        .meta_num("overload_reject_rate", reject_rate)
+        .meta_num("overload_survivor_ttft_p50_ms", pct(&sv, 0.50))
+        .meta_num("overload_survivor_ttft_p99_ms", pct(&sv, 0.99));
+    if !survivor_ttft.is_empty() {
+        jr.push(&hist_row("overload_survivor_ttft_ms", &survivor_ttft));
     }
     let json_path = JsonReport::default_path("serve");
     jr.write(&json_path)?;

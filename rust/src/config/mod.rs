@@ -232,11 +232,32 @@ pub struct SchedConfig {
     pub kv_paged: bool,
     /// token positions per KV block (`sched.kv_block_size`, paged only)
     pub kv_block_size: usize,
+    /// admission priority classes (`sched.priority_classes`, 1..=256).
+    /// 1 (default) is plain FIFO — pinned bitwise identical to the
+    /// pre-priority scheduler; with more classes admission picks the
+    /// most-urgent waiting class first (class 0 beats class 1, FIFO
+    /// within a class, starvation bounded by aging)
+    pub priority_classes: usize,
+    /// bounded worker submit queue (`sched.submit_queue_cap`): submits
+    /// arriving while this many requests already wait are rejected with
+    /// a retry-after hint instead of queued. 0 (default) = unbounded
+    pub submit_queue_cap: usize,
+    /// default TTFT deadline applied to requests that don't carry one
+    /// (`sched.default_deadline_ms`). 0 (default) = no deadline
+    pub default_deadline_ms: u64,
 }
 
 impl Default for SchedConfig {
     fn default() -> SchedConfig {
-        SchedConfig { max_batch: 8, kv_budget_mb: 1024, kv_paged: true, kv_block_size: 16 }
+        SchedConfig {
+            max_batch: 8,
+            kv_budget_mb: 1024,
+            kv_paged: true,
+            kv_block_size: 16,
+            priority_classes: 1,
+            submit_queue_cap: 0,
+            default_deadline_ms: 0,
+        }
     }
 }
 
@@ -263,6 +284,15 @@ impl SchedConfig {
         if let Some(v) = doc.get_num("sched.kv_block_size") {
             c.kv_block_size = v as usize;
         }
+        if let Some(v) = doc.get_num("sched.priority_classes") {
+            c.priority_classes = v as usize;
+        }
+        if let Some(v) = doc.get_num("sched.submit_queue_cap") {
+            c.submit_queue_cap = v as usize;
+        }
+        if let Some(v) = doc.get_num("sched.default_deadline_ms") {
+            c.default_deadline_ms = v as u64;
+        }
         if c.max_batch == 0 {
             bail!("sched.max_batch must be at least 1");
         }
@@ -271,6 +301,11 @@ impl SchedConfig {
         }
         if c.kv_block_size == 0 {
             bail!("sched.kv_block_size must be at least 1");
+        }
+        // priority lives in a u8 on the request spec, so 256 classes is
+        // the honest ceiling; 0 classes would admit nothing
+        if !(1..=256).contains(&c.priority_classes) {
+            bail!("sched.priority_classes must be in 1..=256");
         }
         Ok(Some(c))
     }
@@ -620,6 +655,20 @@ mod tests {
         let c = SchedConfig::from_toml(&doc).unwrap().unwrap();
         assert!(!c.kv_paged);
         assert_eq!(c.kv_block_size, 8);
+        // overload-control knobs default to the pre-priority behavior:
+        // one class, unbounded submit queue, no deadline
+        assert_eq!(
+            (c.priority_classes, c.submit_queue_cap, c.default_deadline_ms),
+            (1, 0, 0)
+        );
+        let doc = TomlDoc::parse(
+            "[sched]\npriority_classes = 3\nsubmit_queue_cap = 64\ndefault_deadline_ms = 250\n",
+        )
+        .unwrap();
+        let c = SchedConfig::from_toml(&doc).unwrap().unwrap();
+        assert_eq!(c.priority_classes, 3);
+        assert_eq!(c.submit_queue_cap, 64);
+        assert_eq!(c.default_deadline_ms, 250);
         // enabled = false turns the table off
         let doc = TomlDoc::parse("[sched]\nenabled = false\nmax_batch = 4\n").unwrap();
         assert_eq!(SchedConfig::from_toml(&doc).unwrap(), None);
@@ -634,6 +683,14 @@ mod tests {
             SchedConfig::from_toml(&TomlDoc::parse("[sched]\nkv_block_size = 0\n").unwrap())
                 .is_err()
         );
+        assert!(SchedConfig::from_toml(
+            &TomlDoc::parse("[sched]\npriority_classes = 0\n").unwrap()
+        )
+        .is_err());
+        assert!(SchedConfig::from_toml(
+            &TomlDoc::parse("[sched]\npriority_classes = 257\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -158,6 +158,8 @@ COMMANDS
             [--requests 32] [--max-new 12]
             [--sched true|false] [--max-batch 8] [--kv-budget-mb 1024]
             [--kv-paged true|false] [--kv-block-size 16]
+            [--priority-classes 1] [--submit-queue-cap 0]
+            [--default-deadline-ms 0]
             [--arrival-rate <req/s>] [--load-seed 123]
             [--adapter name=<ckpt|synthetic:seed>[,name=...]] [--omega-frac 0.75]
             [--listen <addr:port>]
@@ -170,6 +172,16 @@ COMMANDS
             --kv-paged (default true) serves over paged KV blocks — the
             budget admits by tokens actually cached, not full-context
             rows; false selects the contiguous reference layout.
+            Overload control (all three also TOML keys in [sched]):
+            --priority-classes N admits by request priority class 0..N
+            (0 most urgent, FIFO within a class, starvation bounded by
+            aging; 1 = plain FIFO, the default). --submit-queue-cap N
+            bounds the worker submit queue — submits over a full queue
+            are rejected (HTTP 503 + Retry-After) instead of queued
+            (0 = unbounded). --default-deadline-ms N sheds any request
+            still waiting for prefill N ms after arrival as reason
+            \"shed\" (0 = no default deadline; per-request deadline_ms
+            wins either way).
             --gemm-kernel picks the native engine's packed-GEMM inner
             loop: auto (detect AVX2, honoring LOTA_GEMM_KERNEL),
             simd (vector path), scalar (the reference) — outputs are
@@ -246,7 +258,15 @@ fn cmd_config_check(paths: &[String]) -> Result<()> {
             exp.model,
             exp.method.as_str(),
             exp.n_bits,
-            if exp.sched.is_some() { ", sched" } else { "" },
+            match exp.sched.as_ref() {
+                // surface the overload knobs so a config review sees the
+                // admission policy, not just "sched on"
+                Some(s) => format!(
+                    ", sched: {} classes, queue cap {}, default deadline {} ms",
+                    s.priority_classes, s.submit_queue_cap, s.default_deadline_ms
+                ),
+                None => String::new(),
+            },
             if reg.is_empty() {
                 String::new()
             } else {
@@ -491,6 +511,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(other) => bail!("--kv-paged wants true|false (got '{other}')"),
             None => sc.kv_paged,
         };
+        // overload-control knobs: admission priority classes, the bounded
+        // worker submit queue, and the default TTFT deadline (0 = none)
+        sc.priority_classes = args.get_usize("priority-classes", sc.priority_classes)?;
+        if !(1..=256).contains(&sc.priority_classes) {
+            bail!("--priority-classes wants 1..=256 (got {})", sc.priority_classes);
+        }
+        sc.submit_queue_cap = args.get_usize("submit-queue-cap", sc.submit_queue_cap)?;
+        sc.default_deadline_ms =
+            args.get_usize("default-deadline-ms", sc.default_deadline_ms as usize)? as u64;
     }
     // bit width for the native engine's packed grids: flag, else the
     // checkpoint's own hint, else the experiment config
@@ -635,6 +664,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prompt: p.clone(),
                 max_new,
                 adapter: 0,
+                priority: 0,
+                deadline_ms: None,
             })
             .collect();
         spread_adapters(&mut load, n_adapters);

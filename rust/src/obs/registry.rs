@@ -133,6 +133,21 @@ impl MetricsRegistry {
         if let Some(sched) = &report.sched {
             r.inc("lota_sched_steps_total", sched.steps as f64);
             r.inc("lota_admission_denied_total", sched.admission_denied as f64);
+            // overload-control counters, emitted only when the run
+            // actually shed or rejected — snapshots from runs without
+            // deadlines or a bounded queue keep their exact key set
+            if sched.shed_at_submit > 0 {
+                r.inc(
+                    "lota_shed_total{reason=\"deadline_at_submit\"}",
+                    sched.shed_at_submit as f64,
+                );
+            }
+            if sched.shed_in_queue > 0 {
+                r.inc("lota_shed_total{reason=\"deadline_in_queue\"}", sched.shed_in_queue as f64);
+            }
+            if sched.queue_rejected > 0 {
+                r.inc("lota_queue_rejected_total", sched.queue_rejected as f64);
+            }
             r.set_gauge("lota_peak_active_requests", sched.peak_active as f64);
             r.observe_all("lota_ttft_ms", &sched.ttft_ms);
             r.observe_all("lota_inter_token_ms", &sched.inter_token_ms);
@@ -293,6 +308,9 @@ mod tests {
         sched.queue_depth.record(1.0);
         sched.batch_occupancy.record(0.5);
         sched.admission_denied = 2;
+        sched.shed_at_submit = 1;
+        sched.shed_in_queue = 2;
+        sched.queue_rejected = 4;
         sched.peak_active = 3;
         sched.steps = 9;
         sched.adapter_usage.insert("base".to_string(), AdapterUsage { requests: 3, tokens: 9 });
@@ -321,6 +339,30 @@ mod tests {
         assert_eq!(reg.histogram("lota_ttft_ms").unwrap().len(), 3);
         // empty histograms stay absent rather than appearing as zeros
         assert!(reg.histogram("lota_block_util").is_none());
+    }
+
+    #[test]
+    fn overload_counters_are_labeled_and_zero_free() {
+        let reg = MetricsRegistry::from_report(&sample_report());
+        assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_at_submit\"}"), Some(1.0));
+        assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_in_queue\"}"), Some(2.0));
+        assert_eq!(reg.counter("lota_queue_rejected_total"), Some(4.0));
+        let text = reg.to_prometheus();
+        // the two shed reasons share one bare metric and one TYPE header
+        assert_eq!(text.matches("# TYPE lota_shed_total counter").count(), 1);
+        assert!(text.contains("lota_shed_total{reason=\"deadline_at_submit\"} 1"));
+        assert!(text.contains("lota_shed_total{reason=\"deadline_in_queue\"} 2"));
+        assert!(text.contains("lota_queue_rejected_total 4"));
+        // a run that never shed or rejected emits none of these keys
+        let mut calm = sample_report();
+        let sched = calm.sched.as_mut().unwrap();
+        sched.shed_at_submit = 0;
+        sched.shed_in_queue = 0;
+        sched.queue_rejected = 0;
+        let reg = MetricsRegistry::from_report(&calm);
+        assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_at_submit\"}"), None);
+        assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_in_queue\"}"), None);
+        assert_eq!(reg.counter("lota_queue_rejected_total"), None);
     }
 
     #[test]

@@ -57,6 +57,13 @@ pub struct LoadRequest {
     /// multi-adapter workloads re-tag requests *after* generation (see
     /// [`spread_adapters`]) instead of drawing inside the generator.
     pub adapter: u32,
+    /// priority class (0 = most urgent). [`generate_load`] always emits 0
+    /// for the same draw-free reason as `adapter`; overload workloads
+    /// re-tag after generation (see [`stripe_priorities`]).
+    pub priority: u8,
+    /// per-request TTFT deadline in milliseconds; None (always what
+    /// [`generate_load`] emits) means no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Re-tag a generated workload across `n_adapters` registered adapters,
@@ -69,6 +76,21 @@ pub fn spread_adapters(reqs: &mut [LoadRequest], n_adapters: usize) {
     }
     for (i, r) in reqs.iter_mut().enumerate() {
         r.adapter = (i % n_adapters) as u32 + 1;
+    }
+}
+
+/// Re-tag a generated workload across `n_classes` priority classes,
+/// round-robin in arrival order (request i gets class `i % n_classes`).
+/// With `n_classes` 0 or 1 every request keeps class 0. Deterministic and
+/// draw-free, exactly like [`spread_adapters`], so the golden-replayed
+/// workload shape is untouched — the overload bench arm uses this to mix
+/// urgent and background traffic over one pinned arrival sequence.
+pub fn stripe_priorities(reqs: &mut [LoadRequest], n_classes: usize) {
+    if n_classes <= 1 {
+        return;
+    }
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.priority = (i % n_classes.min(256)) as u8;
     }
 }
 
@@ -95,6 +117,8 @@ pub fn generate_load(spec: &LoadSpec) -> Result<Vec<LoadRequest>> {
             prompt: task.sample(&mut rng, Split::Test).prompt,
             max_new: *rng.choose(&spec.max_new_mix),
             adapter: 0,
+            priority: 0,
+            deadline_ms: None,
         });
     }
     Ok(out)
@@ -196,6 +220,30 @@ mod tests {
         // zero adapters is the identity, not a panic
         spread_adapters(&mut reqs, 0);
         assert_eq!(reqs[0].adapter, 1);
+    }
+
+    #[test]
+    fn stripe_priorities_round_robins_without_touching_the_workload() {
+        let spec = LoadSpec { n_requests: 7, ..LoadSpec::default() };
+        let mut reqs = generate_load(&spec).unwrap();
+        assert!(reqs.iter().all(|r| r.priority == 0), "the generator never tags");
+        assert!(reqs.iter().all(|r| r.deadline_ms.is_none()));
+        let before: Vec<(f64, String, usize)> = reqs
+            .iter()
+            .map(|r| (r.arrival_secs, r.prompt.clone(), r.max_new))
+            .collect();
+        stripe_priorities(&mut reqs, 3);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.priority, (i % 3) as u8);
+        }
+        for (r, b) in reqs.iter().zip(&before) {
+            assert_eq!((r.arrival_secs, r.prompt.clone(), r.max_new), *b);
+        }
+        // one class (or zero) is the identity, not a panic
+        stripe_priorities(&mut reqs, 1);
+        assert_eq!(reqs[1].priority, 1);
+        stripe_priorities(&mut reqs, 0);
+        assert_eq!(reqs[2].priority, 2);
     }
 
     #[test]

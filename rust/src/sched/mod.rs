@@ -9,7 +9,10 @@
 //! request while new arrivals wait. The scheduler closes that gap with
 //! iteration-level scheduling:
 //!
-//! * [`scheduler::Scheduler`] — a FIFO wait queue plus a pool of decode
+//! * [`scheduler::Scheduler`] — a wait queue (FIFO by default; priority
+//!   classes with starvation-bounded aging when configured, plus
+//!   TTFT-deadline load shedding — every submit is one
+//!   [`request::RequestSpec`]) plus a pool of decode
 //!   slots (one [`crate::engine::KvCache`] row each). With the **paged**
 //!   cache (the default) the KV budget buys a shared block pool: all
 //!   `max_batch` slots exist and admission reserves each request's
@@ -52,7 +55,9 @@ pub mod request;
 pub mod scheduler;
 pub mod worker;
 
-pub use loadgen::{generate_load, spread_adapters, LoadRequest, LoadSpec};
-pub use request::{ChannelSink, FinishReason, RequestState, SchedResponse, StreamEvent, TokenSink};
+pub use loadgen::{generate_load, spread_adapters, stripe_priorities, LoadRequest, LoadSpec};
+pub use request::{
+    ChannelSink, FinishReason, RequestSpec, RequestState, SchedResponse, StreamEvent, TokenSink,
+};
 pub use scheduler::{SchedOptions, Scheduler, StepReport};
-pub use worker::{SchedWorker, WorkerClient, WorkerCommand, WorkerConfig, WorkerReport};
+pub use worker::{SchedWorker, SubmitError, WorkerClient, WorkerCommand, WorkerConfig, WorkerReport};

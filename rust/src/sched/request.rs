@@ -1,8 +1,89 @@
-//! Request-level types of the continuous-batching scheduler: lifecycle
-//! states, finish reasons, completed-request responses, and the streaming
-//! token sink a caller can attach to watch generations as they happen.
+//! Request-level types of the continuous-batching scheduler: the
+//! [`RequestSpec`] every submit consumes, lifecycle states, finish
+//! reasons, completed-request responses, and the streaming token sink a
+//! caller can attach to watch generations as they happen.
 
 use std::sync::mpsc;
+use std::time::Instant;
+
+/// Everything one submission carries — the single argument of
+/// [`crate::sched::Scheduler::submit`] and
+/// [`crate::sched::WorkerClient::submit`]. The old positional variants
+/// (`submit_for`, `submit_handoff`) collapsed into this: build with
+/// [`RequestSpec::new`] and chain the optional fields, so plain call
+/// sites stay one-liners:
+///
+/// ```ignore
+/// sched.submit(RequestSpec::new("1 + 2 =", 8))?;                   // defaults
+/// sched.submit(RequestSpec::new(p, n).adapter(2).priority(1))?;    // tagged
+/// ```
+///
+/// Defaults are the pre-redesign FIFO path exactly: adapter 0 (bare
+/// base), priority class 0, no TTFT deadline, arrival stamped inside
+/// submit — a scheduler configured with one priority class, no default
+/// deadline, and an unbounded submit queue is pinned bitwise identical
+/// to the old behavior (`tests/sched.rs` / `tests/sched_worker.rs`).
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub prompt: String,
+    /// token generation budget (0 finishes inside submit)
+    pub max_new: usize,
+    /// adapter id to serve with (0 = bare base)
+    pub adapter: u32,
+    /// priority class: 0 is most urgent, higher classes wait longer.
+    /// Must be below the scheduler's `priority_classes` knob (so with
+    /// the default single class, only 0 is accepted).
+    pub priority: u8,
+    /// TTFT SLO in milliseconds from arrival: if no first token can
+    /// possibly be produced by then, the scheduler sheds the request
+    /// before prefill ([`FinishReason::Shed`]). None = no deadline
+    /// (the scheduler may still apply its configured default).
+    pub deadline_ms: Option<u64>,
+    /// when the request entered the system (e.g. the worker's command
+    /// channel); None = stamped at submit. Deadlines and handoff timing
+    /// are measured from this instant.
+    pub enqueued_at: Option<Instant>,
+}
+
+impl RequestSpec {
+    pub fn new(prompt: impl Into<String>, max_new: usize) -> RequestSpec {
+        RequestSpec {
+            prompt: prompt.into(),
+            max_new,
+            adapter: 0,
+            priority: 0,
+            deadline_ms: None,
+            enqueued_at: None,
+        }
+    }
+
+    /// Serve with this adapter id (builder style; 0 = bare base).
+    pub fn adapter(mut self, adapter: u32) -> RequestSpec {
+        self.adapter = adapter;
+        self
+    }
+
+    /// Assign a priority class (builder style; 0 = most urgent).
+    pub fn priority(mut self, class: u8) -> RequestSpec {
+        self.priority = class;
+        self
+    }
+
+    /// Attach a TTFT deadline in milliseconds from arrival (builder
+    /// style). 0 is legal and always already blown — it sheds at submit.
+    pub fn deadline_ms(mut self, ms: u64) -> RequestSpec {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Backdate the arrival stamp (builder style) — the cross-thread
+    /// handoff path stamps channel entry here so queue-transport time
+    /// counts toward handoff stats and deadlines.
+    pub fn enqueued_at(mut self, at: Instant) -> RequestSpec {
+        self.enqueued_at = Some(at);
+        self
+    }
+}
 
 /// Where a request currently is in its life. The scheduler moves every
 /// request Queued → Prefilling → Decoding → Finished (or → Cancelled from
@@ -33,6 +114,10 @@ pub enum FinishReason {
     ContextCap,
     /// cancelled by the caller (queued or mid-decode)
     Cancelled,
+    /// load-shed before prefill: the request's TTFT deadline was already
+    /// unmeetable (blown at submit, or while waiting in the queue), so
+    /// the scheduler dropped it without ever touching the engine
+    Shed,
 }
 
 impl FinishReason {
@@ -44,6 +129,7 @@ impl FinishReason {
             FinishReason::MaxTokens => "max_tokens",
             FinishReason::ContextCap => "context_cap",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::Shed => "shed",
         }
     }
 }

@@ -4,8 +4,16 @@
 //!
 //! One [`Scheduler::step`] is one iteration of the serving loop:
 //!
-//! 1. **Admit** — waiting requests (FIFO) move into free decode slots,
-//!    as many as are open. With the **paged** KV cache (the default),
+//! 0. **Shed** — queued requests whose TTFT deadline is already blown
+//!    are dropped *before* any prefill compute is spent on them
+//!    ([`FinishReason::Shed`]); with the default no-deadline specs this
+//!    phase never fires and costs nothing.
+//! 1. **Admit** — waiting requests move into free decode slots, as many
+//!    as are open. With one priority class (the default) admission is
+//!    strictly FIFO — bitwise pinned against the pre-priority scheduler;
+//!    with more classes the most-urgent effective class wins each slot
+//!    (FIFO within a class, starvation bounded by step-count aging — see
+//!    [`SchedOptions::aging_steps`]). With the **paged** KV cache (the default),
 //!    the real resource is the shared block pool: slots are cheap
 //!    (`max_batch` of them exist) and a candidate is admitted when the
 //!    pool can cover its prompt plus decode horizon in blocks, *net of
@@ -41,7 +49,7 @@
 //! fairness).
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -53,7 +61,7 @@ use crate::obs::{ForwardPhase, Profiler, Tracer, Track};
 use crate::serve::metrics::SchedStats;
 use crate::serve::BucketPolicy;
 
-use super::request::{FinishReason, RequestState, SchedResponse, TokenSink};
+use super::request::{FinishReason, RequestSpec, RequestState, SchedResponse, TokenSink};
 
 /// Scheduler build knobs, in engine units. [`SchedConfig`] (the
 /// TOML/CLI-facing form) converts via [`SchedOptions::from_config`].
@@ -69,6 +77,24 @@ pub struct SchedOptions {
     pub kv_paged: bool,
     /// token positions per KV block (paged only)
     pub kv_block_size: usize,
+    /// admission priority classes. 1 (the default) is plain FIFO —
+    /// bitwise pinned against the pre-priority scheduler; N > 1 accepts
+    /// [`RequestSpec::priority`] in `0..N` and admits the most-urgent
+    /// effective class first, FIFO within a class
+    pub priority_classes: usize,
+    /// scheduler steps a waiting request sits before being promoted one
+    /// priority class (the anti-starvation aging rule): a class-p request
+    /// reaches class 0 after at most `p × aging_steps` steps. Not
+    /// TOML-exposed — tests tighten it to force promotion quickly
+    pub aging_steps: u64,
+    /// bounded worker submit-queue cap (0 = unbounded). The in-process
+    /// scheduler never rejects on depth — enforcement belongs to the
+    /// worker front end, which owns the submit channel; the knob rides
+    /// here so the TOML/CLI surface reaches it
+    pub submit_queue_cap: usize,
+    /// default TTFT deadline applied to specs that carry none
+    /// (None = requests without a deadline are never shed)
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Default for SchedOptions {
@@ -78,6 +104,10 @@ impl Default for SchedOptions {
             kv_budget_bytes: 1 << 30,
             kv_paged: true,
             kv_block_size: 16,
+            priority_classes: 1,
+            aging_steps: 16,
+            submit_queue_cap: 0,
+            default_deadline_ms: None,
         }
     }
 }
@@ -89,6 +119,11 @@ impl SchedOptions {
             kv_budget_bytes: cfg.kv_budget_mb << 20,
             kv_paged: cfg.kv_paged,
             kv_block_size: cfg.kv_block_size,
+            priority_classes: cfg.priority_classes,
+            submit_queue_cap: cfg.submit_queue_cap,
+            // TOML uses 0 for "no deadline" (tables can't carry None)
+            default_deadline_ms: (cfg.default_deadline_ms > 0).then_some(cfg.default_deadline_ms),
+            ..SchedOptions::default()
         }
     }
 }
@@ -101,6 +136,12 @@ struct Queued {
     /// adapter id to serve with (0 = bare base)
     adapter: u32,
     arrival: Instant,
+    /// priority class (0 = most urgent); always 0 with one class
+    priority: u8,
+    /// absolute TTFT deadline — blown means shed before prefill
+    deadline: Option<Instant>,
+    /// step counter at submit — aging promotes by steps waited since
+    submitted_step: u64,
 }
 
 /// A request occupying a decode slot. `slots[i]` owns cache row `i`.
@@ -139,6 +180,9 @@ pub struct StepReport {
     pub decoded_rows: usize,
     /// request ids whose slots were released at the end of this step
     pub finished: Vec<u64>,
+    /// request ids shed from the queue this step — their TTFT deadline
+    /// was already blown before prefill ([`FinishReason::Shed`])
+    pub shed: Vec<u64>,
     /// requests still waiting after admission
     pub queue_depth: usize,
     /// busy slots / total slots during this step's compute
@@ -184,6 +228,14 @@ pub struct Scheduler<'a> {
     /// checks candidates against (`pool_blocks - reserved_blocks` is the
     /// unpromised pool, regardless of how much is physically allocated)
     reserved_blocks: usize,
+    /// admission priority classes (1 = plain FIFO, the pinned default)
+    priority_classes: usize,
+    /// steps waited per one-class aging promotion (≥ 1)
+    aging_steps: u64,
+    /// worker submit-queue cap carried from [`SchedOptions`] (0 = unbounded)
+    submit_queue_cap: usize,
+    /// default TTFT deadline for specs that carry none
+    default_deadline_ms: Option<u64>,
 }
 
 fn secs(from: Instant, to: Instant) -> f64 {
@@ -258,6 +310,10 @@ impl<'a> Scheduler<'a> {
             block_size,
             pool_blocks,
             reserved_blocks: 0,
+            priority_classes: opts.priority_classes.max(1),
+            aging_steps: opts.aging_steps.max(1),
+            submit_queue_cap: opts.submit_queue_cap,
+            default_deadline_ms: opts.default_deadline_ms,
         })
     }
 
@@ -357,17 +413,6 @@ impl<'a> Scheduler<'a> {
         })
     }
 
-    /// Submit a prompt for up to `max_new` generated tokens; returns the
-    /// request id. Framing errors (prompt + generation over the context)
-    /// surface here, before the request ever queues — as does a paged
-    /// request whose horizon exceeds the whole block pool, which no
-    /// amount of waiting could ever admit. A zero-token request completes
-    /// immediately without consuming any forward — the same contract as
-    /// the one-shot decode.
-    pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
-        self.submit_for(prompt, max_new, 0)
-    }
-
     /// The id the next successful submit will return. Submission errors
     /// (framing, unknown adapter, over-pool horizon) consume no id, so a
     /// cross-thread front end can register a stream under this id
@@ -377,48 +422,49 @@ impl<'a> Scheduler<'a> {
         self.next_id
     }
 
-    /// [`Scheduler::submit_for`] for requests handed over from another
-    /// thread: `enqueued_at` is the instant the request entered the
-    /// command channel. The single `Instant::now()` taken here closes the
-    /// cross-thread "handoff" span *and* stamps the request's arrival —
-    /// one clock, so queue-wait/TTFT include the handoff exactly once and
-    /// trace spans butt against each other with no gap or overlap.
-    /// Handoff time lands in [`SchedStats::handoff_ms`], which isolates
-    /// channel overhead from compute in `bench_serve_load`.
-    pub fn submit_handoff(
-        &mut self,
-        prompt: &str,
-        max_new: usize,
-        adapter: u32,
-        enqueued_at: Instant,
-    ) -> Result<u64> {
-        self.submit_inner(prompt, max_new, adapter, Some(enqueued_at))
-    }
-
-    /// [`Scheduler::submit`] against a named ternary adapter: `adapter`
-    /// is 0 for the bare base or the 1-based id
-    /// [`Engine::register_adapter`] returned. The scheduler freely mixes
-    /// requests for different adapters in one step — the per-row grid
-    /// deltas keep every mixed batch bit-identical to serving each
-    /// adapter's merged checkpoint alone (`tests/adapters.rs` pins it).
-    pub fn submit_for(&mut self, prompt: &str, max_new: usize, adapter: u32) -> Result<u64> {
-        self.submit_inner(prompt, max_new, adapter, None)
-    }
-
-    fn submit_inner(
-        &mut self,
-        prompt: &str,
-        max_new: usize,
-        adapter: u32,
-        enqueued_at: Option<Instant>,
-    ) -> Result<u64> {
+    /// Submit one [`RequestSpec`]; returns the request id. This is the
+    /// whole submit surface — adapter, priority class, TTFT deadline, and
+    /// the cross-thread arrival stamp all ride the spec, and a default
+    /// spec ([`RequestSpec::new`]) is exactly the pre-redesign FIFO path.
+    ///
+    /// Framing errors (prompt + generation over the context) surface
+    /// here, before the request ever queues — as do an unknown adapter
+    /// id, a priority class at or above the configured count, and a paged
+    /// request whose horizon exceeds the whole block pool, which no
+    /// amount of waiting could ever admit. A zero-token request completes
+    /// immediately without consuming any forward — the same contract as
+    /// the one-shot decode. A request whose deadline is already blown on
+    /// arrival completes immediately too, as [`FinishReason::Shed`],
+    /// without ever queueing.
+    ///
+    /// For specs stamped with [`RequestSpec::enqueued_at`] (the worker's
+    /// channel-entry instant), the single `Instant::now()` taken here
+    /// closes the cross-thread "handoff" span *and* stamps the request's
+    /// arrival — one clock, so queue-wait/TTFT include the handoff
+    /// exactly once and trace spans butt against each other with no gap
+    /// or overlap. Handoff time lands in [`SchedStats::handoff_ms`],
+    /// which isolates channel overhead from compute in `bench_serve_load`.
+    ///
+    /// Adapter requests (`spec.adapter` = the 1-based id
+    /// [`Engine::register_adapter`] returned; 0 = bare base) mix freely
+    /// in one step — the per-row grid deltas keep every mixed batch
+    /// bit-identical to serving each adapter's merged checkpoint alone
+    /// (`tests/adapters.rs` pins it).
+    pub fn submit(&mut self, spec: RequestSpec) -> Result<u64> {
+        let RequestSpec { prompt, max_new, adapter, priority, deadline_ms, enqueued_at } = spec;
         if adapter as usize > self.engine.adapter_count() {
             bail!(
                 "adapter id {adapter} is not registered (engine serves {} adapters)",
                 self.engine.adapter_count()
             );
         }
-        let (frame, _cursor) = decode::frame_prompt(self.engine.config(), prompt, max_new)?;
+        if priority as usize >= self.priority_classes {
+            bail!(
+                "priority class {priority} is out of range (scheduler runs {} classes)",
+                self.priority_classes
+            );
+        }
+        let (frame, _cursor) = decode::frame_prompt(self.engine.config(), &prompt, max_new)?;
         // zero-token requests complete below without ever touching the
         // cache, so only real generations are held to the pool bound
         if let (Some(bs), true) = (self.block_size, max_new > 0) {
@@ -441,6 +487,12 @@ impl<'a> Scheduler<'a> {
         if let Some(from) = enqueued_at {
             self.stats.handoff_ms.record(1e3 * secs(from, arrival));
         }
+        // the TTFT deadline runs from system entry — channel entry for
+        // handed-off requests — so worker transport time counts against
+        // the SLO, exactly like it counts in queue-wait/TTFT stats
+        let deadline = deadline_ms
+            .or(self.default_deadline_ms)
+            .map(|ms| enqueued_at.unwrap_or(arrival) + Duration::from_millis(ms));
         if max_new == 0 {
             if let Some(tr) = self.tracer.as_mut() {
                 // a zero-length span: the request existed but never queued
@@ -467,6 +519,40 @@ impl<'a> Scheduler<'a> {
             self.emit_finish(resp);
             return Ok(id);
         }
+        // deadline already blown on arrival (deadline_ms 0, or handoff
+        // ate the whole budget): shed before the request ever queues —
+        // no engine work, no cache row, no id consumed beyond this one.
+        // Reuses `arrival`, the one Instant this call took.
+        if deadline.is_some_and(|dl| arrival >= dl) {
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.begin(Track::Request(id), "request", enqueued_at.unwrap_or(arrival));
+                if adapter > 0 {
+                    tr.counter(Track::Request(id), "adapter_id", adapter as f64, arrival);
+                }
+                if let Some(from) = enqueued_at {
+                    tr.begin(Track::Request(id), "handoff", from);
+                    tr.end(Track::Request(id), "handoff", arrival);
+                }
+                // a zero-length shed span marks the drop decision
+                tr.begin(Track::Request(id), "shed", arrival);
+                tr.end(Track::Request(id), "shed", arrival);
+                tr.end(Track::Request(id), "request", arrival);
+            }
+            self.stats.shed_at_submit += 1;
+            let wait = enqueued_at.map_or(0.0, |from| secs(from, arrival));
+            let resp = SchedResponse {
+                id,
+                adapter,
+                text: String::new(),
+                tokens: 0,
+                reason: FinishReason::Shed,
+                queue_wait_secs: wait,
+                ttft_secs: None,
+                latency_secs: wait,
+            };
+            self.emit_finish(resp);
+            return Ok(id);
+        }
         if let Some(tr) = self.tracer.as_mut() {
             // the request track opens at channel-entry time for handed-off
             // requests, so the handoff span nests inside it
@@ -483,8 +569,85 @@ impl<'a> Scheduler<'a> {
             }
             tr.begin(Track::Request(id), "queued", arrival);
         }
-        self.queue.push_back(Queued { id, frame, max_new, adapter, arrival });
+        self.queue.push_back(Queued {
+            id,
+            frame,
+            max_new,
+            adapter,
+            arrival,
+            priority,
+            deadline,
+            submitted_step: self.step_no,
+        });
         Ok(id)
+    }
+
+    /// Count one bounded-submit-queue rejection. The worker front end
+    /// owns the cap (it rejects before the spec ever reaches this
+    /// scheduler), but the count lives here so [`SchedStats`] — and
+    /// everything derived from it: the metrics registry, bench reports —
+    /// reconciles exactly with the transport's 503 responses.
+    pub fn note_queue_rejected(&mut self) {
+        self.stats.queue_rejected += 1;
+    }
+
+    /// Bounded worker submit-queue cap this scheduler was configured
+    /// with (0 = unbounded). Read by the worker front end at submit time.
+    pub fn submit_queue_cap(&self) -> usize {
+        self.submit_queue_cap
+    }
+
+    /// Back-off hint in whole seconds for a rejected submit — the
+    /// `Retry-After` value the HTTP front end returns with a queue-full
+    /// 503. Estimates time-to-drain as queue depth × observed per-request
+    /// service time (mean queue wait, falling back to mean handoff when
+    /// nothing was admitted yet), clamped to [1, 30] so a cold scheduler
+    /// still answers something sane.
+    pub fn retry_after_hint_secs(&self) -> u64 {
+        let (wait, hand) = (&self.stats.queue_wait_ms, &self.stats.handoff_ms);
+        let per_req_ms = if !wait.is_empty() {
+            wait.sum() / wait.len() as f64
+        } else if !hand.is_empty() {
+            hand.sum() / hand.len() as f64
+        } else {
+            1.0
+        }
+        .max(1.0);
+        let est = (self.queue.len() as f64 * per_req_ms / 1e3).ceil() as u64;
+        est.clamp(1, 30)
+    }
+
+    /// A queued request's class after aging: one class of promotion per
+    /// [`SchedOptions::aging_steps`] scheduler steps waited, saturating
+    /// at 0 — so a class-p request outranks fresh class-0 arrivals after
+    /// at most `p × aging_steps` steps. That product is the starvation
+    /// bound.
+    fn effective_class(&self, q: &Queued) -> u8 {
+        let waited = self.step_no.saturating_sub(q.submitted_step);
+        let promoted = (waited / self.aging_steps).min(u8::MAX as u64) as u8;
+        q.priority.saturating_sub(promoted)
+    }
+
+    /// Index of the next admission candidate: the queued request with
+    /// the lowest (most urgent) effective class, FIFO within a class —
+    /// the strict `<` keeps the earliest index on ties, and queue order
+    /// is submission order, so equal priorities admit exactly FIFO. With
+    /// one priority class every effective class is 0 and this is always
+    /// index 0: the pre-priority front-of-queue scan, bitwise.
+    fn pick_candidate(&self) -> usize {
+        if self.priority_classes == 1 {
+            return 0;
+        }
+        let mut best = 0;
+        let mut best_class = self.effective_class(&self.queue[0]);
+        for i in 1..self.queue.len() {
+            let class = self.effective_class(&self.queue[i]);
+            if class < best_class {
+                best = i;
+                best_class = class;
+            }
+        }
+        best
     }
 
     /// Cancel request `id`. A queued request leaves the queue; an
@@ -548,6 +711,41 @@ impl<'a> Scheduler<'a> {
             tr.begin(Track::Scheduler, "admission", t_step);
         }
 
+        // 0. deadline shedding: drop every queued request whose TTFT
+        // deadline is already behind the step clock *before* spending any
+        // prefill compute on it. Reuses `t_step` — the Instant this step
+        // already took — so no-deadline workloads (the default) see no
+        // extra clock reads and the sweep is a single cheap scan.
+        let mut qi = 0;
+        while qi < self.queue.len() {
+            if self.queue[qi].deadline.is_some_and(|dl| t_step >= dl) {
+                let q = self.queue.remove(qi).expect("index came from the scan");
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.end(Track::Request(q.id), "queued", t_step);
+                    // a zero-length shed span marks the drop decision
+                    tr.begin(Track::Request(q.id), "shed", t_step);
+                    tr.end(Track::Request(q.id), "shed", t_step);
+                    tr.end(Track::Request(q.id), "request", t_step);
+                }
+                self.stats.shed_in_queue += 1;
+                report.shed.push(q.id);
+                let wait = secs(q.arrival, t_step);
+                let resp = SchedResponse {
+                    id: q.id,
+                    adapter: q.adapter,
+                    text: String::new(),
+                    tokens: 0,
+                    reason: FinishReason::Shed,
+                    queue_wait_secs: wait,
+                    ttft_secs: None,
+                    latency_secs: wait,
+                };
+                self.emit_finish(resp);
+            } else {
+                qi += 1;
+            }
+        }
+
         // 1. admission: FIFO into free slots. Slots freed by last step's
         // finishes (or a cancel since) are handed out here, mid-batch.
         // Paged admission additionally requires the block pool to cover
@@ -571,7 +769,17 @@ impl<'a> Scheduler<'a> {
             .map(|(si, _)| si)
             .collect();
         for si in free_slots {
-            let Some(front) = self.queue.front() else { break };
+            if self.queue.is_empty() {
+                break;
+            }
+            // with one priority class this is always index 0 — the exact
+            // front-of-queue scan the pre-priority scheduler ran, so the
+            // bitwise FIFO pin holds. Denial of the *picked* candidate
+            // still stops the whole scan (no skip-ahead): the wave pad
+            // math couples candidates, and skipping would let a short
+            // request starve a long one's reservation.
+            let ci = self.pick_candidate();
+            let front = &self.queue[ci];
             let reserve = if let Some(bs) = self.block_size {
                 let (q_len, q_max_new) = (front.frame.len(), front.max_new);
                 let q_horizon = (q_len + q_max_new).div_ceil(bs);
@@ -594,7 +802,7 @@ impl<'a> Scheduler<'a> {
             } else {
                 0
             };
-            let q = self.queue.pop_front().expect("front() checked");
+            let q = self.queue.remove(ci).expect("pick_candidate() is in range");
             let now = Instant::now();
             if let Some(tr) = self.tracer.as_mut() {
                 // the queued→prefill handoff shares one Instant with the
@@ -919,7 +1127,7 @@ mod tests {
     }
 
     fn contiguous(max_batch: usize, kv_budget_bytes: usize) -> SchedOptions {
-        SchedOptions { max_batch, kv_budget_bytes, kv_paged: false, kv_block_size: 16 }
+        SchedOptions { max_batch, kv_budget_bytes, kv_paged: false, ..SchedOptions::default() }
     }
 
     #[test]
@@ -952,12 +1160,7 @@ mod tests {
         let budget = 3 * engine.cache_row_bytes();
         let s = Scheduler::new(
             &engine,
-            &SchedOptions {
-                max_batch: 8,
-                kv_budget_bytes: budget,
-                kv_paged: true,
-                kv_block_size: 16,
-            },
+            &SchedOptions { max_batch: 8, kv_budget_bytes: budget, ..SchedOptions::default() },
         )
         .unwrap();
         assert!(s.kv_paged());
@@ -993,14 +1196,13 @@ mod tests {
         let tight = SchedOptions {
             max_batch: 4,
             kv_budget_bytes: 2 * engine.kv_block_bytes(16),
-            kv_paged: true,
-            kv_block_size: 16,
+            ..SchedOptions::default()
         };
         let mut s = Scheduler::new(&engine, &tight).unwrap();
         assert_eq!(s.block_pool(), Some((2, 2)));
         let mut ids = Vec::new();
         for i in 0..4 {
-            ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+            ids.push(s.submit(RequestSpec::new(format!("{i} + 1 ="), 4)).unwrap());
         }
         let report = s.step().unwrap();
         assert_eq!(report.admitted.len(), 2, "pool of 2 blocks admitted {report:?}");
@@ -1025,16 +1227,15 @@ mod tests {
         let tight = SchedOptions {
             max_batch: 2,
             kv_budget_bytes: 3 * engine.kv_block_bytes(16),
-            kv_paged: true,
-            kv_block_size: 16,
+            ..SchedOptions::default()
         };
         let mut s = Scheduler::new(&engine, &tight).unwrap();
         // ~9 frame tokens + 100 generated needs 7 blocks > pool of 3: no
         // amount of waiting could admit this — refuse at submit
-        assert!(s.submit("1 + 1 =", 100).is_err());
+        assert!(s.submit(RequestSpec::new("1 + 1 =", 100)).is_err());
         assert!(s.is_idle());
         // a fitting request on the same scheduler still serves
-        let id = s.submit("1 + 1 =", 4).unwrap();
+        let id = s.submit(RequestSpec::new("1 + 1 =", 4)).unwrap();
         s.run_until_idle().unwrap();
         assert_eq!(s.take_finished()[0].id, id);
     }
@@ -1045,7 +1246,7 @@ mod tests {
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
         let mut ids = Vec::new();
         for i in 0..5 {
-            ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+            ids.push(s.submit(RequestSpec::new(format!("{i} + 1 ="), 4)).unwrap());
         }
         assert_eq!(s.queue_depth(), 5);
         s.run_until_idle().unwrap();
@@ -1068,7 +1269,7 @@ mod tests {
     fn zero_max_new_completes_without_forwards() {
         let engine = tiny_engine(3);
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
-        let id = s.submit("1 + 1 =", 0).unwrap();
+        let id = s.submit(RequestSpec::new("1 + 1 =", 0)).unwrap();
         assert!(s.is_idle(), "zero-token request should never queue");
         let done = s.take_finished();
         assert_eq!(done.len(), 1);
@@ -1082,7 +1283,7 @@ mod tests {
         let engine = tiny_engine(4);
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
         let long = "1 + 2 = ".repeat(32);
-        assert!(s.submit(&long, 8).is_err());
+        assert!(s.submit(RequestSpec::new(long, 8)).is_err());
         assert!(s.is_idle());
     }
 
@@ -1102,8 +1303,161 @@ mod tests {
         let engine = tiny_engine(6);
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
         assert!(!s.cancel(99));
-        let id = s.submit("1 + 1 =", 2).unwrap();
+        let id = s.submit(RequestSpec::new("1 + 1 =", 2)).unwrap();
         assert!(s.cancel(id));
         assert!(!s.cancel(id), "double cancel must be refused");
+    }
+
+    #[test]
+    fn priority_out_of_range_is_refused_at_submit() {
+        let engine = tiny_engine(15);
+        // default options run one class: only priority 0 is legal
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        assert!(s.submit(RequestSpec::new("1 + 1 =", 2).priority(1)).is_err());
+        assert!(s.is_idle());
+        assert_eq!(s.next_request_id(), 0, "refused submits consume no id");
+    }
+
+    #[test]
+    fn priority_classes_admit_most_urgent_first() {
+        let engine = tiny_engine(10);
+        let o = SchedOptions { max_batch: 1, priority_classes: 3, ..SchedOptions::default() };
+        let mut s = Scheduler::new(&engine, &o).unwrap();
+        let low = s.submit(RequestSpec::new("1 + 1 =", 1).priority(2)).unwrap();
+        let hi = s.submit(RequestSpec::new("2 + 1 =", 1).priority(0)).unwrap();
+        // class 0 jumps the earlier class-2 submission for the one slot
+        let r1 = s.step().unwrap();
+        assert_eq!(r1.admitted, vec![hi]);
+        let r2 = s.step().unwrap();
+        assert_eq!(r2.admitted, vec![low]);
+        s.run_until_idle().unwrap();
+        assert_eq!(s.take_finished().len(), 2);
+    }
+
+    #[test]
+    fn equal_priorities_admit_exactly_fifo() {
+        let engine = tiny_engine(10);
+        // multiple classes enabled, but every request lands in class 1:
+        // the tiebreak must be submission order
+        let o = SchedOptions { max_batch: 1, priority_classes: 3, ..SchedOptions::default() };
+        let mut s = Scheduler::new(&engine, &o).unwrap();
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            ids.push(s.submit(RequestSpec::new(format!("{i} + 1 ="), 1).priority(1)).unwrap());
+        }
+        let mut admitted = Vec::new();
+        while !s.is_idle() {
+            admitted.extend(s.step().unwrap().admitted);
+        }
+        assert_eq!(admitted, ids, "equal-priority admission must stay FIFO");
+    }
+
+    #[test]
+    fn aging_promotes_a_starved_low_priority_request() {
+        let engine = tiny_engine(11);
+        let o = SchedOptions {
+            max_batch: 1,
+            priority_classes: 2,
+            aging_steps: 2,
+            ..SchedOptions::default()
+        };
+        let mut s = Scheduler::new(&engine, &o).unwrap();
+        let low = s.submit(RequestSpec::new("1 + 1 =", 1).priority(1)).unwrap();
+        // a steady influx of fresh class-0 work would starve the class-1
+        // request forever under pure priority order; aging promotes it
+        // one class after aging_steps steps, and the FIFO tiebreak (it
+        // queued first) then wins it the slot
+        let hi0 = s.submit(RequestSpec::new("7 + 2 =", 1)).unwrap();
+        let r1 = s.step().unwrap();
+        assert_eq!(r1.admitted, vec![hi0], "fresh class 0 wins before aging");
+        let hi1 = s.submit(RequestSpec::new("8 + 2 =", 1)).unwrap();
+        let r2 = s.step().unwrap();
+        assert_eq!(r2.admitted, vec![low], "after aging_steps the starved request is promoted");
+        let r3 = s.step().unwrap();
+        assert_eq!(r3.admitted, vec![hi1]);
+        s.run_until_idle().unwrap();
+        assert_eq!(s.take_finished().len(), 3);
+    }
+
+    #[test]
+    fn blown_deadline_sheds_at_submit_without_touching_the_engine() {
+        let engine = tiny_engine(12);
+        let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
+        // deadline_ms(0) is already blown at arrival by construction
+        let id = s.submit(RequestSpec::new("1 + 1 =", 4).deadline_ms(0)).unwrap();
+        assert!(s.is_idle(), "a shed request must never queue");
+        let done = s.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id);
+        assert_eq!(done[0].reason, FinishReason::Shed);
+        assert_eq!(done[0].tokens, 0);
+        assert_eq!(s.decode_stats(), DecodeStats::default(), "no forward ran");
+        assert_eq!(s.sched_stats().shed_at_submit, 1);
+        assert_eq!(s.sched_stats().shed_in_queue, 0);
+    }
+
+    #[test]
+    fn queued_request_past_deadline_is_shed_before_prefill() {
+        let engine = tiny_engine(13);
+        let o = SchedOptions { max_batch: 1, ..SchedOptions::default() };
+        let mut s = Scheduler::new(&engine, &o).unwrap();
+        let blocker = s.submit(RequestSpec::new("1 + 1 =", 4)).unwrap();
+        let victim = s.submit(RequestSpec::new("2 + 2 =", 4).deadline_ms(1)).unwrap();
+        let r1 = s.step().unwrap();
+        assert_eq!(r1.admitted, vec![blocker], "the one slot goes to the blocker");
+        std::thread::sleep(Duration::from_millis(5));
+        let forwards_before = s.decode_stats().forwards;
+        let r2 = s.step().unwrap();
+        assert_eq!(r2.shed, vec![victim], "the blown deadline sheds at step start");
+        s.run_until_idle().unwrap();
+        let done = s.take_finished();
+        let v = done.iter().find(|r| r.id == victim).unwrap();
+        assert_eq!(v.reason, FinishReason::Shed);
+        assert_eq!(v.tokens, 0, "shed requests never prefill");
+        assert_eq!(s.sched_stats().shed_in_queue, 1);
+        assert!(
+            s.decode_stats().forwards > forwards_before,
+            "the blocker kept decoding — shedding only touched the queue"
+        );
+    }
+
+    #[test]
+    fn cancel_vs_shed_race_resolves_to_whichever_ran_first() {
+        let engine = tiny_engine(14);
+        let o = SchedOptions { max_batch: 1, ..SchedOptions::default() };
+        let mut s = Scheduler::new(&engine, &o).unwrap();
+        let blocker = s.submit(RequestSpec::new("1 + 1 =", 2)).unwrap();
+        let victim = s.submit(RequestSpec::new("2 + 2 =", 4).deadline_ms(1)).unwrap();
+        s.step().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // cancel lands first: the blown deadline never gets a say
+        assert!(s.cancel(victim));
+        let r = s.step().unwrap();
+        assert!(r.shed.is_empty());
+        assert_eq!(s.sched_stats().shed_in_queue, 0);
+        // shed lands first: the late cancel finds nothing to cancel
+        let victim2 = s.submit(RequestSpec::new("3 + 3 =", 4).deadline_ms(1)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let r = s.step().unwrap();
+        assert_eq!(r.shed, vec![victim2]);
+        assert!(!s.cancel(victim2), "shed already completed the request");
+        s.run_until_idle().unwrap();
+        let done = s.take_finished();
+        assert_eq!(done.iter().find(|r| r.id == victim).unwrap().reason, FinishReason::Cancelled);
+        assert_eq!(done.iter().find(|r| r.id == victim2).unwrap().reason, FinishReason::Shed);
+        assert!(done.iter().any(|r| r.id == blocker));
+    }
+
+    #[test]
+    fn retry_after_hint_is_clamped_and_scales_with_depth() {
+        let engine = tiny_engine(16);
+        let mut s = Scheduler::new(&engine, &opts(1)).unwrap();
+        // cold and empty: still answers the 1-second floor
+        assert_eq!(s.retry_after_hint_secs(), 1);
+        for i in 0..3 {
+            s.submit(RequestSpec::new(format!("{i} + 1 ="), 2)).unwrap();
+        }
+        let hint = s.retry_after_hint_secs();
+        assert!((1..=30).contains(&hint), "hint {hint} escaped its clamp");
     }
 }

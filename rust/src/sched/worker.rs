@@ -13,11 +13,18 @@
 //!   the [`Scheduler`] there (construction errors surface synchronously
 //!   through a ready-channel), and returns a handle whose
 //!   [`WorkerClient`]s are cheap, cloneable, `Send` submit/cancel ports.
-//! * Every submit carries its channel-entry `Instant`; the scheduler
-//!   stamps arrival with the **same** `Instant::now()` that closes the
-//!   cross-thread handoff ([`Scheduler::submit_handoff`]) — one clock,
-//!   no gap, and the handoff cost lands in `SchedStats::handoff_ms`
-//!   isolated from compute.
+//! * Every submit is one [`RequestSpec`], stamped with its channel-entry
+//!   `Instant` ([`RequestSpec::enqueued_at`]); the scheduler stamps
+//!   arrival with the **same** `Instant::now()` that closes the
+//!   cross-thread handoff — one clock, no gap, and the handoff cost
+//!   lands in `SchedStats::handoff_ms` isolated from compute.
+//! * Overload control: with a bounded submit queue
+//!   ([`SchedOptions::submit_queue_cap`] > 0) the worker rejects a
+//!   submit *before* it reaches the scheduler whenever the wait queue is
+//!   at cap, replying [`SubmitError::QueueFull`] with a back-off hint —
+//!   the HTTP front end turns that into `503` + `Retry-After`. Rejections
+//!   are counted in `SchedStats::queue_rejected` so transport responses
+//!   and scheduler stats reconcile exactly.
 //! * Per-request streaming: a submit may attach an `mpsc::Sender`; the
 //!   worker routes that request's [`StreamEvent`]s (every token, then
 //!   the final [`SchedResponse`]) to it. The stream is registered under
@@ -30,7 +37,7 @@
 //!   runs until every in-flight row has finished before the thread
 //!   returns its [`WorkerReport`].
 //!
-//! Because the worker only ever calls the same `submit_*`/`cancel`/
+//! Because the worker only ever calls the same `submit`/`cancel`/
 //! `step` methods a synchronous driver would, scheduled output through
 //! the channel is **bitwise identical** to the in-process step loop —
 //! `tests/sched_worker.rs` pins it per request against
@@ -48,8 +55,45 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::engine::{DecodeStats, Engine};
 use crate::serve::SchedStats;
 
-use super::request::{SchedResponse, StreamEvent, TokenSink};
+use super::request::{RequestSpec, SchedResponse, StreamEvent, TokenSink};
 use super::scheduler::{SchedOptions, Scheduler};
+
+/// Why a submit was refused, as a typed value the transport can route
+/// on: the two 503-worthy causes (draining vs. queue-full) need distinct
+/// wire responses, and string-matching error text is how that used to be
+/// told apart. Crosses the reply channel as-is and rides
+/// [`anyhow::Error`] out of [`WorkerClient::submit`], so front ends
+/// `downcast_ref::<SubmitError>()` instead of grepping messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the worker is shutting down — retrying this server is pointless
+    Draining,
+    /// the bounded submit queue is at cap — retry after the hint
+    QueueFull {
+        /// the configured [`SchedOptions::submit_queue_cap`]
+        cap: usize,
+        /// scheduler's drain estimate, the HTTP `Retry-After` value
+        retry_after_secs: u64,
+    },
+    /// the scheduler refused the spec itself (framing, unknown adapter,
+    /// out-of-range priority, over-pool horizon) — not retriable as-is
+    Rejected(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Draining => write!(f, "worker is shutting down"),
+            SubmitError::QueueFull { cap, retry_after_secs } => write!(
+                f,
+                "submit queue is full (cap {cap}): retry after ~{retry_after_secs}s"
+            ),
+            SubmitError::Rejected(msg) => write!(f, "submit rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Observability outputs the worker writes at drain time. Tracer and
 /// profiler live on the worker thread (the recording tracer is not
@@ -70,20 +114,17 @@ pub struct WorkerConfig {
 /// enum is public so transports can own their reply plumbing.
 pub enum WorkerCommand {
     Submit {
-        prompt: String,
-        max_new: usize,
-        /// adapter id (0 = bare base)
-        adapter: u32,
-        /// when the command entered the channel — the handoff clock start
-        enqueued_at: Instant,
+        /// the whole request — prompt, budget, adapter, priority class,
+        /// TTFT deadline, and the channel-entry stamp
+        /// ([`RequestSpec::enqueued_at`], the handoff clock start; the
+        /// client fills it at command build if the caller didn't)
+        spec: RequestSpec,
         /// per-request stream; every token of this request and its final
         /// response are sent here (send errors ignored: a dead listener
         /// never stalls the batch)
         stream: Option<Sender<StreamEvent>>,
-        /// the assigned request id, or the submission error rendered to a
-        /// string (channel replies must be `Send`; `anyhow::Error` is,
-        /// but the string keeps the protocol trivially serializable)
-        reply: Sender<Result<u64, String>>,
+        /// the assigned request id, or the typed refusal
+        reply: Sender<std::result::Result<u64, SubmitError>>,
     },
     Cancel {
         id: u64,
@@ -150,58 +191,41 @@ pub struct WorkerClient {
 }
 
 impl WorkerClient {
-    /// Submit and wait for the id assignment (the request itself runs
-    /// asynchronously; this round-trip only covers the handoff).
-    pub fn submit(&self, prompt: &str, max_new: usize) -> Result<u64> {
-        self.submit_for(prompt, max_new, 0)
+    /// Submit one [`RequestSpec`] and wait for the id assignment (the
+    /// request itself runs asynchronously; this round-trip only covers
+    /// the handoff). The spec's `enqueued_at` is stamped here, at channel
+    /// entry, unless the caller already stamped an earlier instant.
+    /// Refusals — draining, bounded queue at cap, or a spec the
+    /// scheduler rejects — come back as a [`SubmitError`] inside the
+    /// `anyhow::Error`, so transports can `downcast_ref` and route.
+    pub fn submit(&self, spec: RequestSpec) -> Result<u64> {
+        self.submit_cmd(spec, None)
     }
 
-    /// [`WorkerClient::submit`] against a named adapter id.
-    pub fn submit_for(&self, prompt: &str, max_new: usize, adapter: u32) -> Result<u64> {
-        self.submit_inner(prompt, max_new, adapter, None)
-    }
-
-    /// Submit with a per-request stream: the returned receiver yields one
-    /// [`StreamEvent::Token`] per generated token and ends with the
-    /// [`StreamEvent::Finish`] response (already delivered for requests
-    /// that complete inside the submit itself, e.g. `max_new = 0`).
-    pub fn submit_streaming(
-        &self,
-        prompt: &str,
-        max_new: usize,
-        adapter: u32,
-    ) -> Result<(u64, Receiver<StreamEvent>)> {
+    /// [`WorkerClient::submit`] with a per-request stream: the returned
+    /// receiver yields one [`StreamEvent::Token`] per generated token and
+    /// ends with the [`StreamEvent::Finish`] response (already delivered
+    /// for requests that complete inside the submit itself — `max_new =
+    /// 0`, or a deadline blown on arrival).
+    pub fn submit_streaming(&self, spec: RequestSpec) -> Result<(u64, Receiver<StreamEvent>)> {
         let (stream_tx, stream_rx) = mpsc::channel();
-        let id = self.submit_inner(prompt, max_new, adapter, Some(stream_tx))?;
+        let id = self.submit_cmd(spec, Some(stream_tx))?;
         Ok((id, stream_rx))
     }
 
-    fn submit_inner(
-        &self,
-        prompt: &str,
-        max_new: usize,
-        adapter: u32,
-        stream: Option<Sender<StreamEvent>>,
-    ) -> Result<u64> {
+    fn submit_cmd(&self, mut spec: RequestSpec, stream: Option<Sender<StreamEvent>>) -> Result<u64> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        let cmd = WorkerCommand::Submit {
-            prompt: prompt.to_string(),
-            max_new,
-            adapter,
-            enqueued_at: Instant::now(),
-            stream,
-            reply: reply_tx,
-        };
+        if spec.enqueued_at.is_none() {
+            spec.enqueued_at = Some(Instant::now());
+        }
+        let cmd = WorkerCommand::Submit { spec, stream, reply: reply_tx };
         self.tx
             .send(cmd)
             .map_err(|_| anyhow!("scheduler worker is gone (already shut down)"))?;
         let assigned = reply_rx
             .recv()
             .map_err(|_| anyhow!("scheduler worker dropped the submit reply"))?;
-        match assigned {
-            Ok(id) => Ok(id),
-            Err(msg) => bail!("submit rejected: {msg}"),
-        }
+        assigned.map_err(anyhow::Error::new)
     }
 
     /// Cancel request `id` (queued or in-flight). False for unknown /
@@ -304,18 +328,32 @@ fn worker_main(
         draining: &mut bool,
     ) {
         match cmd {
-            WorkerCommand::Submit { prompt, max_new, adapter, enqueued_at, stream, reply } => {
+            WorkerCommand::Submit { spec, stream, reply } => {
                 if *draining {
-                    let _ = reply.send(Err("worker is shutting down".to_string()));
+                    let _ = reply.send(Err(SubmitError::Draining));
+                    return;
+                }
+                // bounded-queue admission control runs before the
+                // scheduler ever sees the spec: at cap, the request is
+                // rejected with a drain-time hint and counted, so the
+                // transport's 503s reconcile with SchedStats exactly
+                let cap = sched.submit_queue_cap();
+                if cap > 0 && sched.queue_depth() >= cap {
+                    sched.note_queue_rejected();
+                    let _ = reply.send(Err(SubmitError::QueueFull {
+                        cap,
+                        retry_after_secs: sched.retry_after_hint_secs(),
+                    }));
                     return;
                 }
                 // register the stream under the id the submit *will*
-                // assign — zero-max_new requests finish inside the call
+                // assign — zero-max_new and shed-on-arrival requests
+                // finish inside the call
                 let predicted = sched.next_request_id();
                 if let Some(tx) = stream {
                     router.register(predicted, tx);
                 }
-                match sched.submit_handoff(&prompt, max_new, adapter, enqueued_at) {
+                match sched.submit(spec) {
                     Ok(id) => {
                         debug_assert_eq!(id, predicted);
                         let _ = reply.send(Ok(id));
@@ -324,7 +362,7 @@ fn worker_main(
                         // failed submits consume no id: drop the
                         // registration so the next request can claim it
                         router.unregister(predicted);
-                        let _ = reply.send(Err(format!("{e:#}")));
+                        let _ = reply.send(Err(SubmitError::Rejected(format!("{e:#}"))));
                     }
                 }
             }

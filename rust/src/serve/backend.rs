@@ -19,7 +19,7 @@ use crate::coordinator;
 use crate::engine::{self, Engine};
 use crate::model::ParamStore;
 use crate::runtime::{Executable, Runtime};
-use crate::sched::{SchedOptions, Scheduler};
+use crate::sched::{RequestSpec, SchedOptions, Scheduler};
 
 use super::batcher::BucketPolicy;
 use super::metrics::SchedStats;
@@ -399,7 +399,7 @@ impl ServeBackend for ScheduledBackend {
         }
         let mut ids = Vec::with_capacity(prompts.len());
         for p in prompts {
-            ids.push(sched.submit(p, max_new)?);
+            ids.push(sched.submit(RequestSpec::new(p.as_str(), max_new))?);
         }
         sched.run_until_idle()?;
         if let (Some(path), Some(rec)) = (&self.trace_out, &trace) {

@@ -14,12 +14,18 @@
 //!
 //! * `GET /healthz` → `200 ok` — liveness only, never touches the worker.
 //! * `POST /generate` with JSON `{"prompt": "...", "max_new": 16,
-//!   "adapter": 0}` → `text/event-stream`. The stream opens with a
-//!   `start` event carrying the assigned request id, then one `token`
-//!   event per generated token as the scheduler picks it, and closes
-//!   with a `finish` event that is the full [`SchedResponse`] (reason,
-//!   queue wait, TTFT, latency). Submit rejections are `400`; submits
-//!   racing shutdown are `503`.
+//!   "adapter": 0, "priority": 0, "deadline_ms": 250}` (the last two
+//!   optional — they default to class 0 / no deadline) →
+//!   `text/event-stream`. The stream opens with a `start` event carrying
+//!   the assigned request id, then one `token` event per generated token
+//!   as the scheduler picks it, and closes with a `finish` event that is
+//!   the full [`SchedResponse`] (reason — including `"shed"` for a
+//!   deadline-dropped request — queue wait, TTFT, latency). Submit
+//!   rejections are `400`. The two overload `503`s are distinct: a full
+//!   bounded submit queue answers `{"error": ..., "retriable": true}`
+//!   with a `Retry-After` header (back off and come back), a draining
+//!   worker answers `{"error": ..., "retriable": false}` (this server is
+//!   going away).
 //! * `POST /cancel` with `{"id": N}` → `{"id": N, "cancelled": bool}`,
 //!   false for unknown or already-finished ids (same contract as
 //!   [`crate::sched::Scheduler::cancel`]).
@@ -47,7 +53,8 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Backend, DecodeMode, Json, JsonWriter, ModelConfig};
 use crate::model::ParamStore;
 use crate::sched::{
-    SchedOptions, SchedResponse, SchedWorker, StreamEvent, WorkerClient, WorkerConfig,
+    RequestSpec, SchedOptions, SchedResponse, SchedWorker, StreamEvent, SubmitError, WorkerClient,
+    WorkerConfig,
 };
 
 use super::{backend, ServeOptions};
@@ -273,9 +280,23 @@ fn read_request(stream: &TcpStream) -> Result<(String, String, Vec<u8>)> {
 }
 
 fn write_response(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) {
+    write_response_headers(stream, status, content_type, &[], body);
+}
+
+/// [`write_response`] with extra response headers — each `(name, value)`
+/// lands as its own `Name: value` line (the queue-full 503 carries
+/// `Retry-After` this way).
+fn write_response_headers(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) {
+    let extra: String = extra.iter().map(|(k, v)| format!("{k}: {v}\r\n")).collect();
     let _ = write!(
         stream,
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n{body}",
         body.len()
     );
     let _ = stream.flush();
@@ -285,6 +306,18 @@ fn error_json(msg: &str) -> String {
     let mut w = JsonWriter::new();
     w.begin_obj();
     w.key("error").str(msg);
+    w.end_obj();
+    w.finish()
+}
+
+/// Overload-control error body: `retriable` tells the client whether
+/// backing off and retrying *this* server can ever help (queue full:
+/// yes; draining: no).
+fn overload_json(msg: &str, retriable: bool) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("error").str(msg);
+    w.key("retriable").bool(retriable);
     w.end_obj();
     w.finish()
 }
@@ -314,7 +347,7 @@ fn handle_conn(mut stream: TcpStream, client: &WorkerClient) -> Result<()> {
 }
 
 fn handle_generate(mut stream: TcpStream, client: &WorkerClient, body: &[u8]) -> Result<()> {
-    let parsed: Result<(String, usize, u32)> = (|| {
+    let parsed: Result<RequestSpec> = (|| {
         let text = std::str::from_utf8(body).context("request body is not UTF-8")?;
         let json = Json::parse(text).context("parsing the request JSON")?;
         let prompt = json.get("prompt")?.as_str()?.to_string();
@@ -322,14 +355,24 @@ fn handle_generate(mut stream: TcpStream, client: &WorkerClient, body: &[u8]) ->
             Some(v) => v.as_usize()?,
             None => 16,
         };
-        let adapter = match json.opt("adapter") {
-            Some(v) => v.as_usize()? as u32,
-            None => 0,
-        };
-        Ok((prompt, max_new, adapter))
+        let mut spec = RequestSpec::new(prompt, max_new);
+        if let Some(v) = json.opt("adapter") {
+            spec = spec.adapter(v.as_usize()? as u32);
+        }
+        if let Some(v) = json.opt("priority") {
+            let class = v.as_usize()?;
+            if class > u8::MAX as usize {
+                bail!("priority must fit a class index 0..=255 (got {class})");
+            }
+            spec = spec.priority(class as u8);
+        }
+        if let Some(v) = json.opt("deadline_ms") {
+            spec = spec.deadline_ms(v.as_usize()? as u64);
+        }
+        Ok(spec)
     })();
-    let (prompt, max_new, adapter) = match parsed {
-        Ok(p) => p,
+    let spec = match parsed {
+        Ok(spec) => spec,
         Err(e) => {
             write_response(
                 &mut stream,
@@ -340,16 +383,42 @@ fn handle_generate(mut stream: TcpStream, client: &WorkerClient, body: &[u8]) ->
             return Ok(());
         }
     };
-    let (id, events) = match client.submit_streaming(&prompt, max_new, adapter) {
+    let (id, events) = match client.submit_streaming(spec) {
         Ok(sub) => sub,
         Err(e) => {
+            // the typed refusal (if any) picks the wire shape: the two
+            // overload 503s carry distinct bodies so clients can tell
+            // "back off and retry" from "this server is going away"
             let msg = format!("{e:#}");
-            let status = if msg.contains("shutting down") {
-                "503 Service Unavailable"
-            } else {
-                "400 Bad Request"
-            };
-            write_response(&mut stream, status, "application/json", &error_json(&msg));
+            match e.downcast_ref::<SubmitError>() {
+                Some(SubmitError::QueueFull { retry_after_secs, .. }) => {
+                    write_response_headers(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        "application/json",
+                        &[("Retry-After", retry_after_secs.to_string())],
+                        &overload_json(&msg, true),
+                    );
+                }
+                Some(SubmitError::Draining) => {
+                    write_response(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        "application/json",
+                        &overload_json(&msg, false),
+                    );
+                }
+                // a spec the scheduler refused — or a worker that is
+                // gone entirely, which reads as draining to the client
+                _ => {
+                    let status = if msg.contains("shutting down") || msg.contains("gone") {
+                        "503 Service Unavailable"
+                    } else {
+                        "400 Bad Request"
+                    };
+                    write_response(&mut stream, status, "application/json", &error_json(&msg));
+                }
+            }
             return Ok(());
         }
     };

@@ -246,6 +246,15 @@ pub struct SchedStats {
     /// candidate's prompt + decode horizon (the paged backpressure path:
     /// the request stays queued, nothing in flight is ever evicted)
     pub admission_denied: usize,
+    /// requests shed at submit: the TTFT deadline was already blown when
+    /// the request arrived, so it never entered the queue
+    pub shed_at_submit: usize,
+    /// requests shed from the wait queue: the TTFT deadline blew while
+    /// waiting for a slot, so the request was dropped before prefill
+    pub shed_in_queue: usize,
+    /// submits the bounded worker queue rejected outright (the 503 +
+    /// Retry-After path) — these never reached the scheduler's queue
+    pub queue_rejected: usize,
     /// most requests simultaneously holding decode slots in any step —
     /// the concurrency headline the paged layout moves at a fixed budget
     pub peak_active: usize,
@@ -268,6 +277,9 @@ impl SchedStats {
         self.batch_occupancy.merge(&other.batch_occupancy);
         self.block_util.merge(&other.block_util);
         self.admission_denied += other.admission_denied;
+        self.shed_at_submit += other.shed_at_submit;
+        self.shed_in_queue += other.shed_in_queue;
+        self.queue_rejected += other.queue_rejected;
         self.peak_active = self.peak_active.max(other.peak_active);
         self.steps += other.steps;
         for (label, usage) in &other.adapter_usage {
@@ -516,16 +528,27 @@ mod tests {
         let mut a = SchedStats::default();
         a.block_util.record(0.5);
         a.admission_denied = 2;
+        a.shed_at_submit = 1;
+        a.shed_in_queue = 2;
+        a.queue_rejected = 3;
         a.peak_active = 3;
         a.steps = 10;
         let mut b = SchedStats::default();
         b.block_util.record(0.75);
         b.admission_denied = 1;
+        b.shed_at_submit = 4;
+        b.shed_in_queue = 5;
+        b.queue_rejected = 6;
         b.peak_active = 7;
         b.steps = 4;
         a.absorb(&b);
         assert_eq!(a.block_util.len(), 2);
         assert_eq!(a.admission_denied, 3);
+        assert_eq!(
+            (a.shed_at_submit, a.shed_in_queue, a.queue_rejected),
+            (5, 7, 9),
+            "overload counters fold by sum"
+        );
         assert_eq!(a.peak_active, 7, "peak concurrency folds by max, not sum");
         assert_eq!(a.steps, 14);
         // absorbing a lower peak does not shrink the fold

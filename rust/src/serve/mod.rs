@@ -69,7 +69,7 @@ use anyhow::{bail, Result};
 use crate::config::{Backend, DecodeMode, GemmKernel, Method, ModelConfig, SchedConfig};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
-use crate::sched::{LoadRequest, SchedOptions, SchedResponse, Scheduler};
+use crate::sched::{LoadRequest, RequestSpec, SchedOptions, SchedResponse, Scheduler};
 
 /// Which serving path a server instance runs (the Fig. 4 comparison).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -441,8 +441,12 @@ pub fn serve_open_loop(
         // submitted, whatever the batch is currently doing
         let elapsed = t0.elapsed().as_secs_f64();
         while next < order.len() && order[next].arrival_secs <= elapsed {
-            let id =
-                sched.submit_for(&order[next].prompt, order[next].max_new, order[next].adapter)?;
+            let r = &order[next];
+            let mut spec = RequestSpec::new(r.prompt.as_str(), r.max_new)
+                .adapter(r.adapter)
+                .priority(r.priority);
+            spec.deadline_ms = r.deadline_ms;
+            let id = sched.submit(spec)?;
             submit_lag.insert(id, (elapsed - order[next].arrival_secs).max(0.0));
             next += 1;
         }

@@ -21,7 +21,9 @@ use lota_qaf::config::{preset, ModelConfig};
 use lota_qaf::engine::{greedy_decode, Engine};
 use lota_qaf::model::{self, ParamStore};
 use lota_qaf::quant::rtn_quantize;
-use lota_qaf::sched::{generate_load, FinishReason, LoadSpec, RequestState, SchedOptions, Scheduler};
+use lota_qaf::sched::{
+    generate_load, FinishReason, LoadSpec, RequestSpec, RequestState, SchedOptions, Scheduler,
+};
 use lota_qaf::serve::synthetic_adapter_store;
 use lota_qaf::tensor::Rng;
 
@@ -102,7 +104,8 @@ fn mixed_adapter_batches_decode_bit_identically_to_solo_merges() {
     loop {
         if let Some((i, req)) = pending.next() {
             let adapter = (i % 4) as u32; // 0 = bare base, mixed in
-            ids.push((s.submit_for(&req.prompt, req.max_new, adapter).unwrap(), req, adapter));
+            let spec = RequestSpec::new(req.prompt.as_str(), req.max_new).adapter(adapter);
+            ids.push((s.submit(spec).unwrap(), req, adapter));
         } else if s.is_idle() {
             break;
         }
@@ -155,7 +158,7 @@ fn cancellation_in_a_mixed_batch_leaves_other_adapters_bit_exact() {
         ];
         let ids: Vec<u64> = reqs
             .iter()
-            .map(|(p, m, a)| s.submit_for(p, *m, *a).unwrap())
+            .map(|(p, m, a)| s.submit(RequestSpec::new(*p, *m).adapter(*a)).unwrap())
             .collect();
         s.step().unwrap(); // admit ids[0] (adapter 1) and ids[1] (adapter 2)
         if s.state_of(ids[0]) != Some(RequestState::Decoding)
@@ -202,6 +205,7 @@ fn admission_denial_under_a_tight_kv_pool_preserves_mixed_parity() {
         kv_budget_bytes: 2 * engine.kv_block_bytes(16),
         kv_paged: true,
         kv_block_size: 16,
+        ..SchedOptions::default()
     };
     let mut s = Scheduler::new(&engine, &tight).unwrap();
     let mut ids = Vec::new();
@@ -209,7 +213,8 @@ fn admission_denial_under_a_tight_kv_pool_preserves_mixed_parity() {
         let prompt = format!("{} + {} =", i % 10, (i + 3) % 10);
         let max_new = [4usize, 9, 6][i as usize % 3];
         let adapter = i % 4;
-        ids.push((s.submit_for(&prompt, max_new, adapter).unwrap(), prompt, max_new, adapter));
+        let id = s.submit(RequestSpec::new(prompt.as_str(), max_new).adapter(adapter)).unwrap();
+        ids.push((id, prompt, max_new, adapter));
     }
     s.run_until_idle().unwrap();
     let stats = s.sched_stats();
@@ -239,13 +244,13 @@ fn admission_denial_under_a_tight_kv_pool_preserves_mixed_parity() {
 fn unknown_adapter_ids_are_rejected_at_submit() {
     let (_cfg, engine, _refs) = mixed_fixture(950, &[71]);
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
-    assert!(s.submit_for("1 + 1 =", 2, 1).is_ok());
-    assert!(s.submit_for("1 + 1 =", 2, 2).is_err());
+    assert!(s.submit(RequestSpec::new("1 + 1 =", 2).adapter(1)).is_ok());
+    assert!(s.submit(RequestSpec::new("1 + 1 =", 2).adapter(2)).is_err());
     let (cfg, base) = quant_tiny(951);
     let bare = Engine::from_store(&cfg, &base, 4).unwrap();
     let mut s = Scheduler::new(&bare, &opts(2)).unwrap();
-    assert!(s.submit_for("1 + 1 =", 2, 0).is_ok());
-    assert!(s.submit_for("1 + 1 =", 2, 1).is_err());
+    assert!(s.submit(RequestSpec::new("1 + 1 =", 2)).is_ok());
+    assert!(s.submit(RequestSpec::new("1 + 1 =", 2).adapter(1)).is_err());
 }
 
 /// The serving-layer plumbing end to end: `serve_open_loop` with a

@@ -74,11 +74,22 @@ fn serve_adapters_example_stays_a_runnable_adapter_deployment() {
 }
 
 /// The scheduled-serving example keeps its [sched] table parseable and
-/// non-default-shaped (it exists to show the knobs).
+/// non-default-shaped (it exists to show the knobs) — including the
+/// overload-control keys, which must reach SchedConfig with the values
+/// the comments document rather than silently parsing to defaults.
 #[test]
 fn serve_sched_example_keeps_its_sched_table() {
     let src = fs::read_to_string(examples_dir().join("serve_sched.toml")).unwrap();
     let exp = ExperimentConfig::from_toml(&TomlDoc::parse(&src).unwrap()).unwrap();
     assert_eq!(exp.backend, Backend::Native);
-    assert!(exp.sched.is_some(), "serve_sched.toml stopped enabling the scheduler");
+    let sched = exp.sched.expect("serve_sched.toml stopped enabling the scheduler");
+    assert_eq!(
+        sched.priority_classes, 2,
+        "the example should demo priority admission (and 2 is what its comments claim)"
+    );
+    assert_eq!(sched.submit_queue_cap, 64, "the example documents a bounded submit queue");
+    assert_eq!(
+        sched.default_deadline_ms, 0,
+        "the example documents deadline shedding as off by default"
+    );
 }

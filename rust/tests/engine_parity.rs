@@ -14,7 +14,7 @@ use lota_qaf::config::{preset, Backend, DecodeMode, ModelConfig, SchedConfig};
 use lota_qaf::engine::{greedy_decode, greedy_decode_paged, greedy_decode_with, Engine};
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
-use lota_qaf::sched::{SchedOptions, Scheduler};
+use lota_qaf::sched::{RequestSpec, SchedOptions, Scheduler};
 use lota_qaf::serve::{serve_batch, ServeOptions, ServePath};
 use lota_qaf::tensor::{Rng, Tensor};
 
@@ -208,7 +208,10 @@ fn scheduled_decode_is_bit_identical_to_one_shot() {
             let sched_opts = SchedOptions { max_batch, kv_paged, ..SchedOptions::default() };
             let mut sched = Scheduler::new(&engine, &sched_opts).unwrap();
             let ids: Vec<u64> =
-                prompts.iter().map(|p| sched.submit(p, max_new).unwrap()).collect();
+                prompts
+                    .iter()
+                    .map(|p| sched.submit(RequestSpec::new(p.as_str(), max_new)).unwrap())
+                    .collect();
             sched.run_until_idle().unwrap();
             let responses = sched.take_finished();
             assert_eq!(responses.len(), prompts.len());

@@ -23,7 +23,7 @@ use std::collections::HashSet;
 use lota_qaf::engine::{greedy_decode, greedy_decode_paged, BlockAllocator, Engine, KvCache};
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
-use lota_qaf::sched::{generate_load, LoadSpec, SchedOptions, Scheduler};
+use lota_qaf::sched::{generate_load, LoadSpec, RequestSpec, SchedOptions, Scheduler};
 use lota_qaf::tensor::Rng;
 
 fn plain_engine(seed: u64) -> Engine {
@@ -189,7 +189,10 @@ fn run_staggered(
         ci += 1;
         for _ in 0..take {
             if next < load.len() {
-                ids.push(s.submit(&load[next].prompt, load[next].max_new).unwrap());
+                ids.push(
+                    s.submit(RequestSpec::new(load[next].prompt.as_str(), load[next].max_new))
+                        .unwrap(),
+                );
                 next += 1;
             }
         }
@@ -277,6 +280,7 @@ fn backpressure_delays_but_never_changes_tokens() {
         kv_budget_bytes: 3 * engine.kv_block_bytes(16),
         kv_paged: true,
         kv_block_size: 16,
+        ..SchedOptions::default()
     };
     let mut s = Scheduler::new(&engine, &tight).unwrap();
     let mut next = 0usize;
@@ -287,7 +291,10 @@ fn backpressure_delays_but_never_changes_tokens() {
         ci += 1;
         for _ in 0..take {
             if next < load.len() {
-                ids.push(s.submit(&load[next].prompt, load[next].max_new).unwrap());
+                ids.push(
+                    s.submit(RequestSpec::new(load[next].prompt.as_str(), load[next].max_new))
+                        .unwrap(),
+                );
                 next += 1;
             }
         }

@@ -34,7 +34,7 @@ use lota_qaf::obs::{
     Profiler, RecordingTracer, TraceEvent, Track, STEP_TID,
 };
 use lota_qaf::quant::rtn_quantize;
-use lota_qaf::sched::{RequestState, SchedOptions, Scheduler};
+use lota_qaf::sched::{RequestSpec, RequestState, SchedOptions, Scheduler};
 use lota_qaf::tensor::Rng;
 
 fn plain_engine(seed: u64) -> Engine {
@@ -103,7 +103,7 @@ fn golden_span_sequence_for_a_one_token_request() {
     let engine = plain_engine(17);
     let rec = RecordingTracer::new();
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
-    let id = s.submit("1 + 2 =", 1).unwrap();
+    let id = s.submit(RequestSpec::new("1 + 2 =", 1)).unwrap();
     s.step().unwrap();
     assert!(s.is_idle());
 
@@ -172,7 +172,7 @@ fn zero_max_new_emits_a_degenerate_request_span() {
     let engine = plain_engine(19);
     let rec = RecordingTracer::new();
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
-    let id = s.submit("1 + 1 =", 0).unwrap();
+    let id = s.submit(RequestSpec::new("1 + 1 =", 0)).unwrap();
     assert!(s.is_idle());
     let events = rec.events();
     assert_eq!(
@@ -197,12 +197,13 @@ fn spans_balance_under_denial_and_cancellation() {
         kv_budget_bytes: 2 * engine.kv_block_bytes(16),
         kv_paged: true,
         kv_block_size: 16,
+        ..SchedOptions::default()
     };
     let rec = RecordingTracer::new();
     let mut s = Scheduler::new(&engine, &tight).unwrap().with_tracer(Box::new(rec.clone()));
     let mut ids = Vec::new();
     for i in 0..5 {
-        ids.push(s.submit(&format!("{i} + 1 ="), 4).unwrap());
+        ids.push(s.submit(RequestSpec::new(format!("{i} + 1 ="), 4)).unwrap());
     }
     // cancel the last while it is still queued: its queued + request
     // spans must close right here
@@ -242,6 +243,61 @@ fn spans_balance_under_denial_and_cancellation() {
     assert!(denied >= 1.0);
 }
 
+/// Shed observability reconciles end to end: every dropped request gets
+/// exactly one zero-length `shed` span on its own track, the span count
+/// equals the sum of `SchedStats`' two shed counters, and a metrics
+/// registry built from the same stats reports identical totals under the
+/// labeled `lota_shed_total` keys — one clock, one count, three views.
+#[test]
+fn shed_spans_reconcile_with_stats_and_registry() {
+    let engine = plain_engine(41);
+    let rec = RecordingTracer::new();
+    let mut s = Scheduler::new(&engine, &opts(1)).unwrap().with_tracer(Box::new(rec.clone()));
+    // a blocker holds the only slot so a queued deadline can expire
+    let blocker = s.submit(RequestSpec::new("1 + 2 =", 6)).unwrap();
+    s.step().unwrap();
+    // blown on arrival: sheds inside the submit call itself
+    let at_submit = s.submit(RequestSpec::new("3 + 4 =", 4).deadline_ms(0)).unwrap();
+    // blown while waiting: swept at the next step's admission phase
+    let in_queue = s.submit(RequestSpec::new("5 + 6 =", 4).deadline_ms(1)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    s.run_until_idle().unwrap();
+    let stats = s.sched_stats();
+    assert_eq!(stats.shed_at_submit, 1);
+    assert_eq!(stats.shed_in_queue, 1);
+    assert_eq!(s.take_finished().len(), 3);
+
+    let events = rec.events();
+    assert_balanced(&events);
+    for id in [at_submit, in_queue] {
+        let n = events
+            .iter()
+            .filter(|e| {
+                e.track == Track::Request(id) && e.kind == EventKind::Begin && e.name == "shed"
+            })
+            .count();
+        assert_eq!(n, 1, "request {id} should carry exactly one shed span, got {n}");
+    }
+    let shed_begins =
+        events.iter().filter(|e| e.kind == EventKind::Begin && e.name == "shed").count();
+    assert_eq!(
+        shed_begins,
+        stats.shed_at_submit + stats.shed_in_queue,
+        "trace shed spans and SchedStats counters diverged"
+    );
+    assert!(
+        !events.iter().any(|e| e.track == Track::Request(blocker) && e.name == "shed"),
+        "the surviving request grew a shed span"
+    );
+
+    // the registry is the third view of the same counts
+    let report = lota_qaf::serve::ThroughputReport::default().with_sched(stats);
+    let reg = lota_qaf::obs::MetricsRegistry::from_report(&report);
+    assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_at_submit\"}"), Some(1.0));
+    assert_eq!(reg.counter("lota_shed_total{reason=\"deadline_in_queue\"}"), Some(1.0));
+    assert_eq!(reg.counter("lota_queue_rejected_total"), None, "nothing was queue-rejected");
+}
+
 /// Attaching a tracer must not move a single bit of scheduler output:
 /// no tracer, `NoopTracer`, and `RecordingTracer` run the same workload
 /// to identical generations, decode accounting, and step counts — and
@@ -255,7 +311,7 @@ fn tracing_is_bitwise_inert_on_scheduler_outputs() {
             s = s.with_tracer(t);
         }
         for i in 0..5 {
-            s.submit(&format!("{i} + 3 ="), [2usize, 6, 4][i % 3]).unwrap();
+            s.submit(RequestSpec::new(format!("{i} + 3 ="), [2usize, 6, 4][i % 3])).unwrap();
         }
         s.run_until_idle().unwrap();
         let mut done = s.take_finished();
@@ -293,7 +349,7 @@ fn profiling_is_bitwise_inert_on_scheduler_outputs() {
             s = s.with_profiler(p);
         }
         for i in 0..5 {
-            s.submit(&format!("{i} + 3 ="), [2usize, 6, 4][i % 3]).unwrap();
+            s.submit(RequestSpec::new(format!("{i} + 3 ="), [2usize, 6, 4][i % 3])).unwrap();
         }
         s.run_until_idle().unwrap();
         let mut done = s.take_finished();
@@ -320,7 +376,7 @@ fn engine_phase_sums_reconcile_exactly_with_step_walltimes() {
     let prof = Profiler::new();
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_profiler(prof.clone());
     for (i, max_new) in [3usize, 1, 4, 2].into_iter().enumerate() {
-        s.submit(&format!("{i} + 1 ="), max_new).unwrap();
+        s.submit(RequestSpec::new(format!("{i} + 1 ="), max_new)).unwrap();
     }
     let mut reports = Vec::new();
     while !s.is_idle() {
@@ -381,7 +437,7 @@ fn profiled_chrome_export_nests_engine_tracks_inside_forward_spans() {
         .with_tracer(Box::new(rec.clone()))
         .with_profiler(prof);
     for (i, max_new) in [2usize, 3, 1].into_iter().enumerate() {
-        s.submit(&format!("{i} + 4 ="), max_new).unwrap();
+        s.submit(RequestSpec::new(format!("{i} + 4 ="), max_new)).unwrap();
     }
     s.run_until_idle().unwrap();
 
@@ -456,7 +512,7 @@ fn trace_durations_reconcile_with_sched_stats() {
         let engine = plain_engine(300 + seed);
         let rec = RecordingTracer::new();
         let mut s = Scheduler::new(&engine, &opts(1)).unwrap().with_tracer(Box::new(rec.clone()));
-        let id = s.submit("2 + 2 =", 3).unwrap();
+        let id = s.submit(RequestSpec::new("2 + 2 =", 3)).unwrap();
         s.run_until_idle().unwrap();
         let stats = s.sched_stats();
         if stats.ttft_ms.len() != 1 {
@@ -499,7 +555,7 @@ fn chrome_export_is_deterministic_and_well_formed() {
         let rec = RecordingTracer::new();
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_tracer(Box::new(rec.clone()));
         for (i, max_new) in [1usize, 3, 2].into_iter().enumerate() {
-            s.submit(&format!("{i} + 2 ="), max_new).unwrap();
+            s.submit(RequestSpec::new(format!("{i} + 2 ="), max_new)).unwrap();
         }
         s.run_until_idle().unwrap();
         rec

@@ -15,8 +15,8 @@ use lota_qaf::engine::{greedy_decode, Engine};
 use lota_qaf::model;
 use lota_qaf::quant::rtn_quantize;
 use lota_qaf::sched::{
-    generate_load, FinishReason, LoadSpec, RequestState, SchedOptions, SchedResponse, Scheduler,
-    TokenSink,
+    generate_load, FinishReason, LoadSpec, RequestSpec, RequestState, SchedOptions, SchedResponse,
+    Scheduler, TokenSink,
 };
 use lota_qaf::tensor::Rng;
 
@@ -50,9 +50,9 @@ fn cancellation_mid_decode_frees_the_slot() {
     for seed in 0..32u64 {
         let engine = plain_engine(500 + seed);
         let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
-        let a = s.submit("1 + 2 =", 12).unwrap();
-        let b = s.submit("3 + 4 =", 12).unwrap();
-        let c = s.submit("5 + 6 =", 12).unwrap();
+        let a = s.submit(RequestSpec::new("1 + 2 =", 12)).unwrap();
+        let b = s.submit(RequestSpec::new("3 + 4 =", 12)).unwrap();
+        let c = s.submit(RequestSpec::new("5 + 6 =", 12)).unwrap();
         assert_eq!(s.state_of(c), Some(RequestState::Queued));
         s.step().unwrap(); // admit + prefill a and b; c waits
         if s.state_of(a) != Some(RequestState::Decoding)
@@ -98,8 +98,8 @@ fn full_batch_admits_zero_until_a_slot_frees() {
     };
     let mut s = Scheduler::new(&engine, &one_row).unwrap();
     assert_eq!(s.n_slots(), 1);
-    let first = s.submit("1 + 1 =", 3).unwrap();
-    let second = s.submit("2 + 2 =", 3).unwrap();
+    let first = s.submit(RequestSpec::new("1 + 1 =", 3)).unwrap();
+    let second = s.submit(RequestSpec::new("2 + 2 =", 3)).unwrap();
     let report = s.step().unwrap();
     assert_eq!(report.admitted, vec![first]);
     assert_eq!(report.queue_depth, 1);
@@ -127,8 +127,8 @@ fn full_batch_admits_zero_until_a_slot_frees() {
 fn finish_on_admission_step_hands_the_slot_over() {
     let engine = plain_engine(9);
     let mut s = Scheduler::new(&engine, &opts(1)).unwrap();
-    let a = s.submit("1 + 3 =", 1).unwrap();
-    let b = s.submit("2 + 5 =", 1).unwrap();
+    let a = s.submit(RequestSpec::new("1 + 3 =", 1)).unwrap();
+    let b = s.submit(RequestSpec::new("2 + 5 =", 1)).unwrap();
     let report = s.step().unwrap();
     assert_eq!(report.admitted, vec![a]);
     assert_eq!(report.finished, vec![a], "one-token request outlived its admission step");
@@ -153,7 +153,7 @@ fn step_reports_account_phase_wall_time() {
     let engine = plain_engine(15);
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap();
     for i in 0..4 {
-        s.submit(&format!("{i} + 5 ="), 3).unwrap();
+        s.submit(RequestSpec::new(format!("{i} + 5 ="), 3)).unwrap();
     }
     while !s.is_idle() {
         let r = s.step().unwrap();
@@ -190,7 +190,8 @@ fn admission_is_fifo_under_full_batch() {
         // mixed budgets: short requests finish early and free slots while
         // long ones hold theirs — the reuse pattern fixed batches can't do
         let max_new = [2usize, 9, 4][i % 3];
-        submitted.push(s.submit(&format!("{i} + {i} =", i = i % 10), max_new).unwrap());
+        submitted
+            .push(s.submit(RequestSpec::new(format!("{i} + {i} =", i = i % 10), max_new)).unwrap());
     }
     let mut admitted = Vec::new();
     while !s.is_idle() {
@@ -225,7 +226,7 @@ fn sink_streams_every_token_in_order() {
     let mut s = Scheduler::new(&engine, &opts(2)).unwrap().with_sink(Box::new(sink));
     let mut ids = Vec::new();
     for i in 0..5 {
-        ids.push(s.submit(&format!("{i} * 2 ="), 6).unwrap());
+        ids.push(s.submit(RequestSpec::new(format!("{i} * 2 ="), 6)).unwrap());
     }
     s.run_until_idle().unwrap();
     let responses = s.take_finished();
@@ -265,7 +266,7 @@ fn staggered_arrivals_decode_bit_identically_to_one_shot() {
     // drip one arrival per step while the batch is busy with earlier ones
     loop {
         if let Some(req) = pending.next() {
-            ids.push((s.submit(&req.prompt, req.max_new).unwrap(), req));
+            ids.push((s.submit(RequestSpec::new(req.prompt.as_str(), req.max_new)).unwrap(), req));
         } else if s.is_idle() {
             break;
         }
@@ -279,4 +280,58 @@ fn staggered_arrivals_decode_bit_identically_to_one_shot() {
         assert_eq!(got.text, want[0].text, "request {id} diverged from one-shot decode");
         assert_eq!(got.tokens, want[0].tokens);
     }
+}
+
+/// The redesign's parity contract: with one priority class, no deadlines,
+/// and an unbounded queue, the overload-control machinery must be
+/// invisible — step-for-step admission order, finish order, and decoded
+/// bytes all `assert_eq!` the plain-FIFO run on identical weights. This
+/// pins the "bitwise no-op at defaults" clause of the RequestSpec
+/// redesign, not just end-text equality.
+#[test]
+fn one_class_no_deadline_is_bitwise_identical_to_plain_fifo() {
+    let (cfg, store) = merged_tiny(212);
+    let spec = LoadSpec {
+        n_requests: 8,
+        rate_per_sec: 50.0,
+        seed: 43,
+        task: "arith".into(),
+        max_new_mix: vec![2, 6, 11],
+    };
+    let load = generate_load(&spec).unwrap();
+    // explicit overload-control defaults, spelled out so a future default
+    // change cannot silently re-point this pin
+    let explicit = SchedOptions {
+        max_batch: 3,
+        priority_classes: 1,
+        submit_queue_cap: 0,
+        default_deadline_ms: None,
+        ..SchedOptions::default()
+    };
+    let mut runs = Vec::new();
+    for options in [opts(3), explicit] {
+        let engine = Engine::from_store(&cfg, &store, 4).unwrap();
+        let mut s = Scheduler::new(&engine, &options).unwrap();
+        let mut pending = load.iter();
+        let mut trace = Vec::new();
+        loop {
+            if let Some(req) = pending.next() {
+                s.submit(RequestSpec::new(req.prompt.as_str(), req.max_new)).unwrap();
+            } else if s.is_idle() {
+                break;
+            }
+            let r = s.step().unwrap();
+            trace.push((r.admitted, r.finished, r.shed, r.queue_depth));
+        }
+        let mut finished: Vec<(u64, String, usize, FinishReason)> = s
+            .take_finished()
+            .into_iter()
+            .map(|r| (r.id, r.text, r.tokens, r.reason))
+            .collect();
+        finished.sort_by_key(|(id, ..)| *id);
+        runs.push((trace, finished));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "step-level schedule diverged at defaults");
+    assert_eq!(runs[0].1, runs[1].1, "decoded outputs diverged at defaults");
+    assert!(runs[0].0.iter().all(|(_, _, shed, _)| shed.is_empty()));
 }

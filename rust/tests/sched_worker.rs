@@ -24,8 +24,8 @@ use lota_qaf::config::{Backend, SchedConfig};
 use lota_qaf::data::tokenizer;
 use lota_qaf::engine::{greedy_decode, Engine};
 use lota_qaf::sched::{
-    generate_load, FinishReason, LoadSpec, SchedOptions, SchedWorker, Scheduler, StreamEvent,
-    WorkerConfig,
+    generate_load, FinishReason, LoadSpec, RequestSpec, SchedOptions, SchedWorker, Scheduler,
+    StreamEvent, SubmitError, WorkerConfig,
 };
 use lota_qaf::serve::listen::{finish_event_json, start_event_json, token_event_json};
 use lota_qaf::serve::{ListenServer, ServeOptions, ServePath};
@@ -70,7 +70,7 @@ fn worker_output_is_bit_identical_to_the_synchronous_loop() {
     let client = worker.client();
     let mut worker_ids = Vec::new();
     for p in &prompts {
-        worker_ids.push(client.submit(p, max_new).unwrap());
+        worker_ids.push(client.submit(RequestSpec::new(p.as_str(), max_new)).unwrap());
     }
     let report = worker.shutdown().unwrap();
     assert_eq!(report.responses.len(), prompts.len());
@@ -80,7 +80,7 @@ fn worker_output_is_bit_identical_to_the_synchronous_loop() {
     let mut sched = Scheduler::new(&engine, &opts(3)).unwrap();
     let mut sync_ids = Vec::new();
     for p in &prompts {
-        sync_ids.push(sched.submit(p, max_new).unwrap());
+        sync_ids.push(sched.submit(RequestSpec::new(p.as_str(), max_new)).unwrap());
     }
     sched.run_until_idle().unwrap();
     let sync_responses = sched.take_finished();
@@ -110,7 +110,7 @@ fn double_cancel_and_cancel_after_finish_report_false() {
     for seed in 0..32u64 {
         let worker = spawn_worker(plain_engine(600 + seed), 2);
         let client = worker.client();
-        let (victim, events) = client.submit_streaming("1 + 2 =", 64, 0).unwrap();
+        let (victim, events) = client.submit_streaming(RequestSpec::new("1 + 2 =", 64)).unwrap();
         let first = client.cancel(victim).unwrap();
         // drain the stream to the finish event — after it, the request is
         // definitively out of the scheduler
@@ -126,7 +126,7 @@ fn double_cancel_and_cancel_after_finish_report_false() {
         assert!(!second, "seed {seed}: second cancel of request {victim} reported true");
 
         // cancel after a natural (max_new-bounded) finish
-        let (short, events) = client.submit_streaming("3 + 4 =", 1, 0).unwrap();
+        let (short, events) = client.submit_streaming(RequestSpec::new("3 + 4 =", 1)).unwrap();
         let finished = events.into_iter().any(|ev| matches!(ev, StreamEvent::Finish(_)));
         assert!(finished, "seed {seed}: short request never finished");
         assert!(
@@ -149,9 +149,9 @@ fn double_cancel_and_cancel_after_finish_report_false() {
 fn submit_after_shutdown_is_rejected_and_in_flight_work_drains() {
     let worker = spawn_worker(plain_engine(207), 2);
     let client = worker.client();
-    let id = client.submit("5 + 6 =", 12).unwrap();
+    let id = client.submit(RequestSpec::new("5 + 6 =", 12)).unwrap();
     client.request_shutdown();
-    let err = client.submit("7 + 8 =", 4).unwrap_err().to_string();
+    let err = client.submit(RequestSpec::new("7 + 8 =", 4)).unwrap_err().to_string();
     assert!(
         err.contains("shutting down") || err.contains("gone"),
         "unexpected rejection message: {err}"
@@ -170,7 +170,7 @@ fn submit_after_shutdown_is_rejected_and_in_flight_work_drains() {
 #[test]
 fn zero_max_new_streams_deliver_their_finish_event() {
     let worker = spawn_worker(plain_engine(19), 2);
-    let (id, events) = worker.client().submit_streaming("1 + 1 =", 0, 0).unwrap();
+    let (id, events) = worker.client().submit_streaming(RequestSpec::new("1 + 1 =", 0)).unwrap();
     let events: Vec<StreamEvent> = events.into_iter().collect();
     assert_eq!(events.len(), 1, "a zero-budget request streamed tokens");
     match &events[0] {
@@ -282,7 +282,9 @@ fn transport_streams_match_in_process_streams_byte_for_byte() {
             if ref_tokens.contains_key(&key) {
                 continue; // identical submissions decode identically
             }
-            let (_, events) = ref_client.submit_streaming(&req.prompt, req.max_new, 0).unwrap();
+            let (_, events) = ref_client
+                .submit_streaming(RequestSpec::new(req.prompt.as_str(), req.max_new))
+                .unwrap();
             let mut tokens = Vec::new();
             for ev in events {
                 match ev {
@@ -336,4 +338,164 @@ fn transport_streams_match_in_process_streams_byte_for_byte() {
             assert_eq!(resp.text, tokenizer::decode(tokens), "seed {seed}: text mismatch");
         }
     }
+}
+
+// --------------------------------------------------------------------------
+// overload control: bounded submit queue, shedding, and the two 503s
+
+/// With `submit_queue_cap` set, submits arriving while the wait queue is
+/// at cap come back as a typed [`SubmitError::QueueFull`] carrying the
+/// cap and a sane retry hint — and every accepted request still drains to
+/// a response, with `SchedStats::queue_rejected` reconciling exactly
+/// against the refusals the client saw. Whether a given submit races
+/// ahead of the worker's drain is timing, so scan seeds until a run
+/// actually fills the queue (the overwhelming majority do).
+#[test]
+fn bounded_queue_rejects_with_a_typed_queue_full_error() {
+    for seed in 0..8u64 {
+        let engine = plain_engine(700 + seed);
+        let opts = SchedOptions { max_batch: 1, submit_queue_cap: 1, ..SchedOptions::default() };
+        let worker = SchedWorker::spawn(engine, opts, WorkerConfig::default()).unwrap();
+        let client = worker.client();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        // a long blocker holds the single slot while the burst lands
+        client.submit(RequestSpec::new("1 + 2 =", 64)).unwrap();
+        accepted += 1;
+        for i in 0..12 {
+            match client.submit(RequestSpec::new(format!("{i} + 1 ="), 2)) {
+                Ok(_) => accepted += 1,
+                Err(e) => {
+                    match e.downcast_ref::<SubmitError>() {
+                        Some(SubmitError::QueueFull { cap, retry_after_secs }) => {
+                            assert_eq!(*cap, 1, "refusal reported the wrong cap");
+                            assert!(
+                                (1..=30).contains(retry_after_secs),
+                                "retry hint out of range: {retry_after_secs}"
+                            );
+                        }
+                        other => panic!("expected a typed QueueFull, got {other:?}: {e:#}"),
+                    }
+                    rejected += 1;
+                }
+            }
+        }
+        let report = worker.shutdown().unwrap();
+        assert_eq!(report.responses.len(), accepted, "an accepted request went missing");
+        assert_eq!(
+            report.stats.queue_rejected, rejected,
+            "client-visible refusals and SchedStats diverged"
+        );
+        if rejected > 0 {
+            return;
+        }
+    }
+    panic!("no seed ever drove the bounded queue to rejection");
+}
+
+/// A request whose TTFT deadline is already blown at submit
+/// (`deadline_ms: 0`) streams over the wire as a normal SSE response —
+/// start frame, then a finish frame with reason `"shed"` and zero tokens,
+/// byte-identical to the in-process rendering — and never touches the
+/// engine.
+#[test]
+fn wire_blown_deadline_sheds_with_a_finish_frame() {
+    let (cfg, store) = merged_tiny(29);
+    let server = ListenServer::start(&cfg, &store, &serve_options(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let body = r#"{"prompt": "1 + 2 =", "max_new": 8, "deadline_ms": 0}"#;
+    let resp = http_request(addr, "POST", "/generate", body);
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "shed is a finish frame, not an error: {resp}");
+    let frames = sse_payloads(&resp);
+    assert_eq!(frames.len(), 2, "a shed request must stream zero tokens: {frames:?}");
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.responses.len(), 1);
+    let shed = &report.responses[0];
+    assert_eq!(shed.reason, FinishReason::Shed);
+    assert_eq!(shed.tokens, 0);
+    assert_eq!(frames[1], finish_event_json(shed), "wire finish frame diverged");
+    assert!(frames[1].contains("\"reason\":\"shed\""), "finish frame: {}", frames[1]);
+    assert_eq!(report.stats.shed_at_submit, 1, "shed was not counted where it happened");
+    assert_eq!(report.decode.forwards, 0, "a shed-at-submit request reached the engine");
+}
+
+/// Queue-full over the wire: with a tiny bounded queue and a burst of
+/// concurrent connections, the overflow gets `503` with a `Retry-After`
+/// header and the `"retriable": true` body, survivors stream normally,
+/// and the 503 count reconciles with `SchedStats::queue_rejected`.
+#[test]
+fn wire_queue_full_is_503_with_retry_after() {
+    let (cfg, store) = merged_tiny(31);
+    let options = ServeOptions::new(ServePath::Merged, 16)
+        .backend(Backend::Native)
+        .bits(4)
+        .scheduled(SchedConfig { max_batch: 1, submit_queue_cap: 1, ..SchedConfig::default() });
+    for attempt in 0..4 {
+        let server = ListenServer::start(&cfg, &store, &options, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let mut burst = Vec::new();
+        for i in 0..10 {
+            burst.push(thread::spawn(move || {
+                http_request(addr, "POST", "/generate", &generate_body(&format!("{i} + 2 ="), 24))
+            }));
+        }
+        let responses: Vec<String> = burst.into_iter().map(|h| h.join().unwrap()).collect();
+        let report = server.shutdown().unwrap();
+        let rejected: Vec<&String> =
+            responses.iter().filter(|r| r.starts_with("HTTP/1.1 503")).collect();
+        let ok = responses.iter().filter(|r| r.starts_with("HTTP/1.1 200")).count();
+        assert_eq!(ok + rejected.len(), 10, "a request got neither a stream nor a 503");
+        assert_eq!(report.responses.len(), ok, "a surviving request went missing");
+        assert_eq!(
+            report.stats.queue_rejected,
+            rejected.len(),
+            "wire 503s and SchedStats diverged"
+        );
+        for r in &rejected {
+            let retry: u64 = r
+                .lines()
+                .find_map(|l| l.strip_prefix("Retry-After: "))
+                .unwrap_or_else(|| panic!("queue-full 503 without Retry-After: {r}"))
+                .trim()
+                .parse()
+                .expect("Retry-After must be whole seconds");
+            assert!((1..=30).contains(&retry), "retry hint out of range: {retry}");
+            assert!(r.contains("\"retriable\":true"), "queue-full body: {r}");
+            assert!(r.contains("submit queue is full"), "queue-full body: {r}");
+        }
+        if !rejected.is_empty() {
+            return;
+        }
+        // the worker outran all ten connects — timing luck, go again
+        let _ = attempt;
+    }
+    panic!("no attempt ever drove the bounded queue to a wire 503");
+}
+
+/// Draining over the wire: a submit landing while the worker drains gets
+/// the *other* 503 — `"retriable": false`, no `Retry-After` — because
+/// backing off and retrying a server that is going away helps nobody.
+/// Timing-sensitive (the in-flight blocker must still be draining when
+/// the probe lands), so scan seeds.
+#[test]
+fn wire_draining_503_is_not_retriable() {
+    for seed in 0..8u64 {
+        let (cfg, store) = merged_tiny(800 + seed);
+        let server = ListenServer::start(&cfg, &store, &serve_options(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let client = server.client();
+        // hold the worker in its drain with a long in-flight request
+        client.submit(RequestSpec::new("1 + 2 =", 200)).unwrap();
+        client.request_shutdown();
+        let resp = http_request(addr, "POST", "/generate", &generate_body("3 + 4 =", 4));
+        assert!(resp.starts_with("HTTP/1.1 503"), "draining submit got: {resp}");
+        if !resp.contains("\"retriable\":false") {
+            continue; // blocker finished first; the worker was gone, not draining
+        }
+        assert!(!resp.contains("Retry-After"), "draining must not advertise a retry: {resp}");
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.responses.len(), 1, "the in-flight blocker did not drain");
+        return;
+    }
+    panic!("no seed kept the worker draining long enough to observe the 503");
 }
